@@ -1,0 +1,69 @@
+//! Quickstart: define a configuration space, autotune the Listing-1
+//! vector-add kernel on a simulated GPU *and* on the real PJRT CPU
+//! backend, and reuse the result through the persistent cache.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use portatune::autotuner::{self, PjrtEvaluator, SimEvaluator, Strategy};
+use portatune::cache::TuningCache;
+use portatune::config::spaces;
+use portatune::kernels::baselines::triton_codegen;
+use portatune::platform::SimGpu;
+use portatune::runtime::{Engine, Manifest};
+use portatune::workload::{DType, Workload};
+
+fn main() -> portatune::Result<()> {
+    // ----------------------------------------------------------------
+    // 1. A workload and its configuration space (paper Q4.1).
+    // ----------------------------------------------------------------
+    let w = Workload::VectorAdd { n: 4096, dtype: DType::F32 };
+    let space = spaces::vecadd_aot_space();
+    println!("workload: {}", w.key());
+    println!(
+        "space {:?}: {} raw configurations, {} valid for this workload",
+        space.name,
+        space.cardinality(),
+        space.enumerate(&w).len()
+    );
+
+    // ----------------------------------------------------------------
+    // 2. Autotune on a simulated GPU (instant, deterministic).
+    // ----------------------------------------------------------------
+    let gpu = SimGpu::a100();
+    let mut sim = SimEvaluator::new(gpu.clone(), w, triton_codegen(gpu.spec.vendor));
+    let out = autotuner::tune(&space, &w, &mut sim, &Strategy::Exhaustive, 0)
+        .expect("space is non-empty");
+    println!("\n[sim-a100] best {} @ {:.2} us ({} evaluated)", out.best, out.best_latency_us, out.evaluated);
+
+    // ----------------------------------------------------------------
+    // 3. Autotune for real: execute every AOT artifact via PJRT and
+    //    measure wall-clock (Python is nowhere in this process).
+    // ----------------------------------------------------------------
+    let engine = Engine::cpu()?;
+    println!("\n[cpu-pjrt] platform: {}", engine.platform_name());
+    let manifest = Manifest::load_default()?;
+    let mut cache = TuningCache::ephemeral();
+    let mut eval = PjrtEvaluator::new(&engine, &manifest, w, 2, 7)?;
+    let real = autotuner::tune_cached(&mut cache, &space, &w, &mut eval, &Strategy::Exhaustive, 0)
+        .expect("artifacts present (run `make artifacts`)");
+    println!(
+        "[cpu-pjrt] best {} @ {:.1} us measured ({} artifacts compiled+timed)",
+        real.best, real.best_latency_us, real.evaluated
+    );
+    for (cfg, lat) in &real.history {
+        match lat {
+            Some(us) => println!("    {cfg:<16} {us:>8.1} us"),
+            None => println!("    {cfg:<16}  INVALID"),
+        }
+    }
+
+    // ----------------------------------------------------------------
+    // 4. Reuse: the second tune is a cache hit (paper Q4.3).
+    // ----------------------------------------------------------------
+    let again = autotuner::tune_cached(&mut cache, &space, &w, &mut eval, &Strategy::Exhaustive, 0).unwrap();
+    assert!(again.from_cache && again.evaluated == 0);
+    println!("\nsecond tune served from cache: {} (0 evaluations)", again.best);
+    Ok(())
+}

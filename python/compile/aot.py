@@ -1,0 +1,468 @@
+"""AOT compilation driver: lower every kernel configuration to HLO text.
+
+This is the *entire* Python footprint of portatune at deployment time:
+``make artifacts`` runs this module once, producing
+
+    artifacts/
+      manifest.json               index of every artifact (see below)
+      attn/<bucket>/<cfg>.hlo.txt one per valid attention config per bucket
+      attn/<bucket>/native.hlo.txt    the materialized-softmax baseline
+      rms/<bucket>/<cfg>.hlo.txt  one per valid RMS-norm config per bucket
+      rms/<bucket>/native.hlo.txt
+      vecadd/<bucket>/<cfg>.hlo.txt
+      model/<bucket>/<cfg>.hlo.txt    full transformer block for serving
+      golden/*.json               tiny input/output vectors for Rust tests
+
+after which the Rust coordinator is self-contained: it compiles the HLO
+text with the PJRT CPU client and never touches Python again.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+The manifest records, for every artifact: the kernel, the workload
+descriptor, the configuration dictionary, positional input specs, and an
+environment fingerprint — everything the Rust cache needs to decide
+whether a tuning result is reusable (paper §Q4.3, "reusable autotuning").
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import platform as _platform
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+from .kernels import flash_attention as fa
+from .kernels import ref
+from .kernels import rms_norm as rn
+from .kernels import vector_add as va
+
+DTYPE_NAMES = {jnp.float32.dtype: "f32", jnp.bfloat16.dtype: "bf16"}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_of(x) -> dict:
+    dtype = x.dtype if hasattr(x, "dtype") else jnp.asarray(x).dtype
+    return {"shape": list(x.shape), "dtype": DTYPE_NAMES[jnp.dtype(dtype)]}
+
+
+def env_fingerprint() -> dict:
+    """Environment facts a cached tuning result depends on (Q4.3)."""
+    return {
+        "jax": jax.__version__,
+        "python": sys.version.split()[0],
+        "machine": _platform.machine(),
+        "interchange": "hlo-text-v1",
+    }
+
+
+def _write(out_dir: Path, rel: str, text: str) -> dict:
+    path = out_dir / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(text)
+    digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+    return {"path": rel, "sha256_16": digest, "bytes": len(text)}
+
+
+# ---------------------------------------------------------------------------
+# Attention buckets
+# ---------------------------------------------------------------------------
+
+
+def attention_buckets(quick: bool) -> list[dict]:
+    """Workload buckets for the attention kernel's AOT space.
+
+    Geometry follows Llama-3 proportions (GQA 4:1) scaled so the CPU PJRT
+    backend can execute a tuning sweep in seconds.  The first bucket gets
+    the full configuration space (it feeds the Fig-5 real-HLO analysis);
+    later buckets use a reduced space to bound `make artifacts` time.
+    """
+    buckets = [
+        # bucket name pieces: batch, q_heads, kv_heads, seq_len, head_dim
+        {"batch": 1, "q_heads": 8, "kv_heads": 2, "seq_len": 128, "head_dim": 64, "full": True},
+        {"batch": 4, "q_heads": 8, "kv_heads": 2, "seq_len": 128, "head_dim": 64, "full": False},
+        {"batch": 2, "q_heads": 8, "kv_heads": 2, "seq_len": 256, "head_dim": 64, "full": False},
+    ]
+    if quick:
+        buckets = buckets[:1]
+    return buckets
+
+
+def attn_bucket_name(b: dict) -> str:
+    return f"b{b['batch']}_h{b['q_heads']}kv{b['kv_heads']}_s{b['seq_len']}_d{b['head_dim']}"
+
+
+def attn_configs_for(bucket: dict, quick: bool) -> list[dict]:
+    cfgs = fa.enumerate_aot_configs(bucket["seq_len"])
+    if not bucket.get("full", False):
+        cfgs = [
+            c
+            for c in cfgs
+            if c["block_q"] in (32, 64, 128) and c["block_k"] in (32, 64, 128) and c["unroll"] <= 2
+        ]
+    if quick:
+        cfgs = cfgs[:4]
+    return cfgs
+
+
+def gen_attention(out_dir: Path, quick: bool) -> list[dict]:
+    entries = []
+    for bucket in attention_buckets(quick):
+        name = attn_bucket_name(bucket)
+        b, hq, hkv, s, d = (
+            bucket["batch"],
+            bucket["q_heads"],
+            bucket["kv_heads"],
+            bucket["seq_len"],
+            bucket["head_dim"],
+        )
+        q = jax.ShapeDtypeStruct((b, hq, s, d), jnp.float32)
+        kv = jax.ShapeDtypeStruct((b, hkv, s, d), jnp.float32)
+        workload = {
+            "batch": b,
+            "q_heads": hq,
+            "kv_heads": hkv,
+            "seq_len": s,
+            "head_dim": d,
+            "dtype": "f32",
+            "causal": True,
+        }
+
+        for cfg in attn_configs_for(bucket, quick):
+            fn = lambda q, k, v: (
+                fa.flash_attention(q, k, v, causal=True, **cfg),
+            )
+            text = to_hlo_text(jax.jit(fn).lower(q, kv, kv))
+            rel = f"attn/{name}/bq{cfg['block_q']}_bk{cfg['block_k']}_u{cfg['unroll']}.hlo.txt"
+            meta = _write(out_dir, rel, text)
+            entries.append(
+                {
+                    "id": f"attn/{name}/bq{cfg['block_q']}_bk{cfg['block_k']}_u{cfg['unroll']}",
+                    "kernel": "attention",
+                    "impl": "pallas",
+                    "workload": workload,
+                    "config": cfg,
+                    "inputs": [spec_of(q), spec_of(kv), spec_of(kv)],
+                    "output": spec_of(q),
+                    **meta,
+                }
+            )
+
+        # Native (materialized-softmax) baseline for the same bucket.
+        fn = lambda q, k, v: (ref.attention(q, k, v, causal=True),)
+        text = to_hlo_text(jax.jit(fn).lower(q, kv, kv))
+        meta = _write(out_dir, f"attn/{name}/native.hlo.txt", text)
+        entries.append(
+            {
+                "id": f"attn/{name}/native",
+                "kernel": "attention",
+                "impl": "native",
+                "workload": workload,
+                "config": {},
+                "inputs": [spec_of(q), spec_of(kv), spec_of(kv)],
+                "output": spec_of(q),
+                **meta,
+            }
+        )
+        print(f"  attn bucket {name}: done")
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# RMS norm buckets
+# ---------------------------------------------------------------------------
+
+
+def rms_buckets(quick: bool) -> list[dict]:
+    buckets = [
+        {"n_rows": 64, "hidden": 1024},
+        {"n_rows": 512, "hidden": 1024},
+        {"n_rows": 256, "hidden": 4096},
+    ]
+    return buckets[:1] if quick else buckets
+
+
+def gen_rms(out_dir: Path, quick: bool) -> list[dict]:
+    entries = []
+    for bucket in rms_buckets(quick):
+        n, h = bucket["n_rows"], bucket["hidden"]
+        name = f"n{n}_h{h}"
+        x = jax.ShapeDtypeStruct((n, h), jnp.float32)
+        w = jax.ShapeDtypeStruct((h,), jnp.float32)
+        workload = {"n_rows": n, "hidden": h, "dtype": "f32"}
+        cfgs = rn.enumerate_aot_configs(n, h)
+        if quick:
+            cfgs = cfgs[:3]
+        for cfg in cfgs:
+            fn = lambda x, w: (rn.rms_norm(x, w, **cfg),)
+            text = to_hlo_text(jax.jit(fn).lower(x, w))
+            rel = f"rms/{name}/bh{cfg['block_h']}_r{cfg['rows_per_block']}.hlo.txt"
+            meta = _write(out_dir, rel, text)
+            entries.append(
+                {
+                    "id": f"rms/{name}/bh{cfg['block_h']}_r{cfg['rows_per_block']}",
+                    "kernel": "rms_norm",
+                    "impl": "pallas",
+                    "workload": workload,
+                    "config": cfg,
+                    "inputs": [spec_of(x), spec_of(w)],
+                    "output": spec_of(x),
+                    **meta,
+                }
+            )
+        fn = lambda x, w: (ref.rms_norm(x, w),)
+        text = to_hlo_text(jax.jit(fn).lower(x, w))
+        meta = _write(out_dir, f"rms/{name}/native.hlo.txt", text)
+        entries.append(
+            {
+                "id": f"rms/{name}/native",
+                "kernel": "rms_norm",
+                "impl": "native",
+                "workload": workload,
+                "config": {},
+                "inputs": [spec_of(x), spec_of(w)],
+                "output": spec_of(x),
+                **meta,
+            }
+        )
+        print(f"  rms bucket {name}: done")
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# Vector add (quickstart kernel)
+# ---------------------------------------------------------------------------
+
+
+def gen_vecadd(out_dir: Path, quick: bool) -> list[dict]:
+    entries = []
+    n = 4096
+    x = jax.ShapeDtypeStruct((n,), jnp.float32)
+    workload = {"n_elements": n, "dtype": "f32"}
+    for cfg in va.enumerate_aot_configs(n):
+        fn = lambda x, y: (va.vector_add(x, y, **cfg),)
+        text = to_hlo_text(jax.jit(fn).lower(x, x))
+        rel = f"vecadd/n{n}/bs{cfg['block_size']}.hlo.txt"
+        meta = _write(out_dir, rel, text)
+        entries.append(
+            {
+                "id": f"vecadd/n{n}/bs{cfg['block_size']}",
+                "kernel": "vector_add",
+                "impl": "pallas",
+                "workload": workload,
+                "config": cfg,
+                "inputs": [spec_of(x), spec_of(x)],
+                "output": spec_of(x),
+                **meta,
+            }
+        )
+    print(f"  vecadd bucket n{n}: done")
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# Full transformer block (the end-to-end serving model)
+# ---------------------------------------------------------------------------
+
+
+def model_buckets(quick: bool) -> list[dict]:
+    buckets = [
+        {"batch": 1, "seq_len": 128},
+        {"batch": 2, "seq_len": 128},
+        {"batch": 4, "seq_len": 128},
+        {"batch": 1, "seq_len": 256},
+        {"batch": 2, "seq_len": 256},
+    ]
+    return buckets[:1] if quick else buckets
+
+
+def gen_model(out_dir: Path, quick: bool) -> tuple[list[dict], dict]:
+    cfg = model_mod.ModelConfig()
+    entries = []
+    kernel_cfgs = [
+        {"block_q": 32, "block_k": 32, "unroll": 1},
+        {"block_q": 64, "block_k": 64, "unroll": 1},
+        {"block_q": 32, "block_k": 64, "unroll": 2},
+    ]
+    if quick:
+        kernel_cfgs = kernel_cfgs[:1]
+    order = model_mod.param_order(cfg)
+    shapes = {
+        "attn_norm_w": (cfg.hidden,),
+        "mlp_norm_w": (cfg.hidden,),
+        "wq": (cfg.hidden, cfg.q_dim),
+        "wk": (cfg.hidden, cfg.kv_dim),
+        "wv": (cfg.hidden, cfg.kv_dim),
+        "wo": (cfg.q_dim, cfg.hidden),
+        "w_gate": (cfg.hidden, cfg.mlp_hidden),
+        "w_up": (cfg.hidden, cfg.mlp_hidden),
+        "w_down": (cfg.mlp_hidden, cfg.hidden),
+    }
+    weight_specs = [jax.ShapeDtypeStruct(shapes[k], jnp.float32) for k in order]
+    for bucket in model_buckets(quick):
+        b, s = bucket["batch"], bucket["seq_len"]
+        name = f"b{b}_s{s}"
+        x = jax.ShapeDtypeStruct((b, s, cfg.hidden), jnp.float32)
+        for kc in kernel_cfgs:
+            fn = model_mod.transformer_block_flat(cfg, **kc)
+            text = to_hlo_text(jax.jit(fn).lower(x, *weight_specs))
+            rel = f"model/{name}/bq{kc['block_q']}_bk{kc['block_k']}_u{kc['unroll']}.hlo.txt"
+            meta = _write(out_dir, rel, text)
+            entries.append(
+                {
+                    "id": f"model/{name}/bq{kc['block_q']}_bk{kc['block_k']}_u{kc['unroll']}",
+                    "kernel": "transformer_block",
+                    "impl": "pallas",
+                    "workload": {"batch": b, "seq_len": s, "hidden": cfg.hidden, "dtype": "f32"},
+                    "config": kc,
+                    "inputs": [spec_of(x)] + [spec_of(wspec) for wspec in weight_specs],
+                    "output": spec_of(x),
+                    **meta,
+                }
+            )
+        print(f"  model bucket {name}: done")
+    model_desc = {
+        "hidden": cfg.hidden,
+        "n_q_heads": cfg.n_q_heads,
+        "n_kv_heads": cfg.n_kv_heads,
+        "head_dim": cfg.head_dim,
+        "mlp_hidden": cfg.mlp_hidden,
+        "param_order": order,
+        "param_shapes": {k: list(shapes[k]) for k in order},
+        "params_per_block": cfg.param_count(),
+    }
+    return entries, model_desc
+
+
+# ---------------------------------------------------------------------------
+# Golden vectors for the Rust integration tests
+# ---------------------------------------------------------------------------
+
+
+def _np_list(a) -> list:
+    return np.asarray(a, dtype=np.float32).reshape(-1).tolist()
+
+
+def gen_golden(out_dir: Path) -> list[dict]:
+    """Tiny deterministic workloads with python-computed expected outputs.
+
+    Rust integration tests load the HLO artifact, run it on the PJRT CPU
+    client with these inputs, and assert allclose against the expected
+    outputs — the cross-language numerical contract.
+    """
+    entries = []
+    key = jax.random.PRNGKey(42)
+
+    # Attention golden: B=1, Hq=2, Hkv=1, S=32, D=16.
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 2, 32, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 1, 32, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 1, 32, 16), jnp.float32)
+    fn = lambda q, k, v: (fa.flash_attention(q, k, v, block_q=16, block_k=16, causal=True),)
+    text = to_hlo_text(jax.jit(fn).lower(q, k, v))
+    meta = _write(out_dir, "golden/attn_tiny.hlo.txt", text)
+    expected = fa.flash_attention(q, k, v, block_q=16, block_k=16, causal=True)
+    golden = {
+        "artifact": meta["path"],
+        "inputs": [
+            {"shape": [1, 2, 32, 16], "data": _np_list(q)},
+            {"shape": [1, 1, 32, 16], "data": _np_list(k)},
+            {"shape": [1, 1, 32, 16], "data": _np_list(v)},
+        ],
+        "expected": {"shape": [1, 2, 32, 16], "data": _np_list(expected)},
+        "atol": 2e-4,
+        "rtol": 2e-4,
+    }
+    (out_dir / "golden/attn_tiny.json").write_text(json.dumps(golden))
+    entries.append({"id": "golden/attn_tiny", "kernel": "attention", **meta})
+
+    # RMS golden: [8, 512].
+    x = jax.random.normal(ks[0], (8, 512), jnp.float32)
+    w = jax.random.normal(ks[1], (512,), jnp.float32) * 0.1 + 1.0
+    fn = lambda x, w: (rn.rms_norm(x, w, block_h=128, rows_per_block=2),)
+    text = to_hlo_text(jax.jit(fn).lower(x, w))
+    meta = _write(out_dir, "golden/rms_tiny.hlo.txt", text)
+    expected = rn.rms_norm(x, w, block_h=128, rows_per_block=2)
+    golden = {
+        "artifact": meta["path"],
+        "inputs": [
+            {"shape": [8, 512], "data": _np_list(x)},
+            {"shape": [512], "data": _np_list(w)},
+        ],
+        "expected": {"shape": [8, 512], "data": _np_list(expected)},
+        "atol": 1e-4,
+        "rtol": 1e-4,
+    }
+    (out_dir / "golden/rms_tiny.json").write_text(json.dumps(golden))
+    entries.append({"id": "golden/rms_tiny", "kernel": "rms_norm", **meta})
+
+    # Vector-add golden: [1024].
+    x = jax.random.normal(ks[0], (1024,), jnp.float32)
+    y = jax.random.normal(ks[1], (1024,), jnp.float32)
+    fn = lambda x, y: (va.vector_add(x, y, block_size=256),)
+    text = to_hlo_text(jax.jit(fn).lower(x, y))
+    meta = _write(out_dir, "golden/vecadd_tiny.hlo.txt", text)
+    golden = {
+        "artifact": meta["path"],
+        "inputs": [
+            {"shape": [1024], "data": _np_list(x)},
+            {"shape": [1024], "data": _np_list(y)},
+        ],
+        "expected": {"shape": [1024], "data": _np_list(x + y)},
+        "atol": 1e-6,
+        "rtol": 1e-6,
+    }
+    (out_dir / "golden/vecadd_tiny.json").write_text(json.dumps(golden))
+    entries.append({"id": "golden/vecadd_tiny", "kernel": "vector_add", **meta})
+    print("  golden vectors: done")
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact output directory")
+    ap.add_argument("--quick", action="store_true", help="reduced set (CI smoke)")
+    args = ap.parse_args()
+    out_dir = Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    print("portatune AOT: lowering kernels to HLO text ...")
+    artifacts = []
+    artifacts += gen_vecadd(out_dir, args.quick)
+    artifacts += gen_rms(out_dir, args.quick)
+    artifacts += gen_attention(out_dir, args.quick)
+    model_entries, model_desc = gen_model(out_dir, args.quick)
+    artifacts += model_entries
+    artifacts += gen_golden(out_dir)
+
+    manifest = {
+        "version": 1,
+        "quick": args.quick,
+        "env": env_fingerprint(),
+        "model": model_desc,
+        "artifacts": artifacts,
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {len(artifacts)} artifacts + manifest to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Layer-1 Pallas kernels for portatune.
+
+Each kernel is written once, platform-independently, with its tunable
+parameters (block shapes, unroll depth) exposed as keyword arguments —
+the Pallas analog of Triton kernel configurations.  All kernels run under
+``interpret=True`` so that the lowered HLO executes on any PJRT backend
+(the Rust coordinator runs them on the CPU client).
+
+Kernels:
+  - :mod:`flash_attention` — causal/non-causal flash attention (the paper's
+    primary investigation vehicle).
+  - :mod:`rms_norm` — RMS layer normalization (the paper's secondary
+    kernel).
+  - :mod:`vector_add` — the Listing-1 pedagogical kernel.
+  - :mod:`ref` — pure-jnp oracles used by pytest and by the Rust golden
+    tests.
+"""
+
+from . import flash_attention, ref, rms_norm, vector_add  # noqa: F401
+
+__all__ = ["flash_attention", "rms_norm", "vector_add", "ref"]

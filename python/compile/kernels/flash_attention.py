@@ -1,0 +1,234 @@
+"""Causal flash attention as a configurable Pallas kernel (Layer 1).
+
+This is the portatune analog of the paper's autotuned Triton flash
+attention (Table I, row "Triton w/ autotuning"): a single,
+platform-independent source whose performance-relevant decisions are all
+expressed as *kernel configuration parameters*:
+
+  - ``block_q``  — query-tile rows per grid step   (Triton BLOCK_M)
+  - ``block_k``  — key/value-tile rows per inner step (Triton BLOCK_N)
+  - ``unroll``   — k-loop unroll factor, the software-pipelining /
+                   num_stages analog (see DESIGN.md §Hardware-Adaptation)
+
+The kernel implements the online-softmax recurrence of FlashAttention-2
+(Dao 2023): one pass over K/V per query tile, keeping the running max
+``m``, normalizer ``l`` and accumulator ``acc`` in registers/VMEM.
+
+Grouped-query attention (Llama-3: 32 query heads, 8 KV heads) is handled
+in the BlockSpec index map: query head ``h`` reads KV head ``h // rep``.
+
+TPU adaptation notes (vs. the Triton/CUDA original):
+  - the K/V panel staged per inner step lives in VMEM, not CUDA shared
+    memory; the VMEM footprint is ``vmem_bytes(...)`` below and is the
+    validity constraint the Rust platform models enforce;
+  - the (block_q x block_k) score matmul targets the MXU with f32
+    accumulation (``preferred_element_type``), replacing tensor-core WMMA;
+  - there is no thread/warp dimension: ``unroll`` expresses the ILP /
+    pipelining trade that ``num_warps``/``num_stages`` express in Triton.
+
+``interpret=True`` is mandatory: real-TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = float("-inf")
+
+#: The AOT configuration space (kept small enough to lower every variant;
+#: the Rust simulator explores the full Triton-sized space analytically).
+BLOCK_Q_CHOICES = (16, 32, 64, 128)
+BLOCK_K_CHOICES = (16, 32, 64, 128)
+UNROLL_CHOICES = (1, 2, 4)
+
+
+def config_is_valid(seq_len: int, block_q: int, block_k: int, unroll: int) -> bool:
+    """Static validity rules for an attention kernel configuration.
+
+    Mirrors `rust/src/config/spaces.rs::attention_aot_space`; keep in sync.
+    """
+    if seq_len % block_q != 0 or seq_len % block_k != 0:
+        return False
+    nk = seq_len // block_k
+    if unroll > 1 and nk % unroll != 0:
+        return False
+    return block_q <= seq_len and block_k <= seq_len
+
+
+def vmem_bytes(block_q: int, block_k: int, head_dim: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working-set of one grid step.
+
+    q tile + k panel + v panel + scores + accumulator (f32) + output tile.
+    Used by the Rust perf models and by the §Perf L1 report.
+    """
+    q = block_q * head_dim * dtype_bytes
+    kv = 2 * block_k * head_dim * dtype_bytes
+    scores = block_q * block_k * 4
+    acc = block_q * head_dim * 4
+    out = block_q * head_dim * dtype_bytes
+    return q + kv + scores + acc + out
+
+
+def flops(batch: int, heads: int, seq_len: int, head_dim: int, causal: bool = True) -> int:
+    """Model FLOPs of the attention computation (for MXU-utilization est.)."""
+    full = 4 * batch * heads * seq_len * seq_len * head_dim
+    return full // 2 if causal else full
+
+
+def _attn_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    *,
+    block_q: int,
+    block_k: int,
+    unroll: int,
+    sm_scale: float,
+    causal: bool,
+    seq_len: int,
+):
+    """One grid step: one (batch, head, query-tile) program instance."""
+    qi = pl.program_id(2)
+    q = q_ref[...].astype(jnp.float32)  # [block_q, D]
+    head_dim = q.shape[-1]
+
+    acc = jnp.zeros((block_q, head_dim), jnp.float32)
+    m = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l = jnp.zeros((block_q,), jnp.float32)
+
+    def step(j, carry):
+        """Process k/v panel j (statically unrolled ``unroll`` times)."""
+        acc, m, l = carry
+        k = pl.load(k_ref, (pl.dslice(j * block_k, block_k), slice(None))).astype(jnp.float32)
+        v = pl.load(v_ref, (pl.dslice(j * block_k, block_k), slice(None))).astype(jnp.float32)
+        # MXU: [block_q, D] x [D, block_k] with f32 accumulation.
+        s = jax.lax.dot_general(
+            q,
+            k,
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        s = s * sm_scale
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            kpos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        # Causal tiling guarantees panel 0 has an unmasked element per row
+        # (qpos >= 0 == first kpos), so m_new is finite after the first
+        # step and the exp() arguments never see (-inf) - (-inf).
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        return acc_new, m_new, l_new
+
+    nk_total = seq_len // block_k
+    if causal:
+        # Only panels that intersect the causal triangle of this query tile.
+        # Last intersecting panel index: floor(((qi+1)*block_q - 1)/block_k).
+        nk = ((qi + 1) * block_q - 1) // block_k + 1
+    else:
+        nk = nk_total
+
+    if unroll <= 1:
+        acc, m, l = jax.lax.fori_loop(0, nk, step, (acc, m, l))
+    else:
+        # Software pipelining analog: statically unroll the k-loop by
+        # ``unroll``; the epilogue handles the causal remainder.
+        def unrolled(jj, carry):
+            for u in range(unroll):
+                carry = step(jj * unroll + u, carry)
+            return carry
+
+        n_major = nk // unroll
+        acc, m, l = jax.lax.fori_loop(0, n_major, unrolled, (acc, m, l))
+
+        def epilogue(j, carry):
+            return step(j, carry)
+
+        acc, m, l = jax.lax.fori_loop(n_major * unroll, nk, epilogue, (acc, m, l))
+
+    # Rows with l == 0 can only occur for non-causal fully-masked tiles,
+    # which we never generate; still, guard the division.
+    l = jnp.where(l == 0.0, 1.0, l)
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q,
+    k,
+    v,
+    *,
+    block_q: int = 32,
+    block_k: int = 32,
+    unroll: int = 1,
+    causal: bool = True,
+    sm_scale: float | None = None,
+    interpret: bool = True,
+):
+    """Flash attention over ``q``[B,Hq,S,D], ``k``/``v``[B,Hkv,S,D].
+
+    Grouped-query attention: Hq must be a multiple of Hkv; query head h
+    attends with KV head ``h // (Hq // Hkv)`` via the BlockSpec index map.
+    """
+    batch, hq, seq_len, head_dim = q.shape
+    hkv = k.shape[1]
+    if hq % hkv != 0:
+        raise ValueError(f"query heads {hq} not a multiple of kv heads {hkv}")
+    if not config_is_valid(seq_len, block_q, block_k, unroll):
+        raise ValueError(
+            f"invalid attention config block_q={block_q} block_k={block_k} "
+            f"unroll={unroll} for seq_len={seq_len}"
+        )
+    rep = hq // hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(head_dim)
+
+    kern = functools.partial(
+        _attn_kernel,
+        block_q=block_q,
+        block_k=block_k,
+        unroll=unroll,
+        sm_scale=sm_scale,
+        causal=causal,
+        seq_len=seq_len,
+    )
+    grid = (batch, hq, seq_len // block_q)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, block_q, head_dim), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((None, None, seq_len, head_dim), lambda b, h, i: (b, h // rep, 0, 0)),
+            pl.BlockSpec((None, None, seq_len, head_dim), lambda b, h, i: (b, h // rep, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, block_q, head_dim), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def enumerate_aot_configs(seq_len: int) -> list[dict[str, Any]]:
+    """All valid AOT configurations for a given sequence length.
+
+    The Rust coordinator's "AOT space"; every entry is lowered to its own
+    HLO artifact by aot.py and empirically timed by the autotuner.
+    """
+    out = []
+    for bq in BLOCK_Q_CHOICES:
+        for bk in BLOCK_K_CHOICES:
+            for u in UNROLL_CHOICES:
+                if config_is_valid(seq_len, bq, bk, u):
+                    out.append({"block_q": bq, "block_k": bk, "unroll": u})
+    return out

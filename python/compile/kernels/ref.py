@@ -1,0 +1,84 @@
+"""Pure-jnp reference oracles for every Layer-1 kernel.
+
+These are the ``pytorch native``-style implementations from the paper's
+Table I: short, obviously correct, and the ground truth that every Pallas
+kernel configuration must match within tolerance.  They are also lowered
+to HLO by ``aot.py`` to serve as the *native baseline* artifacts that the
+Rust experiments execute.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = float("-inf")
+
+
+def attention(q, k, v, *, causal: bool = True, sm_scale: float | None = None):
+    """Naive materialized attention: O = softmax(Q K^T / sqrt(d)) V.
+
+    Shapes: q ``[B, Hq, S, D]``; k, v ``[B, Hkv, S, D]`` with
+    ``Hq % Hkv == 0`` (grouped-query attention, as in Llama-3).
+    This is the 29-LoC "pytorch native" baseline of the paper: it
+    materializes the full S x S score matrix, which is exactly why it is
+    6-13x slower than flash attention on real hardware.
+    """
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    if sm_scale is None:
+        sm_scale = 1.0 / (d**0.5)
+    if hq != hkv:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores * sm_scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(mask[None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rms_norm(x, weight, *, eps: float = 1e-6):
+    """RMS layer normalization [Zhang & Sennrich 2019].
+
+    ``x``: [..., H]; ``weight``: [H].  Matches vLLM's
+    layernorm_kernels.cu semantics (f32 accumulation, cast back).
+    """
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def vector_add(x, y):
+    """Listing 1: element-wise vector addition."""
+    return x + y
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """SwiGLU MLP used by the Llama-3 block in model.py."""
+    g = jax.nn.silu(x @ w_gate)
+    u = x @ w_up
+    return (g * u) @ w_down
+
+
+def rope(x, *, base: float = 500000.0):
+    """Rotary position embedding (Llama-3 uses base 500000).
+
+    ``x``: [B, H, S, D] with even D.  Returns same shape.
+    """
+    b, h, s, d = x.shape
+    half = d // 2
+    freqs = 1.0 / (base ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    t = jnp.arange(s, dtype=jnp.float32)
+    angles = jnp.outer(t, freqs)  # [S, half]
+    cos = jnp.cos(angles)[None, None, :, :]
+    sin = jnp.sin(angles)[None, None, :, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf1 * sin + xf2 * cos], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,125 @@
+"""RMS layer normalization as a configurable Pallas kernel (Layer 1).
+
+The paper's second investigation vehicle (Table I row "RMS / Triton w/
+autotuning", 96 LoC vs vLLM's 159-LoC CUDA kernel).  One row of the
+hidden-states matrix is normalized per grid step; the tunable parameters
+are:
+
+  - ``block_h``   — how many hidden elements are processed per vector step
+                    (the Triton BLOCK_SIZE analog); the row is streamed
+                    through VMEM in ``hidden // block_h`` chunks.
+  - ``rows_per_block`` — how many rows one grid step handles (grid
+                    coarsening; trades launch overhead against parallelism,
+                    the ``num_warps`` analog for this memory-bound kernel).
+
+Accumulation is always f32 regardless of input dtype, matching
+layernorm_kernels.cu semantics.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: AOT configuration space; mirrored in rust/src/config/spaces.rs.
+BLOCK_H_CHOICES = (128, 256, 512, 1024, 2048, 4096)
+ROWS_PER_BLOCK_CHOICES = (1, 2, 4)
+
+
+def config_is_valid(n_rows: int, hidden: int, block_h: int, rows_per_block: int) -> bool:
+    """Static validity rules; keep in sync with spaces.rs."""
+    if hidden % block_h != 0:
+        return False
+    if n_rows % rows_per_block != 0:
+        return False
+    return block_h <= hidden
+
+
+def vmem_bytes(block_h: int, rows_per_block: int, dtype_bytes: int = 4) -> int:
+    """VMEM working set of one grid step (input chunk + f32 accum + out)."""
+    return rows_per_block * (2 * block_h * dtype_bytes + block_h * 4) + block_h * dtype_bytes
+
+
+def bytes_moved(n_rows: int, hidden: int, dtype_bytes: int = 4) -> int:
+    """HBM traffic model: read x, read weight once, write out."""
+    return n_rows * hidden * dtype_bytes * 2 + hidden * dtype_bytes
+
+
+def _rms_kernel(x_ref, w_ref, o_ref, *, block_h: int, rows_per_block: int, hidden: int, eps: float):
+    """Normalize ``rows_per_block`` rows, streaming ``block_h`` chunks."""
+    n_chunks = hidden // block_h
+
+    # Pass 1: accumulate sum of squares per row, chunk by chunk.
+    def ss_step(c, ss):
+        chunk = x_ref[:, pl.dslice(c * block_h, block_h)].astype(jnp.float32)
+        return ss + jnp.sum(chunk * chunk, axis=-1)
+
+    ss = jax.lax.fori_loop(0, n_chunks, ss_step, jnp.zeros((rows_per_block,), jnp.float32))
+    rrms = jax.lax.rsqrt(ss / hidden + eps)  # [rows_per_block]
+
+    # Pass 2: scale and write back, chunk by chunk.
+    def write_step(c, _):
+        chunk = x_ref[:, pl.dslice(c * block_h, block_h)].astype(jnp.float32)
+        w = w_ref[pl.dslice(c * block_h, block_h)].astype(jnp.float32)
+        normed = chunk * rrms[:, None] * w[None, :]
+        o_ref[:, pl.dslice(c * block_h, block_h)] = normed.astype(o_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, n_chunks, write_step, 0)
+
+
+def rms_norm(
+    x,
+    weight,
+    *,
+    block_h: int = 512,
+    rows_per_block: int = 1,
+    eps: float = 1e-6,
+    interpret: bool = True,
+):
+    """RMS-normalize ``x`` [N, H] by ``weight`` [H].
+
+    Higher-rank inputs are flattened to [N, H] and restored on return.
+    """
+    orig_shape = x.shape
+    hidden = orig_shape[-1]
+    x2 = x.reshape(-1, hidden)
+    n_rows = x2.shape[0]
+    if not config_is_valid(n_rows, hidden, block_h, rows_per_block):
+        raise ValueError(
+            f"invalid rms config block_h={block_h} rows_per_block={rows_per_block} "
+            f"for shape [{n_rows}, {hidden}]"
+        )
+    kern = functools.partial(
+        _rms_kernel,
+        block_h=block_h,
+        rows_per_block=rows_per_block,
+        hidden=hidden,
+        eps=eps,
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(n_rows // rows_per_block,),
+        in_specs=[
+            pl.BlockSpec((rows_per_block, hidden), lambda r: (r, 0)),
+            pl.BlockSpec((hidden,), lambda r: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rows_per_block, hidden), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_rows, hidden), x.dtype),
+        interpret=interpret,
+    )(x2, weight)
+    return out.reshape(orig_shape)
+
+
+def enumerate_aot_configs(n_rows: int, hidden: int) -> list[dict[str, Any]]:
+    """All valid AOT configurations for a workload shape."""
+    out = []
+    for bh in BLOCK_H_CHOICES:
+        for rpb in ROWS_PER_BLOCK_CHOICES:
+            if config_is_valid(n_rows, hidden, bh, rpb):
+                out.append({"block_h": bh, "rows_per_block": rpb})
+    return out

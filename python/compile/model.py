@@ -1,0 +1,186 @@
+"""Layer-2 JAX model: a Llama-3-style transformer block built on the
+Layer-1 Pallas kernels.
+
+The paper bases all kernel parameters on the Llama-3-8B architecture
+(head size 128, 32 query heads, 8 KV heads).  This module assembles the
+same attention layer — RMSNorm -> QKV projection -> RoPE -> flash
+attention -> output projection — plus the SwiGLU MLP, entirely in JAX,
+calling ``kernels.flash_attention`` and ``kernels.rms_norm`` for the two
+performance-critical operators the paper studies.
+
+``aot.py`` lowers :func:`transformer_block` (and the individual kernel
+wrappers) to HLO text once; the Rust serving layer then executes the
+artifacts with real weights streamed in as PJRT literals.  Python is never
+on the request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import flash_attention as fa
+from .kernels import ref
+from .kernels import rms_norm as rn
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Llama-3-8B-proportioned architecture (scaled down by default).
+
+    The default is the "~100M-parameter-class" validation model used by
+    the end-to-end serving example: same head geometry as Llama-3-8B
+    (GQA 4:1, head_dim 128) with fewer heads and a narrower MLP so that a
+    CPU PJRT backend can serve it interactively.
+    """
+
+    hidden: int = 1024
+    n_q_heads: int = 8
+    n_kv_heads: int = 2
+    head_dim: int = 128
+    mlp_hidden: int = 2816
+    rope_base: float = 500000.0
+    rms_eps: float = 1e-6
+    dtype: Any = jnp.float32
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_q_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def param_count(self) -> int:
+        """Parameters of ONE block (the serving example stacks several)."""
+        attn = self.hidden * (self.q_dim + 2 * self.kv_dim) + self.q_dim * self.hidden
+        mlp = 3 * self.hidden * self.mlp_hidden
+        norms = 2 * self.hidden
+        return attn + mlp + norms
+
+
+#: Full Llama-3-8B head geometry, used for workload/shape accounting in
+#: the experiments (the perf models need the real proportions).
+LLAMA3_8B = ModelConfig(
+    hidden=4096,
+    n_q_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    mlp_hidden=14336,
+)
+
+
+def init_params(cfg: ModelConfig, key) -> dict[str, jax.Array]:
+    """Xavier-ish init for one transformer block."""
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(cfg.hidden)
+    return {
+        "attn_norm_w": jnp.ones((cfg.hidden,), cfg.dtype),
+        "mlp_norm_w": jnp.ones((cfg.hidden,), cfg.dtype),
+        "wq": (jax.random.normal(ks[0], (cfg.hidden, cfg.q_dim)) * s).astype(cfg.dtype),
+        "wk": (jax.random.normal(ks[1], (cfg.hidden, cfg.kv_dim)) * s).astype(cfg.dtype),
+        "wv": (jax.random.normal(ks[2], (cfg.hidden, cfg.kv_dim)) * s).astype(cfg.dtype),
+        "wo": (jax.random.normal(ks[3], (cfg.q_dim, cfg.hidden)) * s).astype(cfg.dtype),
+        "w_gate": (jax.random.normal(ks[4], (cfg.hidden, cfg.mlp_hidden)) * s).astype(cfg.dtype),
+        "w_up": (jax.random.normal(ks[5], (cfg.hidden, cfg.mlp_hidden)) * s).astype(cfg.dtype),
+        "w_down": (jax.random.normal(ks[0], (cfg.mlp_hidden, cfg.hidden)) * s).astype(cfg.dtype),
+    }
+
+
+def param_order(cfg: ModelConfig) -> list[str]:
+    """Deterministic argument order for the flat-arg AOT entry point.
+
+    The Rust runtime feeds weights positionally; this list is written into
+    the artifact manifest so both sides agree.
+    """
+    return [
+        "attn_norm_w",
+        "mlp_norm_w",
+        "wq",
+        "wk",
+        "wv",
+        "wo",
+        "w_gate",
+        "w_up",
+        "w_down",
+    ]
+
+
+def attention_layer(
+    x,
+    params,
+    cfg: ModelConfig,
+    *,
+    block_q: int = 32,
+    block_k: int = 32,
+    unroll: int = 1,
+    use_pallas: bool = True,
+):
+    """The paper's unit of study: norm -> QKV -> RoPE -> attention -> out."""
+    batch, seq, _ = x.shape
+    if use_pallas:
+        h = rn.rms_norm(x, params["attn_norm_w"], block_h=min(512, cfg.hidden), eps=cfg.rms_eps)
+    else:
+        h = ref.rms_norm(x, params["attn_norm_w"], eps=cfg.rms_eps)
+    q = (h @ params["wq"]).reshape(batch, seq, cfg.n_q_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    k = (h @ params["wk"]).reshape(batch, seq, cfg.n_kv_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    v = (h @ params["wv"]).reshape(batch, seq, cfg.n_kv_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    q = ref.rope(q, base=cfg.rope_base)
+    k = ref.rope(k, base=cfg.rope_base)
+    if use_pallas:
+        o = fa.flash_attention(q, k, v, block_q=block_q, block_k=block_k, unroll=unroll, causal=True)
+    else:
+        o = ref.attention(q, k, v, causal=True)
+    o = o.transpose(0, 2, 1, 3).reshape(batch, seq, cfg.q_dim)
+    return x + o @ params["wo"]
+
+
+def mlp_layer(x, params, cfg: ModelConfig, *, use_pallas: bool = True):
+    """SwiGLU MLP with pre-RMSNorm."""
+    if use_pallas:
+        h = rn.rms_norm(x, params["mlp_norm_w"], block_h=min(512, cfg.hidden), eps=cfg.rms_eps)
+    else:
+        h = ref.rms_norm(x, params["mlp_norm_w"], eps=cfg.rms_eps)
+    return x + ref.swiglu(h, params["w_gate"], params["w_up"], params["w_down"])
+
+
+def transformer_block(
+    x,
+    params,
+    cfg: ModelConfig,
+    *,
+    block_q: int = 32,
+    block_k: int = 32,
+    unroll: int = 1,
+    use_pallas: bool = True,
+):
+    """One full pre-norm transformer block (attention + MLP)."""
+    x = attention_layer(x, params, cfg, block_q=block_q, block_k=block_k, unroll=unroll, use_pallas=use_pallas)
+    return mlp_layer(x, params, cfg, use_pallas=use_pallas)
+
+
+def transformer_block_flat(cfg: ModelConfig, **kernel_cfg):
+    """Flat-argument entry point for AOT lowering.
+
+    Returns ``fn(x, *weights)`` with weights in :func:`param_order` order —
+    the signature the Rust runtime calls.
+    """
+    order = param_order(cfg)
+
+    def fn(x, *weights):
+        params = dict(zip(order, weights))
+        return (transformer_block(x, params, cfg, **kernel_cfg),)
+
+    return fn
+
+
+def block_flops(cfg: ModelConfig, batch: int, seq: int) -> int:
+    """Model FLOPs of one block forward (for throughput accounting)."""
+    proj = 2 * batch * seq * cfg.hidden * (cfg.q_dim + 2 * cfg.kv_dim + cfg.q_dim)
+    attn = fa.flops(batch, cfg.n_q_heads, seq, cfg.head_dim, causal=True)
+    mlp = 2 * batch * seq * 3 * cfg.hidden * cfg.mlp_hidden
+    return proj + attn + mlp

@@ -1,0 +1,84 @@
+"""AOT manifest consistency: the compile-path contract the Rust side
+relies on.  Skipped when `make artifacts` has not run."""
+
+import json
+import pathlib
+
+import pytest
+
+from compile.kernels import flash_attention as fa
+from compile.kernels import rms_norm as rn
+from compile.kernels import vector_add as va
+
+ART = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+pytestmark = pytest.mark.skipif(
+    not (ART / "manifest.json").exists(), reason="run `make artifacts` first"
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    return json.loads((ART / "manifest.json").read_text())
+
+
+def test_every_artifact_file_exists(manifest):
+    for a in manifest["artifacts"]:
+        path = ART / a["path"]
+        assert path.exists(), a["id"]
+        assert path.stat().st_size == a["bytes"], f"{a['id']} size drift"
+
+
+def test_attention_configs_are_valid(manifest):
+    for a in manifest["artifacts"]:
+        if a["kernel"] != "attention" or a.get("impl") != "pallas":
+            continue
+        w, c = a["workload"], a["config"]
+        assert fa.config_is_valid(w["seq_len"], c["block_q"], c["block_k"], c["unroll"]), a["id"]
+
+
+def test_rms_configs_are_valid(manifest):
+    for a in manifest["artifacts"]:
+        if a["kernel"] != "rms_norm" or a.get("impl") != "pallas":
+            continue
+        w, c = a["workload"], a["config"]
+        assert rn.config_is_valid(w["n_rows"], w["hidden"], c["block_h"], c["rows_per_block"]), a["id"]
+
+
+def test_vecadd_configs_are_valid(manifest):
+    for a in manifest["artifacts"]:
+        if a["kernel"] != "vector_add" or a.get("impl") != "pallas":
+            continue
+        assert va.config_is_valid(a["workload"]["n_elements"], a["config"]["block_size"]), a["id"]
+
+
+def test_input_specs_match_workloads(manifest):
+    for a in manifest["artifacts"]:
+        if a["kernel"] != "attention" or a.get("impl") != "pallas":
+            continue
+        w = a["workload"]
+        q, k, v = a["inputs"]
+        assert q["shape"] == [w["batch"], w["q_heads"], w["seq_len"], w["head_dim"]]
+        assert k["shape"] == [w["batch"], w["kv_heads"], w["seq_len"], w["head_dim"]]
+        assert v["shape"] == k["shape"]
+        assert a["output"]["shape"] == q["shape"]
+
+
+def test_ids_are_unique(manifest):
+    ids = [a["id"] for a in manifest["artifacts"]]
+    assert len(ids) == len(set(ids))
+
+
+def test_env_fingerprint_present(manifest):
+    env = manifest["env"]
+    assert env["interchange"] == "hlo-text-v1"
+    assert env["jax"]
+
+
+def test_model_params_cover_declared_order(manifest):
+    m = manifest["model"]
+    assert set(m["param_order"]) == set(m["param_shapes"].keys())
+    total = sum(
+        int(__import__("numpy").prod(s)) for s in m["param_shapes"].values()
+    )
+    assert total == m["params_per_block"]

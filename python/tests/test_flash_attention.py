@@ -1,0 +1,161 @@
+"""Pallas flash attention vs the pure-jnp oracle (the core L1 contract).
+
+Every configuration the autotuner may select must produce the same
+numerics as ``ref.attention`` — otherwise "autotuning" would be trading
+correctness for speed.  Hypothesis sweeps shapes, GQA ratios, dtypes and
+block configurations.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import flash_attention as fa
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_qkv(key, batch, hq, hkv, seq, dim, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (batch, hq, seq, dim), dtype)
+    k = jax.random.normal(ks[1], (batch, hkv, seq, dim), dtype)
+    v = jax.random.normal(ks[2], (batch, hkv, seq, dim), dtype)
+    return q, k, v
+
+
+def assert_matches_ref(q, k, v, causal=True, atol=2e-3, **cfg):
+    out = fa.flash_attention(q, k, v, causal=causal, **cfg)
+    expected = ref.attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expected, np.float32), atol=atol, rtol=atol
+    )
+
+
+class TestBasicConfigs:
+    @pytest.mark.parametrize("block_q", [16, 32, 64])
+    @pytest.mark.parametrize("block_k", [16, 32, 64])
+    def test_block_shapes_causal(self, block_q, block_k):
+        q, k, v = make_qkv(jax.random.PRNGKey(0), 1, 2, 2, 64, 32)
+        assert_matches_ref(q, k, v, block_q=block_q, block_k=block_k)
+
+    @pytest.mark.parametrize("unroll", [1, 2, 4])
+    def test_unroll_factors(self, unroll):
+        q, k, v = make_qkv(jax.random.PRNGKey(1), 1, 2, 2, 64, 16)
+        assert_matches_ref(q, k, v, block_q=16, block_k=16, unroll=unroll)
+
+    def test_non_causal(self):
+        q, k, v = make_qkv(jax.random.PRNGKey(2), 2, 2, 2, 64, 16)
+        assert_matches_ref(q, k, v, causal=False, block_q=32, block_k=16)
+
+    def test_gqa_llama3_ratio(self):
+        # Llama-3 GQA: 4 query heads per KV head.
+        q, k, v = make_qkv(jax.random.PRNGKey(3), 1, 8, 2, 64, 16)
+        assert_matches_ref(q, k, v, block_q=16, block_k=32)
+
+    def test_single_kv_head_mqa(self):
+        q, k, v = make_qkv(jax.random.PRNGKey(4), 1, 4, 1, 32, 16)
+        assert_matches_ref(q, k, v, block_q=16, block_k=16)
+
+    def test_block_equals_seq(self):
+        q, k, v = make_qkv(jax.random.PRNGKey(5), 1, 2, 2, 32, 16)
+        assert_matches_ref(q, k, v, block_q=32, block_k=32)
+
+    def test_batch_dim(self):
+        q, k, v = make_qkv(jax.random.PRNGKey(6), 4, 2, 1, 32, 16)
+        assert_matches_ref(q, k, v, block_q=16, block_k=16)
+
+    def test_bf16_inputs(self):
+        q, k, v = make_qkv(jax.random.PRNGKey(7), 1, 2, 2, 32, 16, jnp.bfloat16)
+        # bf16 storage, f32 accumulation: tolerance follows bf16 epsilon.
+        assert_matches_ref(q, k, v, block_q=16, block_k=16, atol=3e-2)
+
+    def test_custom_sm_scale(self):
+        q, k, v = make_qkv(jax.random.PRNGKey(8), 1, 2, 2, 32, 16)
+        out = fa.flash_attention(q, k, v, block_q=16, block_k=16, sm_scale=0.5)
+        expected = ref.attention(q, k, v, sm_scale=0.5)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expected), atol=2e-3)
+
+
+class TestValidity:
+    def test_rejects_nondivisible_block_q(self):
+        q, k, v = make_qkv(jax.random.PRNGKey(0), 1, 2, 2, 48, 16)
+        with pytest.raises(ValueError, match="invalid attention config"):
+            fa.flash_attention(q, k, v, block_q=32, block_k=16)
+
+    def test_rejects_nondivisible_unroll(self):
+        q, k, v = make_qkv(jax.random.PRNGKey(0), 1, 2, 2, 48, 16)
+        with pytest.raises(ValueError, match="invalid attention config"):
+            fa.flash_attention(q, k, v, block_q=16, block_k=16, unroll=2)
+
+    def test_rejects_bad_gqa_ratio(self):
+        q = jnp.zeros((1, 3, 32, 16))
+        kv = jnp.zeros((1, 2, 32, 16))
+        with pytest.raises(ValueError, match="not a multiple"):
+            fa.flash_attention(q, kv, kv, block_q=16, block_k=16)
+
+    def test_config_is_valid_matrix(self):
+        assert fa.config_is_valid(128, 32, 32, 1)
+        assert not fa.config_is_valid(128, 48, 32, 1)  # non-divisor
+        assert not fa.config_is_valid(64, 128, 32, 1)  # block > seq
+        assert not fa.config_is_valid(128, 32, 64, 4)  # nk=2 not multiple of 4
+        assert fa.config_is_valid(128, 32, 32, 4)  # nk=4
+
+    def test_enumerate_matches_validity(self):
+        for s in (64, 128, 256):
+            for cfg in fa.enumerate_aot_configs(s):
+                assert fa.config_is_valid(s, cfg["block_q"], cfg["block_k"], cfg["unroll"])
+
+    def test_enumerate_count_grows_with_seqlen(self):
+        assert len(fa.enumerate_aot_configs(128)) >= len(fa.enumerate_aot_configs(16))
+
+
+class TestNumericalEdges:
+    def test_large_magnitude_logits_no_overflow(self):
+        # Online softmax must be stable for large scores.
+        q, k, v = make_qkv(jax.random.PRNGKey(9), 1, 1, 1, 32, 16)
+        out = fa.flash_attention(q * 30.0, k * 30.0, v, block_q=16, block_k=16)
+        assert np.isfinite(np.asarray(out)).all()
+        expected = ref.attention(q * 30.0, k * 30.0, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expected), atol=5e-3)
+
+    def test_first_row_causal(self):
+        # Row 0 attends only to itself: output == v[0].
+        q, k, v = make_qkv(jax.random.PRNGKey(10), 1, 1, 1, 32, 16)
+        out = fa.flash_attention(q, k, v, block_q=16, block_k=16, causal=True)
+        np.testing.assert_allclose(np.asarray(out)[0, 0, 0], np.asarray(v)[0, 0, 0], atol=1e-5)
+
+    def test_uniform_values(self):
+        # Constant V -> output constant regardless of attention weights.
+        q, k, _ = make_qkv(jax.random.PRNGKey(11), 1, 2, 1, 32, 16)
+        v = jnp.full((1, 1, 32, 16), 3.5, jnp.float32)
+        out = fa.flash_attention(q, k, v, block_q=16, block_k=16)
+        np.testing.assert_allclose(np.asarray(out), 3.5, atol=1e-5)
+
+    def test_vmem_bytes_monotone(self):
+        assert fa.vmem_bytes(64, 64, 64) > fa.vmem_bytes(32, 32, 64)
+        assert fa.vmem_bytes(32, 32, 128) > fa.vmem_bytes(32, 32, 64)
+
+    def test_flops_causal_halves(self):
+        assert fa.flops(1, 8, 128, 64, causal=True) * 2 == fa.flops(1, 8, 128, 64, causal=False)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seq_pow=st.integers(5, 7),  # seq in {32, 64, 128}
+    bq_pow=st.integers(4, 6),
+    bk_pow=st.integers(4, 6),
+    hq=st.sampled_from([1, 2, 4]),
+    gqa=st.sampled_from([1, 2]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_config_sweep(seq_pow, bq_pow, bk_pow, hq, gqa, causal, seed):
+    """Any valid (shape, config) pair matches the oracle."""
+    seq, bq, bk = 2**seq_pow, 2**bq_pow, 2**bk_pow
+    if not fa.config_is_valid(seq, bq, bk, 1) or hq % gqa != 0:
+        return
+    q, k, v = make_qkv(jax.random.PRNGKey(seed), 1, hq, hq // gqa, seq, 16)
+    assert_matches_ref(q, k, v, causal=causal, block_q=bq, block_k=bk)

@@ -1,0 +1,79 @@
+"""Layer-2 model tests: Pallas-kerneled block vs pure-reference block."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as m
+
+jax.config.update("jax_platform_name", "cpu")
+
+SMALL = m.ModelConfig(hidden=128, n_q_heads=4, n_kv_heads=2, head_dim=32, mlp_hidden=256)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return m.init_params(SMALL, jax.random.PRNGKey(0))
+
+
+def test_attention_layer_matches_ref(params):
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, SMALL.hidden))
+    got = m.attention_layer(x, params, SMALL, block_q=16, block_k=16, use_pallas=True)
+    want = m.attention_layer(x, params, SMALL, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-3, rtol=2e-3)
+
+
+def test_block_matches_ref(params):
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 64, SMALL.hidden))
+    got = m.transformer_block(x, params, SMALL, block_q=32, block_k=16, use_pallas=True)
+    want = m.transformer_block(x, params, SMALL, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-3, rtol=5e-3)
+
+
+def test_block_config_invariance(params):
+    """Different kernel configs must give identical model outputs."""
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 64, SMALL.hidden))
+    a = m.transformer_block(x, params, SMALL, block_q=16, block_k=16, unroll=1)
+    b = m.transformer_block(x, params, SMALL, block_q=32, block_k=32, unroll=2)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3, rtol=2e-3)
+
+
+def test_flat_entry_point_matches(params):
+    x = jax.random.normal(jax.random.PRNGKey(4), (1, 64, SMALL.hidden))
+    flat = m.transformer_block_flat(SMALL, block_q=16, block_k=16)
+    weights = [params[k] for k in m.param_order(SMALL)]
+    (got,) = flat(x, *weights)
+    want = m.transformer_block(x, params, SMALL, block_q=16, block_k=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+def test_param_count_formula():
+    cfg = m.ModelConfig()
+    params = m.init_params(cfg, jax.random.PRNGKey(0))
+    actual = sum(int(np.prod(p.shape)) for p in params.values())
+    assert actual == cfg.param_count()
+
+
+def test_llama3_8b_geometry():
+    cfg = m.LLAMA3_8B
+    assert cfg.q_dim == 4096 and cfg.kv_dim == 1024
+    # one block of Llama-3-8B is ~218M params; 32 blocks ~7B (plus embeddings)
+    assert 150e6 < cfg.param_count() < 250e6
+
+
+def test_block_flops_positive_and_monotone():
+    cfg = m.ModelConfig()
+    assert m.block_flops(cfg, 1, 128) > 0
+    assert m.block_flops(cfg, 2, 128) == 2 * m.block_flops(cfg, 1, 128)
+    assert m.block_flops(cfg, 1, 256) > m.block_flops(cfg, 1, 128)
+
+
+def test_residual_stream_preserved(params):
+    """Zero-weight projections ⇒ block ≈ identity (residual path)."""
+    zp = {k: jnp.zeros_like(v) for k, v in params.items()}
+    zp["attn_norm_w"] = params["attn_norm_w"]
+    zp["mlp_norm_w"] = params["mlp_norm_w"]
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 64, SMALL.hidden))
+    out = m.transformer_block(x, zp, SMALL, block_q=16, block_k=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x), atol=1e-6)

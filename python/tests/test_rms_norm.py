@@ -1,0 +1,114 @@
+"""Pallas RMS norm vs the pure-jnp oracle, across the config space."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import rms_norm as rn
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def assert_matches_ref(x, w, atol=1e-4, **cfg):
+    out = rn.rms_norm(x, w, **cfg)
+    expected = ref.rms_norm(x, w)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expected, np.float32), atol=atol, rtol=atol
+    )
+
+
+class TestConfigs:
+    @pytest.mark.parametrize("block_h", [128, 256, 512, 1024])
+    def test_block_h(self, block_h):
+        x = jax.random.normal(jax.random.PRNGKey(0), (16, 1024))
+        w = jax.random.normal(jax.random.PRNGKey(1), (1024,)) * 0.1 + 1.0
+        assert_matches_ref(x, w, block_h=block_h)
+
+    @pytest.mark.parametrize("rows_per_block", [1, 2, 4])
+    def test_rows_per_block(self, rows_per_block):
+        x = jax.random.normal(jax.random.PRNGKey(2), (16, 256))
+        w = jnp.ones((256,))
+        assert_matches_ref(x, w, block_h=128, rows_per_block=rows_per_block)
+
+    def test_block_equals_hidden(self):
+        x = jax.random.normal(jax.random.PRNGKey(3), (4, 512))
+        w = jnp.ones((512,))
+        assert_matches_ref(x, w, block_h=512)
+
+    def test_3d_input_flattened(self):
+        x = jax.random.normal(jax.random.PRNGKey(4), (2, 8, 256))
+        w = jnp.ones((256,))
+        assert_matches_ref(x, w, block_h=128)
+
+    def test_bf16(self):
+        x = jax.random.normal(jax.random.PRNGKey(5), (8, 256), jnp.bfloat16)
+        w = jnp.ones((256,), jnp.bfloat16)
+        assert_matches_ref(x, w, block_h=128, atol=3e-2)
+
+    def test_weight_scaling(self):
+        x = jax.random.normal(jax.random.PRNGKey(6), (4, 256))
+        w = jnp.full((256,), 2.0)
+        out = rn.rms_norm(x, w, block_h=256)
+        out1 = rn.rms_norm(x, jnp.ones((256,)), block_h=256)
+        np.testing.assert_allclose(np.asarray(out), 2 * np.asarray(out1), atol=1e-5)
+
+
+class TestValidity:
+    def test_rejects_nondivisible_block(self):
+        x = jnp.zeros((4, 300))
+        with pytest.raises(ValueError, match="invalid rms config"):
+            rn.rms_norm(x, jnp.ones((300,)), block_h=128)
+
+    def test_rejects_nondivisible_rows(self):
+        x = jnp.zeros((3, 256))
+        with pytest.raises(ValueError, match="invalid rms config"):
+            rn.rms_norm(x, jnp.ones((256,)), block_h=128, rows_per_block=2)
+
+    def test_enumerate_matches_validity(self):
+        for cfg in rn.enumerate_aot_configs(64, 1024):
+            assert rn.config_is_valid(64, 1024, cfg["block_h"], cfg["rows_per_block"])
+
+    def test_bytes_moved_model(self):
+        # read + write of x dominates; weight read amortized.
+        assert rn.bytes_moved(100, 1000) == 100 * 1000 * 4 * 2 + 1000 * 4
+
+
+class TestNumericalEdges:
+    def test_rsqrt_stability_tiny_values(self):
+        x = jnp.full((4, 256), 1e-20, jnp.float32)
+        out = rn.rms_norm(x, jnp.ones((256,)), block_h=128)
+        assert np.isfinite(np.asarray(out)).all()
+
+    def test_large_values_no_overflow(self):
+        x = jnp.full((4, 256), 1e18, jnp.float32)
+        out = rn.rms_norm(x, jnp.ones((256,)), block_h=256)
+        # f32 accumulation of squares overflows at ~1e19; 1e18 must survive.
+        assert np.isfinite(np.asarray(out)).all()
+
+    def test_scale_invariance(self):
+        # rms_norm(c*x) == rms_norm(x) for c > 0 (with eps negligible).
+        x = jax.random.normal(jax.random.PRNGKey(7), (4, 256)) + 1.0
+        w = jnp.ones((256,))
+        a = rn.rms_norm(x, w, block_h=128)
+        b = rn.rms_norm(x * 7.0, w, block_h=128)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    rows=st.sampled_from([1, 2, 4, 8, 16]),
+    hidden_pow=st.integers(7, 11),
+    bh_pow=st.integers(6, 11),
+    rpb=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_config_sweep(rows, hidden_pow, bh_pow, rpb, seed):
+    hidden, bh = 2**hidden_pow, 2**bh_pow
+    if not rn.config_is_valid(rows, hidden, bh, rpb):
+        return
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, hidden))
+    w = jax.random.normal(jax.random.PRNGKey(seed + 1), (hidden,)) * 0.1 + 1.0
+    assert_matches_ref(x, w, block_h=bh, rows_per_block=rpb)

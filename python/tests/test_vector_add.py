@@ -1,0 +1,43 @@
+"""Listing-1 vector add: config sweep + validity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import vector_add as va
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.mark.parametrize("block_size", [64, 128, 256, 512, 1024])
+def test_all_blocks(block_size):
+    x = jax.random.normal(jax.random.PRNGKey(0), (1024,))
+    y = jax.random.normal(jax.random.PRNGKey(1), (1024,))
+    out = va.vector_add(x, y, block_size=block_size)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x + y), atol=1e-6)
+
+
+def test_rejects_nondivisible():
+    x = jnp.zeros((1000,))
+    with pytest.raises(ValueError, match="invalid vector_add config"):
+        va.vector_add(x, x, block_size=256)
+
+
+def test_enumerate():
+    cfgs = va.enumerate_aot_configs(1024)
+    assert {c["block_size"] for c in cfgs} == {64, 128, 256, 512, 1024}
+    assert va.enumerate_aot_configs(128) == [{"block_size": 64}, {"block_size": 128}]
+
+
+@settings(max_examples=10, deadline=None)
+@given(n_pow=st.integers(6, 12), bs=st.sampled_from(va.BLOCK_SIZE_CHOICES), seed=st.integers(0, 100))
+def test_hypothesis_sweep(n_pow, bs, seed):
+    n = 2**n_pow
+    if not va.config_is_valid(n, bs):
+        return
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    y = jax.random.normal(jax.random.PRNGKey(seed + 1), (n,))
+    out = va.vector_add(x, y, block_size=bs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x + y), atol=1e-6)

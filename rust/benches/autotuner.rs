@@ -1,0 +1,55 @@
+//! Bench: autotuner engine throughput (configs/second against the sim
+//! evaluator) and strategy comparison — the ablation for DESIGN.md's
+//! "efficient search" design choice (Q4.2).
+
+use portatune::autotuner::{self, SimEvaluator, Strategy};
+use portatune::config::spaces;
+use portatune::kernels::baselines::TRITON_NVIDIA;
+use portatune::platform::SimGpu;
+use portatune::util::bench::Bench;
+use portatune::workload::Workload;
+
+fn main() {
+    let w = Workload::llama3_attention(64, 1024);
+    let space = spaces::attention_sim_space();
+
+    // Ablation: quality vs cost per strategy (printed once).
+    println!("\n## Q4.2 ablation: search strategy vs result quality\n");
+    println!("| strategy | evaluated | best_us | vs exhaustive |");
+    println!("|---|---|---|---|");
+    let mut eval = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
+    let exhaustive = autotuner::tune(&space, &w, &mut eval, &Strategy::Exhaustive, 0).unwrap();
+    for strat in [
+        Strategy::Exhaustive,
+        Strategy::Random { budget: 100 },
+        Strategy::HillClimb { restarts: 4, budget: 150 },
+        Strategy::Anneal { budget: 150, t0: 2.0, alpha: 0.95 },
+        Strategy::SuccessiveHalving { initial: 64, eta: 2 },
+    ] {
+        let out = autotuner::tune(&space, &w, &mut eval, &strat, 9).unwrap();
+        println!(
+            "| {} | {} | {:.1} | {:.2}x |",
+            strat.label(),
+            out.evaluated,
+            out.best_latency_us,
+            out.best_latency_us / exhaustive.best_latency_us
+        );
+    }
+    println!();
+
+    let mut b = Bench::new();
+    for (name, strat) in [
+        ("autotuner/exhaustive", Strategy::Exhaustive),
+        ("autotuner/random100", Strategy::Random { budget: 100 }),
+        ("autotuner/hillclimb", Strategy::HillClimb { restarts: 4, budget: 150 }),
+        ("autotuner/sha64", Strategy::SuccessiveHalving { initial: 64, eta: 2 }),
+    ] {
+        b.run(name, || {
+            let mut eval = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
+            autotuner::tune(&space, &w, &mut eval, &strat, 3).unwrap()
+        });
+    }
+
+    b.run("autotuner/enumerate_space", || space.enumerate(&w));
+    b.finish("autotuner");
+}

@@ -1,0 +1,19 @@
+//! Bench: regenerate Fig. 1 (normalized attention throughput + porting
+//! effort) and time the end-to-end experiment.
+
+use portatune::experiments::fig1;
+use portatune::platform::SimGpu;
+use portatune::util::bench::Bench;
+
+fn main() {
+    // Print the reproduced figure once (the bench's real deliverable).
+    println!("{}", fig1::throughput(&SimGpu::a100()).to_markdown());
+    println!("{}", fig1::throughput(&SimGpu::mi250()).to_markdown());
+    println!("{}", fig1::porting_effort().to_markdown());
+
+    let mut b = Bench::new();
+    b.run("fig1/throughput_a100", || fig1::throughput(&SimGpu::a100()));
+    b.run("fig1/throughput_mi250", || fig1::throughput(&SimGpu::mi250()));
+    b.run("fig1/porting_effort", fig1::porting_effort);
+    b.finish("fig1");
+}

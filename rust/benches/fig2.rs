@@ -1,0 +1,23 @@
+//! Bench: regenerate Fig. 2 (causal attention latency sweeps) and the
+//! §Q1 headline summary.
+
+use portatune::experiments::{fig2, tune_triton_attention};
+use portatune::platform::SimGpu;
+use portatune::util::bench::Bench;
+use portatune::workload::Workload;
+
+fn main() {
+    println!("{}", fig2::latency_sweep(&SimGpu::a100()).to_markdown());
+    println!("{}", fig2::latency_sweep(&SimGpu::mi250()).to_markdown());
+    println!("{}", fig2::summary().to_markdown());
+
+    // Time one full autotune of the paper's motivating workload (the
+    // inner loop of the whole experiment).
+    let w = Workload::llama3_attention(64, 1024);
+    let mut b = Bench::new();
+    b.run("fig2/tune_one_workload_a100", || {
+        tune_triton_attention(&SimGpu::a100(), &w).unwrap()
+    });
+    b.run("fig2/full_sweep_points_a100", || fig2::sweep_points(&SimGpu::a100()));
+    b.finish("fig2");
+}

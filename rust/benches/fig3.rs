@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig. 3 (RMS-norm relative-performance CDFs).
+
+use portatune::experiments::fig3;
+use portatune::platform::SimGpu;
+use portatune::util::bench::Bench;
+
+fn main() {
+    println!("{}", fig3::rms_cdf().to_markdown());
+
+    let mut b = Bench::new();
+    b.run("fig3/relative_perf_mi250", || fig3::relative_perf(&SimGpu::mi250()));
+    b.run("fig3/full_cdf_report", fig3::rms_cdf);
+    b.finish("fig3");
+}

@@ -1,0 +1,27 @@
+//! Bench: regenerate Fig. 4 (cross-GPU configuration reuse) and report
+//! the §Q2 headline numbers (retained fractions, invalid transplants).
+
+use portatune::experiments::fig4;
+use portatune::platform::SimGpu;
+use portatune::util::bench::Bench;
+use portatune::workload::Workload;
+
+fn main() {
+    println!("{}", fig4::cross_gpu_reuse().to_markdown());
+    let (retained, invalid) = fig4::retained_fractions();
+    let worst = retained.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!(
+        "summary: {} transplants, worst retained {:.0}%, {} invalid (paper: down to 7%, some invalid)\n",
+        retained.len(),
+        worst * 100.0,
+        invalid
+    );
+
+    let w = Workload::llama3_attention(64, 512);
+    let mut b = Bench::new();
+    b.run("fig4/one_transplant", || {
+        fig4::transplant(&SimGpu::mi250(), &SimGpu::a100(), &w).unwrap()
+    });
+    b.run("fig4/full_report", fig4::cross_gpu_reuse);
+    b.finish("fig4");
+}

@@ -1,0 +1,37 @@
+//! Bench: regenerate Fig. 5 (generated-code analysis) over both the
+//! synthetic PTX sweep and the real HLO artifact corpus.
+
+use portatune::codegen::{hlo, ptx};
+use portatune::config::Config;
+use portatune::experiments::fig5;
+use portatune::util::bench::Bench;
+
+fn main() {
+    println!("{}", fig5::triton_sweep().to_markdown());
+    println!("{}", fig5::cuda_templates().to_markdown());
+    println!("{}", fig5::real_hlo_corpus().to_markdown());
+
+    let cfg = Config::new(&[
+        ("BLOCK_M", 128),
+        ("BLOCK_N", 64),
+        ("num_warps", 4),
+        ("num_stages", 3),
+        ("waves_per_eu", 0),
+    ]);
+    let w = fig5::fig5_workload();
+    let mut b = Bench::new();
+    b.run("fig5/emit_and_analyze_one_ptx", || {
+        ptx::analyze_ptx(&ptx::emit_triton(&cfg, &w))
+    });
+
+    // Real-HLO analysis throughput (if artifacts exist).
+    let dir = portatune::artifact_dir();
+    if dir.join("manifest.json").exists() {
+        let m = portatune::runtime::Manifest::load(&dir).unwrap();
+        if let Some(a) = m.kernel_artifacts("attention").first() {
+            let path = dir.join(&a.path);
+            b.run("fig5/analyze_one_hlo_artifact", || hlo::analyze_file(&path).unwrap());
+        }
+    }
+    b.finish("fig5");
+}

@@ -1,0 +1,44 @@
+//! Bench: L3 router hot path — bucketing and dynamic batching throughput
+//! (no PJRT; isolates the coordinator from the executor).
+
+use portatune::serving::batcher::{BucketPolicy, DynamicBatcher};
+use portatune::serving::router::synth_trace;
+use portatune::util::bench::Bench;
+use std::time::Instant;
+
+fn policy() -> BucketPolicy {
+    BucketPolicy::new(vec![(128, 1), (128, 2), (128, 4), (256, 1), (256, 2)], 2_000)
+}
+
+fn main() {
+    let trace = synth_trace(10_000, 256, 1);
+    let mut b = Bench::new();
+
+    b.run("router/push_10k_requests", || {
+        let mut batcher = DynamicBatcher::new(policy());
+        let now = Instant::now();
+        for r in &trace {
+            batcher.push(r.clone(), now);
+        }
+        batcher.pending()
+    });
+
+    b.run("router/push_and_drain_10k", || {
+        let mut batcher = DynamicBatcher::new(policy());
+        let now = Instant::now();
+        let mut out = 0usize;
+        for r in &trace {
+            batcher.push(r.clone(), now);
+            while let Some(batch) = batcher.next_batch(now, false) {
+                out += batch.requests.len();
+            }
+        }
+        while let Some(batch) = batcher.next_batch(now, true) {
+            out += batch.requests.len();
+        }
+        out
+    });
+
+    b.run("router/synth_trace_1k", || synth_trace(1_000, 256, 7));
+    b.finish("router");
+}

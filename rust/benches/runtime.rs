@@ -1,0 +1,67 @@
+//! Bench: PJRT runtime hot path — compile cost vs execute cost of real
+//! AOT artifacts (the paper: "compilation time accounts for around 80 %
+//! of the autotuning time").
+
+use portatune::runtime::{Engine, Manifest, TensorF32};
+use portatune::util::bench::Bench;
+
+fn main() {
+    let dir = portatune::artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts`; skipping runtime bench");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+
+    // Smallest attention bucket artifact.
+    let w = manifest.workload_buckets("attention")[0];
+    let arts = manifest.candidates_for(&w);
+    let entry = arts[0];
+    let inputs: Vec<TensorF32> = entry
+        .inputs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| TensorF32::random(&s.shape, i as u64))
+        .collect();
+
+    let mut b = Bench::new();
+    b.run("runtime/compile_attention_artifact", || {
+        engine.load_artifact(&manifest.root, entry).unwrap()
+    });
+
+    let exe = engine.load_artifact(&manifest.root, entry).unwrap();
+    let literals = exe.prepare(&inputs).unwrap();
+    b.run("runtime/execute_attention_artifact", || {
+        exe.run_literals(&literals).unwrap()
+    });
+
+    // Vector-add: dispatch overhead floor.
+    if let Some(va) = manifest.kernel_artifacts("vector_add").first() {
+        let exe = engine.load_artifact(&manifest.root, va).unwrap();
+        let ins: Vec<TensorF32> = va
+            .inputs
+            .iter()
+            .map(|s| TensorF32::random(&s.shape, 1))
+            .collect();
+        let lits = exe.prepare(&ins).unwrap();
+        b.run("runtime/execute_vecadd_artifact", || exe.run_literals(&lits).unwrap());
+    }
+
+    let compile_vs_exec = {
+        use std::time::Instant;
+        let t0 = Instant::now();
+        let e = engine.load_artifact(&manifest.root, entry).unwrap();
+        let compile_s = t0.elapsed().as_secs_f64();
+        let lits = e.prepare(&inputs).unwrap();
+        let t1 = Instant::now();
+        e.run_literals(&lits).unwrap();
+        let exec_s = t1.elapsed().as_secs_f64();
+        compile_s / (compile_s + exec_s)
+    };
+    println!(
+        "\ncompile share of one cold evaluation: {:.0}% (paper: ~80% of autotuning time)\n",
+        compile_vs_exec * 100.0
+    );
+    b.finish("runtime");
+}

@@ -1,0 +1,15 @@
+//! Bench: regenerate Table I (implementation inventory) and Table II
+//! (autotuning usage survey).
+
+use portatune::experiments::tables;
+use portatune::util::bench::Bench;
+
+fn main() {
+    println!("{}", tables::table1().to_markdown());
+    println!("{}", tables::table2().to_markdown());
+
+    let mut b = Bench::new();
+    b.run("tables/table1", tables::table1);
+    b.run("tables/table2", tables::table2);
+    b.finish("tables");
+}

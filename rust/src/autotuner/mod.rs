@@ -1,0 +1,331 @@
+//! The autotuner: empirical search over kernel-configuration spaces.
+//!
+//! Addresses the paper's gap **Q4.2** (*"Autotuning needs to leverage
+//! advanced search methods to reduce autotuning time and reliably
+//! identify optimal configurations"*): several [`search`] strategies
+//! share one [`Evaluator`] abstraction, so the same engine tunes against
+//! the analytical platform models (simulated A100/MI250) *and* against
+//! real PJRT-CPU executions of the AOT artifacts.
+//!
+//! Unlike the Triton built-in autotuner the paper critiques (§Q3), tuning
+//! here is (a) cached persistently via [`crate::cache`], (b) composable
+//! with background execution ([`crate::serving::executor`]), and (c)
+//! explicit about invalid configurations (they are counted, not hidden).
+
+pub mod evaluators;
+pub mod search;
+
+pub use evaluators::{PjrtEvaluator, SimEvaluator};
+pub use search::Strategy;
+
+use std::time::Instant;
+
+use crate::cache::{entry_now, TuningCache};
+use crate::config::{Config, ConfigSpace};
+use crate::platform::model::InvalidConfig;
+use crate::workload::Workload;
+
+/// Anything that can attach a latency to a configuration.
+///
+/// `fidelity` ∈ (0, 1] lets multi-fidelity searches (successive halving)
+/// ask for cheaper, noisier measurements; evaluators may ignore it.
+pub trait Evaluator {
+    fn name(&self) -> String;
+
+    fn evaluate(&mut self, cfg: &Config) -> Result<f64, InvalidConfig> {
+        self.evaluate_fidelity(cfg, 1.0)
+    }
+
+    fn evaluate_fidelity(&mut self, cfg: &Config, fidelity: f64) -> Result<f64, InvalidConfig>;
+}
+
+/// One tuning run's outcome.
+#[derive(Debug, Clone)]
+pub struct TuneOutcome {
+    pub best: Config,
+    pub best_latency_us: f64,
+    /// Configurations actually evaluated (cache-miss cost of the run).
+    pub evaluated: usize,
+    /// Configurations rejected as invalid on this platform.
+    pub invalid: usize,
+    /// (config, latency) pairs in evaluation order; `None` = invalid.
+    pub history: Vec<(Config, Option<f64>)>,
+    pub wall_seconds: f64,
+    /// True when the result was served from the persistent cache.
+    pub from_cache: bool,
+}
+
+impl TuneOutcome {
+    /// Latency spread across valid evaluations (paper §Q3 reports ~20x
+    /// for complex kernels).
+    pub fn spread(&self) -> Option<f64> {
+        let valid: Vec<f64> = self.history.iter().filter_map(|(_, l)| *l).collect();
+        if valid.is_empty() {
+            return None;
+        }
+        let best = valid.iter().cloned().fold(f64::INFINITY, f64::min);
+        let worst = valid.iter().cloned().fold(0.0f64, f64::max);
+        Some(worst / best)
+    }
+}
+
+/// Run `strategy` over `space` for `workload` using `eval`.
+pub fn tune(
+    space: &ConfigSpace,
+    workload: &Workload,
+    eval: &mut dyn Evaluator,
+    strategy: &Strategy,
+    seed: u64,
+) -> Option<TuneOutcome> {
+    let t0 = Instant::now();
+    let mut rec = search::Recorder::default();
+    strategy.run(space, workload, eval, seed, &mut rec);
+    let (best, best_latency_us) = rec.best()?;
+    Some(TuneOutcome {
+        best,
+        best_latency_us,
+        evaluated: rec.history.len(),
+        invalid: rec.invalid,
+        history: rec.history,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        from_cache: false,
+    })
+}
+
+/// Model-guided (transfer) tuning: rank the whole space with a cheap
+/// *prior* evaluator (e.g. an analytical platform model), then measure
+/// only the `top_k` most promising configurations on the expensive
+/// *target* evaluator (e.g. real PJRT execution).
+///
+/// This is the practical middle road between the paper's 24 h exhaustive
+/// budget and heuristic-only dispatch: the prior prunes the space by an
+/// order of magnitude, the target keeps the decision empirical.
+pub fn tune_guided(
+    space: &ConfigSpace,
+    workload: &Workload,
+    prior: &mut dyn Evaluator,
+    target: &mut dyn Evaluator,
+    top_k: usize,
+) -> Option<TuneOutcome> {
+    let t0 = Instant::now();
+    // Rank by prior (invalid-on-prior configs go last, not dropped: the
+    // prior is a model, not ground truth).
+    let mut ranked: Vec<(Config, Option<f64>)> = space
+        .enumerate(workload)
+        .into_iter()
+        .map(|c| {
+            let p = prior.evaluate(&c).ok();
+            (c, p)
+        })
+        .collect();
+    ranked.sort_by(|a, b| match (a.1, b.1) {
+        (Some(x), Some(y)) => x.total_cmp(&y),
+        (Some(_), None) => std::cmp::Ordering::Less,
+        (None, Some(_)) => std::cmp::Ordering::Greater,
+        (None, None) => std::cmp::Ordering::Equal,
+    });
+    let mut history = Vec::new();
+    let mut invalid = 0;
+    let mut best: Option<(Config, f64)> = None;
+    for (cfg, _) in ranked.into_iter().take(top_k.max(1)) {
+        match target.evaluate(&cfg) {
+            Ok(us) => {
+                if best.as_ref().map(|(_, b)| us < *b).unwrap_or(true) {
+                    best = Some((cfg.clone(), us));
+                }
+                history.push((cfg, Some(us)));
+            }
+            Err(_) => {
+                invalid += 1;
+                history.push((cfg, None));
+            }
+        }
+    }
+    let (best, best_latency_us) = best?;
+    Some(TuneOutcome {
+        best,
+        best_latency_us,
+        evaluated: history.len(),
+        invalid,
+        history,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        from_cache: false,
+    })
+}
+
+/// Cache-aware tuning (Q4.3): return a reusable cached result when the
+/// platform/space fingerprints match, otherwise tune and persist.
+pub fn tune_cached(
+    cache: &mut TuningCache,
+    space: &ConfigSpace,
+    workload: &Workload,
+    eval: &mut dyn Evaluator,
+    strategy: &Strategy,
+    seed: u64,
+) -> Option<TuneOutcome> {
+    let platform = eval.name();
+    let space_fp = format!("{}#{}", space.name, space.cardinality());
+    if let Some(hit) = cache.get(workload, &platform, &space_fp) {
+        let best = hit.config()?;
+        return Some(TuneOutcome {
+            best,
+            best_latency_us: hit.latency_us,
+            evaluated: 0,
+            invalid: hit.invalid,
+            history: Vec::new(),
+            wall_seconds: 0.0,
+            from_cache: true,
+        });
+    }
+    let outcome = tune(space, workload, eval, strategy, seed)?;
+    cache.put(
+        workload,
+        entry_now(
+            &outcome.best,
+            outcome.best_latency_us,
+            outcome.evaluated,
+            outcome.invalid,
+            &platform,
+            &space_fp,
+            outcome.wall_seconds,
+        ),
+    );
+    Some(outcome)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::spaces;
+    use crate::kernels::baselines::HAND_TUNED;
+    use crate::platform::SimGpu;
+
+    fn setup() -> (ConfigSpace, Workload, SimEvaluator) {
+        let w = Workload::llama3_attention(8, 1024);
+        let space = spaces::attention_sim_space();
+        let eval = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
+        (space, w, eval)
+    }
+
+    #[test]
+    fn exhaustive_finds_global_optimum() {
+        let (space, w, mut eval) = setup();
+        let out = tune(&space, &w, &mut eval, &Strategy::Exhaustive, 0).unwrap();
+        // Cross-check against direct enumeration.
+        let gpu = SimGpu::a100();
+        let best_direct = space
+            .enumerate(&w)
+            .iter()
+            .filter_map(|c| gpu.latency_us(c, &w, &HAND_TUNED).ok())
+            .fold(f64::INFINITY, f64::min);
+        assert!((out.best_latency_us - best_direct).abs() < 1e-9);
+        assert!(out.evaluated > 400);
+    }
+
+    #[test]
+    fn random_is_reproducible_per_seed() {
+        let (space, w, mut eval) = setup();
+        let a = tune(&space, &w, &mut eval, &Strategy::Random { budget: 50 }, 7).unwrap();
+        let b = tune(&space, &w, &mut eval, &Strategy::Random { budget: 50 }, 7).unwrap();
+        assert_eq!(a.best, b.best);
+        let c = tune(&space, &w, &mut eval, &Strategy::Random { budget: 50 }, 8).unwrap();
+        // different seed may find a different best (not asserted), but
+        // must still return a valid config
+        assert!(space.contains(&c.best, &w));
+    }
+
+    #[test]
+    fn all_strategies_return_valid_configs() {
+        let (space, w, mut eval) = setup();
+        for strat in [
+            Strategy::Exhaustive,
+            Strategy::Random { budget: 40 },
+            Strategy::HillClimb { restarts: 3, budget: 200 },
+            Strategy::Anneal { budget: 150, t0: 2.0, alpha: 0.95 },
+            Strategy::SuccessiveHalving { initial: 32, eta: 2 },
+        ] {
+            let out = tune(&space, &w, &mut eval, &strat, 3)
+                .unwrap_or_else(|| panic!("{strat:?} found nothing"));
+            assert!(space.contains(&out.best, &w), "{strat:?} returned invalid config");
+            assert!(out.best_latency_us > 0.0);
+        }
+    }
+
+    #[test]
+    fn local_search_competitive_with_exhaustive() {
+        let (space, w, mut eval) = setup();
+        let ex = tune(&space, &w, &mut eval, &Strategy::Exhaustive, 0).unwrap();
+        let hc = tune(&space, &w, &mut eval, &Strategy::HillClimb { restarts: 5, budget: 400 }, 11).unwrap();
+        assert!(
+            hc.best_latency_us <= ex.best_latency_us * 1.3,
+            "hill climb {:.1}us vs exhaustive {:.1}us",
+            hc.best_latency_us,
+            ex.best_latency_us
+        );
+        assert!(hc.evaluated < ex.evaluated, "local search should be cheaper");
+    }
+
+    #[test]
+    fn tune_cached_hits_second_time() {
+        let (space, w, mut eval) = setup();
+        let mut cache = TuningCache::ephemeral();
+        let first = tune_cached(&mut cache, &space, &w, &mut eval, &Strategy::Random { budget: 30 }, 1).unwrap();
+        assert!(!first.from_cache);
+        let second = tune_cached(&mut cache, &space, &w, &mut eval, &Strategy::Random { budget: 30 }, 1).unwrap();
+        assert!(second.from_cache);
+        assert_eq!(second.best, first.best);
+        assert_eq!(second.evaluated, 0);
+    }
+
+    #[test]
+    fn guided_tuning_prunes_but_stays_close_to_exhaustive() {
+        // Prior = hand-tuned model, target = triton-codegen model with
+        // a different efficiency surface: the prior's ranking transfers.
+        let (space, w, _) = setup();
+        let mut prior = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
+        let mut target =
+            SimEvaluator::new(SimGpu::a100(), w, crate::kernels::baselines::TRITON_NVIDIA);
+        let guided = tune_guided(&space, &w, &mut prior, &mut target, 20).unwrap();
+        let exhaustive = tune(&space, &w, &mut target, &Strategy::Exhaustive, 0).unwrap();
+        assert!(guided.evaluated <= 20);
+        assert!(
+            guided.best_latency_us <= exhaustive.best_latency_us * 1.10,
+            "guided {:.1}us vs exhaustive {:.1}us",
+            guided.best_latency_us,
+            exhaustive.best_latency_us
+        );
+    }
+
+    #[test]
+    fn guided_tuning_cross_platform_prior_still_works() {
+        // Even a *wrong-platform* prior (A100 model ranking for an MI250
+        // target) finds a decent config with k=60 — but the same budget
+        // of native random search is the fair comparison; the test just
+        // guards the mechanism, not the transfer quality.
+        let (space, w, _) = setup();
+        let mut prior = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
+        let mut target = SimEvaluator::new(
+            crate::platform::SimGpu::mi250(),
+            w,
+            crate::kernels::baselines::TRITON_AMD,
+        );
+        let guided = tune_guided(&space, &w, &mut prior, &mut target, 60);
+        assert!(guided.is_some());
+    }
+
+    #[test]
+    fn invalid_configs_are_counted_not_fatal() {
+        let (space, w, mut eval) = setup();
+        let out = tune(&space, &w, &mut eval, &Strategy::Exhaustive, 0).unwrap();
+        // The A100 rejects big-staging configs (smem) — some must appear.
+        assert!(out.invalid > 0);
+        assert_eq!(out.evaluated, out.history.len());
+    }
+
+    #[test]
+    fn spread_matches_paper_scale() {
+        let (space, w, mut eval) = setup();
+        let out = tune(&space, &w, &mut eval, &Strategy::Exhaustive, 0).unwrap();
+        assert!(out.spread().unwrap() > 5.0);
+    }
+}

@@ -1,0 +1,345 @@
+//! Persistent, reusable autotuning cache — the paper's gap **Q4.3**:
+//!
+//! > *"Autotuning results should be cached in a reusable way to avoid
+//! > unnecessary re-tuning. Ideally, autotuning results should contain
+//! > all relevant environment dependencies to ensure correct reuse and
+//! > should be stored outside of the LLM deployment."*
+//!
+//! This fixes the Triton-autotuner behaviour the paper criticizes (§Q3):
+//! results valid only within the process that created them (the
+//! "autotuner déjà-vu" issue, Ringlein 2024).  Entries are keyed by
+//! *(kernel, workload, platform fingerprint, space fingerprint)* and
+//! stored as a JSON file that can be shipped with a model deployment or
+//! committed next to the kernels.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result as AResult};
+
+use crate::config::Config;
+use crate::json::{self, Value};
+use crate::workload::Workload;
+use crate::Result;
+
+/// One cached tuning outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheEntry {
+    /// Winning configuration (canonical `key()` form).
+    pub config: String,
+    /// Measured/modeled latency of the winner (µs).
+    pub latency_us: f64,
+    /// How many configurations were evaluated to find it.
+    pub evaluated: usize,
+    /// How many were invalid on this platform.
+    pub invalid: usize,
+    /// Platform fingerprint the result is valid for.
+    pub platform: String,
+    /// Configuration-space fingerprint (name + cardinality): a changed
+    /// space invalidates the entry.
+    pub space: String,
+    /// Seconds of tuning spent producing this entry.
+    pub tuning_seconds: f64,
+    /// RFC3339-ish creation stamp (informational only).
+    pub created: String,
+}
+
+impl CacheEntry {
+    pub fn config(&self) -> Option<Config> {
+        Config::parse(&self.config)
+    }
+
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("config", Value::str(&self.config)),
+            ("latency_us", Value::num(self.latency_us)),
+            ("evaluated", Value::num(self.evaluated as f64)),
+            ("invalid", Value::num(self.invalid as f64)),
+            ("platform", Value::str(&self.platform)),
+            ("space", Value::str(&self.space)),
+            ("tuning_seconds", Value::num(self.tuning_seconds)),
+            ("created", Value::str(&self.created)),
+        ])
+    }
+
+    fn from_json(v: &Value) -> AResult<Self> {
+        Ok(CacheEntry {
+            config: v.req_str("config")?.to_string(),
+            latency_us: v.req_f64("latency_us")?,
+            evaluated: v.req_usize("evaluated")?,
+            invalid: v.req_usize("invalid")?,
+            platform: v.req_str("platform")?.to_string(),
+            space: v.req_str("space")?.to_string(),
+            tuning_seconds: v.req_f64("tuning_seconds")?,
+            created: v.req_str("created")?.to_string(),
+        })
+    }
+}
+
+/// On-disk format: a versioned map from cache key to entry.
+#[derive(Debug, Default)]
+struct CacheFile {
+    version: u32,
+    entries: BTreeMap<String, CacheEntry>,
+}
+
+impl CacheFile {
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("version", Value::num(self.version as f64)),
+            (
+                "entries",
+                Value::Obj(self.entries.iter().map(|(k, e)| (k.clone(), e.to_json())).collect()),
+            ),
+        ])
+    }
+
+    fn from_json(v: &Value) -> AResult<Self> {
+        let mut entries = BTreeMap::new();
+        if let Some(obj) = v.get("entries").and_then(Value::as_obj) {
+            for (k, e) in obj {
+                entries.insert(k.clone(), CacheEntry::from_json(e)?);
+            }
+        }
+        Ok(CacheFile {
+            version: v.req_usize("version")? as u32,
+            entries,
+        })
+    }
+}
+
+const CACHE_VERSION: u32 = 1;
+
+/// A file-backed tuning cache.
+///
+/// All mutations go through [`TuningCache::put`] followed by an explicit
+/// or drop-time [`TuningCache::save`]; saves are atomic (tmp + rename).
+#[derive(Debug)]
+pub struct TuningCache {
+    path: PathBuf,
+    file: CacheFile,
+    dirty: bool,
+}
+
+impl TuningCache {
+    /// Open (or create) a cache at `path`.
+    pub fn open(path: impl Into<PathBuf>) -> Result<Self> {
+        let path = path.into();
+        let file = if path.exists() {
+            let text = std::fs::read_to_string(&path)?;
+            let parsed = CacheFile::from_json(&json::parse(&text).map_err(|e| anyhow!("cache {path:?}: {e}"))?)?;
+            if parsed.version != CACHE_VERSION {
+                // Incompatible layout: start fresh rather than misread.
+                CacheFile { version: CACHE_VERSION, ..Default::default() }
+            } else {
+                parsed
+            }
+        } else {
+            CacheFile { version: CACHE_VERSION, ..Default::default() }
+        };
+        Ok(TuningCache { path, file, dirty: false })
+    }
+
+    /// In-memory cache for tests and ephemeral runs.
+    pub fn ephemeral() -> Self {
+        TuningCache {
+            path: PathBuf::new(),
+            file: CacheFile { version: CACHE_VERSION, ..Default::default() },
+            dirty: false,
+        }
+    }
+
+    /// Cache key: workload identity x platform x space fingerprints.
+    pub fn key(workload: &Workload, platform: &str, space: &str) -> String {
+        format!("{}|{platform}|{space}", workload.key())
+    }
+
+    /// Look up a reusable result. Fingerprints must match *exactly* —
+    /// the paper's requirement that reuse be provably environment-safe.
+    pub fn get(&self, workload: &Workload, platform: &str, space: &str) -> Option<&CacheEntry> {
+        let e = self.file.entries.get(&Self::key(workload, platform, space))?;
+        (e.platform == platform && e.space == space).then_some(e)
+    }
+
+    /// Insert/replace a tuning result.
+    pub fn put(&mut self, workload: &Workload, entry: CacheEntry) {
+        let key = Self::key(workload, &entry.platform, &entry.space);
+        self.file.entries.insert(key, entry);
+        self.dirty = true;
+    }
+
+    /// Drop every entry for a platform (e.g. after a driver upgrade).
+    pub fn invalidate_platform(&mut self, platform: &str) -> usize {
+        let before = self.file.entries.len();
+        self.file.entries.retain(|_, e| e.platform != platform);
+        let removed = before - self.file.entries.len();
+        self.dirty |= removed > 0;
+        removed
+    }
+
+    pub fn len(&self) -> usize {
+        self.file.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.file.entries.is_empty()
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = (&String, &CacheEntry)> {
+        self.file.entries.iter()
+    }
+
+    /// Atomic write-back (tmp file + rename). No-op when clean or
+    /// ephemeral.
+    pub fn save(&mut self) -> Result<()> {
+        if !self.dirty || self.path.as_os_str().is_empty() {
+            return Ok(());
+        }
+        if let Some(dir) = self.path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let tmp = self.path.with_extension("json.tmp");
+        std::fs::write(&tmp, self.file.to_json().pretty(1))?;
+        std::fs::rename(&tmp, &self.path)?;
+        self.dirty = false;
+        Ok(())
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for TuningCache {
+    fn drop(&mut self) {
+        let _ = self.save();
+    }
+}
+
+/// Helper: build an entry with the current timestamp.
+pub fn entry_now(
+    config: &Config,
+    latency_us: f64,
+    evaluated: usize,
+    invalid: usize,
+    platform: &str,
+    space: &str,
+    tuning_seconds: f64,
+) -> CacheEntry {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    CacheEntry {
+        config: config.key(),
+        latency_us,
+        evaluated,
+        invalid,
+        platform: platform.to_string(),
+        space: space.to_string(),
+        tuning_seconds,
+        created: format!("unix:{secs}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::DType;
+
+    fn wl() -> Workload {
+        Workload::llama3_attention(8, 512)
+    }
+
+    fn entry(platform: &str) -> CacheEntry {
+        entry_now(
+            &Config::new(&[("BLOCK_M", 64)]),
+            123.4,
+            450,
+            12,
+            platform,
+            "attention_sim#1000",
+            60.0,
+        )
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let mut c = TuningCache::ephemeral();
+        c.put(&wl(), entry("sim-a100/model-v3"));
+        let got = c.get(&wl(), "sim-a100/model-v3", "attention_sim#1000").unwrap();
+        assert_eq!(got.latency_us, 123.4);
+        assert_eq!(got.config().unwrap().req("BLOCK_M"), 64);
+    }
+
+    #[test]
+    fn platform_fingerprint_mismatch_is_miss() {
+        let mut c = TuningCache::ephemeral();
+        c.put(&wl(), entry("sim-a100/model-v3"));
+        assert!(c.get(&wl(), "sim-mi250/model-v3", "attention_sim#1000").is_none());
+        assert!(c.get(&wl(), "sim-a100/model-v4", "attention_sim#1000").is_none());
+    }
+
+    #[test]
+    fn space_fingerprint_mismatch_is_miss() {
+        let mut c = TuningCache::ephemeral();
+        c.put(&wl(), entry("p"));
+        assert!(c.get(&wl(), "p", "attention_sim#999").is_none());
+    }
+
+    #[test]
+    fn workload_isolation() {
+        let mut c = TuningCache::ephemeral();
+        c.put(&wl(), entry("p"));
+        let other = Workload::llama3_attention(16, 512);
+        assert!(c.get(&other, "p", "attention_sim#1000").is_none());
+    }
+
+    #[test]
+    fn disk_roundtrip_survives_reopen() {
+        let dir = crate::util::tmp::TempDir::new("cache").unwrap();
+        let path = dir.join("tune_cache.json");
+        {
+            let mut c = TuningCache::open(&path).unwrap();
+            c.put(&wl(), entry("p"));
+            c.save().unwrap();
+        }
+        let c = TuningCache::open(&path).unwrap();
+        assert_eq!(c.len(), 1);
+        assert!(c.get(&wl(), "p", "attention_sim#1000").is_some());
+    }
+
+    #[test]
+    fn corrupt_file_is_an_error_not_a_panic() {
+        let dir = crate::util::tmp::TempDir::new("cache").unwrap();
+        let path = dir.join("bad.json");
+        std::fs::write(&path, "{not json").unwrap();
+        assert!(TuningCache::open(&path).is_err());
+    }
+
+    #[test]
+    fn invalidate_platform_removes_only_that_platform() {
+        let mut c = TuningCache::ephemeral();
+        c.put(&wl(), entry("pA"));
+        c.put(&wl(), entry("pB"));
+        let rms = Workload::RmsNorm { n_rows: 64, hidden: 4096, dtype: DType::F16 };
+        c.put(&rms, entry("pA"));
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.invalidate_platform("pA"), 2);
+        assert_eq!(c.len(), 1);
+        assert!(c.get(&wl(), "pB", "attention_sim#1000").is_some());
+    }
+
+    #[test]
+    fn overwrite_replaces() {
+        let mut c = TuningCache::ephemeral();
+        c.put(&wl(), entry("p"));
+        let mut e2 = entry("p");
+        e2.latency_us = 50.0;
+        c.put(&wl(), e2);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(&wl(), "p", "attention_sim#1000").unwrap().latency_us, 50.0);
+    }
+}

@@ -1,0 +1,144 @@
+//! HLO-text instruction analysis (the *real* code corpus).
+//!
+//! Every AOT configuration lowers to a distinct HLO module; this parser
+//! extracts per-module instruction statistics so Fig. 5's methodology
+//! runs on genuine compiler output.  HLO text instructions look like:
+//!
+//! ```text
+//!   fusion.3 = f32[16,64]{1,0} fusion(p0, p1), kind=kLoop, ...
+//!   while.1 = (s32[], f32[32,64]{1,0}) while(tuple.2), condition=...
+//! ```
+//!
+//! The *opcode* is the token following the result type.  We count
+//! opcode spellings (operands ignored), matching the paper's
+//! "opcodes and prefixes without considering the operands".
+
+use std::path::Path;
+
+use super::CodeStats;
+use crate::Result;
+
+/// Extract the opcode from one HLO instruction line, if it is one.
+fn opcode_of_line(line: &str) -> Option<&str> {
+    let trimmed = line.trim_start().strip_prefix("ROOT ").unwrap_or(line.trim_start());
+    // Instruction lines bind `name = type opcode(...)`; the name is a
+    // single token (with or without the legacy % sigil).
+    let (lhs, rhs) = trimmed.split_once(" = ")?;
+    if lhs.contains(' ') || lhs.is_empty() {
+        return None;
+    }
+    // rhs = "<type> <opcode>(..." where <type> may contain spaces only
+    // inside tuple parens: "(s32[], f32[2]{0})". Skip the type by
+    // tracking paren/brace depth until the top-level space.
+    let mut depth = 0usize;
+    let mut type_end = None;
+    for (i, ch) in rhs.char_indices() {
+        match ch {
+            '(' | '[' | '{' => depth += 1,
+            ')' | ']' | '}' => depth = depth.saturating_sub(1),
+            ' ' if depth == 0 => {
+                type_end = Some(i);
+                break;
+            }
+            _ => {}
+        }
+    }
+    let rest = &rhs[type_end?..].trim_start();
+    let op_end = rest.find('(')?;
+    let op = &rest[..op_end];
+    (!op.is_empty() && op.chars().all(|c| c.is_alphanumeric() || c == '-' || c == '_')).then_some(op)
+}
+
+/// Statistics of one HLO-text module.
+pub fn analyze_text(text: &str) -> CodeStats {
+    super::stats_from_mnemonics(text.lines().filter_map(opcode_of_line), text.len())
+}
+
+/// Statistics of an HLO artifact file.
+pub fn analyze_file(path: impl AsRef<Path>) -> Result<CodeStats> {
+    let text = std::fs::read_to_string(path.as_ref())?;
+    Ok(analyze_text(&text))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+HloModule jit_fn, entry_computation_layout={(f32[2,2]{1,0})->(f32[2,2]{1,0})}
+
+%region_0.7 (arg: f32[]) -> f32[] {
+  %arg = f32[] parameter(0)
+  ROOT %add.1 = f32[] add(%arg, %arg)
+}
+
+ENTRY %main.10 (Arg_0.1: f32[2,2]) -> (f32[2,2]) {
+  %Arg_0.1 = f32[2,2]{1,0} parameter(0)
+  %dot.3 = f32[2,2]{1,0} dot(%Arg_0.1, %Arg_0.1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %constant.2 = f32[] constant(2)
+  %broadcast.4 = f32[2,2]{1,0} broadcast(%constant.2), dimensions={}
+  %add.5 = f32[2,2]{1,0} add(%dot.3, %broadcast.4)
+  %tuple.9 = (s32[], f32[2,2]{1,0}) tuple(%constant.2, %add.5)
+  ROOT %out = (f32[2,2]{1,0}) tuple(%add.5)
+}
+"#;
+
+    #[test]
+    fn parses_opcodes() {
+        let s = analyze_text(SAMPLE);
+        // parameter, add, dot, constant, broadcast, tuple
+        assert_eq!(s.unique_instructions, 6);
+        assert_eq!(s.total_instructions, 9);
+    }
+
+    #[test]
+    fn parses_unsigiled_names() {
+        // jax's as_hlo_text() emits names without the % sigil.
+        assert_eq!(
+            opcode_of_line("  dot.2 = f32[16,16]{1,0} dot(a, b), lhs_contracting_dims={1}"),
+            Some("dot")
+        );
+        assert_eq!(
+            opcode_of_line("  ROOT call.1 = s32[] call(and.1), to_apply=_where.1"),
+            Some("call")
+        );
+        assert_eq!(opcode_of_line("_where.1 {"), None);
+        assert_eq!(
+            opcode_of_line("  get-tuple-element.24 = f32[16]{0} get-tuple-element(x), index=3"),
+            Some("get-tuple-element")
+        );
+    }
+
+    #[test]
+    fn tuple_typed_results_are_handled() {
+        assert_eq!(
+            opcode_of_line("  %t = (s32[], f32[2]{0}) tuple(%a, %b)"),
+            Some("tuple")
+        );
+    }
+
+    #[test]
+    fn non_instruction_lines_ignored() {
+        assert_eq!(opcode_of_line("HloModule foo"), None);
+        assert_eq!(opcode_of_line("ENTRY %main (x: f32[]) -> f32[] {"), None);
+        assert_eq!(opcode_of_line("}"), None);
+    }
+
+    #[test]
+    fn real_artifacts_if_present() {
+        // Integration sanity when artifacts exist: every attention
+        // artifact parses to a nontrivial module.
+        let dir = crate::artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = crate::runtime::Manifest::load(&dir).unwrap();
+        let arts = m.kernel_artifacts("attention");
+        assert!(!arts.is_empty());
+        for a in arts.iter().take(3) {
+            let s = analyze_file(dir.join(&a.path)).unwrap();
+            assert!(s.total_instructions > 50, "{}: {s:?}", a.id);
+            assert!(s.unique_instructions > 10);
+        }
+    }
+}

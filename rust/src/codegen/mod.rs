@@ -1,0 +1,57 @@
+//! Generated-code analytics — the substrate for the paper's Fig. 5.
+//!
+//! The paper quantifies *code diversity* across autotuning configurations
+//! by analyzing the PTX of all 450 Triton variants and of the 30 CUDA
+//! templates: number of **unique instructions** (opcode + prefixes,
+//! operands ignored), **total instructions**, and **binary size**.
+//!
+//! Our substitution (DESIGN.md §2) applies the identical methodology to
+//! two corpora:
+//!
+//! - [`hlo`] — *real* analysis of the per-configuration HLO-text
+//!   artifacts produced by the Pallas AOT path (HLO is our artifact ISA
+//!   the way PTX was the paper's);
+//! - [`ptx`] — a synthetic PTX emitter driven by the simulated platforms,
+//!   reproducing the full 450-config sweep of Fig. 5a and the 30-template
+//!   corpus of Fig. 5b.
+
+pub mod hlo;
+pub mod ptx;
+
+use std::collections::BTreeSet;
+
+/// Instruction-level statistics of one code artifact (Fig. 5 metrics).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CodeStats {
+    /// Unique instruction spellings (opcode + prefixes, no operands).
+    pub unique_instructions: usize,
+    /// Total instruction count.
+    pub total_instructions: usize,
+    /// Artifact size in bytes (cubin-size analog).
+    pub bytes: usize,
+}
+
+/// Count instruction statistics from an iterator of instruction
+/// mnemonics (already stripped of operands).
+pub fn stats_from_mnemonics<'a>(mnemonics: impl Iterator<Item = &'a str>, bytes: usize) -> CodeStats {
+    let mut unique: BTreeSet<&str> = BTreeSet::new();
+    let mut total = 0usize;
+    for m in mnemonics {
+        total += 1;
+        unique.insert(m);
+    }
+    CodeStats { unique_instructions: unique.len(), total_instructions: total, bytes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_count_unique_and_total() {
+        let s = stats_from_mnemonics(["add", "add", "mul"].into_iter(), 10);
+        assert_eq!(s.unique_instructions, 2);
+        assert_eq!(s.total_instructions, 3);
+        assert_eq!(s.bytes, 10);
+    }
+}

@@ -1,0 +1,516 @@
+//! Declarative configuration spaces — the "high-level API to define
+//! kernel parameter configuration spaces and express parameter
+//! dependencies" the paper calls for in Q4.1, as *data* instead of code.
+//!
+//! A space is a JSON document; constraints are integer boolean
+//! expressions over parameter names and workload fields:
+//!
+//! ```json
+//! {
+//!   "name": "attention_sim",
+//!   "params": {
+//!     "BLOCK_M": [16, 32, 64, 128, 256],
+//!     "num_warps": [1, 2, 4, 8]
+//!   },
+//!   "constraints": [
+//!     "BLOCK_M <= seq_len",
+//!     "BLOCK_M * BLOCK_N >= 512 && seq_len % BLOCK_M == 0"
+//!   ]
+//! }
+//! ```
+//!
+//! Workload fields available to expressions: `batch`, `q_heads`,
+//! `kv_heads`, `seq_len`, `head_dim`, `n_rows`, `hidden`, `n`,
+//! `dtype_bytes`, `causal` (0/1).  Kernel developers can therefore ship
+//! tuning spaces next to kernels without writing a line of Rust.
+
+use std::collections::BTreeMap;
+use std::sync::Arc as Rc;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::space::ConfigSpace;
+use crate::json::{self, Value};
+use crate::workload::Workload;
+
+// ---------------------------------------------------------------------
+// Expression language
+// ---------------------------------------------------------------------
+
+/// Parsed constraint expression (integer arithmetic + boolean logic).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    Num(i64),
+    Var(String),
+    Binary(Op, Rc<Expr>, Rc<Expr>),
+    Not(Rc<Expr>),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+    And,
+    Or,
+}
+
+impl Expr {
+    /// Evaluate under an environment; booleans are 0/1 integers.
+    /// Division/modulo by zero is an error (constraints treat it as
+    /// "violated" rather than panicking).
+    pub fn eval(&self, env: &BTreeMap<String, i64>) -> Result<i64> {
+        Ok(match self {
+            Expr::Num(n) => *n,
+            Expr::Var(name) => *env
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown identifier {name:?}"))?,
+            Expr::Not(e) => i64::from(e.eval(env)? == 0),
+            Expr::Binary(op, a, b) => {
+                let (a, b) = (a.eval(env)?, b.eval(env)?);
+                match op {
+                    Op::Add => a.wrapping_add(b),
+                    Op::Sub => a.wrapping_sub(b),
+                    Op::Mul => a.wrapping_mul(b),
+                    Op::Div => {
+                        if b == 0 {
+                            bail!("division by zero");
+                        }
+                        a / b
+                    }
+                    Op::Mod => {
+                        if b == 0 {
+                            bail!("modulo by zero");
+                        }
+                        a % b
+                    }
+                    Op::Lt => i64::from(a < b),
+                    Op::Le => i64::from(a <= b),
+                    Op::Gt => i64::from(a > b),
+                    Op::Ge => i64::from(a >= b),
+                    Op::Eq => i64::from(a == b),
+                    Op::Ne => i64::from(a != b),
+                    Op::And => i64::from(a != 0 && b != 0),
+                    Op::Or => i64::from(a != 0 || b != 0),
+                }
+            }
+        })
+    }
+
+    /// All identifiers referenced by the expression.
+    pub fn vars(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        self.collect_vars(&mut out);
+        out.sort();
+        out.dedup();
+        out
+    }
+
+    fn collect_vars(&self, out: &mut Vec<String>) {
+        match self {
+            Expr::Var(v) => out.push(v.clone()),
+            Expr::Binary(_, a, b) => {
+                a.collect_vars(out);
+                b.collect_vars(out);
+            }
+            Expr::Not(e) => e.collect_vars(out),
+            Expr::Num(_) => {}
+        }
+    }
+}
+
+/// Recursive-descent parser with standard precedence:
+/// `||` < `&&` < comparisons < `+ -` < `* / %` < unary `!` < atoms.
+pub fn parse_expr(text: &str) -> Result<Expr> {
+    let tokens = tokenize(text)?;
+    let mut p = ExprParser { tokens, pos: 0 };
+    let e = p.or_expr()?;
+    if p.pos != p.tokens.len() {
+        bail!("trailing tokens in expression {text:?}");
+    }
+    Ok(e)
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Num(i64),
+    Ident(String),
+    Op(String),
+    LParen,
+    RParen,
+}
+
+fn tokenize(text: &str) -> Result<Vec<Tok>> {
+    let mut out = Vec::new();
+    let bytes = text.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        match c {
+            ' ' | '\t' | '\n' => i += 1,
+            '(' => {
+                out.push(Tok::LParen);
+                i += 1;
+            }
+            ')' => {
+                out.push(Tok::RParen);
+                i += 1;
+            }
+            '0'..='9' => {
+                let start = i;
+                while i < bytes.len() && bytes[i].is_ascii_digit() {
+                    i += 1;
+                }
+                out.push(Tok::Num(text[start..i].parse()?));
+            }
+            'a'..='z' | 'A'..='Z' | '_' => {
+                let start = i;
+                while i < bytes.len()
+                    && (bytes[i].is_ascii_alphanumeric() || bytes[i] == b'_')
+                {
+                    i += 1;
+                }
+                out.push(Tok::Ident(text[start..i].to_string()));
+            }
+            '&' | '|' | '<' | '>' | '=' | '!' => {
+                let two = &text[i..(i + 2).min(text.len())];
+                if ["&&", "||", "<=", ">=", "==", "!="].contains(&two) {
+                    out.push(Tok::Op(two.to_string()));
+                    i += 2;
+                } else if c == '<' || c == '>' || c == '!' {
+                    out.push(Tok::Op(c.to_string()));
+                    i += 1;
+                } else {
+                    bail!("bad operator at {:?}", &text[i..]);
+                }
+            }
+            '+' | '-' | '*' | '/' | '%' => {
+                out.push(Tok::Op(c.to_string()));
+                i += 1;
+            }
+            other => bail!("unexpected character {other:?} in expression"),
+        }
+    }
+    Ok(out)
+}
+
+struct ExprParser {
+    tokens: Vec<Tok>,
+    pos: usize,
+}
+
+impl ExprParser {
+    fn peek_op(&self) -> Option<&str> {
+        match self.tokens.get(self.pos) {
+            Some(Tok::Op(s)) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    fn binary_level(
+        &mut self,
+        ops: &[(&str, Op)],
+        next: fn(&mut Self) -> Result<Expr>,
+    ) -> Result<Expr> {
+        let mut lhs = next(self)?;
+        while let Some(tok) = self.peek_op() {
+            let Some((_, op)) = ops.iter().find(|(s, _)| *s == tok) else { break };
+            self.pos += 1;
+            let rhs = next(self)?;
+            lhs = Expr::Binary(*op, Rc::new(lhs), Rc::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn or_expr(&mut self) -> Result<Expr> {
+        self.binary_level(&[("||", Op::Or)], Self::and_expr_f)
+    }
+
+    fn and_expr_f(p: &mut Self) -> Result<Expr> {
+        p.binary_level(&[("&&", Op::And)], Self::cmp_expr_f)
+    }
+
+    fn cmp_expr_f(p: &mut Self) -> Result<Expr> {
+        p.binary_level(
+            &[
+                ("<=", Op::Le),
+                (">=", Op::Ge),
+                ("==", Op::Eq),
+                ("!=", Op::Ne),
+                ("<", Op::Lt),
+                (">", Op::Gt),
+            ],
+            Self::add_expr_f,
+        )
+    }
+
+    fn add_expr_f(p: &mut Self) -> Result<Expr> {
+        p.binary_level(&[("+", Op::Add), ("-", Op::Sub)], Self::mul_expr_f)
+    }
+
+    fn mul_expr_f(p: &mut Self) -> Result<Expr> {
+        p.binary_level(&[("*", Op::Mul), ("/", Op::Div), ("%", Op::Mod)], Self::unary_f)
+    }
+
+    fn unary_f(p: &mut Self) -> Result<Expr> {
+        if p.peek_op() == Some("!") {
+            p.pos += 1;
+            return Ok(Expr::Not(Rc::new(Self::unary_f(p)?)));
+        }
+        p.atom()
+    }
+
+    fn atom(&mut self) -> Result<Expr> {
+        match self.tokens.get(self.pos).cloned() {
+            Some(Tok::Num(n)) => {
+                self.pos += 1;
+                Ok(Expr::Num(n))
+            }
+            Some(Tok::Ident(name)) => {
+                self.pos += 1;
+                Ok(Expr::Var(name))
+            }
+            Some(Tok::LParen) => {
+                self.pos += 1;
+                let e = self.or_expr()?;
+                match self.tokens.get(self.pos) {
+                    Some(Tok::RParen) => {
+                        self.pos += 1;
+                        Ok(e)
+                    }
+                    _ => bail!("missing closing parenthesis"),
+                }
+            }
+            other => bail!("unexpected token {other:?}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Workload environment + space loading
+// ---------------------------------------------------------------------
+
+/// Workload fields visible to constraint expressions.
+pub fn workload_env(w: &Workload) -> BTreeMap<String, i64> {
+    let mut env = BTreeMap::new();
+    env.insert("dtype_bytes".into(), w.dtype().bytes() as i64);
+    match *w {
+        Workload::Attention { batch, q_heads, kv_heads, seq_len, head_dim, causal, .. } => {
+            env.insert("batch".into(), batch as i64);
+            env.insert("q_heads".into(), q_heads as i64);
+            env.insert("kv_heads".into(), kv_heads as i64);
+            env.insert("seq_len".into(), seq_len as i64);
+            env.insert("head_dim".into(), head_dim as i64);
+            env.insert("causal".into(), i64::from(causal));
+        }
+        Workload::RmsNorm { n_rows, hidden, .. } => {
+            env.insert("n_rows".into(), n_rows as i64);
+            env.insert("hidden".into(), hidden as i64);
+        }
+        Workload::VectorAdd { n, .. } => {
+            env.insert("n".into(), n as i64);
+        }
+    }
+    env
+}
+
+/// Build a [`ConfigSpace`] from its JSON description.
+pub fn space_from_json(text: &str) -> Result<ConfigSpace> {
+    let v = json::parse(text)?;
+    let name = v.req_str("name")?;
+    let mut space = ConfigSpace::new(name);
+    let params = v
+        .req("params")?
+        .as_obj()
+        .ok_or_else(|| anyhow!("params must be an object"))?;
+    if params.is_empty() {
+        bail!("space {name:?} declares no parameters");
+    }
+    for (pname, choices) in params {
+        let choices: Vec<i64> = choices
+            .as_arr()
+            .ok_or_else(|| anyhow!("param {pname:?} must list choices"))?
+            .iter()
+            .map(|c| c.as_i64().ok_or_else(|| anyhow!("param {pname:?}: non-integer choice")))
+            .collect::<Result<_>>()?;
+        if choices.is_empty() {
+            bail!("param {pname:?} has no choices");
+        }
+        space = space.param(pname, &choices);
+    }
+    if let Some(constraints) = v.get("constraints").and_then(Value::as_arr) {
+        for c in constraints {
+            let text = c
+                .as_str()
+                .ok_or_else(|| anyhow!("constraints must be strings"))?
+                .to_string();
+            let expr = parse_expr(&text)?;
+            // Reject unknown identifiers early (typos in shipped spaces).
+            let param_names: Vec<String> = params.keys().cloned().collect();
+            for var in expr.vars() {
+                let known_workload = [
+                    "batch", "q_heads", "kv_heads", "seq_len", "head_dim", "causal", "n_rows",
+                    "hidden", "n", "dtype_bytes",
+                ]
+                .contains(&var.as_str());
+                if !known_workload && !param_names.contains(&var) {
+                    bail!("constraint {text:?}: unknown identifier {var:?}");
+                }
+            }
+            let expr = Arc::new(expr);
+            let expr2 = expr.clone();
+            space = space.constraint(&text, move |cfg, w| {
+                let mut env = workload_env(w);
+                env.extend(cfg.0.iter().map(|(k, v)| (k.clone(), *v)));
+                // Evaluation errors (e.g. div by zero, or a workload kind
+                // lacking the referenced field) mean "constraint violated".
+                expr2.eval(&env).map(|r| r != 0).unwrap_or(false)
+            });
+            let _ = expr;
+        }
+    }
+    Ok(space)
+}
+
+/// Load a space description from a file.
+pub fn space_from_file(path: impl AsRef<std::path::Path>) -> Result<ConfigSpace> {
+    space_from_json(&std::fs::read_to_string(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::DType;
+
+    fn env(pairs: &[(&str, i64)]) -> BTreeMap<String, i64> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn arithmetic_precedence() {
+        let e = parse_expr("1 + 2 * 3").unwrap();
+        assert_eq!(e.eval(&env(&[])).unwrap(), 7);
+        let e = parse_expr("(1 + 2) * 3").unwrap();
+        assert_eq!(e.eval(&env(&[])).unwrap(), 9);
+        let e = parse_expr("10 % 4 + 8 / 2").unwrap();
+        assert_eq!(e.eval(&env(&[])).unwrap(), 6);
+    }
+
+    #[test]
+    fn comparisons_and_logic() {
+        let e = parse_expr("a * b <= 40 && a != 0").unwrap();
+        assert_eq!(e.eval(&env(&[("a", 4), ("b", 10)])).unwrap(), 1);
+        assert_eq!(e.eval(&env(&[("a", 5), ("b", 10)])).unwrap(), 0);
+        let e = parse_expr("a < 2 || b < 2").unwrap();
+        assert_eq!(e.eval(&env(&[("a", 1), ("b", 9)])).unwrap(), 1);
+        let e = parse_expr("!(a == 1)").unwrap();
+        assert_eq!(e.eval(&env(&[("a", 2)])).unwrap(), 1);
+    }
+
+    #[test]
+    fn unknown_identifier_is_error() {
+        let e = parse_expr("missing + 1").unwrap();
+        assert!(e.eval(&env(&[])).is_err());
+    }
+
+    #[test]
+    fn division_by_zero_is_error_not_panic() {
+        let e = parse_expr("4 / z").unwrap();
+        assert!(e.eval(&env(&[("z", 0)])).is_err());
+        let e = parse_expr("4 % z").unwrap();
+        assert!(e.eval(&env(&[("z", 0)])).is_err());
+    }
+
+    #[test]
+    fn parse_failures() {
+        for bad in ["", "1 +", "(1", "a ~ b", "1 2", "&& 1"] {
+            assert!(parse_expr(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    const ATTN_SPACE: &str = r#"{
+      "name": "attn_json",
+      "params": {
+        "BLOCK_M": [16, 32, 64, 128],
+        "BLOCK_N": [32, 64],
+        "num_warps": [1, 2, 4]
+      },
+      "constraints": [
+        "seq_len % BLOCK_M == 0",
+        "BLOCK_M * BLOCK_N >= 1024",
+        "num_warps * 32 <= BLOCK_M * 8"
+      ]
+    }"#;
+
+    #[test]
+    fn space_from_json_enumerates_correctly() {
+        let space = space_from_json(ATTN_SPACE).unwrap();
+        assert_eq!(space.cardinality(), 4 * 2 * 3);
+        let w = Workload::llama3_attention(4, 512);
+        for cfg in space.enumerate(&w) {
+            assert_eq!(512 % cfg.req("BLOCK_M"), 0);
+            assert!(cfg.req("BLOCK_M") * cfg.req("BLOCK_N") >= 1024);
+        }
+        // Hand-check one exclusion: BLOCK_M=16, BLOCK_N=32 -> 512 < 1024.
+        let bad = crate::config::Config::new(&[("BLOCK_M", 16), ("BLOCK_N", 32), ("num_warps", 1)]);
+        assert!(!space.contains(&bad, &w));
+    }
+
+    #[test]
+    fn json_space_matches_handwritten_equivalent() {
+        // The declarative vecadd space must behave exactly like the
+        // built-in one.
+        let text = r#"{
+          "name": "vecadd_aot",
+          "params": {"block_size": [64, 128, 256, 512, 1024]},
+          "constraints": ["n % block_size == 0 && block_size <= n"]
+        }"#;
+        let json_space = space_from_json(text).unwrap();
+        let builtin = crate::config::spaces::vecadd_aot_space();
+        for n in [64usize, 256, 1024, 4096, 100] {
+            let w = Workload::VectorAdd { n, dtype: DType::F32 };
+            assert_eq!(
+                json_space.enumerate(&w),
+                builtin.enumerate(&w),
+                "mismatch at n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn typo_in_constraint_is_rejected_at_load() {
+        let text = r#"{
+          "name": "typo",
+          "params": {"B": [1]},
+          "constraints": ["BLOKC_M > 0"]
+        }"#;
+        let err = space_from_json(text).unwrap_err().to_string();
+        assert!(err.contains("BLOKC_M"), "{err}");
+    }
+
+    #[test]
+    fn wrong_workload_kind_violates_not_panics() {
+        let space = space_from_json(ATTN_SPACE).unwrap();
+        let w = Workload::VectorAdd { n: 64, dtype: DType::F32 };
+        // seq_len is undefined for vecadd -> every constraint fails closed.
+        assert!(space.enumerate(&w).is_empty());
+    }
+
+    #[test]
+    fn workload_env_fields() {
+        let env = workload_env(&Workload::llama3_attention(2, 256));
+        assert_eq!(env["batch"], 2);
+        assert_eq!(env["seq_len"], 256);
+        assert_eq!(env["dtype_bytes"], 2);
+        assert_eq!(env["causal"], 1);
+    }
+}

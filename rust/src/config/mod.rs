@@ -1,0 +1,25 @@
+//! Kernel-configuration space API — the paper's gap **Q4.1**:
+//!
+//! > *"LLM kernel developers need access to a high-level API to define
+//! > kernel parameter configuration spaces and also express parameter
+//! > dependencies."*
+//!
+//! [`ConfigSpace`] is that API: named integer parameters with choice
+//! lists, plus named constraint predicates that may couple several
+//! parameters and the workload (e.g. *"BLOCK_N × num_stages must fit in
+//! shared memory"*).  Spaces enumerate lazily, validate configurations,
+//! sample uniformly, and generate single-parameter neighbours for local
+//! search.
+//!
+//! [`dsl`] loads spaces from JSON descriptions with a constraint
+//! expression language, so kernel authors ship tuning spaces as data.
+//! [`spaces`] holds the concrete spaces used throughout the reproduction:
+//! the Triton-sized *sim* spaces (hundreds of configurations, explored by
+//! the analytical platform models) and the smaller *AOT* spaces (every
+//! configuration of which exists as a lowered HLO artifact).
+
+pub mod dsl;
+mod space;
+pub mod spaces;
+
+pub use space::{Config, ConfigSpace, Constraint, Param};

@@ -1,0 +1,349 @@
+//! Core configuration-space types.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::Arc;
+
+use crate::util::rng::Rng;
+use crate::workload::Workload;
+
+/// A concrete assignment of every tunable parameter, e.g.
+/// `{BLOCK_M: 64, BLOCK_N: 32, num_warps: 4, num_stages: 2}`.
+///
+/// Ordered map so that [`Config::key`] is canonical.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, Default)]
+pub struct Config(pub BTreeMap<String, i64>);
+
+impl Config {
+    pub fn new(pairs: &[(&str, i64)]) -> Self {
+        Config(pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect())
+    }
+
+    pub fn get(&self, name: &str) -> Option<i64> {
+        self.0.get(name).copied()
+    }
+
+    /// Panicking accessor for parameters the space guarantees to exist.
+    pub fn req(&self, name: &str) -> i64 {
+        self.0
+            .get(name)
+            .copied()
+            .unwrap_or_else(|| panic!("config missing parameter {name:?}"))
+    }
+
+    pub fn set(&mut self, name: &str, value: i64) {
+        self.0.insert(name.to_string(), value);
+    }
+
+    /// Canonical string form: `BLOCK_M=64,BLOCK_N=32,...` (sorted keys).
+    pub fn key(&self) -> String {
+        let parts: Vec<String> = self.0.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        parts.join(",")
+    }
+
+    /// Parse the canonical `key()` form back into a config.
+    pub fn parse(s: &str) -> Option<Self> {
+        let mut map = BTreeMap::new();
+        for part in s.split(',').filter(|p| !p.is_empty()) {
+            let (k, v) = part.split_once('=')?;
+            map.insert(k.trim().to_string(), v.trim().parse().ok()?);
+        }
+        Some(Config(map))
+    }
+}
+
+impl fmt::Display for Config {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.key())
+    }
+}
+
+/// One tunable parameter with its discrete choice list.
+#[derive(Debug, Clone)]
+pub struct Param {
+    pub name: String,
+    pub choices: Vec<i64>,
+}
+
+impl Param {
+    pub fn new(name: &str, choices: &[i64]) -> Self {
+        assert!(!choices.is_empty(), "parameter {name} has no choices");
+        Param { name: name.to_string(), choices: choices.to_vec() }
+    }
+}
+
+/// A named validity predicate over (config, workload).
+///
+/// Constraints express the *parameter dependencies* of Q4.1 — e.g. shared
+/// memory capacity, thread-count ceilings, divisibility requirements.
+/// They are named so that tuning reports can say *why* a configuration
+/// was rejected (the paper notes invalid configs are platform-specific).
+#[derive(Clone)]
+pub struct Constraint {
+    pub name: String,
+    pred: Arc<dyn Fn(&Config, &Workload) -> bool + Send + Sync>,
+}
+
+impl Constraint {
+    pub fn new(
+        name: &str,
+        pred: impl Fn(&Config, &Workload) -> bool + Send + Sync + 'static,
+    ) -> Self {
+        Constraint { name: name.to_string(), pred: Arc::new(pred) }
+    }
+
+    pub fn check(&self, cfg: &Config, w: &Workload) -> bool {
+        (self.pred)(cfg, w)
+    }
+}
+
+impl fmt::Debug for Constraint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Constraint({})", self.name)
+    }
+}
+
+/// A discrete configuration space: the cartesian product of parameter
+/// choices, filtered by constraints.
+#[derive(Debug, Clone)]
+pub struct ConfigSpace {
+    pub name: String,
+    pub params: Vec<Param>,
+    pub constraints: Vec<Constraint>,
+}
+
+impl ConfigSpace {
+    pub fn new(name: &str) -> Self {
+        ConfigSpace { name: name.to_string(), params: Vec::new(), constraints: Vec::new() }
+    }
+
+    /// Builder: add a parameter with its choices.
+    pub fn param(mut self, name: &str, choices: &[i64]) -> Self {
+        assert!(
+            self.params.iter().all(|p| p.name != name),
+            "duplicate parameter {name}"
+        );
+        self.params.push(Param::new(name, choices));
+        self
+    }
+
+    /// Builder: add a named constraint.
+    pub fn constraint(
+        mut self,
+        name: &str,
+        pred: impl Fn(&Config, &Workload) -> bool + Send + Sync + 'static,
+    ) -> Self {
+        self.constraints.push(Constraint::new(name, pred));
+        self
+    }
+
+    /// Size of the unconstrained cartesian product.
+    pub fn cardinality(&self) -> usize {
+        self.params.iter().map(|p| p.choices.len()).product()
+    }
+
+    /// Does `cfg` assign every parameter to a legal choice and satisfy all
+    /// constraints for `w`?
+    pub fn contains(&self, cfg: &Config, w: &Workload) -> bool {
+        self.well_formed(cfg) && self.violated_constraint(cfg, w).is_none()
+    }
+
+    /// Structural check only (parameters and choices, no constraints).
+    pub fn well_formed(&self, cfg: &Config) -> bool {
+        cfg.0.len() == self.params.len()
+            && self.params.iter().all(|p| {
+                cfg.get(&p.name)
+                    .map(|v| p.choices.contains(&v))
+                    .unwrap_or(false)
+            })
+    }
+
+    /// Name of the first constraint `cfg` violates for `w`, if any.
+    pub fn violated_constraint(&self, cfg: &Config, w: &Workload) -> Option<&str> {
+        self.constraints
+            .iter()
+            .find(|c| !c.check(cfg, w))
+            .map(|c| c.name.as_str())
+    }
+
+    /// Enumerate every *valid* configuration for workload `w`,
+    /// lexicographically by parameter order.
+    pub fn enumerate(&self, w: &Workload) -> Vec<Config> {
+        let mut out = Vec::new();
+        let mut cur = Config::default();
+        self.enum_rec(0, &mut cur, w, &mut out);
+        out
+    }
+
+    fn enum_rec(&self, depth: usize, cur: &mut Config, w: &Workload, out: &mut Vec<Config>) {
+        if depth == self.params.len() {
+            if self.violated_constraint(cur, w).is_none() {
+                out.push(cur.clone());
+            }
+            return;
+        }
+        let p = &self.params[depth];
+        for &v in &p.choices {
+            cur.set(&p.name, v);
+            self.enum_rec(depth + 1, cur, w, out);
+        }
+        cur.0.remove(&p.name);
+    }
+
+    /// Count valid and invalid configurations (the paper reports both:
+    /// "some of which are invalid on certain GPU platforms").
+    pub fn count_valid(&self, w: &Workload) -> (usize, usize) {
+        let valid = self.enumerate(w).len();
+        (valid, self.cardinality() - valid)
+    }
+
+    /// Sample one configuration uniformly from the cartesian product,
+    /// rejecting invalid ones (up to `max_tries`).  Returns `None` when
+    /// the valid region is too sparse to hit.
+    pub fn sample(&self, w: &Workload, rng: &mut Rng, max_tries: usize) -> Option<Config> {
+        for _ in 0..max_tries {
+            let mut cfg = Config::default();
+            for p in &self.params {
+                cfg.set(&p.name, *rng.choose(&p.choices).unwrap());
+            }
+            if self.violated_constraint(&cfg, w).is_none() {
+                return Some(cfg);
+            }
+        }
+        None
+    }
+
+    /// All valid configurations that differ from `cfg` in exactly one
+    /// parameter (the neighbourhood for local search).
+    pub fn neighbors(&self, cfg: &Config, w: &Workload) -> Vec<Config> {
+        let mut out = Vec::new();
+        for p in &self.params {
+            let cur = cfg.req(&p.name);
+            for &v in &p.choices {
+                if v != cur {
+                    let mut n = cfg.clone();
+                    n.set(&p.name, v);
+                    if self.violated_constraint(&n, w).is_none() {
+                        out.push(n);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// `n` configurations spread evenly across the enumeration order —
+    /// the paper's "five hyperparameters, equally sampled across the
+    /// configuration space" protocol for the manually-tuned baseline.
+    pub fn equally_spaced(&self, w: &Workload, n: usize) -> Vec<Config> {
+        let all = self.enumerate(w);
+        if all.is_empty() || n == 0 {
+            return Vec::new();
+        }
+        if all.len() <= n {
+            return all;
+        }
+        (0..n)
+            .map(|i| all[i * (all.len() - 1) / (n - 1).max(1)].clone())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::DType;
+
+    fn w() -> Workload {
+        Workload::VectorAdd { n: 1024, dtype: DType::F32 }
+    }
+
+    fn space() -> ConfigSpace {
+        ConfigSpace::new("test")
+            .param("a", &[1, 2, 4])
+            .param("b", &[10, 20])
+            .constraint("a_times_b_le_40", |c, _| c.req("a") * c.req("b") <= 40)
+    }
+
+    #[test]
+    fn cardinality_is_product() {
+        assert_eq!(space().cardinality(), 6);
+    }
+
+    #[test]
+    fn enumerate_respects_constraints() {
+        let s = space();
+        let all = s.enumerate(&w());
+        // invalid: a=4,b=20 (80) -> 5 valid out of 6
+        assert_eq!(all.len(), 5);
+        for c in &all {
+            assert!(s.contains(c, &w()));
+        }
+    }
+
+    #[test]
+    fn count_valid_matches_enumerate() {
+        let (valid, invalid) = space().count_valid(&w());
+        assert_eq!((valid, invalid), (5, 1));
+    }
+
+    #[test]
+    fn contains_rejects_alien_values() {
+        let s = space();
+        assert!(!s.contains(&Config::new(&[("a", 3), ("b", 10)]), &w()));
+        assert!(!s.contains(&Config::new(&[("a", 1)]), &w()));
+        assert!(!s.contains(&Config::new(&[("a", 4), ("b", 20)]), &w()));
+    }
+
+    #[test]
+    fn violated_constraint_is_named() {
+        let s = space();
+        let bad = Config::new(&[("a", 4), ("b", 20)]);
+        assert_eq!(s.violated_constraint(&bad, &w()), Some("a_times_b_le_40"));
+    }
+
+    #[test]
+    fn neighbors_differ_in_one_param() {
+        let s = space();
+        let c = Config::new(&[("a", 1), ("b", 10)]);
+        let ns = s.neighbors(&c, &w());
+        // a: 2,4 ; b: 20 -> 3 neighbors, all valid
+        assert_eq!(ns.len(), 3);
+        for n in &ns {
+            let diffs = n.0.iter().filter(|(k, v)| c.get(k) != Some(**v)).count();
+            assert_eq!(diffs, 1);
+        }
+    }
+
+    #[test]
+    fn sample_is_always_valid() {
+        let s = space();
+        let mut rng = Rng::seed_from(0xD1CE);
+        for _ in 0..50 {
+            let c = s.sample(&w(), &mut rng, 100).unwrap();
+            assert!(s.contains(&c, &w()));
+        }
+    }
+
+    #[test]
+    fn equally_spaced_endpoints() {
+        let s = space();
+        let all = s.enumerate(&w());
+        let five = s.equally_spaced(&w(), 5);
+        assert_eq!(five.len(), 5);
+        assert_eq!(five.first(), all.first());
+        assert_eq!(five.last(), all.last());
+    }
+
+    #[test]
+    fn config_key_roundtrip() {
+        let c = Config::new(&[("BLOCK_M", 64), ("num_warps", 4)]);
+        assert_eq!(Config::parse(&c.key()), Some(c));
+    }
+
+    #[test]
+    fn config_key_is_sorted() {
+        let c = Config::new(&[("z", 1), ("a", 2)]);
+        assert_eq!(c.key(), "a=2,z=1");
+    }
+}

@@ -1,0 +1,213 @@
+//! Predefined configuration spaces for the investigated kernels.
+//!
+//! Two families:
+//!
+//! - **sim spaces** — Triton-sized spaces (hundreds to ~1000 configurations
+//!   per tensor shape, as the paper reports for flash attention) explored
+//!   by the analytical platform models.  Parameters mirror Triton's tuning
+//!   knobs: `BLOCK_M`, `BLOCK_N`, `num_warps`, `num_stages`,
+//!   `waves_per_eu` (an AMD scheduler hint, ignored by the NVIDIA model).
+//! - **AOT spaces** — the smaller spaces every member of which was lowered
+//!   by `python/compile/aot.py` to a real HLO artifact.  These mirror the
+//!   `config_is_valid` functions in the Pallas kernels — keep them in sync.
+//!
+//! Workload-independent hardware limits (shared-memory capacity, thread
+//! ceilings) are *not* encoded here: they belong to the platform models,
+//! because — as the paper observes in Fig. 4 — validity itself is
+//! platform-specific.
+
+use super::space::ConfigSpace;
+use crate::workload::Workload;
+
+/// Triton-style flash-attention space: 5·5·4·5·2 = 1000 raw configurations
+/// per tensor shape, matching the paper's "up to 1000 configurations per
+/// tensor shape" for attention.
+pub fn attention_sim_space() -> ConfigSpace {
+    ConfigSpace::new("attention_sim")
+        .param("BLOCK_M", &[16, 32, 64, 128, 256])
+        .param("BLOCK_N", &[16, 32, 64, 128, 256])
+        .param("num_warps", &[1, 2, 4, 8])
+        .param("num_stages", &[1, 2, 3, 4, 5])
+        .param("waves_per_eu", &[0, 2])
+        .constraint("block_m_le_seq_padded", |c, w| match w {
+            // Triton masks out-of-range rows, but a tile larger than the
+            // whole (padded) sequence is pure waste and never valid.
+            Workload::Attention { seq_len, .. } => c.req("BLOCK_M") <= (*seq_len as i64).max(16),
+            _ => true,
+        })
+        .constraint("tile_not_degenerate", |c, _| {
+            // Extreme aspect ratios starve the matrix units on both
+            // vendors; Triton refuses to compile some of these.
+            let (m, n) = (c.req("BLOCK_M"), c.req("BLOCK_N"));
+            m * n >= 512
+        })
+}
+
+/// Pallas AOT attention space — mirrors
+/// `python/compile/kernels/flash_attention.py::config_is_valid`.
+pub fn attention_aot_space() -> ConfigSpace {
+    ConfigSpace::new("attention_aot")
+        .param("block_q", &[16, 32, 64, 128])
+        .param("block_k", &[16, 32, 64, 128])
+        .param("unroll", &[1, 2, 4])
+        .constraint("blocks_divide_seq", |c, w| match w {
+            Workload::Attention { seq_len, .. } => {
+                let s = *seq_len as i64;
+                s % c.req("block_q") == 0 && s % c.req("block_k") == 0
+            }
+            _ => false,
+        })
+        .constraint("unroll_divides_panels", |c, w| match w {
+            Workload::Attention { seq_len, .. } => {
+                let nk = *seq_len as i64 / c.req("block_k");
+                let u = c.req("unroll");
+                u <= 1 || nk % u == 0
+            }
+            _ => false,
+        })
+        .constraint("blocks_le_seq", |c, w| match w {
+            Workload::Attention { seq_len, .. } => {
+                let s = *seq_len as i64;
+                c.req("block_q") <= s && c.req("block_k") <= s
+            }
+            _ => false,
+        })
+}
+
+/// Triton-style RMS-norm space (memory-bound kernel: block size, warps,
+/// per-thread vector width).
+pub fn rms_sim_space() -> ConfigSpace {
+    ConfigSpace::new("rms_sim")
+        .param("BLOCK", &[64, 128, 256, 512, 1024, 2048, 4096, 8192])
+        .param("num_warps", &[1, 2, 4, 8, 16])
+        .param("VEC", &[1, 2, 4, 8])
+        .constraint("block_le_2x_hidden", |c, w| match w {
+            Workload::RmsNorm { hidden, .. } => c.req("BLOCK") <= 2 * *hidden as i64,
+            _ => true,
+        })
+        .constraint("vec_divides_block", |c, _| c.req("BLOCK") % c.req("VEC") == 0)
+}
+
+/// Pallas AOT RMS-norm space — mirrors
+/// `python/compile/kernels/rms_norm.py::config_is_valid`.
+pub fn rms_aot_space() -> ConfigSpace {
+    ConfigSpace::new("rms_aot")
+        .param("block_h", &[128, 256, 512, 1024, 2048, 4096])
+        .param("rows_per_block", &[1, 2, 4])
+        .constraint("block_divides_hidden", |c, w| match w {
+            Workload::RmsNorm { hidden, .. } => {
+                let h = *hidden as i64;
+                h % c.req("block_h") == 0 && c.req("block_h") <= h
+            }
+            _ => false,
+        })
+        .constraint("rows_divide_n", |c, w| match w {
+            Workload::RmsNorm { n_rows, .. } => *n_rows as i64 % c.req("rows_per_block") == 0,
+            _ => false,
+        })
+}
+
+/// Vector-add AOT space (Listing 1's `BLOCK_SIZE`).
+pub fn vecadd_aot_space() -> ConfigSpace {
+    ConfigSpace::new("vecadd_aot")
+        .param("block_size", &[64, 128, 256, 512, 1024])
+        .constraint("block_divides_n", |c, w| match w {
+            Workload::VectorAdd { n, .. } => {
+                let n = *n as i64;
+                n % c.req("block_size") == 0 && c.req("block_size") <= n
+            }
+            _ => false,
+        })
+}
+
+/// The sim space for a workload's kernel.
+pub fn sim_space_for(w: &Workload) -> ConfigSpace {
+    match w {
+        Workload::Attention { .. } => attention_sim_space(),
+        Workload::RmsNorm { .. } => rms_sim_space(),
+        Workload::VectorAdd { .. } => vecadd_aot_space(),
+    }
+}
+
+/// The AOT space for a workload's kernel.
+pub fn aot_space_for(w: &Workload) -> ConfigSpace {
+    match w {
+        Workload::Attention { .. } => attention_aot_space(),
+        Workload::RmsNorm { .. } => rms_aot_space(),
+        Workload::VectorAdd { .. } => vecadd_aot_space(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::DType;
+
+    #[test]
+    fn attention_sim_space_is_paper_sized() {
+        // "up to 1000 configurations per tensor shape"
+        assert_eq!(attention_sim_space().cardinality(), 1000);
+        let w = Workload::llama3_attention(64, 1024);
+        let valid = attention_sim_space().enumerate(&w).len();
+        assert!(valid > 400, "expected Triton-scale space, got {valid}");
+    }
+
+    #[test]
+    fn attention_aot_space_matches_python() {
+        // python: len(enumerate_aot_configs(128)) for the full space.
+        let w = Workload::Attention {
+            batch: 1,
+            q_heads: 8,
+            kv_heads: 2,
+            seq_len: 128,
+            head_dim: 64,
+            dtype: DType::F32,
+            causal: true,
+        };
+        let n = attention_aot_space().enumerate(&w).len();
+        // 4*4 block combos, unroll validity depends on nk: counted in python
+        // by `fa.enumerate_aot_configs(128)` as 36.
+        assert_eq!(n, 36);
+    }
+
+    #[test]
+    fn small_seq_shrinks_aot_space() {
+        let mk = |seq_len| Workload::Attention {
+            batch: 1,
+            q_heads: 2,
+            kv_heads: 2,
+            seq_len,
+            head_dim: 16,
+            dtype: DType::F32,
+            causal: true,
+        };
+        let n32 = attention_aot_space().enumerate(&mk(32)).len();
+        let n128 = attention_aot_space().enumerate(&mk(128)).len();
+        assert!(n32 < n128);
+    }
+
+    #[test]
+    fn rms_aot_space_requires_divisibility() {
+        let w = Workload::RmsNorm { n_rows: 64, hidden: 1024, dtype: DType::F32 };
+        for c in rms_aot_space().enumerate(&w) {
+            assert_eq!(1024 % c.req("block_h"), 0);
+            assert_eq!(64 % c.req("rows_per_block"), 0);
+        }
+    }
+
+    #[test]
+    fn spaces_reject_wrong_workload_kind() {
+        let w = Workload::VectorAdd { n: 1024, dtype: DType::F32 };
+        assert!(attention_aot_space().enumerate(&w).is_empty());
+        assert!(rms_aot_space().enumerate(&w).is_empty());
+    }
+
+    #[test]
+    fn sim_vs_template_ratio_is_paperlike() {
+        // Paper: autotuning explores up to 15x more configs than the 30
+        // CUDA templates (450 vs 30).
+        let w = Workload::llama3_attention(64, 2048);
+        let valid = attention_sim_space().enumerate(&w).len();
+        assert!(valid as f64 / 30.0 >= 15.0);
+    }
+}

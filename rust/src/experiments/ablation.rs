@@ -1,0 +1,151 @@
+//! Ablations for the design choices DESIGN.md calls out (beyond the
+//! paper's own figures):
+//!
+//! - **search strategy** (Q4.2): result quality vs evaluation budget for
+//!   every implemented strategy — quantifies how much cheaper than the
+//!   paper's 24 h exhaustive budget a practical tuner can be;
+//! - **model-guided pruning**: how many empirical measurements a
+//!   simulator prior saves at matched quality;
+//! - **cache reuse** (Q4.3): evaluations saved by the déjà-vu cache
+//!   across repeated deployments.
+
+use crate::autotuner::{self, SimEvaluator, Strategy};
+use crate::cache::TuningCache;
+use crate::config::spaces;
+use crate::kernels::baselines::{triton_codegen, HAND_TUNED};
+use crate::platform::SimGpu;
+use crate::report::Report;
+use crate::workload::Workload;
+
+/// Strategy-quality ablation over several workloads.
+pub fn search_strategies() -> Report {
+    let mut rep = Report::new(
+        "Ablation — search strategies (Q4.2): quality vs budget",
+        &["workload", "strategy", "evaluated", "best_us", "vs_exhaustive"],
+    );
+    rep.note("vs_exhaustive = strategy_best / exhaustive_best (1.00 = found the optimum)");
+    let gpu = SimGpu::a100();
+    let space = spaces::attention_sim_space();
+    for w in [
+        Workload::llama3_attention(1, 512),
+        Workload::llama3_attention(8, 1024),
+        Workload::llama3_attention(64, 2048),
+    ] {
+        let cg = triton_codegen(gpu.spec.vendor);
+        let mut eval = SimEvaluator::new(gpu.clone(), w, cg);
+        let exhaustive = autotuner::tune(&space, &w, &mut eval, &Strategy::Exhaustive, 0).unwrap();
+        for strat in [
+            Strategy::Exhaustive,
+            Strategy::Random { budget: 50 },
+            Strategy::Random { budget: 150 },
+            Strategy::HillClimb { restarts: 4, budget: 150 },
+            Strategy::Anneal { budget: 150, t0: 2.0, alpha: 0.95 },
+            Strategy::SuccessiveHalving { initial: 64, eta: 2 },
+        ] {
+            let out = autotuner::tune(&space, &w, &mut eval, &strat, 7).unwrap();
+            rep.row(vec![
+                w.key(),
+                strat.label(),
+                out.evaluated.to_string(),
+                format!("{:.1}", out.best_latency_us),
+                format!("{:.3}", out.best_latency_us / exhaustive.best_latency_us),
+            ]);
+        }
+    }
+    rep
+}
+
+/// Model-guided pruning ablation: prior = hand-tuned analytical model,
+/// target = Triton-codegen model (a *different* efficiency surface, so
+/// the transfer is non-trivial).
+pub fn guided_pruning() -> Report {
+    let mut rep = Report::new(
+        "Ablation — model-guided pruning: empirical measurements saved by a simulator prior",
+        &["workload", "top_k", "measured", "vs_exhaustive", "pruning"],
+    );
+    let gpu = SimGpu::a100();
+    let space = spaces::attention_sim_space();
+    for w in [Workload::llama3_attention(1, 512), Workload::llama3_attention(64, 2048)] {
+        let cg = triton_codegen(gpu.spec.vendor);
+        let mut target = SimEvaluator::new(gpu.clone(), w, cg);
+        let exhaustive = autotuner::tune(&space, &w, &mut target, &Strategy::Exhaustive, 0).unwrap();
+        for top_k in [5usize, 10, 20, 50] {
+            let mut prior = SimEvaluator::new(gpu.clone(), w, HAND_TUNED);
+            let out = autotuner::tune_guided(&space, &w, &mut prior, &mut target, top_k).unwrap();
+            rep.row(vec![
+                w.key(),
+                top_k.to_string(),
+                out.evaluated.to_string(),
+                format!("{:.3}", out.best_latency_us / exhaustive.best_latency_us),
+                format!("{:.0}x", exhaustive.evaluated as f64 / out.evaluated.max(1) as f64),
+            ]);
+        }
+    }
+    rep
+}
+
+/// Cache-reuse ablation: evaluations across three simulated deployments.
+pub fn cache_reuse() -> Report {
+    let mut rep = Report::new(
+        "Ablation — déjà-vu cache (Q4.3): evaluations per deployment",
+        &["deployment", "cached", "evaluated", "wall_note"],
+    );
+    rep.note("without the cache, every process start re-pays the full tuning cost (paper §Q3)");
+    let gpu = SimGpu::a100();
+    let w = Workload::llama3_attention(16, 1024);
+    let space = spaces::attention_sim_space();
+    let mut cache = TuningCache::ephemeral();
+    for deployment in 1..=3 {
+        let cg = triton_codegen(gpu.spec.vendor);
+        let mut eval = SimEvaluator::new(gpu.clone(), w, cg);
+        let out =
+            autotuner::tune_cached(&mut cache, &space, &w, &mut eval, &Strategy::Exhaustive, 0)
+                .unwrap();
+        rep.row(vec![
+            format!("run{deployment}"),
+            out.from_cache.to_string(),
+            out.evaluated.to_string(),
+            if out.from_cache { "instant".into() } else { format!("{:.3}s", out.wall_seconds) },
+        ]);
+    }
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategies_table_is_complete() {
+        let rep = search_strategies();
+        assert_eq!(rep.rows.len(), 3 * 6);
+        // Exhaustive rows must show ratio 1.000.
+        for row in rep.rows.iter().filter(|r| r[1] == "exhaustive") {
+            assert_eq!(row[4], "1.000");
+        }
+    }
+
+    #[test]
+    fn guided_pruning_saves_an_order_of_magnitude() {
+        let rep = guided_pruning();
+        // At top_k=20 the prior should prune >=10x while staying within
+        // 15% of the exhaustive optimum.
+        let k20: Vec<_> = rep.rows.iter().filter(|r| r[1] == "20").collect();
+        assert_eq!(k20.len(), 2);
+        for row in k20 {
+            let quality: f64 = row[3].parse().unwrap();
+            let pruning: f64 = row[4].trim_end_matches('x').parse().unwrap();
+            assert!(quality <= 1.15, "quality {quality}");
+            assert!(pruning >= 10.0, "pruning {pruning}");
+        }
+    }
+
+    #[test]
+    fn cache_reuse_hits_after_first() {
+        let rep = cache_reuse();
+        assert_eq!(rep.rows[0][1], "false");
+        assert_eq!(rep.rows[1][1], "true");
+        assert_eq!(rep.rows[1][2], "0");
+        assert_eq!(rep.rows[2][1], "true");
+    }
+}

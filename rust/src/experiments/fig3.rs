@@ -1,0 +1,121 @@
+//! Fig. 3 — RMS-norm relative performance as cumulative distributions.
+//!
+//! The paper re-runs the Fig. 2 benchmark grid for the RMS layernorm and
+//! summarizes, per platform, the CDF of (SOTA latency / autotuned-Triton
+//! latency).  Readings:
+//!
+//! - **MI250**: the autotuned Triton kernel beats the hipify-cross-
+//!   compiled CUDA kernel by >20 % on average (ratio > 1.2);
+//! - **A100**: Triton reaches 91-98 % in most scenarios but only
+//!   60-90 % on small workloads — a Triton FP16-packing gap, not a
+//!   config-selection problem (§Q1).
+
+use super::{sim_platforms, tune_triton_rms, BATCH_SWEEP, SEQLEN_SWEEP};
+use crate::kernels::baselines::TemplateLibrary;
+use crate::metrics::Cdf;
+use crate::platform::SimGpu;
+use crate::report::Report;
+use crate::workload::Workload;
+
+/// Relative performance samples (sota_us / tuned_us) per platform.
+pub fn relative_perf(gpu: &SimGpu) -> Vec<(Workload, f64)> {
+    let cuda = TemplateLibrary::vllm_cuda_rms();
+    let mut out = Vec::new();
+    for &seq in &SEQLEN_SWEEP {
+        for &batch in &BATCH_SWEEP {
+            let w = Workload::llama3_rms(batch, seq);
+            let Ok((cuda_us, _)) = cuda.latency_us(gpu, &w) else { continue };
+            let Some((tuned_us, _)) = tune_triton_rms(gpu, &w) else { continue };
+            out.push((w, cuda_us / tuned_us));
+        }
+    }
+    out
+}
+
+/// Fig. 3 report: CDF quantiles of relative performance per platform.
+pub fn rms_cdf() -> Report {
+    let mut rep = Report::new(
+        "Fig.3 RMS norm: autotuned Triton vs SOTA CUDA (CDF of relative performance)",
+        &["platform", "baseline", "points", "p10", "p25", "p50", "p75", "p90", "mean"],
+    );
+    rep.note("relative performance = SOTA_latency / Triton_latency (>1: Triton faster)");
+    rep.note("MI250 baseline is the hipify-cross-compiled CUDA kernel, as in vLLM practice");
+    for (pid, gpu) in sim_platforms() {
+        let samples: Vec<f64> = relative_perf(&gpu).into_iter().map(|(_, r)| r).collect();
+        let mean = samples.iter().sum::<f64>() / samples.len().max(1) as f64;
+        let cdf = Cdf::new(samples.clone());
+        let baseline = match gpu.spec.vendor {
+            crate::platform::Vendor::Nvidia => "layernorm_kernels.cu",
+            crate::platform::Vendor::Amd => "layernorm_kernels.cu (hipify)",
+        };
+        rep.row(vec![
+            pid.name().into(),
+            baseline.into(),
+            cdf.len().to_string(),
+            format!("{:.2}", cdf.quantile(0.10)),
+            format!("{:.2}", cdf.quantile(0.25)),
+            format!("{:.2}", cdf.quantile(0.50)),
+            format!("{:.2}", cdf.quantile(0.75)),
+            format!("{:.2}", cdf.quantile(0.90)),
+            format!("{mean:.2}"),
+        ]);
+    }
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn triton_beats_hipify_on_mi250_by_20pct() {
+        // Paper: "consistently outperforms ... on MI250 by more than
+        // 20% on average".
+        let samples: Vec<f64> = relative_perf(&SimGpu::mi250()).into_iter().map(|(_, r)| r).collect();
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        assert!(mean > 1.2, "MI250 mean relative perf {mean:.2}");
+    }
+
+    #[test]
+    fn a100_triton_stays_behind_but_close() {
+        // Paper: 91-98% typical on A100 (ratio ~ 1/0.95), small
+        // workloads 60-90%.
+        let samples = relative_perf(&SimGpu::a100());
+        let typical: Vec<f64> = samples
+            .iter()
+            .filter(|(w, _)| matches!(w, Workload::RmsNorm { n_rows, .. } if *n_rows >= 4096))
+            .map(|(_, r)| *r)
+            .collect();
+        let gm = crate::metrics::geomean(&typical);
+        assert!(
+            (0.85..1.05).contains(&gm),
+            "A100 typical relative perf {gm:.2} (triton should be close behind)"
+        );
+    }
+
+    #[test]
+    fn small_workloads_hurt_triton_most_on_a100() {
+        let samples = relative_perf(&SimGpu::a100());
+        let small: Vec<f64> = samples
+            .iter()
+            .filter(|(w, _)| matches!(w, Workload::RmsNorm { n_rows, .. } if *n_rows <= 1024))
+            .map(|(_, r)| *r)
+            .collect();
+        let large: Vec<f64> = samples
+            .iter()
+            .filter(|(w, _)| matches!(w, Workload::RmsNorm { n_rows, .. } if *n_rows >= 32768))
+            .map(|(_, r)| *r)
+            .collect();
+        assert!(
+            crate::metrics::geomean(&small) < crate::metrics::geomean(&large),
+            "small workloads should be Triton's weak spot on A100"
+        );
+    }
+
+    #[test]
+    fn report_has_both_platforms() {
+        let rep = rms_cdf();
+        assert_eq!(rep.rows.len(), 2);
+        assert!(rep.rows[1][1].contains("hipify"));
+    }
+}

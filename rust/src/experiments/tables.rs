@@ -1,0 +1,151 @@
+//! Table I (implementation inventory) and Table II (autotuning usage in
+//! LLM frameworks).
+//!
+//! Table I pairs the paper's LoC ledger with the *measured* LoC of this
+//! repository's counterparts (the Pallas kernels), substantiating the
+//! "70x code-size reduction" headline on our own artifact.
+//!
+//! Table II reproduces the paper's survey of Triton-kernel autotuning in
+//! popular frameworks, and appends the same metric computed over this
+//! repository (every kernel is autotuned here, by construction).
+
+use crate::kernels::baselines::ImplId;
+use crate::report::Report;
+use crate::runtime::Manifest;
+
+/// Count non-empty, non-comment lines of one of our kernel sources.
+pub fn our_kernel_loc(file: &str) -> Option<usize> {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let path = root.join("python/compile/kernels").join(file);
+    let text = std::fs::read_to_string(path).ok()?;
+    Some(count_loc(&text))
+}
+
+/// LoC counting rule used for the table: non-empty lines that are not
+/// pure comments (matching cloc's default closely enough for a ledger).
+pub fn count_loc(text: &str) -> usize {
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#') && !l.starts_with("//"))
+        .count()
+}
+
+/// Table I: investigated kernel implementations.
+pub fn table1() -> Report {
+    let mut rep = Report::new(
+        "Table I — investigated LLM kernel implementations",
+        &["kernel", "implementation", "LoC", "target vendor", "source"],
+    );
+    let rows: Vec<(&str, ImplId, &str, &str)> = vec![
+        ("attention", ImplId::FlashAttn, "NVIDIA", "github.com/Dao-AILab/flash-attention"),
+        ("attention", ImplId::RocmFlashAttn, "AMD", "github.com/ROCm/flash-attention"),
+        ("attention", ImplId::PyTorchNative, "NVIDIA / AMD", "pytorch functional.py"),
+        ("attention", ImplId::TritonManual, "NVIDIA / AMD", "AMD Triton kernels team"),
+        ("attention", ImplId::TritonAutotuned, "NVIDIA / AMD", "ibm.biz/vllm-ibm-triton-lib (paper)"),
+        ("RMS", ImplId::VllmCudaRms, "NVIDIA (& AMD via hipify)", "github.com/vllm-project/vllm"),
+        ("RMS", ImplId::TritonRmsAutotuned, "AMD / NVIDIA", "ibm.biz/vllm-ibm-triton-lib (paper)"),
+    ];
+    for (kernel, id, vendor, src) in rows {
+        rep.row(vec![
+            kernel.into(),
+            id.label().into(),
+            id.loc().to_string(),
+            vendor.into(),
+            src.into(),
+        ]);
+    }
+    // Our own counterparts, counted from the working tree.
+    for (kernel, file) in [
+        ("attention", "flash_attention.py"),
+        ("RMS", "rms_norm.py"),
+        ("vector add", "vector_add.py"),
+    ] {
+        if let Some(loc) = our_kernel_loc(file) {
+            rep.row(vec![
+                kernel.into(),
+                format!("Pallas w/ autotuning ({file})"),
+                loc.to_string(),
+                "any PJRT".into(),
+                "this repository".into(),
+            ]);
+        }
+    }
+    rep.note(format!(
+        "code-size reduction, paper: flash_attn/TritonAutotuned = {:.0}x",
+        ImplId::FlashAttn.loc() as f64 / ImplId::TritonAutotuned.loc() as f64
+    ));
+    rep
+}
+
+/// Table II: usage of autotuning in popular LLM frameworks.
+pub fn table2() -> Report {
+    let mut rep = Report::new(
+        "Table II — usage of autotuning in popular LLM frameworks",
+        &["framework", "triton kernels", "kernels w/ autotuning", "source"],
+    );
+    // The paper's survey (static data).
+    for (fw, kernels, tuned, src) in [
+        ("vLLM", 57, 7, "github.com/vllm-project/vllm"),
+        ("pytorch-labs/applied-ai", 61, 9, "github.com/pytorch-labs/applied-ai"),
+        ("sglang", 13, 0, "github.com/sgl-project/sglang"),
+    ] {
+        rep.row(vec![fw.into(), kernels.to_string(), tuned.to_string(), src.into()]);
+    }
+    // The same metric over this repository, measured from the manifest:
+    // every kernel family with >1 lowered configuration is autotuned.
+    if let Ok(m) = Manifest::load_default() {
+        let kernels = ["attention", "rms_norm", "vector_add"];
+        let tuned = kernels
+            .iter()
+            .filter(|k| {
+                m.workload_buckets(k)
+                    .iter()
+                    .any(|w| m.candidates_for(w).len() > 1)
+            })
+            .count();
+        rep.row(vec![
+            "portatune (this repo)".into(),
+            kernels.len().to_string(),
+            tuned.to_string(),
+            "this repository".into(),
+        ]);
+    }
+    rep.note("paper: only a fraction of Triton kernels in production frameworks use autotuning");
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loc_counter_ignores_comments_and_blanks() {
+        assert_eq!(count_loc("a = 1\n\n# comment\n  // c\nb = 2\n"), 2);
+    }
+
+    #[test]
+    fn our_kernels_are_paper_small() {
+        // Table I: the whole point — kernels in the ~100-200 LoC class
+        // vs the 50-70k LoC template libraries.
+        let fa = our_kernel_loc("flash_attention.py").expect("kernel file exists");
+        assert!(fa < 250, "flash_attention.py has {fa} LoC");
+        let ratio = ImplId::FlashAttn.loc() as f64 / fa as f64;
+        assert!(ratio > 250.0, "reduction {ratio:.0}x");
+        let rms = our_kernel_loc("rms_norm.py").expect("kernel file exists");
+        assert!(rms < 150, "rms_norm.py has {rms} LoC");
+    }
+
+    #[test]
+    fn table1_contains_paper_ledger() {
+        let rep = table1();
+        assert!(rep.rows.iter().any(|r| r[1] == "flash_attn" && r[2] == "69197"));
+        assert!(rep.rows.iter().any(|r| r[1].contains("Pallas")));
+    }
+
+    #[test]
+    fn table2_has_survey_and_us() {
+        let rep = table2();
+        assert!(rep.rows.len() >= 3);
+        assert!(rep.rows.iter().any(|r| r[0] == "sglang" && r[2] == "0"));
+    }
+}

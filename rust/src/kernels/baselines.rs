@@ -1,0 +1,395 @@
+//! Baseline implementation models: template libraries, native fallback,
+//! hipify cross-compilation, manual Triton.
+//!
+//! The paper's Table I inventory, reproduced as *models* (DESIGN.md §2):
+//!
+//! | implementation | here |
+//! |---|---|
+//! | `flash_attn` (69 197 LoC, NVIDIA) | [`TemplateLibrary::flash_attn`] |
+//! | `rocm_flash_attn` (52 489 LoC, AMD) | [`TemplateLibrary::rocm_flash_attn`] |
+//! | PyTorch native (29 LoC) | [`SimGpu::native_attention_latency_us`] |
+//! | Triton manual (1 049 LoC) | [`triton_manual_attention`] |
+//! | Triton w/ autotuning (1 100 LoC, this work) | [`crate::autotuner`] over the sim space |
+//! | vLLM `layernorm_kernels.cu` (159 LoC) | [`TemplateLibrary::vllm_cuda_rms`] |
+//! | RMS Triton w/ autotuning (96 LoC) | [`crate::autotuner`] over the RMS space |
+//!
+//! A template library is a *fixed set of hand-written configurations*
+//! plus a shape-based dispatch heuristic — exactly the structure the
+//! paper describes for `flash_attn`/FlashInfer ("select which handwritten
+//! code fragments to use based on the usage scenario").  Being hand-
+//! written, templates reach the hardware ceilings ([`HAND_TUNED`]) on
+//! their *home* platform; when cross-compiled (hipify) they keep their
+//! configurations but lose codegen quality.
+
+pub use crate::platform::model::{Codegen, HAND_TUNED};
+
+use crate::config::{spaces, Config};
+use crate::platform::model::{InvalidConfig, SimGpu};
+use crate::platform::spec::Vendor;
+use crate::workload::Workload;
+
+/// Codegen quality of Triton's JIT on NVIDIA (paper: competitive but not
+/// always peak; misses FP16 packing on some kernels).
+pub const TRITON_NVIDIA: Codegen = Codegen { compute_eff: 0.92, mem_eff: 0.95, f16_packed: false };
+
+/// Triton on ROCm: slightly less mature backend (paper: fewer valid
+/// configs, more compiler gaps on AMD).
+pub const TRITON_AMD: Codegen = Codegen { compute_eff: 0.90, mem_eff: 0.93, f16_packed: false };
+
+/// rocm_flash_attn: the manual port lags the CUDA original (the paper's
+/// Fig. 1c: >40 % of the library had to be rewritten, and CDNA2 code
+/// generation matured much later than sm80) — this is why the paper's
+/// Fig. 2b shows autotuned Triton *beating* it across wide regimes.
+pub const ROCM_HAND: Codegen = Codegen { compute_eff: 0.75, mem_eff: 0.88, f16_packed: true };
+
+/// hipify cross-compilation: the source still assumes 32-wide warps,
+/// NVIDIA smem banking and cp.async idioms, so it leaves a lot of the
+/// CDNA2 machine on the table (paper Fig 3: Triton beats it by >20 %).
+pub const HIPIFY: Codegen = Codegen { compute_eff: 0.82, mem_eff: 0.72, f16_packed: true };
+
+/// Triton codegen quality for a vendor.
+pub fn triton_codegen(vendor: Vendor) -> Codegen {
+    match vendor {
+        Vendor::Nvidia => TRITON_NVIDIA,
+        Vendor::Amd => TRITON_AMD,
+    }
+}
+
+/// Implementation identifiers used by experiments and reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ImplId {
+    FlashAttn,
+    RocmFlashAttn,
+    PyTorchNative,
+    TritonManual,
+    TritonAutotuned,
+    VllmCudaRms,
+    HipifyRms,
+    TritonRmsAutotuned,
+}
+
+impl ImplId {
+    pub fn label(self) -> &'static str {
+        match self {
+            ImplId::FlashAttn => "flash_attn",
+            ImplId::RocmFlashAttn => "rocm_flash_attn",
+            ImplId::PyTorchNative => "pytorch native",
+            ImplId::TritonManual => "Triton manual",
+            ImplId::TritonAutotuned => "Triton w/ autotuning",
+            ImplId::VllmCudaRms => "layernorm_kernels.cu",
+            ImplId::HipifyRms => "layernorm_kernels.cu (hipify)",
+            ImplId::TritonRmsAutotuned => "Triton RMS w/ autotuning",
+        }
+    }
+
+    /// Lines of code from the paper's Table I.
+    pub fn loc(self) -> usize {
+        match self {
+            ImplId::FlashAttn => 69_197,
+            ImplId::RocmFlashAttn => 52_489,
+            ImplId::PyTorchNative => 29,
+            ImplId::TritonManual => 1_049,
+            ImplId::TritonAutotuned => 1_100,
+            ImplId::VllmCudaRms | ImplId::HipifyRms => 159,
+            ImplId::TritonRmsAutotuned => 96,
+        }
+    }
+}
+
+/// A vendor template library: a fixed template set + dispatch heuristic.
+#[derive(Debug, Clone)]
+pub struct TemplateLibrary {
+    pub name: &'static str,
+    pub home_vendor: Vendor,
+    pub templates: Vec<Config>,
+    pub codegen_home: Codegen,
+    /// Codegen quality when cross-compiled to the other vendor
+    /// (None = the library simply does not build there, like flash_attn
+    /// pre-ROCm-port).
+    pub codegen_cross: Option<Codegen>,
+}
+
+impl TemplateLibrary {
+    /// `flash_attn`-style NVIDIA library: 30 templates, Ampere idioms
+    /// (cp.async pipelining, 4-8 warps, large tiles).
+    pub fn flash_attn() -> Self {
+        let mut templates = Vec::new();
+        for &bm in &[64i64, 128] {
+            for &bn in &[32i64, 64, 128] {
+                for &warps in &[4i64, 8] {
+                    for &stages in &[2i64, 3] {
+                        templates.push(Config::new(&[
+                            ("BLOCK_M", bm),
+                            ("BLOCK_N", bn),
+                            ("num_warps", warps),
+                            ("num_stages", stages),
+                            ("waves_per_eu", 0),
+                        ]));
+                    }
+                }
+            }
+        }
+        // A couple of wide-N specializations (hdim-packed variants).
+        for &warps in &[4i64, 8] {
+            templates.push(Config::new(&[
+                ("BLOCK_M", 128),
+                ("BLOCK_N", 256),
+                ("num_warps", warps),
+                ("num_stages", 2),
+                ("waves_per_eu", 0),
+            ]));
+        }
+        debug_assert_eq!(templates.len(), 26);
+        TemplateLibrary {
+            name: "flash_attn",
+            home_vendor: Vendor::Nvidia,
+            templates,
+            codegen_home: HAND_TUNED,
+            codegen_cross: None, // does not build on ROCm
+        }
+    }
+
+    /// `rocm_flash_attn`: the manual port — smaller tiles (64 KiB LDS),
+    /// no multi-stage pipelining (no async copy), wavefront-64 warps, and
+    /// a much narrower template set than the CUDA original (the port only
+    /// covered the shapes its authors needed).
+    pub fn rocm_flash_attn() -> Self {
+        let mut templates = Vec::new();
+        for &bn in &[16i64, 32, 64] {
+            for &warps in &[2i64, 4] {
+                for &wpe in &[0i64, 2] {
+                    templates.push(Config::new(&[
+                        ("BLOCK_M", 128),
+                        ("BLOCK_N", bn),
+                        ("num_warps", warps),
+                        ("num_stages", 1),
+                        ("waves_per_eu", wpe),
+                    ]));
+                }
+            }
+        }
+        debug_assert_eq!(templates.len(), 12);
+        TemplateLibrary {
+            name: "rocm_flash_attn",
+            home_vendor: Vendor::Amd,
+            templates,
+            codegen_home: ROCM_HAND,
+            codegen_cross: None,
+        }
+    }
+
+    /// vLLM's CUDA RMS kernel: ONE strategy (block-per-row, up to 1024
+    /// threads, packed half2 loads), hipify-able to ROCm.
+    pub fn vllm_cuda_rms() -> Self {
+        TemplateLibrary {
+            name: "layernorm_kernels.cu",
+            home_vendor: Vendor::Nvidia,
+            templates: vec![Config::new(&[("BLOCK", 1024), ("num_warps", 8), ("VEC", 2)])],
+            codegen_home: HAND_TUNED,
+            codegen_cross: Some(HIPIFY),
+        }
+    }
+
+    /// Codegen quality on a target vendor, if the library runs there.
+    pub fn codegen_on(&self, vendor: Vendor) -> Option<Codegen> {
+        if vendor == self.home_vendor {
+            Some(self.codegen_home)
+        } else {
+            self.codegen_cross
+        }
+    }
+
+    /// The library's dispatch heuristic: among templates *valid on this
+    /// platform*, prefer the largest tile (the classic "maximize MXU
+    /// utilization" rule real libraries encode), breaking ties toward
+    /// deeper pipelines on async-copy hardware.
+    ///
+    /// This rule is what the paper's §II-A critique predicts: point-wise
+    /// excellent on the shapes the library was developed for, oblivious
+    /// to occupancy collapse on small/odd workloads.
+    pub fn dispatch(&self, gpu: &SimGpu, w: &Workload) -> Option<Config> {
+        let valid = |c: &&Config| match w {
+            Workload::Attention { .. } => gpu.validate_attention(c, w).is_ok(),
+            Workload::RmsNorm { .. } => gpu.validate_rms(c, w).is_ok(),
+            Workload::VectorAdd { .. } => true,
+        };
+        let score = |c: &Config| -> i64 {
+            match w {
+                Workload::Attention { seq_len, .. } => {
+                    let bm = c.req("BLOCK_M");
+                    // One shape-awareness rule real dispatch tables have:
+                    // don't pick a tile taller than the sequence.
+                    let bm_eff = bm.min(*seq_len as i64);
+                    let area = bm_eff * c.req("BLOCK_N");
+                    let stages = if gpu.spec.has_async_copy { c.req("num_stages") } else { 0 };
+                    area * 8 + stages
+                }
+                _ => c.req("BLOCK"),
+            }
+        };
+        self.templates
+            .iter()
+            .filter(valid)
+            .max_by_key(|c| score(c))
+            .cloned()
+    }
+
+    /// Latency of the dispatched template on a platform, or `Err` when
+    /// the library cannot serve the workload there at all.
+    pub fn latency_us(&self, gpu: &SimGpu, w: &Workload) -> Result<(f64, Config), InvalidConfig> {
+        let cg = self.codegen_on(gpu.spec.vendor).ok_or_else(|| InvalidConfig {
+            reason: format!("{} does not build for {}", self.name, gpu.spec.vendor.name()),
+        })?;
+        let cfg = self.dispatch(gpu, w).ok_or_else(|| InvalidConfig {
+            reason: format!("{}: no valid template for {}", self.name, w.key()),
+        })?;
+        let us = gpu.latency_us(&cfg, w, &cg)?;
+        Ok((us, cfg))
+    }
+}
+
+/// The platform's vendor-SOTA attention library (paper Fig 1/2 baseline).
+pub fn sota_attention_library(vendor: Vendor) -> TemplateLibrary {
+    match vendor {
+        Vendor::Nvidia => TemplateLibrary::flash_attn(),
+        Vendor::Amd => TemplateLibrary::rocm_flash_attn(),
+    }
+}
+
+/// "Triton manual": the open-source AMD Triton kernel with hand-picked
+/// configurations.  The paper evaluates five hyperparameters equally
+/// sampled across the autotuning space and reports the spread (Fig 1
+/// error bars).  Returns (best, mean, worst) latency.
+pub fn triton_manual_attention(gpu: &SimGpu, w: &Workload) -> Option<(f64, f64, f64)> {
+    let space = spaces::attention_sim_space();
+    let cg = triton_codegen(gpu.spec.vendor);
+    let samples: Vec<f64> = space
+        .equally_spaced(w, 5)
+        .iter()
+        .filter_map(|c| gpu.latency_us(c, w, &cg).ok())
+        .collect();
+    if samples.is_empty() {
+        return None;
+    }
+    let best = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let worst = samples.iter().cloned().fold(0.0f64, f64::max);
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    Some((best, mean, worst))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_w() -> Workload {
+        Workload::llama3_attention(64, 1024)
+    }
+
+    #[test]
+    fn flash_attn_has_about_30_templates() {
+        // Paper §Q2: "all 30 templates applicable to our scenario".
+        let lib = TemplateLibrary::flash_attn();
+        assert!((25..=35).contains(&lib.templates.len()));
+    }
+
+    #[test]
+    fn flash_attn_does_not_build_on_amd() {
+        let lib = TemplateLibrary::flash_attn();
+        assert!(lib.codegen_on(Vendor::Amd).is_none());
+        assert!(lib.latency_us(&SimGpu::mi250(), &paper_w()).is_err());
+    }
+
+    #[test]
+    fn rocm_templates_fit_lds() {
+        // Every rocm_flash_attn template must be valid on its home GPU
+        // for the paper workload — it was developed there.
+        let lib = TemplateLibrary::rocm_flash_attn();
+        let gpu = SimGpu::mi250();
+        let valid = lib
+            .templates
+            .iter()
+            .filter(|c| gpu.validate_attention(c, &paper_w()).is_ok())
+            .count();
+        assert!(valid >= lib.templates.len() / 2, "{valid} valid");
+        assert!(lib.dispatch(&gpu, &paper_w()).is_some());
+    }
+
+    #[test]
+    fn dispatch_prefers_big_tiles() {
+        let lib = TemplateLibrary::flash_attn();
+        let cfg = lib.dispatch(&SimGpu::a100(), &paper_w()).unwrap();
+        assert!(cfg.req("BLOCK_M") >= 128);
+    }
+
+    #[test]
+    fn sota_lib_is_fast_at_home() {
+        // The vendor library should be close to the platform's best
+        // achievable flash attention on the big paper workload.
+        let w = paper_w();
+        for (gpu, lib) in [
+            (SimGpu::a100(), TemplateLibrary::flash_attn()),
+            (SimGpu::mi250(), TemplateLibrary::rocm_flash_attn()),
+        ] {
+            let (t, _) = lib.latency_us(&gpu, &w).unwrap();
+            let best_possible = spaces::attention_sim_space()
+                .enumerate(&w)
+                .iter()
+                .filter_map(|c| gpu.latency_us(c, &w, &HAND_TUNED).ok())
+                .fold(f64::INFINITY, f64::min);
+            assert!(
+                t <= best_possible * 1.6,
+                "{}: template {t:.0}us vs best possible {best_possible:.0}us",
+                gpu.spec.name
+            );
+        }
+    }
+
+    #[test]
+    fn hipify_rms_loses_to_triton_on_mi250() {
+        // Paper Fig 3: autotuned Triton beats hipify'd CUDA by >20 % on
+        // MI250 (averaged; here spot-checked on the paper workload).
+        let gpu = SimGpu::mi250();
+        let w = Workload::llama3_rms(64, 1024);
+        let (cuda_us, _) = TemplateLibrary::vllm_cuda_rms().latency_us(&gpu, &w).unwrap();
+        let best_triton = spaces::rms_sim_space()
+            .enumerate(&w)
+            .iter()
+            .filter_map(|c| gpu.latency_us(c, &w, &TRITON_AMD).ok())
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            cuda_us / best_triton > 1.15,
+            "hipify {cuda_us:.1}us vs triton {best_triton:.1}us"
+        );
+    }
+
+    #[test]
+    fn cuda_rms_wins_at_home_small() {
+        // Paper: on A100 the CUDA kernel keeps a small edge (Triton at
+        // 91-98 %, down to 60-90 % on small workloads).
+        let gpu = SimGpu::a100();
+        let w = Workload::llama3_rms(1, 128); // small workload
+        let (cuda_us, _) = TemplateLibrary::vllm_cuda_rms().latency_us(&gpu, &w).unwrap();
+        let best_triton = spaces::rms_sim_space()
+            .enumerate(&w)
+            .iter()
+            .filter_map(|c| gpu.latency_us(c, &w, &TRITON_NVIDIA).ok())
+            .fold(f64::INFINITY, f64::min);
+        assert!(cuda_us < best_triton, "cuda {cuda_us:.1} vs triton {best_triton:.1}");
+    }
+
+    #[test]
+    fn triton_manual_spread_is_wide() {
+        // Fig 1 error bars: manual config choice has huge variance.
+        let (best, _mean, worst) = triton_manual_attention(&SimGpu::a100(), &paper_w()).unwrap();
+        assert!(worst / best > 1.5, "spread {:.2}", worst / best);
+    }
+
+    #[test]
+    fn loc_ledger_matches_paper() {
+        assert_eq!(ImplId::FlashAttn.loc(), 69_197);
+        assert_eq!(ImplId::PyTorchNative.loc(), 29);
+        // 70x code-size reduction headline:
+        let ratio = ImplId::FlashAttn.loc() as f64 / ImplId::TritonAutotuned.loc() as f64;
+        assert!(ratio > 60.0 && ratio < 70.0);
+    }
+}

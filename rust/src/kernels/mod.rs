@@ -1,0 +1,45 @@
+//! Kernel implementations under study (the paper's Table I).
+//!
+//! A *kernel* (attention, RMS norm, vector add) can be provided by
+//! several *implementations*: vendor template libraries (`flash_attn`,
+//! `rocm_flash_attn`, vLLM's CUDA RMS kernel), the framework-native
+//! fallback (materialized PyTorch ops), manually-configured Triton, and
+//! the autotuned Triton kernel this work argues for.  [`baselines`]
+//! models each of them on the simulated platforms; the Pallas/PJRT path
+//! is the *real* counterpart of "Triton w/ autotuning".
+
+pub mod baselines;
+
+pub use baselines::{Codegen, ImplId, TemplateLibrary};
+
+/// The investigated kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    Attention,
+    RmsNorm,
+    VectorAdd,
+}
+
+impl KernelKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Attention => "attention",
+            KernelKind::RmsNorm => "rms_norm",
+            KernelKind::VectorAdd => "vector_add",
+        }
+    }
+
+    pub fn of(w: &crate::workload::Workload) -> Self {
+        match w {
+            crate::workload::Workload::Attention { .. } => KernelKind::Attention,
+            crate::workload::Workload::RmsNorm { .. } => KernelKind::RmsNorm,
+            crate::workload::Workload::VectorAdd { .. } => KernelKind::VectorAdd,
+        }
+    }
+}
+
+impl std::fmt::Display for KernelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}

@@ -1,0 +1,332 @@
+//! portatune CLI — leader entrypoint for the Layer-3 coordinator.
+//!
+//! ```text
+//! portatune bench <fig1|fig2|fig3|fig4|fig5|tables|all> [--out-dir D]
+//! portatune tune  [--kernel K] [--platform P] [--batch N] [--seq N]
+//!                 [--strategy S] [--budget N] [--cache F] [--seed N]
+//! portatune serve [--requests N] [--seed N] [--no-tuning]
+//! portatune analyze <kernels|hlo> [path]
+//! portatune cache <show|clear> [--file F]
+//! ```
+
+use anyhow::{anyhow, Result};
+
+use portatune::autotuner::{self, PjrtEvaluator, SimEvaluator, Strategy};
+use portatune::cache::TuningCache;
+use portatune::codegen::hlo;
+use portatune::config::spaces;
+use portatune::experiments;
+use portatune::kernels::baselines::triton_codegen;
+use portatune::platform::PlatformId;
+use portatune::report::Report;
+use portatune::runtime::{Engine, Manifest};
+use portatune::serving::{router::synth_trace, Router, ServerConfig};
+use portatune::util::cli::Args;
+use portatune::workload::{DType, Workload};
+
+const USAGE: &str = "\
+portatune — performance-portable LLM kernels via autotuning
+
+USAGE:
+  portatune bench <fig1|fig2|fig3|fig4|fig5|tables|ablation|hopper|all> [--out-dir D]
+  portatune tune  [--kernel attention|rms_norm|vector_add]
+                  [--platform sim-a100|sim-mi250|cpu-pjrt]
+                  [--batch N] [--seq N]
+                  [--strategy exhaustive|random|hillclimb|anneal|sha]
+                  [--budget N] [--cache FILE] [--seed N] [--space FILE.json]
+  portatune serve [--requests N] [--seed N] [--no-tuning]
+  portatune analyze kernels
+  portatune analyze hlo <path>
+  portatune cache <show|clear> [--file F]
+";
+
+fn parse_strategy(name: &str, budget: usize) -> Result<Strategy> {
+    Ok(match name {
+        "exhaustive" => Strategy::Exhaustive,
+        "random" => Strategy::Random { budget },
+        "hillclimb" => Strategy::HillClimb { restarts: 4, budget },
+        "anneal" => Strategy::Anneal { budget, t0: 2.0, alpha: 0.95 },
+        "sha" => Strategy::SuccessiveHalving { initial: budget.max(8), eta: 2 },
+        other => return Err(anyhow!("unknown strategy {other}")),
+    })
+}
+
+fn workload_for(kernel: &str, batch: usize, seq: usize) -> Result<Workload> {
+    Ok(match kernel {
+        "attention" => Workload::llama3_attention(batch, seq),
+        "rms_norm" => Workload::llama3_rms(batch, seq),
+        "vector_add" => Workload::VectorAdd { n: batch * seq, dtype: DType::F32 },
+        other => return Err(anyhow!("unknown kernel {other}")),
+    })
+}
+
+fn print_reports(reports: Vec<(String, Report)>, out_dir: Option<&str>) -> Result<()> {
+    for (slug, rep) in reports {
+        println!("{}", rep.to_markdown());
+        if let Some(dir) = out_dir {
+            rep.save_tsv(dir, &slug)?;
+        }
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    use experiments::*;
+    use portatune::platform::SimGpu;
+    let which = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .ok_or_else(|| anyhow!("bench needs an experiment name\n{USAGE}"))?;
+    let reports: Vec<(String, Report)> = match which {
+        "all" => run_all(),
+        "fig1" => vec![
+            ("fig1a".into(), fig1::throughput(&SimGpu::a100())),
+            ("fig1b".into(), fig1::throughput(&SimGpu::mi250())),
+            ("fig1c".into(), fig1::porting_effort()),
+        ],
+        "fig2" => vec![
+            ("fig2a".into(), fig2::latency_sweep(&SimGpu::a100())),
+            ("fig2b".into(), fig2::latency_sweep(&SimGpu::mi250())),
+            ("fig2_summary".into(), fig2::summary()),
+        ],
+        "fig3" => vec![("fig3".into(), fig3::rms_cdf())],
+        "fig4" => vec![("fig4".into(), fig4::cross_gpu_reuse())],
+        "fig5" => vec![
+            ("fig5a".into(), fig5::triton_sweep()),
+            ("fig5b".into(), fig5::cuda_templates()),
+            ("fig5_real_hlo".into(), fig5::real_hlo_corpus()),
+        ],
+        "hopper" => vec![("ext_hopper_day0".into(), hopper::day0_report())],
+        "ablation" => vec![
+            ("ablation_search".into(), ablation::search_strategies()),
+            ("ablation_guided".into(), ablation::guided_pruning()),
+            ("ablation_cache".into(), ablation::cache_reuse()),
+        ],
+        "tables" | "table1" | "table2" => vec![
+            ("table1".into(), tables::table1()),
+            ("table2".into(), tables::table2()),
+        ],
+        other => return Err(anyhow!("unknown experiment {other}")),
+    };
+    print_reports(reports, args.flag("out-dir"))
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    let kernel = args.flag_or("kernel", "attention");
+    let platform: PlatformId = args.flag_or("platform", "sim-a100").parse().map_err(|e| anyhow!("{e}"))?;
+    let batch = args.flag_parse("batch", 8usize)?;
+    let seq = args.flag_parse("seq", 1024usize)?;
+    let budget = args.flag_parse("budget", 200usize)?;
+    let seed = args.flag_parse("seed", 0u64)?;
+    let strat = parse_strategy(&args.flag_or("strategy", "exhaustive"), budget)?;
+    let w = workload_for(&kernel, batch, seq)?;
+    let mut cache = match args.flag("cache") {
+        Some(p) => TuningCache::open(p)?,
+        None => TuningCache::ephemeral(),
+    };
+
+    let outcome = match platform {
+        PlatformId::CpuPjrt => {
+            let space = spaces::aot_space_for(&w);
+            let engine = Engine::cpu()?;
+            let manifest = Manifest::load_default()?;
+            let mut eval = PjrtEvaluator::new(&engine, &manifest, w, 1, 5)?;
+            autotuner::tune_cached(&mut cache, &space, &w, &mut eval, &strat, seed)
+        }
+        sim => {
+            let gpu = sim.sim().unwrap();
+            // Q4.1 in practice: a JSON space description may replace the
+            // built-in space (`--space spaces/attention_sim.json`).
+            let space = match args.flag("space") {
+                Some(path) => portatune::config::dsl::space_from_file(path)?,
+                None => spaces::sim_space_for(&w),
+            };
+            let cg = triton_codegen(gpu.spec.vendor);
+            let mut eval = SimEvaluator::new(gpu, w, cg);
+            autotuner::tune_cached(&mut cache, &space, &w, &mut eval, &strat, seed)
+        }
+    }
+    .ok_or_else(|| anyhow!("no valid configuration found"))?;
+
+    println!("workload      : {}", w.key());
+    println!("platform      : {}", platform.name());
+    println!("strategy      : {}", strat.label());
+    println!("best config   : {}", outcome.best);
+    println!("best latency  : {:.2} us", outcome.best_latency_us);
+    println!("evaluated     : {} ({} invalid)", outcome.evaluated, outcome.invalid);
+    if let Some(s) = outcome.spread() {
+        println!("config spread : {s:.1}x (paper: ~20x for complex kernels)");
+    }
+    println!("from cache    : {}", outcome.from_cache);
+    println!("wall time     : {:.2} s", outcome.wall_seconds);
+    cache.save()?;
+    if args.flag("cache").is_some() {
+        println!("cache         : {} entries @ {}", cache.len(), cache.path().display());
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let requests = args.flag_parse("requests", 64usize)?;
+    let seed = args.flag_parse("seed", 42u64)?;
+    let no_tuning = args.has("no-tuning");
+    let manifest = Manifest::load_default()?;
+    let cfg = ServerConfig { idle_tuning: !no_tuning, ..Default::default() };
+    println!("starting router over {} model shapes ...", manifest.model_artifacts().len());
+    let router = Router::new(manifest, &cfg)?;
+    let max_tokens = router.policy().seq_buckets.last().copied().unwrap_or(128);
+    let trace = synth_trace(requests, max_tokens, seed);
+
+    println!("\n== phase 1: cold serve ({} requests) ==", trace.len());
+    let before = router.serve_trace(trace.clone())?;
+    print_serve("cold", &before);
+
+    if !no_tuning {
+        println!("\n== background tuning (idle-time, Q4.4) ==");
+        router.finish_tuning()?;
+        let stats = router.executor().stats()?;
+        println!("variants measured: {}", stats.variants_measured);
+        for s in &stats.swaps {
+            println!("  swap b{}s{}: {} -> {} ({:.2}x)", s.shape.0, s.shape.1, s.from, s.to, s.gain);
+        }
+
+        println!("\n== phase 2: tuned serve ==");
+        let after = router.serve_trace(trace)?;
+        print_serve("tuned", &after);
+        println!("\nexec p50 improvement: {:.2}x", before.exec_p50_us / after.exec_p50_us);
+    }
+    Ok(())
+}
+
+fn print_serve(tag: &str, r: &portatune::serving::ServeReport) {
+    println!(
+        "[{tag}] served {} req ({} rejected) in {:.2}s  | {:.1} req/s  {:.0} tok/s",
+        r.requests, r.rejected, r.wall_seconds, r.throughput_rps, r.tokens_per_second
+    );
+    println!(
+        "[{tag}] latency p50/p95/p99: {:.1}/{:.1}/{:.1} ms   exec p50: {:.1} ms  occupancy {:.2}",
+        r.latency_p50_us / 1e3,
+        r.latency_p95_us / 1e3,
+        r.latency_p99_us / 1e3,
+        r.exec_p50_us / 1e3,
+        r.mean_batch_occupancy
+    );
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let what = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .ok_or_else(|| anyhow!("analyze needs a target\n{USAGE}"))?;
+    match what {
+        "kernels" => {
+            // L1 §Perf report: VMEM footprint + MXU utilization estimate
+            // per AOT attention config (DESIGN.md §8).
+            let manifest = Manifest::load_default()?;
+            let mut rep = Report::new(
+                "L1 Pallas attention configs — VMEM/MXU structure estimates",
+                &["bucket", "config", "vmem_bytes", "vmem_%_of_16MiB", "mxu_tile_util"],
+            );
+            for w in manifest.workload_buckets("attention") {
+                let Workload::Attention { head_dim, .. } = w else { continue };
+                for a in manifest.candidates_for(&w) {
+                    let c = a.config();
+                    let (bq, bk) = (c.req("block_q") as usize, c.req("block_k") as usize);
+                    let vmem = vmem_bytes(bq, bk, head_dim);
+                    // MXU 128x128 systolic: how full are the matmul tiles?
+                    let util = (bq.min(128) * bk.min(128)) as f64 / (128.0 * 128.0);
+                    rep.row(vec![
+                        w.key(),
+                        c.key(),
+                        vmem.to_string(),
+                        format!("{:.1}%", vmem as f64 / (16.0 * 1024.0 * 1024.0) * 100.0),
+                        format!("{util:.2}"),
+                    ]);
+                }
+            }
+            println!("{}", rep.to_markdown());
+        }
+        "hlo" => {
+            let p = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow!("analyze hlo <path>"))?;
+            let stats = hlo::analyze_file(p)?;
+            println!("{p}: {stats:?}");
+        }
+        other => return Err(anyhow!("unknown analysis {other}")),
+    }
+    Ok(())
+}
+
+/// Mirror of python flash_attention.vmem_bytes (f32).
+fn vmem_bytes(block_q: usize, block_k: usize, head_dim: usize) -> usize {
+    let dtb = 4;
+    block_q * head_dim * dtb
+        + 2 * block_k * head_dim * dtb
+        + block_q * block_k * 4
+        + block_q * head_dim * 4
+        + block_q * head_dim * dtb
+}
+
+fn cmd_cache(args: &Args) -> Result<()> {
+    let action = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .ok_or_else(|| anyhow!("cache needs an action\n{USAGE}"))?;
+    let file = args.flag_or("file", "tuning_cache.json");
+    match action {
+        "show" => {
+            let cache = TuningCache::open(&file)?;
+            println!("{} entries in {file}", cache.len());
+            for (k, e) in cache.entries() {
+                println!("  {k}\n    -> {} @ {:.2}us ({} evaluated)", e.config, e.latency_us, e.evaluated);
+            }
+        }
+        "clear" => {
+            let p = std::path::Path::new(&file);
+            if p.exists() {
+                std::fs::remove_file(p)?;
+                println!("removed {file}");
+            }
+        }
+        other => return Err(anyhow!("unknown cache action {other}")),
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "bench" => {
+            let args = Args::parse(rest, &[])?;
+            args.ensure_known(&["out-dir"])?;
+            cmd_bench(&args)
+        }
+        "tune" => {
+            let args = Args::parse(rest, &[])?;
+            args.ensure_known(&["kernel", "platform", "batch", "seq", "strategy", "budget", "cache", "seed", "space"])?;
+            cmd_tune(&args)
+        }
+        "serve" => {
+            let args = Args::parse(rest, &["no-tuning"])?;
+            args.ensure_known(&["requests", "seed", "no-tuning"])?;
+            cmd_serve(&args)
+        }
+        "analyze" => cmd_analyze(&Args::parse(rest, &[])?),
+        "cache" => cmd_cache(&Args::parse(rest, &[])?),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command {other}\n{USAGE}")),
+    }
+}

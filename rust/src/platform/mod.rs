@@ -1,0 +1,87 @@
+//! GPU platform models.
+//!
+//! The paper's testbed is an NVIDIA A100-80GB and an AMD MI250-128GB.
+//! Neither is available here, so — per the substitution rule in
+//! DESIGN.md §2 — we model both devices analytically: occupancy +
+//! roofline + pipeline-efficiency models parameterized by the *real*
+//! architecture sheets ([`spec::A100`], [`spec::MI250`]).
+//!
+//! The cross-platform effects the paper measures are all driven by
+//! architecture-parameter differences that these models capture:
+//!
+//! - **shared memory / LDS capacity** (164 KiB vs 64 KiB) — makes many
+//!   A100-optimal flash-attention configs *invalid* on the MI250 (Fig 4's
+//!   missing bars);
+//! - **warp vs wavefront width** (32 vs 64) and **MMA vs MFMA native tile**
+//!   (16 vs 32) — shifts which block shapes utilize the matrix units;
+//! - **HBM bandwidth and L2 capacity** — moves the compute/memory
+//!   crossover per workload;
+//! - **async-copy pipelining** (cp.async on Ampere, absent on CDNA2) —
+//!   changes the value of `num_stages`.
+//!
+//! [`CpuPjrt`](crate::runtime) is the *real* measured platform: HLO
+//! artifacts executed through the XLA PJRT CPU client.
+
+pub mod model;
+pub mod spec;
+
+pub use model::{InvalidConfig, SimGpu};
+pub use spec::{GpuSpec, Vendor, A100, MI250};
+
+/// Identifier of a tuning platform (simulated or real).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PlatformId {
+    /// Analytical model of the NVIDIA A100-80GB (SXM).
+    SimA100,
+    /// Analytical model of one GCD of the AMD Instinct MI250-128GB.
+    SimMi250,
+    /// Real execution through the XLA PJRT CPU client.
+    CpuPjrt,
+}
+
+impl PlatformId {
+    pub fn name(self) -> &'static str {
+        match self {
+            PlatformId::SimA100 => "sim-a100",
+            PlatformId::SimMi250 => "sim-mi250",
+            PlatformId::CpuPjrt => "cpu-pjrt",
+        }
+    }
+
+    /// Environment fingerprint component for the tuning cache: results
+    /// from one platform must never be served for another.
+    pub fn fingerprint(self) -> String {
+        match self {
+            PlatformId::SimA100 => format!("sim-a100/model-v{}", model::MODEL_VERSION),
+            PlatformId::SimMi250 => format!("sim-mi250/model-v{}", model::MODEL_VERSION),
+            PlatformId::CpuPjrt => format!("cpu-pjrt/{}", std::env::consts::ARCH),
+        }
+    }
+
+    pub fn sim(self) -> Option<SimGpu> {
+        match self {
+            PlatformId::SimA100 => Some(SimGpu::a100()),
+            PlatformId::SimMi250 => Some(SimGpu::mi250()),
+            PlatformId::CpuPjrt => None,
+        }
+    }
+}
+
+impl std::fmt::Display for PlatformId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for PlatformId {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "sim-a100" | "a100" => Ok(PlatformId::SimA100),
+            "sim-mi250" | "mi250" => Ok(PlatformId::SimMi250),
+            "cpu-pjrt" | "cpu" => Ok(PlatformId::CpuPjrt),
+            other => Err(format!("unknown platform {other:?}")),
+        }
+    }
+}

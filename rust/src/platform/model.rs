@@ -1,0 +1,592 @@
+//! Analytical GPU latency models (occupancy + roofline + pipeline).
+//!
+//! One [`SimGpu`] wraps a [`GpuSpec`] and predicts kernel latency for a
+//! (configuration, workload, codegen-quality) triple.  The model is
+//! deliberately *mechanistic* — every term corresponds to a physical
+//! effect, so the cross-platform phenomena the paper reports emerge from
+//! the architecture sheets rather than from curve fitting:
+//!
+//! - configurations can be **invalid** per platform (shared-memory /
+//!   register / thread-count ceilings) — Fig 4's missing bars;
+//! - optimal block shapes differ per platform (MMA-vs-MFMA alignment,
+//!   warp width, smem capacity) — Fig 4's cross-GPU slowdowns;
+//! - small workloads under-fill the device, so big-tile templates lose
+//!   to autotuned small tiles — Fig 2's best-case 2.3x;
+//! - `num_stages` only pays off on hardware with async copies — code
+//!   diversity in Fig 5.
+//!
+//! Nothing here claims absolute-microsecond fidelity to real silicon; the
+//! goal (per DESIGN.md §2) is to preserve *who wins, by roughly what
+//! factor, and where the crossovers fall*.
+
+use super::spec::{GpuSpec, Vendor, A100, H100, MI250};
+use crate::config::Config;
+use crate::workload::Workload;
+
+/// Bumped whenever model constants change: part of the cache fingerprint,
+/// so stale tuning results are never reused across model revisions.
+pub const MODEL_VERSION: u32 = 3;
+
+/// Codegen quality of the software stack that produced the kernel —
+/// how close generated code gets to the hardware ceilings.
+///
+/// These are the only per-implementation knobs; everything else is
+/// architecture. Values are set in [`crate::kernels::baselines`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Codegen {
+    /// Fraction of peak matrix throughput reachable (instruction
+    /// selection, scheduling quality).
+    pub compute_eff: f64,
+    /// Fraction of peak DRAM bandwidth reachable (coalescing quality).
+    pub mem_eff: f64,
+    /// Does the backend emit packed 16-bit loads/math (half2 / v_pk)?
+    /// The paper found Triton missing this on the RMS kernel (§Q1).
+    pub f16_packed: bool,
+}
+
+/// Hand-tuned vendor library quality: the reference point.
+pub const HAND_TUNED: Codegen = Codegen { compute_eff: 1.0, mem_eff: 1.0, f16_packed: true };
+
+/// Why a configuration cannot run on this platform.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InvalidConfig {
+    pub reason: String,
+}
+
+impl std::fmt::Display for InvalidConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "invalid config: {}", self.reason)
+    }
+}
+
+impl std::error::Error for InvalidConfig {}
+
+fn invalid(reason: impl Into<String>) -> InvalidConfig {
+    InvalidConfig { reason: reason.into() }
+}
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+/// An analytically modeled GPU.
+#[derive(Debug, Clone)]
+pub struct SimGpu {
+    pub spec: GpuSpec,
+}
+
+impl SimGpu {
+    pub fn a100() -> Self {
+        SimGpu { spec: A100 }
+    }
+
+    pub fn mi250() -> Self {
+        SimGpu { spec: MI250 }
+    }
+
+    pub fn h100() -> Self {
+        SimGpu { spec: H100 }
+    }
+
+    /// Dispatch on the workload's kernel.
+    pub fn latency_us(&self, cfg: &Config, w: &Workload, cg: &Codegen) -> Result<f64, InvalidConfig> {
+        match w {
+            Workload::Attention { .. } => self.attention_latency_us(cfg, w, cg),
+            Workload::RmsNorm { .. } => self.rms_latency_us(cfg, w, cg),
+            Workload::VectorAdd { .. } => self.vecadd_latency_us(cfg, w, cg),
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Flash attention
+    // -----------------------------------------------------------------
+
+    /// Shared-memory footprint of one flash-attention block:
+    /// the Q tile resides for the block lifetime; K and V panels are
+    /// staged `num_stages` deep for pipelining.
+    fn attn_smem_bytes(&self, block_m: usize, block_n: usize, stages: usize, head_dim: usize, dtb: usize) -> usize {
+        (block_m * head_dim + stages * 2 * block_n * head_dim) * dtb
+    }
+
+    /// Architectural registers per thread for the accumulator + scores
+    /// (f32), the dominant register consumer in flash attention.
+    fn attn_regs_per_thread(&self, block_m: usize, block_n: usize, head_dim: usize, threads: usize) -> usize {
+        let acc_f32_words = block_m * head_dim + block_m * block_n;
+        ceil_div(acc_f32_words, threads) + 32 // +32 fixed overhead (addresses, softmax state)
+    }
+
+    /// Validity of a flash-attention config on this platform.
+    pub fn validate_attention(&self, cfg: &Config, w: &Workload) -> Result<(), InvalidConfig> {
+        let Workload::Attention { head_dim, dtype, .. } = *w else {
+            return Err(invalid("workload is not attention"));
+        };
+        let s = &self.spec;
+        let (bm, bn) = (cfg.req("BLOCK_M") as usize, cfg.req("BLOCK_N") as usize);
+        let stages = cfg.req("num_stages") as usize;
+        let warps = cfg.req("num_warps") as usize;
+        let threads = warps * s.warp_width;
+        if threads > s.max_threads_per_block {
+            return Err(invalid(format!(
+                "{} threads exceed max {} ({} warps x {} lanes)",
+                threads, s.max_threads_per_block, warps, s.warp_width
+            )));
+        }
+        let smem = self.attn_smem_bytes(bm, bn, stages, head_dim, dtype.bytes());
+        if smem > s.smem_per_block {
+            return Err(invalid(format!(
+                "shared memory {smem} B exceeds {} B per block",
+                s.smem_per_block
+            )));
+        }
+        let regs = self.attn_regs_per_thread(bm, bn, head_dim, threads);
+        if regs > s.max_regs_per_thread {
+            return Err(invalid(format!(
+                "{regs} registers/thread exceed {}",
+                s.max_regs_per_thread
+            )));
+        }
+        Ok(())
+    }
+
+    /// Predicted latency (µs) of one causal/full flash-attention launch.
+    pub fn attention_latency_us(&self, cfg: &Config, w: &Workload, cg: &Codegen) -> Result<f64, InvalidConfig> {
+        self.validate_attention(cfg, w)?;
+        let Workload::Attention { batch, q_heads, kv_heads, seq_len, head_dim, dtype, causal } = *w else {
+            unreachable!()
+        };
+        let s = &self.spec;
+        let dtb = dtype.bytes();
+        let (bm, bn) = (cfg.req("BLOCK_M") as usize, cfg.req("BLOCK_N") as usize);
+        let stages = cfg.req("num_stages") as usize;
+        let warps = cfg.req("num_warps") as usize;
+        let waves_per_eu = cfg.get("waves_per_eu").unwrap_or(0);
+        let threads = warps * s.warp_width;
+
+        // ---- grid & occupancy -----------------------------------------
+        let q_tiles = ceil_div(seq_len, bm);
+        let total_blocks = batch * q_heads * q_tiles;
+        let smem = self.attn_smem_bytes(bm, bn, stages, head_dim, dtb);
+        let regs = self.attn_regs_per_thread(bm, bn, head_dim, threads);
+        let blocks_by_smem = (s.smem_per_cu / smem.max(1)).max(1);
+        let blocks_by_warps = (s.max_warps_per_cu / warps).max(1);
+        let blocks_by_regs = (s.regfile_per_cu / (regs * 4 * threads).max(1)).max(1);
+        let mut blocks_per_cu = blocks_by_smem.min(blocks_by_warps).min(blocks_by_regs);
+        if s.vendor == Vendor::Amd && waves_per_eu >= 2 {
+            // CDNA scheduler hint: allow denser wave packing when the
+            // kernel declares low register pressure.
+            blocks_per_cu = (blocks_per_cu * 3).div_ceil(2);
+        }
+        let concurrent = s.cus * blocks_per_cu;
+        let waves = ceil_div(total_blocks, concurrent).max(1);
+        // Blocks sharing a CU share its matrix unit, so device throughput
+        // is set by how evenly blocks cover the CUs, not by occupancy:
+        // each CU serially runs ceil(total/cus) blocks, and the tail
+        // round is partially empty (wave quantization).
+        let rounds = ceil_div(total_blocks, s.cus);
+        let wave_util = total_blocks as f64 / (rounds * s.cus) as f64;
+
+        // ---- matrix-unit efficiency ------------------------------------
+        // MMA/MFMA tile alignment: a 16-wide block on a 32-wide MFMA unit
+        // pads half the lanes.
+        let align = |b: usize| -> f64 {
+            let native = s.mma_tile;
+            let padded = ceil_div(b, native) * native;
+            b as f64 / padded as f64
+        };
+        // Per-thread accumulator work: too little starves the pipelines;
+        // more is better (deeper ILP) until register pressure bites,
+        // which reg_eff below charges separately.
+        let wpt = (bm * bn) as f64 / threads as f64;
+        let ilp_eff = (wpt / 48.0).powf(0.5).min(1.0);
+        // Register pressure: mild occupancy loss above half the budget,
+        // then a spill cliff — past ~192 registers the compiler starts
+        // spilling the f32 accumulator to local memory, which is
+        // catastrophic. This is the cliff that makes wavefront-64-tuned
+        // MI250 configs (half the threads when re-launched with 32-wide
+        // warps) collapse on the A100 — Fig. 4's order-of-magnitude drops.
+        let r = regs as f64;
+        let reg_eff = if r <= 128.0 {
+            1.0
+        } else if r <= 192.0 {
+            1.0 - 0.15 * (r - 128.0) / 64.0
+        } else {
+            0.85 - 0.80 * ((r - 192.0) / 63.0).min(1.0)
+        };
+        // Warps partition the M dimension of the tile; a warp owning
+        // fewer rows than the native matrix-instruction tile pads the
+        // rest away (the biggest single source of the ~20x config
+        // spread the paper observes, and vendor-asymmetric: MFMA's
+        // 32-row granule is twice MMA's).
+        let rows_per_warp = (bm as f64 / warps as f64).max(1.0);
+        let warp_split_eff = (rows_per_warp / s.mma_tile as f64).min(1.0);
+        // Software pipelining: on Ampere cp.async overlaps K/V staging;
+        // CDNA2 has no async copy, so extra stages barely help.
+        let stage_eff = if s.has_async_copy {
+            (0.80 + 0.10 * stages as f64).min(1.0)
+        } else {
+            (0.88 + 0.03 * stages as f64).min(1.0)
+        };
+        // Low resident-warp count exposes pipeline latency: residency is
+        // bounded both by the occupancy limits AND by how many blocks
+        // actually exist to co-schedule (small grids cannot fill a CU —
+        // the effect that sinks big-tile templates on small workloads).
+        let resident_blocks = blocks_per_cu.min(rounds).max(1);
+        let resident = (resident_blocks * warps).min(s.max_warps_per_cu) as f64;
+        // ~24 resident warps fully cover smem/MXU pipe latency; below
+        // that the penalty is soft — even a single warp streaming MMAs
+        // through a pipelined k-loop keeps the matrix unit half-busy.
+        let lat_hide = 0.5 + 0.5 * (resident / 24.0).powf(0.4).min(1.0);
+        let mxu_eff = align(bm)
+            * align(bn)
+            * ilp_eff
+            * reg_eff
+            * warp_split_eff
+            * stage_eff
+            * lat_hide
+            * cg.compute_eff;
+
+        let flops = w.flops();
+        let compute_us =
+            flops / (s.matrix_tflops(dtb) * 1e12 * mxu_eff.max(1e-3) * wave_util.max(1e-3)) * 1e6;
+
+        // Load/compute overlap: multi-stage cp.async pipelines overlap
+        // fully; single-stage (or non-async hardware) kernels only
+        // overlap via warp/block switching, so part of the slower phase
+        // serializes behind the faster one.
+        let pipelined = s.has_async_copy && stages >= 2;
+        let overlap = if pipelined {
+            1.0
+        } else {
+            1.0 - 1.0 / (1.0 + 0.5 * resident)
+        };
+
+        // ---- memory ------------------------------------------------------
+        let rep = q_heads / kv_heads.max(1);
+        let kv_logical = (2 * batch * kv_heads * seq_len * head_dim * dtb) as f64;
+        let q_out = (2 * batch * q_heads * seq_len * head_dim * dtb) as f64;
+        // Each of the q_tiles*rep blocks per (batch, kv-head) streams the
+        // full K/V; L2 absorbs re-reads while the per-head panels of all
+        // concurrently *distinct* KV streams fit.
+        let kv_rereads = (q_tiles * rep) as f64 * if causal { 0.5 } else { 1.0 };
+        let distinct_kv = (batch * kv_heads).min(concurrent);
+        let concurrent_ws = (distinct_kv * 2 * seq_len * head_dim * dtb) as f64;
+        let l2_hit = (s.l2_bytes as f64 / concurrent_ws).clamp(0.0, 0.92);
+        let hbm_traffic = q_out + kv_logical * (1.0 + (kv_rereads - 1.0).max(0.0) * (1.0 - l2_hit));
+        let mem_us = hbm_traffic / (s.hbm_gbps * 1e9 * cg.mem_eff * wave_util.max(0.05)) * 1e6;
+
+        // Causal work imbalance: the diagonal q-tile touches the whole
+        // prefix (max/avg work = 2*q_tiles/(q_tiles+1) -> 2), and with few
+        // serial rounds per CU the scheduler cannot rebalance it.
+        let _ = waves;
+        let imbalance = if causal {
+            let skew = 2.0 * q_tiles as f64 / (q_tiles as f64 + 1.0) - 1.0;
+            1.0 + skew / rounds as f64
+        } else {
+            1.0
+        };
+
+        let core_us = compute_us.max(mem_us) + compute_us.min(mem_us) * (1.0 - overlap);
+        Ok(s.launch_overhead_us + core_us * imbalance)
+    }
+
+    /// The PyTorch-native (materialized softmax) attention baseline:
+    /// four separate kernels and an S x S intermediate round-tripped
+    /// through HBM — the paper's 6-13x-slower reference.
+    pub fn native_attention_latency_us(&self, w: &Workload) -> Result<f64, InvalidConfig> {
+        let Workload::Attention { batch, q_heads, seq_len, head_dim, dtype, .. } = *w else {
+            return Err(invalid("workload is not attention"));
+        };
+        let s = &self.spec;
+        let dtb = dtype.bytes();
+        // Scores are materialized in f32 by eager softmax paths.
+        let scores = (batch * q_heads * seq_len * seq_len) as f64;
+        // write scores, read+write softmax (f32), read probs for P@V.
+        let traffic = scores * (4.0 + 8.0 + 4.0)
+            + (4 * batch * q_heads * seq_len * head_dim * dtb) as f64;
+        // Eager ops on AMD go through hipified kernels with poorer
+        // coalescing; the paper's MI250 native baseline is ~13x slower.
+        let native_mem_eff = match s.vendor {
+            Vendor::Nvidia => 0.85,
+            Vendor::Amd => 0.55,
+        };
+        let mem_us = traffic / (s.hbm_gbps * 1e9 * native_mem_eff) * 1e6;
+        // Two dense GEMMs via the vendor BLAS (near-peak matrix unit).
+        let gemm_us = w.flops() / (s.matrix_tflops(dtb) * 1e12 * 0.85) * 1e6;
+        // Four kernel launches (QK^T, mask, softmax, PV).
+        Ok(4.0 * s.launch_overhead_us + mem_us + gemm_us)
+    }
+
+    // -----------------------------------------------------------------
+    // RMS norm
+    // -----------------------------------------------------------------
+
+    /// Validity of an RMS-norm config on this platform.
+    pub fn validate_rms(&self, cfg: &Config, w: &Workload) -> Result<(), InvalidConfig> {
+        let Workload::RmsNorm { dtype, .. } = *w else {
+            return Err(invalid("workload is not rms_norm"));
+        };
+        let s = &self.spec;
+        let warps = cfg.req("num_warps") as usize;
+        let threads = warps * s.warp_width;
+        if threads > s.max_threads_per_block {
+            return Err(invalid(format!("{threads} threads exceed max {}", s.max_threads_per_block)));
+        }
+        let vec_bytes = cfg.req("VEC") as usize * dtype.bytes();
+        if vec_bytes > 16 {
+            return Err(invalid(format!("{vec_bytes}-byte vector loads exceed 16B/lane")));
+        }
+        // The Triton row reduction stages one BLOCK through LDS/smem.
+        let block_bytes = cfg.req("BLOCK") as usize * 4;
+        if block_bytes > s.smem_per_block {
+            return Err(invalid(format!("BLOCK staging {block_bytes} B exceeds shared memory")));
+        }
+        Ok(())
+    }
+
+    /// Predicted latency (µs) of one RMS-norm launch (one block per
+    /// `rows_per_block` rows, hidden dim streamed in BLOCK chunks).
+    pub fn rms_latency_us(&self, cfg: &Config, w: &Workload, cg: &Codegen) -> Result<f64, InvalidConfig> {
+        self.validate_rms(cfg, w)?;
+        let Workload::RmsNorm { n_rows, hidden, dtype } = *w else { unreachable!() };
+        let s = &self.spec;
+        let dtb = dtype.bytes();
+        let block = cfg.req("BLOCK") as usize;
+        let warps = cfg.req("num_warps") as usize;
+        let vec = cfg.req("VEC") as usize;
+        let threads = warps * s.warp_width;
+
+        // ---- bandwidth term ---------------------------------------------
+        let bytes = (2 * n_rows * hidden + hidden) as f64 * dtb as f64;
+        // Transaction width: full DRAM rate once each lane moves >= 4 B
+        // (a 32-lane warp then fills a 128 B transaction).
+        let coalesce = ((vec * dtb) as f64 / 4.0).clamp(0.25, 1.0);
+        // Device fill: one block per `rows_per_block` rows; few rows
+        // leave CUs idle. Tail quantization as in the attention model.
+        let rounds = ceil_div(n_rows.max(1), s.cus);
+        let wave_util = n_rows as f64 / (rounds * s.cus) as f64;
+        let bw = s.hbm_gbps * 1e9 * coalesce * cg.mem_eff * wave_util.max(0.02);
+        let bw_us = bytes / bw * 1e6;
+
+        // ---- instruction/latency term -------------------------------------
+        // Each block streams its row(s) in ceil(hidden / (threads*VEC))
+        // dependent vector iterations, twice (sum-of-squares pass, then
+        // scale pass). Per-iteration cost is dominated by exposed memory
+        // latency; packed 16-bit loads/math (half2) cut the instruction
+        // count per iteration — the Triton FP16 gap the paper found, which
+        // only shows on small (latency-bound) workloads because resident
+        // blocks overlap and bandwidth dominates at scale.
+        // Unpacked 16-bit code cannot issue wide vector loads (no half2
+        // packing), so its iteration count is computed at <=2-wide; this
+        // is a codegen property, not a tunable — exactly the paper's
+        // finding that the A100 small-workload gap was "not due to the
+        // choice of the kernel parameters".
+        let vec_eff = if dtb == 2 && !cg.f16_packed { vec.min(2) } else { vec };
+        // Beyond ~256 threads per row, reduction/barrier overheads eat
+        // the gains; the latency path saturates there.
+        let threads_eff = threads.min(256);
+        let iters = ceil_div(hidden, threads_eff * vec_eff).max(1);
+        // A BLOCK much wider than the row wastes lanes.
+        let useful = ((hidden.min(block)) as f64 / block as f64).max(0.1);
+        let unpack_penalty = if dtb == 2 && !cg.f16_packed { 1.6 } else { 1.0 };
+        let iter_cycles = 220.0 * unpack_penalty / useful / cg.compute_eff;
+        let block_us = 2.0 * iters as f64 * iter_cycles / 1.41e9 * 1e6;
+        // Resident blocks per CU overlap their latency chains.
+        let blocks_per_cu_cap = (s.max_warps_per_cu / warps).max(1);
+        let resident = blocks_per_cu_cap.min(rounds).max(1);
+        let ipc_us = rounds as f64 * block_us / resident as f64;
+
+        // Row reduction across warps costs log2(warps) barrier rounds.
+        // It lives on the same latency path as the streaming loop (and is
+        // equally overlapped across resident blocks), so it never shows
+        // once the kernel is bandwidth-bound.
+        let reduce_us =
+            (warps as f64).log2().max(0.0) * 0.25 * rounds as f64 / resident as f64;
+
+        Ok(s.launch_overhead_us + bw_us.max(ipc_us + reduce_us))
+    }
+
+    // -----------------------------------------------------------------
+    // Vector add
+    // -----------------------------------------------------------------
+
+    pub fn vecadd_latency_us(&self, cfg: &Config, w: &Workload, cg: &Codegen) -> Result<f64, InvalidConfig> {
+        let Workload::VectorAdd { n, dtype } = *w else {
+            return Err(invalid("workload is not vector_add"));
+        };
+        let s = &self.spec;
+        let block = cfg.req("block_size") as usize;
+        let blocks = ceil_div(n, block);
+        let fill = (blocks as f64 / s.cus as f64).min(1.0);
+        let bytes = 3.0 * (n * dtype.bytes()) as f64;
+        let bw_us = bytes / (s.hbm_gbps * 1e9 * cg.mem_eff * fill.max(0.02)) * 1e6;
+        Ok(s.launch_overhead_us + bw_us)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::spaces;
+    use crate::workload::DType;
+
+    fn attn_cfg(bm: i64, bn: i64, warps: i64, stages: i64) -> Config {
+        Config::new(&[
+            ("BLOCK_M", bm),
+            ("BLOCK_N", bn),
+            ("num_warps", warps),
+            ("num_stages", stages),
+            ("waves_per_eu", 0),
+        ])
+    }
+
+    fn paper_attn() -> Workload {
+        Workload::llama3_attention(64, 1024)
+    }
+
+    #[test]
+    fn big_staging_invalid_on_mi250_but_valid_on_a100() {
+        // The exact effect behind Fig 4's missing bars: 164K vs 64K smem.
+        let cfg = attn_cfg(128, 128, 4, 3); // smem(f16) = (128*128+3*2*128*128)*2 = 229KB -> invalid both
+        let small = attn_cfg(128, 64, 4, 2); // (128*128 + 2*2*64*128)*2 = 98KB
+        let w = paper_attn();
+        assert!(SimGpu::a100().validate_attention(&small, &w).is_ok());
+        assert!(SimGpu::mi250().validate_attention(&small, &w).is_err());
+        assert!(SimGpu::mi250().validate_attention(&cfg, &w).is_err());
+    }
+
+    #[test]
+    fn warp_count_ceiling_differs() {
+        // 16 warps x 64 lanes = 1024 on AMD (ok), but a space with
+        // num_warps up to 8 stays valid on both; 32 warps would not.
+        let w = paper_attn();
+        let cfg = attn_cfg(64, 64, 8, 1);
+        assert!(SimGpu::a100().validate_attention(&cfg, &w).is_ok());
+        assert!(SimGpu::mi250().validate_attention(&cfg, &w).is_ok());
+    }
+
+    #[test]
+    fn latency_positive_and_finite() {
+        let w = paper_attn();
+        let gpu = SimGpu::a100();
+        for cfg in spaces::attention_sim_space().enumerate(&w) {
+            if let Ok(us) = gpu.attention_latency_us(&cfg, &w, &HAND_TUNED) {
+                assert!(us.is_finite() && us > 0.0, "bad latency for {cfg}");
+            }
+        }
+    }
+
+    #[test]
+    fn more_flops_more_time() {
+        let gpu = SimGpu::a100();
+        let cfg = attn_cfg(128, 64, 4, 2);
+        let t1 = gpu
+            .attention_latency_us(&cfg, &Workload::llama3_attention(16, 1024), &HAND_TUNED)
+            .unwrap();
+        let t2 = gpu
+            .attention_latency_us(&cfg, &Workload::llama3_attention(64, 1024), &HAND_TUNED)
+            .unwrap();
+        assert!(t2 > t1 * 2.0, "batch 64 should be >2x batch 16: {t1} vs {t2}");
+    }
+
+    #[test]
+    fn native_attention_is_paper_slower() {
+        // Paper Fig 1: native is 6-13x slower than SOTA flash attention.
+        let w = paper_attn();
+        for gpu in [SimGpu::a100(), SimGpu::mi250()] {
+            let native = gpu.native_attention_latency_us(&w).unwrap();
+            let best = spaces::attention_sim_space()
+                .enumerate(&w)
+                .iter()
+                .filter_map(|c| gpu.attention_latency_us(c, &w, &HAND_TUNED).ok())
+                .fold(f64::INFINITY, f64::min);
+            let ratio = native / best;
+            assert!(
+                (4.0..20.0).contains(&ratio),
+                "{}: native/flash = {ratio:.1} (native {native:.0}us best {best:.0}us)",
+                gpu.spec.name
+            );
+        }
+    }
+
+    #[test]
+    fn optimal_configs_differ_across_platforms() {
+        let w = paper_attn();
+        let space = spaces::attention_sim_space();
+        let best = |gpu: &SimGpu| {
+            space
+                .enumerate(&w)
+                .into_iter()
+                .filter_map(|c| gpu.attention_latency_us(&c, &w, &HAND_TUNED).ok().map(|t| (c, t)))
+                .min_by(|a, b| a.1.total_cmp(&b.1))
+                .unwrap()
+        };
+        let (ca, _) = best(&SimGpu::a100());
+        let (cm, _) = best(&SimGpu::mi250());
+        assert_ne!(ca, cm, "paper premise: per-platform optima differ");
+    }
+
+    #[test]
+    fn config_spread_is_large() {
+        // Paper §Q3: nearly 20x spread between best and worst valid config.
+        let w = paper_attn();
+        let gpu = SimGpu::a100();
+        let times: Vec<f64> = spaces::attention_sim_space()
+            .enumerate(&w)
+            .iter()
+            .filter_map(|c| gpu.attention_latency_us(c, &w, &HAND_TUNED).ok())
+            .collect();
+        let best = times.iter().cloned().fold(f64::INFINITY, f64::min);
+        let worst = times.iter().cloned().fold(0.0, f64::max);
+        assert!(worst / best > 5.0, "spread {:.1}", worst / best);
+    }
+
+    #[test]
+    fn rms_fp16_unpacked_hurts_small_workloads_most() {
+        // Paper §Q1: Triton reaches only 60-90% on *small* RMS workloads
+        // because of missing FP16 packing; large ones are bandwidth-bound.
+        let gpu = SimGpu::a100();
+        let cfg = Config::new(&[("BLOCK", 1024), ("num_warps", 4), ("VEC", 4)]);
+        let packed = Codegen { f16_packed: true, ..HAND_TUNED };
+        let unpacked = Codegen { f16_packed: false, ..HAND_TUNED };
+        let small = Workload::RmsNorm { n_rows: 64, hidden: 4096, dtype: DType::F16 };
+        let large = Workload::RmsNorm { n_rows: 65536, hidden: 4096, dtype: DType::F16 };
+        let ratio_small = gpu.rms_latency_us(&cfg, &small, &unpacked).unwrap()
+            / gpu.rms_latency_us(&cfg, &small, &packed).unwrap();
+        let ratio_large = gpu.rms_latency_us(&cfg, &large, &unpacked).unwrap()
+            / gpu.rms_latency_us(&cfg, &large, &packed).unwrap();
+        assert!(ratio_small >= ratio_large, "small {ratio_small:.2} vs large {ratio_large:.2}");
+        assert!(ratio_small > 1.05, "penalty should be visible: {ratio_small:.2}");
+    }
+
+    #[test]
+    fn rms_is_bandwidth_bound_at_scale() {
+        let gpu = SimGpu::a100();
+        let cfg = Config::new(&[("BLOCK", 4096), ("num_warps", 8), ("VEC", 4)]);
+        let w = Workload::RmsNorm { n_rows: 65536, hidden: 4096, dtype: DType::F16 };
+        let us = gpu.rms_latency_us(&cfg, &w, &HAND_TUNED).unwrap();
+        let ideal_us = w.min_bytes() / (gpu.spec.hbm_gbps * 1e9) * 1e6;
+        assert!(us < ideal_us * 3.0, "rms should track the bandwidth roofline");
+    }
+
+    #[test]
+    fn vecadd_scales_linearly() {
+        let gpu = SimGpu::mi250();
+        let cfg = Config::new(&[("block_size", 256)]);
+        let t1 = gpu
+            .vecadd_latency_us(&cfg, &Workload::VectorAdd { n: 1 << 24, dtype: DType::F32 }, &HAND_TUNED)
+            .unwrap();
+        let t2 = gpu
+            .vecadd_latency_us(&cfg, &Workload::VectorAdd { n: 1 << 25, dtype: DType::F32 }, &HAND_TUNED)
+            .unwrap();
+        assert!(t2 / t1 > 1.7 && t2 / t1 < 2.3);
+    }
+
+    #[test]
+    fn invalid_reasons_are_descriptive() {
+        let w = paper_attn();
+        let err = SimGpu::mi250()
+            .validate_attention(&attn_cfg(256, 256, 4, 5), &w)
+            .unwrap_err();
+        assert!(err.reason.contains("shared memory"), "{}", err.reason);
+    }
+}

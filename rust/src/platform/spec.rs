@@ -1,0 +1,189 @@
+//! Architecture parameter sheets for the modeled GPUs.
+//!
+//! Values come from the public vendor datasheets:
+//! - NVIDIA A100-80GB SXM: GA100, 108 SMs, 164 KiB configurable shared
+//!   memory per SM, 2039 GB/s HBM2e, 312 TFLOP/s FP16 tensor core,
+//!   19.5 TFLOP/s FP32, 40 MiB L2, warp = 32, mma.m16n8k16.
+//! - AMD Instinct MI250 (one GCD of two): CDNA2, 104 CUs, 64 KiB LDS per
+//!   workgroup, 1638 GB/s HBM2e, 181 TFLOP/s FP16 MFMA, 22.6 TFLOP/s
+//!   FP32, 8 MiB L2, wavefront = 64, mfma_f32_32x32x8f16.
+//!
+//! The paper chose these two parts deliberately (comparable 6/7 nm nodes,
+//! two major vendors); we model the same pair.
+
+/// GPU vendor, which selects instruction-set-level modeling details.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Vendor {
+    Nvidia,
+    Amd,
+}
+
+impl Vendor {
+    pub fn name(self) -> &'static str {
+        match self {
+            Vendor::Nvidia => "NVIDIA",
+            Vendor::Amd => "AMD",
+        }
+    }
+}
+
+/// Static architecture description used by the analytical models.
+#[derive(Debug, Clone)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    pub vendor: Vendor,
+    /// Streaming multiprocessors (NVIDIA) / compute units (AMD).
+    pub cus: usize,
+    /// Threads per warp (NVIDIA) / wavefront (AMD).
+    pub warp_width: usize,
+    /// Hardware thread-block size ceiling.
+    pub max_threads_per_block: usize,
+    /// Resident warp contexts per CU.
+    pub max_warps_per_cu: usize,
+    /// Shared memory / LDS available to one block (bytes).
+    pub smem_per_block: usize,
+    /// Total shared memory per CU (bytes) — bounds block residency.
+    pub smem_per_cu: usize,
+    /// Register file per CU (bytes).
+    pub regfile_per_cu: usize,
+    /// Max architectural registers per thread (32-bit regs).
+    pub max_regs_per_thread: usize,
+    /// Dense FP16/BF16 matrix-unit throughput (TFLOP/s).
+    pub fp16_matrix_tflops: f64,
+    /// FP32 vector throughput (TFLOP/s).
+    pub fp32_tflops: f64,
+    /// HBM bandwidth (GB/s).
+    pub hbm_gbps: f64,
+    /// L2 cache (bytes).
+    pub l2_bytes: usize,
+    /// Kernel launch overhead (µs) — amortized by CUDA/HIP graphs in the
+    /// paper's measurement setup, so kept small.
+    pub launch_overhead_us: f64,
+    /// Native matrix-instruction tile edge (M=N): 16 for mma.sync,
+    /// 32 for MFMA. Blocks not aligned to this pad and waste lanes.
+    pub mma_tile: usize,
+    /// Does the memory pipeline support async staged copies
+    /// (Ampere cp.async)?  Governs how much `num_stages` helps.
+    pub has_async_copy: bool,
+}
+
+impl GpuSpec {
+    /// Peak matmul throughput for a dtype (TFLOP/s).
+    pub fn matrix_tflops(&self, dtype_bytes: usize) -> f64 {
+        if dtype_bytes <= 2 {
+            self.fp16_matrix_tflops
+        } else {
+            // TF32 tensor core on A100 (156), FP32 MFMA path on CDNA2.
+            self.fp16_matrix_tflops / 2.0
+        }
+    }
+}
+
+/// NVIDIA A100-80GB SXM.
+pub const A100: GpuSpec = GpuSpec {
+    name: "A100-80GB",
+    vendor: Vendor::Nvidia,
+    cus: 108,
+    warp_width: 32,
+    max_threads_per_block: 1024,
+    max_warps_per_cu: 64,
+    smem_per_block: 164 * 1024 - 1024, // 163 KiB usable by one block
+    smem_per_cu: 164 * 1024,
+    regfile_per_cu: 256 * 1024,
+    max_regs_per_thread: 255,
+    fp16_matrix_tflops: 312.0,
+    fp32_tflops: 19.5,
+    hbm_gbps: 2039.0,
+    l2_bytes: 40 * 1024 * 1024,
+    launch_overhead_us: 3.0,
+    mma_tile: 16,
+    has_async_copy: true,
+};
+
+/// AMD Instinct MI250, one GCD (the paper's ROCm stack schedules kernels
+/// per-GCD; peak numbers here are per-GCD halves of the card totals).
+pub const MI250: GpuSpec = GpuSpec {
+    name: "MI250-128GB",
+    vendor: Vendor::Amd,
+    cus: 104,
+    warp_width: 64,
+    max_threads_per_block: 1024,
+    max_warps_per_cu: 32,
+    smem_per_block: 64 * 1024,
+    smem_per_cu: 64 * 1024,
+    regfile_per_cu: 512 * 1024,
+    max_regs_per_thread: 256,
+    fp16_matrix_tflops: 181.0,
+    fp32_tflops: 22.6,
+    hbm_gbps: 1638.0,
+    l2_bytes: 8 * 1024 * 1024,
+    launch_overhead_us: 4.0,
+    mma_tile: 32,
+    has_async_copy: false,
+};
+
+/// NVIDIA H100 SXM (Hopper) — the "new hardware" case of the paper's
+/// introduction: flash_attn needed over a year of manual work to exploit
+/// Hopper, while an autotuned kernel adapts on day 0 (see
+/// `experiments::hopper`).  Sheet: 132 SMs, 228 KiB smem, 989 TFLOP/s
+/// dense FP16, 3.35 TB/s HBM3, 50 MiB L2, TMA async copies.
+pub const H100: GpuSpec = GpuSpec {
+    name: "H100-80GB",
+    vendor: Vendor::Nvidia,
+    cus: 132,
+    warp_width: 32,
+    max_threads_per_block: 1024,
+    max_warps_per_cu: 64,
+    smem_per_block: 228 * 1024 - 1024,
+    smem_per_cu: 228 * 1024,
+    regfile_per_cu: 256 * 1024,
+    max_regs_per_thread: 255,
+    fp16_matrix_tflops: 989.0,
+    fp32_tflops: 67.0,
+    hbm_gbps: 3352.0,
+    l2_bytes: 50 * 1024 * 1024,
+    launch_overhead_us: 2.5,
+    mma_tile: 16,
+    has_async_copy: true,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_sheet_sanity() {
+        assert_eq!(A100.cus, 108);
+        assert_eq!(A100.warp_width, 32);
+        assert!(A100.smem_per_block > MI250.smem_per_block * 2);
+        assert!(A100.has_async_copy && !MI250.has_async_copy);
+    }
+
+    #[test]
+    fn mi250_wavefront_is_double() {
+        assert_eq!(MI250.warp_width, 2 * A100.warp_width);
+        assert_eq!(MI250.mma_tile, 2 * A100.mma_tile);
+    }
+
+    #[test]
+    fn matrix_tflops_by_dtype() {
+        assert_eq!(A100.matrix_tflops(2), 312.0);
+        assert!(A100.matrix_tflops(4) < A100.matrix_tflops(2));
+    }
+
+    #[test]
+    fn h100_is_a_generational_leap() {
+        assert!(H100.fp16_matrix_tflops > 3.0 * A100.fp16_matrix_tflops);
+        assert!(H100.smem_per_block > A100.smem_per_block);
+    }
+
+    #[test]
+    fn comparable_class_parts() {
+        // The paper picked these parts as same-class; the models should
+        // agree within ~2x on headline numbers.
+        let ratio = A100.fp16_matrix_tflops / MI250.fp16_matrix_tflops;
+        assert!(ratio > 1.0 && ratio < 2.5);
+        let bw = A100.hbm_gbps / MI250.hbm_gbps;
+        assert!(bw > 0.8 && bw < 1.6);
+    }
+}

@@ -1,0 +1,188 @@
+//! Report rendering: tables (markdown/TSV) and ASCII series plots.
+//!
+//! Every experiment produces a [`Report`]; the CLI prints it and
+//! `portatune bench all` also writes the TSV form under `reports/` so the
+//! paper's figures can be re-plotted from raw rows.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::Result;
+
+/// A titled table: the unit of experiment output.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    pub title: String,
+    pub notes: Vec<String>,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Report {
+    pub fn new(title: impl Into<String>, columns: &[&str]) -> Self {
+        Report {
+            title: title.into(),
+            notes: Vec::new(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn note(&mut self, note: impl Into<String>) {
+        self.notes.push(note.into());
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        debug_assert_eq!(cells.len(), self.columns.len(), "row arity mismatch in {}", self.title);
+        self.rows.push(cells);
+    }
+
+    /// Markdown rendering (what the CLI prints).
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "\n## {}\n", self.title);
+        for n in &self.notes {
+            let _ = writeln!(out, "> {n}");
+        }
+        if !self.notes.is_empty() {
+            out.push('\n');
+        }
+        // column widths
+        let mut w: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                if i < w.len() {
+                    w[i] = w[i].max(c.len());
+                }
+            }
+        }
+        let fmt_row = |cells: &[String], w: &[usize]| -> String {
+            let padded: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:width$}", c, width = w.get(i).copied().unwrap_or(0)))
+                .collect();
+            format!("| {} |", padded.join(" | "))
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.columns, &w));
+        let sep: Vec<String> = w.iter().map(|n| "-".repeat(*n)).collect();
+        let _ = writeln!(out, "{}", fmt_row(&sep, &w));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row, &w));
+        }
+        out
+    }
+
+    /// Tab-separated values (machine-readable row dump).
+    pub fn to_tsv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "# {}", self.title);
+        for n in &self.notes {
+            let _ = writeln!(out, "# {n}");
+        }
+        let _ = writeln!(out, "{}", self.columns.join("\t"));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.join("\t"));
+        }
+        out
+    }
+
+    /// Write the TSV form into `dir/<slug>.tsv`.
+    pub fn save_tsv(&self, dir: impl AsRef<Path>, slug: &str) -> Result<()> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{slug}.tsv")), self.to_tsv())?;
+        Ok(())
+    }
+}
+
+/// A quick ASCII scatter/line chart for terminal output of figure-style
+/// series (log-y supported, since most paper plots are log scale).
+pub fn ascii_chart(title: &str, series: &[(&str, Vec<(f64, f64)>)], log_y: bool, width: usize, height: usize) -> String {
+    let mut out = format!("{title}\n");
+    let all: Vec<(f64, f64)> = series.iter().flat_map(|(_, pts)| pts.iter().copied()).collect();
+    if all.is_empty() {
+        return out + "(no data)\n";
+    }
+    let tx = |x: f64| x;
+    let ty = |y: f64| if log_y { y.max(1e-12).log10() } else { y };
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &all {
+        x0 = x0.min(tx(x));
+        x1 = x1.max(tx(x));
+        y0 = y0.min(ty(y));
+        y1 = y1.max(ty(y));
+    }
+    if (x1 - x0).abs() < 1e-12 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-12 {
+        y1 = y0 + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    let marks = ['*', 'o', '+', 'x', '#', '@'];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        let m = marks[si % marks.len()];
+        for &(x, y) in pts {
+            let cx = (((tx(x) - x0) / (x1 - x0)) * (width - 1) as f64).round() as usize;
+            let cy = (((ty(y) - y0) / (y1 - y0)) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            grid[row][cx.min(width - 1)] = m;
+        }
+    }
+    for row in grid {
+        out.push_str("  |");
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push_str(&format!("   x: [{x0:.3} .. {x1:.3}]  y{}: [{y0:.3} .. {y1:.3}]\n", if log_y { "(log10)" } else { "" }));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("   {} {}\n", marks[si % marks.len()], name));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_has_all_rows() {
+        let mut r = Report::new("T", &["a", "b"]);
+        r.row(vec!["1".into(), "2".into()]);
+        r.row(vec!["3".into(), "4".into()]);
+        let md = r.to_markdown();
+        assert!(md.contains("## T"));
+        assert!(md.contains("| 1 | 2 |"));
+        assert_eq!(md.matches('|').count() / 3, 4); // header, sep, 2 rows
+    }
+
+    #[test]
+    fn tsv_roundtrip_columns() {
+        let mut r = Report::new("T", &["x", "y"]);
+        r.note("a note");
+        r.row(vec!["1".into(), "2".into()]);
+        let tsv = r.to_tsv();
+        assert!(tsv.contains("# a note"));
+        assert!(tsv.contains("x\ty"));
+        assert!(tsv.contains("1\t2"));
+    }
+
+    #[test]
+    fn chart_renders_without_panic() {
+        let s = ascii_chart(
+            "demo",
+            &[("a", vec![(1.0, 10.0), (2.0, 100.0)]), ("b", vec![(1.5, 50.0)])],
+            true,
+            40,
+            10,
+        );
+        assert!(s.contains('*') && s.contains('o'));
+    }
+
+    #[test]
+    fn chart_empty_series_ok() {
+        assert!(ascii_chart("e", &[("a", vec![])], false, 10, 5).contains("no data"));
+    }
+}

@@ -1,0 +1,427 @@
+//! Typed view of `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`) — the contract between the Python compile
+//! path and the Rust runtime.  Parsed with the in-tree [`crate::json`]
+//! module (no external JSON dependency exists in this build).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::Config;
+use crate::json::{self, Value};
+use crate::workload::{DType, Workload};
+
+/// Tensor spec: shape + dtype name as written by aot.py.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        let shape = v
+            .req_arr("shape")?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad shape dim")))
+            .collect::<Result<_>>()?;
+        Ok(TensorSpec { shape, dtype: v.req_str("dtype")?.to_string() })
+    }
+}
+
+/// Loose workload record (field set depends on the kernel).
+#[derive(Debug, Clone, Default)]
+pub struct WorkloadRecord {
+    pub batch: Option<usize>,
+    pub q_heads: Option<usize>,
+    pub kv_heads: Option<usize>,
+    pub seq_len: Option<usize>,
+    pub head_dim: Option<usize>,
+    pub causal: Option<bool>,
+    pub n_rows: Option<usize>,
+    pub hidden: Option<usize>,
+    pub n_elements: Option<usize>,
+    pub dtype: Option<String>,
+}
+
+fn parse_dtype(s: Option<&str>) -> DType {
+    match s {
+        Some("bf16") => DType::BF16,
+        Some("f16") => DType::F16,
+        _ => DType::F32,
+    }
+}
+
+impl WorkloadRecord {
+    fn from_json(v: &Value) -> Self {
+        let u = |k: &str| v.get(k).and_then(Value::as_usize);
+        WorkloadRecord {
+            batch: u("batch"),
+            q_heads: u("q_heads"),
+            kv_heads: u("kv_heads"),
+            seq_len: u("seq_len"),
+            head_dim: u("head_dim"),
+            causal: v.get("causal").and_then(Value::as_bool),
+            n_rows: u("n_rows"),
+            hidden: u("hidden"),
+            n_elements: u("n_elements"),
+            dtype: v.get("dtype").and_then(Value::as_str).map(str::to_string),
+        }
+    }
+
+    /// Reconstruct the typed [`Workload`] for a manifest kernel name.
+    pub fn to_workload(&self, kernel: &str) -> Option<Workload> {
+        let dtype = parse_dtype(self.dtype.as_deref());
+        match kernel {
+            "attention" => Some(Workload::Attention {
+                batch: self.batch?,
+                q_heads: self.q_heads?,
+                kv_heads: self.kv_heads?,
+                seq_len: self.seq_len?,
+                head_dim: self.head_dim?,
+                dtype,
+                causal: self.causal.unwrap_or(true),
+            }),
+            "rms_norm" => Some(Workload::RmsNorm {
+                n_rows: self.n_rows?,
+                hidden: self.hidden?,
+                dtype,
+            }),
+            "vector_add" => Some(Workload::VectorAdd { n: self.n_elements?, dtype }),
+            _ => None,
+        }
+    }
+}
+
+/// One AOT artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub id: String,
+    pub kernel: String,
+    pub impl_name: Option<String>,
+    pub workload: WorkloadRecord,
+    pub config: BTreeMap<String, i64>,
+    pub inputs: Vec<TensorSpec>,
+    pub output: Option<TensorSpec>,
+    pub path: String,
+    pub bytes: usize,
+    pub sha256_16: String,
+}
+
+impl ArtifactEntry {
+    fn from_json(v: &Value) -> Result<Self> {
+        let config = v
+            .get("config")
+            .and_then(Value::as_obj)
+            .map(|o| {
+                o.iter()
+                    .filter_map(|(k, v)| v.as_i64().map(|n| (k.clone(), n)))
+                    .collect()
+            })
+            .unwrap_or_default();
+        let inputs = v
+            .get("inputs")
+            .and_then(Value::as_arr)
+            .map(|a| a.iter().map(TensorSpec::from_json).collect::<Result<Vec<_>>>())
+            .transpose()?
+            .unwrap_or_default();
+        let output = v.get("output").map(TensorSpec::from_json).transpose()?;
+        Ok(ArtifactEntry {
+            id: v.req_str("id")?.to_string(),
+            kernel: v.req_str("kernel")?.to_string(),
+            impl_name: v.get("impl").and_then(Value::as_str).map(str::to_string),
+            workload: v
+                .get("workload")
+                .map(WorkloadRecord::from_json)
+                .unwrap_or_default(),
+            config,
+            inputs,
+            output,
+            path: v.req_str("path")?.to_string(),
+            bytes: v.get("bytes").and_then(Value::as_usize).unwrap_or(0),
+            sha256_16: v
+                .get("sha256_16")
+                .and_then(Value::as_str)
+                .unwrap_or("")
+                .to_string(),
+        })
+    }
+
+    pub fn config(&self) -> Config {
+        Config(self.config.clone())
+    }
+
+    pub fn workload(&self) -> Option<Workload> {
+        self.workload.to_workload(&self.kernel)
+    }
+
+    pub fn is_pallas(&self) -> bool {
+        self.impl_name.as_deref() == Some("pallas")
+    }
+}
+
+/// Serving-model description (geometry + weight order).
+#[derive(Debug, Clone)]
+pub struct ModelDesc {
+    pub hidden: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub mlp_hidden: usize,
+    pub param_order: Vec<String>,
+    pub param_shapes: BTreeMap<String, Vec<usize>>,
+    pub params_per_block: usize,
+}
+
+impl ModelDesc {
+    fn from_json(v: &Value) -> Result<Self> {
+        let param_order = v
+            .req_arr("param_order")?
+            .iter()
+            .map(|s| s.as_str().map(str::to_string).ok_or_else(|| anyhow!("bad param name")))
+            .collect::<Result<_>>()?;
+        let mut param_shapes = BTreeMap::new();
+        if let Some(obj) = v.get("param_shapes").and_then(Value::as_obj) {
+            for (k, dims) in obj {
+                let dims = dims
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("bad shape for {k}"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .collect::<Result<_>>()?;
+                param_shapes.insert(k.clone(), dims);
+            }
+        }
+        Ok(ModelDesc {
+            hidden: v.req_usize("hidden")?,
+            n_q_heads: v.req_usize("n_q_heads")?,
+            n_kv_heads: v.req_usize("n_kv_heads")?,
+            head_dim: v.req_usize("head_dim")?,
+            mlp_hidden: v.req_usize("mlp_hidden")?,
+            param_order,
+            param_shapes,
+            params_per_block: v.req_usize("params_per_block")?,
+        })
+    }
+}
+
+/// Environment fingerprint of the compile path (Q4.3 reuse safety).
+#[derive(Debug, Clone, Default)]
+pub struct EnvRecord {
+    pub jax: String,
+    pub python: String,
+    pub machine: String,
+    pub interchange: String,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: usize,
+    pub quick: bool,
+    pub env: EnvRecord,
+    pub model: ModelDesc,
+    pub artifacts: Vec<ArtifactEntry>,
+    pub root: PathBuf,
+}
+
+impl Manifest {
+    /// Parse manifest JSON text (root stays empty; set by [`Self::load`]).
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = json::parse(text).context("manifest.json")?;
+        let env = v
+            .get("env")
+            .map(|e| EnvRecord {
+                jax: e.get("jax").and_then(Value::as_str).unwrap_or("").into(),
+                python: e.get("python").and_then(Value::as_str).unwrap_or("").into(),
+                machine: e.get("machine").and_then(Value::as_str).unwrap_or("").into(),
+                interchange: e.get("interchange").and_then(Value::as_str).unwrap_or("").into(),
+            })
+            .unwrap_or_default();
+        let artifacts = v
+            .req_arr("artifacts")?
+            .iter()
+            .map(ArtifactEntry::from_json)
+            .collect::<Result<_>>()?;
+        Ok(Manifest {
+            version: v.req_usize("version")?,
+            quick: v.get("quick").and_then(Value::as_bool).unwrap_or(false),
+            env,
+            model: ModelDesc::from_json(v.req("model")?)?,
+            artifacts,
+            root: PathBuf::new(),
+        })
+    }
+
+    /// Load `manifest.json` from an artifact directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow!("read {path:?}: {e} — run `make artifacts` first"))?;
+        let mut m = Self::parse(&text)?;
+        m.root = dir.to_path_buf();
+        Ok(m)
+    }
+
+    /// Load from the default artifact directory (see [`crate::artifact_dir`]).
+    pub fn load_default() -> Result<Self> {
+        Self::load(crate::artifact_dir())
+    }
+
+    /// Environment fingerprint string for the tuning cache.
+    pub fn env_fingerprint(&self) -> String {
+        format!("jax{}|{}|{}", self.env.jax, self.env.machine, self.env.interchange)
+    }
+
+    /// All Pallas artifacts for a kernel.
+    pub fn kernel_artifacts(&self, kernel: &str) -> Vec<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kernel == kernel && a.is_pallas())
+            .collect()
+    }
+
+    /// All Pallas artifacts matching a workload exactly (the AOT tuning
+    /// candidate set for that workload).
+    pub fn candidates_for(&self, w: &Workload) -> Vec<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.is_pallas() && a.workload().as_ref() == Some(w))
+            .collect()
+    }
+
+    /// The native-baseline artifact for a workload, if present.
+    pub fn native_for(&self, w: &Workload) -> Option<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| a.impl_name.as_deref() == Some("native") && a.workload().as_ref() == Some(w))
+    }
+
+    /// Distinct workloads that have Pallas artifacts for `kernel`.
+    pub fn workload_buckets(&self, kernel: &str) -> Vec<Workload> {
+        let mut out: Vec<Workload> = Vec::new();
+        for a in self.kernel_artifacts(kernel) {
+            if let Some(w) = a.workload() {
+                if !out.contains(&w) {
+                    out.push(w);
+                }
+            }
+        }
+        out
+    }
+
+    /// Find the artifact for (workload, config).
+    pub fn find(&self, w: &Workload, cfg: &Config) -> Option<&ArtifactEntry> {
+        self.candidates_for(w).into_iter().find(|a| &a.config() == cfg)
+    }
+
+    /// Transformer-block artifacts (the serving model), by (batch, seq).
+    pub fn model_artifacts(&self) -> Vec<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kernel == "transformer_block")
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> Manifest {
+        Manifest::parse(
+            r#"{
+              "version": 1,
+              "env": {"jax": "0.8.2", "machine": "x86_64", "interchange": "hlo-text-v1"},
+              "model": {
+                "hidden": 1024, "n_q_heads": 8, "n_kv_heads": 2, "head_dim": 128,
+                "mlp_hidden": 2816, "param_order": ["wq"], "param_shapes": {"wq": [1024, 1024]},
+                "params_per_block": 1048576
+              },
+              "artifacts": [
+                {"id": "attn/x/bq16_bk16_u1", "kernel": "attention", "impl": "pallas",
+                 "workload": {"batch": 1, "q_heads": 8, "kv_heads": 2, "seq_len": 128,
+                               "head_dim": 64, "dtype": "f32", "causal": true},
+                 "config": {"block_q": 16, "block_k": 16, "unroll": 1},
+                 "inputs": [{"shape": [1,8,128,64], "dtype": "f32"}],
+                 "output": {"shape": [1,8,128,64], "dtype": "f32"},
+                 "path": "attn/x/bq16_bk16_u1.hlo.txt", "bytes": 100, "sha256_16": "ab"},
+                {"id": "attn/x/native", "kernel": "attention", "impl": "native",
+                 "workload": {"batch": 1, "q_heads": 8, "kv_heads": 2, "seq_len": 128,
+                               "head_dim": 64, "dtype": "f32", "causal": true},
+                 "config": {}, "inputs": [], "output": null,
+                 "path": "attn/x/native.hlo.txt", "bytes": 50, "sha256_16": "cd"}
+              ]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_and_reconstructs_workload() {
+        let m = sample_manifest();
+        let a = &m.artifacts[0];
+        let w = a.workload().unwrap();
+        assert_eq!(w.key(), "attn_b1_h8kv2_s128_d64_f32_causal");
+        assert_eq!(a.config().req("block_q"), 16);
+        assert_eq!(m.env_fingerprint(), "jax0.8.2|x86_64|hlo-text-v1");
+    }
+
+    #[test]
+    fn candidates_exclude_native() {
+        let m = sample_manifest();
+        let w = m.artifacts[0].workload().unwrap();
+        assert_eq!(m.candidates_for(&w).len(), 1);
+        assert!(m.native_for(&w).is_some());
+    }
+
+    #[test]
+    fn buckets_dedupe() {
+        let m = sample_manifest();
+        assert_eq!(m.workload_buckets("attention").len(), 1);
+    }
+
+    #[test]
+    fn find_by_config() {
+        let m = sample_manifest();
+        let w = m.artifacts[0].workload().unwrap();
+        let cfg = Config::new(&[("block_q", 16), ("block_k", 16), ("unroll", 1)]);
+        assert!(m.find(&w, &cfg).is_some());
+        let other = Config::new(&[("block_q", 32), ("block_k", 16), ("unroll", 1)]);
+        assert!(m.find(&w, &other).is_none());
+    }
+
+    #[test]
+    fn null_output_is_none() {
+        let m = sample_manifest();
+        assert!(m.artifacts[1].output.is_none());
+        assert_eq!(m.artifacts[0].output.as_ref().unwrap().elements(), 8 * 128 * 64);
+    }
+
+    #[test]
+    fn missing_required_field_errors() {
+        assert!(Manifest::parse(r#"{"version": 1}"#).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        let dir = crate::artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.artifacts.len() > 50, "expected full artifact set, got {}", m.artifacts.len());
+        assert!(!m.workload_buckets("attention").is_empty());
+        assert!(!m.model_artifacts().is_empty());
+        // Every artifact file must exist.
+        for a in &m.artifacts {
+            assert!(m.root.join(&a.path).exists(), "missing {}", a.path);
+        }
+    }
+}

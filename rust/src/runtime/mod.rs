@@ -1,0 +1,256 @@
+//! PJRT runtime: load AOT-lowered HLO text, compile once, execute many.
+//!
+//! This is the *real* (non-simulated) execution platform.  `make
+//! artifacts` produces `artifacts/**.hlo.txt` plus `manifest.json`; this
+//! module compiles those artifacts on the XLA PJRT **CPU** client and
+//! runs them from the Rust hot path.  Python never appears at runtime.
+//!
+//! Interchange is HLO *text*: jax >= 0.5 serializes `HloModuleProto`s
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod manifest;
+
+pub use manifest::{ArtifactEntry, Manifest};
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context};
+
+use crate::Result;
+
+/// A PJRT client plus compilation helpers. One per process.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it to an executable.
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?)
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+
+    /// Convenience: load by manifest entry, resolving the relative path.
+    pub fn load_artifact(&self, root: &Path, entry: &ArtifactEntry) -> Result<Executable> {
+        self.load_hlo_text(root.join(&entry.path))
+            .with_context(|| format!("artifact {}", entry.id))
+    }
+
+    /// Upload a tensor to the device once; the returned buffer can be
+    /// passed to [`Executable::run_buffers`] any number of times.  This
+    /// keeps large weights off the per-request path (§Perf L3).
+    pub fn upload(&self, t: &TensorF32) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(&t.data, &t.shape, None)
+            .map_err(|e| anyhow!("upload {:?}: {e:?}", t.shape))
+    }
+}
+
+/// One f32 input tensor (flattened data + shape).
+#[derive(Debug, Clone)]
+pub struct TensorF32 {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl TensorF32 {
+    pub fn new(data: Vec<f32>, shape: &[usize]) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        TensorF32 { data, shape: shape.to_vec() }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        TensorF32 { data: vec![0.0; shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    /// Deterministic pseudo-random tensor (xorshift; no rand dependency on
+    /// the hot path).
+    pub fn random(shape: &[usize], seed: u64) -> Self {
+        let n: usize = shape.iter().product();
+        let mut state = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).max(1);
+        let data = (0..n)
+            .map(|_| {
+                state ^= state << 13;
+                state ^= state >> 7;
+                state ^= state << 17;
+                // map to [-1, 1)
+                ((state >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0) as f32
+            })
+            .collect();
+        TensorF32 { data, shape: shape.to_vec() }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(&self.data)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape to {dims:?}: {e:?}"))
+    }
+}
+
+/// A compiled HLO module ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with f32 inputs; returns the flattened f32 output of the
+    /// (single-element) result tuple.
+    pub fn run_f32(&self, inputs: &[TensorF32]) -> Result<Vec<f32>> {
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        self.run_literals(&literals)
+    }
+
+    /// Execute with pre-built literals (the timing path: no conversion
+    /// cost inside the measured region).
+    pub fn run_literals(&self, literals: &[xla::Literal]) -> Result<Vec<f32>> {
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("readback {}: {e:?}", self.name))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = lit.to_tuple1().map_err(|e| anyhow!("untuple {}: {e:?}", self.name))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec {}: {e:?}", self.name))
+    }
+
+    /// Prepare input literals once for repeated timed execution.
+    pub fn prepare(&self, inputs: &[TensorF32]) -> Result<Vec<xla::Literal>> {
+        inputs.iter().map(|t| t.to_literal()).collect()
+    }
+
+    /// Measure wall-clock latency: `warmup` unmeasured runs, then the
+    /// median of `iters` measured runs (µs). Median resists scheduler
+    /// noise better than the mean on a shared CPU.
+    pub fn time_us(&self, literals: &[xla::Literal], warmup: usize, iters: usize) -> Result<f64> {
+        for _ in 0..warmup {
+            self.run_once(literals)?;
+        }
+        let mut samples = Vec::with_capacity(iters.max(1));
+        for _ in 0..iters.max(1) {
+            let t0 = Instant::now();
+            self.run_once(literals)?;
+            samples.push(t0.elapsed().as_secs_f64() * 1e6);
+        }
+        samples.sort_by(f64::total_cmp);
+        Ok(samples[samples.len() / 2])
+    }
+
+    /// Execute with pre-uploaded device buffers (the serving hot path:
+    /// weights stay resident, only activations move per request).
+    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<f32>> {
+        let bufs = self
+            .exe
+            .execute_b(args)
+            .map_err(|e| anyhow!("execute_b {}: {e:?}", self.name))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("readback {}: {e:?}", self.name))?;
+        let out = lit.to_tuple1().map_err(|e| anyhow!("untuple {}: {e:?}", self.name))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec {}: {e:?}", self.name))
+    }
+
+    /// Buffer-argument counterpart of [`Executable::time_us`].
+    pub fn time_us_buffers(&self, args: &[&xla::PjRtBuffer], warmup: usize, iters: usize) -> Result<f64> {
+        for _ in 0..warmup {
+            self.run_buffers_sync(args)?;
+        }
+        let mut samples = Vec::with_capacity(iters.max(1));
+        for _ in 0..iters.max(1) {
+            let t0 = Instant::now();
+            self.run_buffers_sync(args)?;
+            samples.push(t0.elapsed().as_secs_f64() * 1e6);
+        }
+        samples.sort_by(f64::total_cmp);
+        Ok(samples[samples.len() / 2])
+    }
+
+    fn run_buffers_sync(&self, args: &[&xla::PjRtBuffer]) -> Result<()> {
+        let bufs = self
+            .exe
+            .execute_b(args)
+            .map_err(|e| anyhow!("execute_b {}: {e:?}", self.name))?;
+        bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("sync {}: {e:?}", self.name))?;
+        Ok(())
+    }
+
+    fn run_once(&self, literals: &[xla::Literal]) -> Result<()> {
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        // Synchronize: force the result to host so the timing covers the
+        // whole computation.
+        bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("sync {}: {e:?}", self.name))?;
+        Ok(())
+    }
+}
+
+/// Allclose helper for golden tests and examples.
+pub fn allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> bool {
+    a.len() == b.len()
+        && a.iter()
+            .zip(b)
+            .all(|(x, y)| (x - y).abs() <= atol + rtol * y.abs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_check() {
+        let t = TensorF32::new(vec![1.0; 6], &[2, 3]);
+        assert_eq!(t.shape, vec![2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn tensor_shape_mismatch_panics() {
+        TensorF32::new(vec![1.0; 5], &[2, 3]);
+    }
+
+    #[test]
+    fn random_is_deterministic_and_bounded() {
+        let a = TensorF32::random(&[128], 42);
+        let b = TensorF32::random(&[128], 42);
+        let c = TensorF32::random(&[128], 43);
+        assert_eq!(a.data, b.data);
+        assert_ne!(a.data, c.data);
+        assert!(a.data.iter().all(|v| (-1.0..1.0).contains(v)));
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        assert!(allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-6, 0.0));
+        assert!(!allclose(&[1.0], &[1.1], 1e-6, 1e-6));
+        assert!(!allclose(&[1.0], &[1.0, 2.0], 1.0, 1.0));
+    }
+}

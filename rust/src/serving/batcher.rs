@@ -1,0 +1,284 @@
+//! Sequence-length bucketing + dynamic batching.
+//!
+//! AOT compilation fixes tensor shapes, so the server routes each request
+//! to the smallest compiled (batch, seq) bucket that fits — the standard
+//! padded-bucket strategy of XLA/TPU serving stacks.  Within a bucket,
+//! requests are batched FIFO: a batch closes when it reaches the bucket's
+//! largest compiled batch size or when the oldest request has waited
+//! `max_wait_us`.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use super::Request;
+
+/// The compiled shape grid: which (batch, seq) pairs have artifacts.
+#[derive(Debug, Clone)]
+pub struct BucketPolicy {
+    /// Sorted distinct seq lengths with compiled artifacts.
+    pub seq_buckets: Vec<usize>,
+    /// For each seq bucket, sorted batch sizes available.
+    pub batch_sizes: Vec<Vec<usize>>,
+    /// Deadline after which a non-full batch is flushed.
+    pub max_wait_us: u64,
+}
+
+impl BucketPolicy {
+    pub fn new(mut pairs: Vec<(usize, usize)>, max_wait_us: u64) -> Self {
+        pairs.sort();
+        let mut seq_buckets: Vec<usize> = Vec::new();
+        let mut batch_sizes: Vec<Vec<usize>> = Vec::new();
+        for (seq, batch) in pairs {
+            match seq_buckets.binary_search(&seq) {
+                Ok(i) => {
+                    if !batch_sizes[i].contains(&batch) {
+                        batch_sizes[i].push(batch);
+                        batch_sizes[i].sort();
+                    }
+                }
+                Err(i) => {
+                    seq_buckets.insert(i, seq);
+                    batch_sizes.insert(i, vec![batch]);
+                }
+            }
+        }
+        BucketPolicy { seq_buckets, batch_sizes, max_wait_us }
+    }
+
+    /// Smallest seq bucket that fits `tokens`, if any.
+    pub fn bucket_for(&self, tokens: usize) -> Option<usize> {
+        let i = self.seq_buckets.partition_point(|&s| s < tokens);
+        (i < self.seq_buckets.len()).then(|| i)
+    }
+
+    /// Largest compiled batch size for bucket `i`.
+    pub fn max_batch(&self, i: usize) -> usize {
+        self.batch_sizes[i].last().copied().unwrap_or(1)
+    }
+
+    /// Largest compiled batch size <= n (pad up to the next compiled
+    /// size when flushing a partial batch).
+    pub fn batch_shape_for(&self, i: usize, n: usize) -> usize {
+        let sizes = &self.batch_sizes[i];
+        sizes
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or_else(|| self.max_batch(i))
+    }
+}
+
+/// A batch ready for execution.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub bucket: usize,
+    pub seq_len: usize,
+    /// Compiled batch shape (>= requests.len(); remainder is padding).
+    pub batch_shape: usize,
+    pub requests: Vec<Request>,
+    pub formed_at: Instant,
+}
+
+impl Batch {
+    /// Fraction of the compiled batch doing useful work.
+    pub fn occupancy(&self) -> f64 {
+        self.requests.len() as f64 / self.batch_shape.max(1) as f64
+    }
+}
+
+#[derive(Debug)]
+struct PendingQueue {
+    items: VecDeque<(Request, Instant)>,
+}
+
+/// FIFO dynamic batcher over seq buckets.
+#[derive(Debug)]
+pub struct DynamicBatcher {
+    policy: BucketPolicy,
+    queues: Vec<PendingQueue>,
+    /// Requests dropped because no bucket fits them.
+    pub rejected: Vec<Request>,
+}
+
+impl DynamicBatcher {
+    pub fn new(policy: BucketPolicy) -> Self {
+        let queues = (0..policy.seq_buckets.len())
+            .map(|_| PendingQueue { items: VecDeque::new() })
+            .collect();
+        DynamicBatcher { policy, queues, rejected: Vec::new() }
+    }
+
+    pub fn policy(&self) -> &BucketPolicy {
+        &self.policy
+    }
+
+    /// Enqueue a request; returns its bucket or None when rejected.
+    pub fn push(&mut self, req: Request, now: Instant) -> Option<usize> {
+        match self.policy.bucket_for(req.tokens) {
+            Some(i) => {
+                self.queues[i].items.push_back((req, now));
+                Some(i)
+            }
+            None => {
+                self.rejected.push(req);
+                None
+            }
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queues.iter().map(|q| q.items.len()).sum()
+    }
+
+    /// Pop the next ready batch: a full batch from any bucket, else an
+    /// expired partial batch (oldest request waited > max_wait_us).
+    /// `drain=true` flushes partial batches immediately (shutdown).
+    pub fn next_batch(&mut self, now: Instant, drain: bool) -> Option<Batch> {
+        // Full batches first (throughput), oldest bucket first.
+        let mut best: Option<(usize, Instant)> = None;
+        for (i, q) in self.queues.iter().enumerate() {
+            if q.items.is_empty() {
+                continue;
+            }
+            let oldest = q.items.front().unwrap().1;
+            let full = q.items.len() >= self.policy.max_batch(i);
+            let expired = now.duration_since(oldest).as_micros() as u64 >= self.policy.max_wait_us;
+            if full || expired || drain {
+                if best.map(|(_, t)| oldest < t).unwrap_or(true) {
+                    best = Some((i, oldest));
+                }
+            }
+        }
+        let (i, _) = best?;
+        let take = self.queues[i].items.len().min(self.policy.max_batch(i));
+        let requests: Vec<Request> = self.queues[i]
+            .items
+            .drain(..take)
+            .map(|(r, _)| r)
+            .collect();
+        let batch_shape = self.policy.batch_shape_for(i, requests.len());
+        Some(Batch {
+            bucket: i,
+            seq_len: self.policy.seq_buckets[i],
+            batch_shape,
+            requests,
+            formed_at: now,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> BucketPolicy {
+        BucketPolicy::new(
+            vec![(128, 1), (128, 2), (128, 4), (256, 1), (256, 2)],
+            10_000, // 10 ms
+        )
+    }
+
+    fn req(id: u64, tokens: usize) -> Request {
+        Request { id, tokens }
+    }
+
+    #[test]
+    fn buckets_are_sorted_and_deduped() {
+        let p = policy();
+        assert_eq!(p.seq_buckets, vec![128, 256]);
+        assert_eq!(p.batch_sizes[0], vec![1, 2, 4]);
+        assert_eq!(p.max_batch(0), 4);
+    }
+
+    #[test]
+    fn routes_to_smallest_fitting_bucket() {
+        let p = policy();
+        assert_eq!(p.bucket_for(100), Some(0));
+        assert_eq!(p.bucket_for(128), Some(0));
+        assert_eq!(p.bucket_for(129), Some(1));
+        assert_eq!(p.bucket_for(300), None);
+    }
+
+    #[test]
+    fn batch_shape_pads_up() {
+        let p = policy();
+        assert_eq!(p.batch_shape_for(0, 1), 1);
+        assert_eq!(p.batch_shape_for(0, 3), 4);
+        assert_eq!(p.batch_shape_for(1, 2), 2);
+    }
+
+    #[test]
+    fn full_batch_flushes_immediately() {
+        let mut b = DynamicBatcher::new(policy());
+        let t = Instant::now();
+        for i in 0..4 {
+            b.push(req(i, 100), t);
+        }
+        let batch = b.next_batch(t, false).expect("full batch ready");
+        assert_eq!(batch.requests.len(), 4);
+        assert_eq!(batch.batch_shape, 4);
+        assert_eq!(batch.occupancy(), 1.0);
+        assert!(b.next_batch(t, false).is_none());
+    }
+
+    #[test]
+    fn partial_batch_waits_for_deadline() {
+        let mut b = DynamicBatcher::new(policy());
+        let t0 = Instant::now();
+        b.push(req(1, 100), t0);
+        assert!(b.next_batch(t0, false).is_none(), "must wait");
+        let later = t0 + std::time::Duration::from_micros(10_001);
+        let batch = b.next_batch(later, false).expect("deadline flush");
+        assert_eq!(batch.requests.len(), 1);
+        assert_eq!(batch.batch_shape, 1);
+    }
+
+    #[test]
+    fn drain_flushes_everything() {
+        let mut b = DynamicBatcher::new(policy());
+        let t = Instant::now();
+        b.push(req(1, 100), t);
+        b.push(req(2, 200), t);
+        let mut got = 0;
+        while let Some(batch) = b.next_batch(t, true) {
+            got += batch.requests.len();
+        }
+        assert_eq!(got, 2);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn no_request_lost_or_duplicated() {
+        let mut b = DynamicBatcher::new(policy());
+        let t = Instant::now();
+        let n = 100;
+        for i in 0..n {
+            b.push(req(i, 64 + (i as usize * 37) % 200), t);
+        }
+        let mut seen = std::collections::HashSet::new();
+        while let Some(batch) = b.next_batch(t, true) {
+            for r in batch.requests {
+                assert!(seen.insert(r.id), "duplicate {}", r.id);
+            }
+        }
+        assert_eq!(seen.len() as u64 + b.rejected.len() as u64, n);
+    }
+
+    #[test]
+    fn oversize_requests_rejected() {
+        let mut b = DynamicBatcher::new(policy());
+        assert!(b.push(req(1, 1000), Instant::now()).is_none());
+        assert_eq!(b.rejected.len(), 1);
+    }
+
+    #[test]
+    fn fifo_within_bucket() {
+        let mut b = DynamicBatcher::new(policy());
+        let t = Instant::now();
+        for i in 0..6 {
+            b.push(req(i, 100), t);
+        }
+        let first = b.next_batch(t, false).unwrap();
+        assert_eq!(first.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+    }
+}

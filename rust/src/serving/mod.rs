@@ -1,0 +1,55 @@
+//! vLLM-style serving layer: request router, seq-length bucketing,
+//! dynamic batching, and **off-critical-path autotuning** (paper Q4.4).
+//!
+//! Architecture (single-process, mirroring a vLLM engine worker):
+//!
+//! ```text
+//!  clients ──► Router ──► BucketQueue(seq≤128) ──┐
+//!                    └──► BucketQueue(seq≤256) ──┤   commands
+//!                                                ▼
+//!                                        ExecutorThread (owns PJRT)
+//!                                          │  idle? → run one tuning
+//!                                          │          measurement and
+//!                                          │          maybe swap the
+//!                                          ▼          active variant
+//!                                       replies
+//! ```
+//!
+//! PJRT objects are not `Send`, so **all** XLA work lives on one executor
+//! thread; the router talks to it through channels.  Q4.4's *"perform
+//! autotuning based on workload metrics using idle GPU times"* falls out
+//! naturally: the executor runs one background tuning measurement
+//! whenever its request queue is empty, and hot-swaps the per-bucket
+//! active kernel variant when tuning finds a faster one.
+
+pub mod batcher;
+pub mod executor;
+pub mod router;
+
+pub use batcher::{Batch, BucketPolicy, DynamicBatcher};
+pub use executor::{ExecutorCommand, ExecutorHandle, ExecutorStats};
+pub use router::{Router, ServeReport, ServerConfig};
+
+/// One inference request: a prompt of `tokens` tokens.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    pub id: u64,
+    pub tokens: usize,
+}
+
+/// Completion record for one request.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub tokens: usize,
+    /// Seq-length bucket the request was served in.
+    pub bucket_seq: usize,
+    /// Batch size it shared an execution with.
+    pub batch_size: usize,
+    /// End-to-end latency (enqueue -> reply), µs.
+    pub latency_us: f64,
+    /// Pure execution latency of the batch it rode in, µs.
+    pub exec_us: f64,
+    /// Which kernel-config variant served it (artifact id).
+    pub variant: String,
+}

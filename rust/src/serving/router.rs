@@ -1,0 +1,189 @@
+//! The request router: trace replay, dynamic batching, reporting.
+//!
+//! [`Router::serve_trace`] replays a (deterministic, seeded) arrival
+//! trace through the [`DynamicBatcher`] into the executor thread and
+//! aggregates a [`ServeReport`] — the end-to-end driver behind
+//! `examples/serve_attention.rs` and `portatune serve`.
+
+use std::time::Instant;
+
+use crate::util::rng::Rng;
+use super::batcher::{BucketPolicy, DynamicBatcher};
+use super::executor::{ExecutorCommand, ExecutorHandle, ExecutorStats};
+use super::{Completion, Request};
+use crate::metrics::Summary;
+use crate::runtime::Manifest;
+use crate::Result;
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Flush deadline for partial batches (µs).
+    pub max_wait_us: u64,
+    /// Enable Q4.4 idle-time background tuning.
+    pub idle_tuning: bool,
+    /// Persistent tuning-cache file (Q4.3): bucket winners survive
+    /// restarts, so re-deployed servers start warm.
+    pub cache_path: Option<std::path::PathBuf>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { max_wait_us: 2_000, idle_tuning: true, cache_path: None }
+    }
+}
+
+/// Aggregated serving statistics.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub requests: usize,
+    pub rejected: usize,
+    pub batches: usize,
+    pub wall_seconds: f64,
+    pub throughput_rps: f64,
+    pub tokens_per_second: f64,
+    pub latency_p50_us: f64,
+    pub latency_p95_us: f64,
+    pub latency_p99_us: f64,
+    pub exec_p50_us: f64,
+    pub mean_batch_occupancy: f64,
+    pub executor: ExecutorStats,
+}
+
+/// The serving front end.
+pub struct Router {
+    executor: ExecutorHandle,
+    policy: BucketPolicy,
+}
+
+impl Router {
+    /// Build a router over the manifest's compiled model shapes.
+    pub fn new(manifest: Manifest, cfg: &ServerConfig) -> Result<Self> {
+        let cache = match &cfg.cache_path {
+            Some(p) => Some(crate::cache::TuningCache::open(p)?),
+            None => None,
+        };
+        let executor = ExecutorHandle::spawn(manifest, cfg.idle_tuning, cache)?;
+        let pairs: Vec<(usize, usize)> = executor.shapes.iter().map(|&(b, s)| (s, b)).collect();
+        if pairs.is_empty() {
+            anyhow::bail!("manifest has no transformer_block artifacts — rerun `make artifacts`");
+        }
+        let policy = BucketPolicy::new(pairs, cfg.max_wait_us);
+        Ok(Router { executor, policy })
+    }
+
+    pub fn policy(&self) -> &BucketPolicy {
+        &self.policy
+    }
+
+    pub fn executor(&self) -> &ExecutorHandle {
+        &self.executor
+    }
+
+    /// Force-drain the background tuning queue (for before/after demos).
+    pub fn finish_tuning(&self) -> Result<()> {
+        self.executor.finish_tuning()
+    }
+
+    /// Replay `requests` as fast as the executor allows, batching per
+    /// policy, and aggregate a report.
+    pub fn serve_trace(&self, requests: Vec<Request>) -> Result<ServeReport> {
+        let t0 = Instant::now();
+        let mut batcher = DynamicBatcher::new(self.policy.clone());
+        let total = requests.len();
+        let mut completions: Vec<Completion> = Vec::with_capacity(total);
+
+        let mut pending = std::collections::VecDeque::from(requests);
+        let enqueued_at = Instant::now();
+        while !pending.is_empty() || batcher.pending() > 0 {
+            // Admit a burst of arrivals.
+            for _ in 0..8 {
+                if let Some(r) = pending.pop_front() {
+                    batcher.push(r, Instant::now());
+                } else {
+                    break;
+                }
+            }
+            let drain = pending.is_empty();
+            while let Some(batch) = batcher.next_batch(Instant::now(), drain) {
+                let (tx, rx) = std::sync::mpsc::channel();
+                self.executor
+                    .tx
+                    .send(ExecutorCommand::Execute { batch, enqueued_at, reply: tx })
+                    .map_err(|_| anyhow::anyhow!("executor gone"))?;
+                completions.extend(rx.recv()?);
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+
+        let mut lat = Summary::new();
+        let mut exec = Summary::new();
+        let mut occupancy = Summary::new();
+        let mut tokens = 0usize;
+        let mut batches_seen = std::collections::HashSet::new();
+        for c in &completions {
+            lat.record(c.latency_us);
+            exec.record(c.exec_us);
+            tokens += c.tokens;
+            batches_seen.insert((c.variant.clone(), c.exec_us.to_bits()));
+            occupancy.record(1.0 / c.batch_size as f64);
+        }
+        let executor = self.executor.stats()?;
+        Ok(ServeReport {
+            requests: completions.len(),
+            rejected: batcher.rejected.len(),
+            batches: batches_seen.len(),
+            wall_seconds: wall,
+            throughput_rps: completions.len() as f64 / wall.max(1e-9),
+            tokens_per_second: tokens as f64 / wall.max(1e-9),
+            latency_p50_us: lat.p50(),
+            latency_p95_us: lat.p95(),
+            latency_p99_us: lat.p99(),
+            exec_p50_us: exec.p50(),
+            mean_batch_occupancy: occupancy.mean(),
+            executor,
+        })
+    }
+}
+
+/// Deterministic variable-length request trace (the paper's "sequences
+/// within a batch have variable lengths, as in real-world online
+/// inference"): log-normal token counts clamped to the largest bucket.
+pub fn synth_trace(n: usize, max_tokens: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::seed_from(seed);
+    (0..n as u64)
+        .map(|id| {
+            // ln N(mu, sigma) via Box-Muller on uniform draws.
+            let z = rng.normal();
+            let tokens = (48.0 * (0.6 * z).exp()).round().clamp(8.0, max_tokens as f64) as usize;
+            Request { id, tokens }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic_and_clamped() {
+        let a = synth_trace(100, 256, 7);
+        let b = synth_trace(100, 256, 7);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|r| r.tokens >= 8 && r.tokens <= 256));
+        // Variable lengths: not all equal.
+        assert!(a.iter().any(|r| r.tokens != a[0].tokens));
+    }
+
+    #[test]
+    fn trace_lengths_are_long_tailed() {
+        let t = synth_trace(2000, 100_000, 3);
+        let mean = t.iter().map(|r| r.tokens as f64).sum::<f64>() / t.len() as f64;
+        let median = {
+            let mut v: Vec<usize> = t.iter().map(|r| r.tokens).collect();
+            v.sort();
+            v[v.len() / 2] as f64
+        };
+        assert!(mean > median, "log-normal: mean {mean} > median {median}");
+    }
+}

@@ -1,0 +1,92 @@
+//! Mini benchmark harness (criterion is unavailable offline).
+//!
+//! Used by the `rust/benches/*.rs` targets (`harness = false`): each
+//! bench builds a [`Bench`] runner, registers closures, and gets
+//! warmup + repeated timing + median/mean/min reporting.  Honors
+//! `PORTATUNE_BENCH_FAST=1` to shrink iteration counts in CI.
+
+use std::time::Instant;
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_us: f64,
+    pub median_us: f64,
+    pub min_us: f64,
+}
+
+/// The harness.
+pub struct Bench {
+    results: Vec<BenchResult>,
+    target_iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        let fast = std::env::var("PORTATUNE_BENCH_FAST").is_ok();
+        Bench { results: Vec::new(), target_iters: if fast { 5 } else { 15 } }
+    }
+
+    /// Time `f`, discarding one warmup run, reporting over N runs.
+    /// The closure's return value is black-boxed to keep the work alive.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        // warmup
+        std::hint::black_box(f());
+        let mut samples = Vec::with_capacity(self.target_iters);
+        for _ in 0..self.target_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64() * 1e6);
+        }
+        samples.sort_by(f64::total_cmp);
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean_us: samples.iter().sum::<f64>() / samples.len() as f64,
+            median_us: samples[samples.len() / 2],
+            min_us: samples[0],
+        };
+        println!(
+            "bench {:<44} median {:>12.1} us   mean {:>12.1} us   min {:>12.1} us   ({} iters)",
+            res.name, res.median_us, res.mean_us, res.min_us, res.iters
+        );
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Footer for `cargo bench` output.
+    pub fn finish(self, suite: &str) {
+        println!("\n{} benchmarks complete: {} cases\n", suite, self.results.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_positive_times() {
+        let mut b = Bench::new();
+        let r = b.run("spin", || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(r.median_us >= 0.0);
+        assert_eq!(b.results().len(), 1);
+    }
+}

@@ -1,0 +1,118 @@
+//! A tiny declarative CLI flag parser (clap is unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments, with generated usage text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed arguments: positionals in order + flag map.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (without the program/subcommand prefix).
+    /// `bool_flags` lists flags that take no value.
+    pub fn parse(raw: &[String], bool_flags: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&name) {
+                    out.bools.push(name.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("flag --{name} expects a value"))?;
+                    out.flags.insert(name.to_string(), v.clone());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn flag_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|e| anyhow!("--{name} {s:?}: {e}")),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name)
+    }
+
+    /// Error on unknown flags (catch typos).
+    pub fn ensure_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k} (known: {})", known.join(", "));
+            }
+        }
+        for k in &self.bools {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = Args::parse(&sv(&["fig1", "--batch", "8", "--seq=1024", "--no-tuning"]), &["no-tuning"]).unwrap();
+        assert_eq!(a.positional, vec!["fig1"]);
+        assert_eq!(a.flag("batch"), Some("8"));
+        assert_eq!(a.flag("seq"), Some("1024"));
+        assert!(a.has("no-tuning"));
+        assert!(!a.has("other"));
+    }
+
+    #[test]
+    fn flag_parse_with_default() {
+        let a = Args::parse(&sv(&["--n", "5"]), &[]).unwrap();
+        assert_eq!(a.flag_parse("n", 1usize).unwrap(), 5);
+        assert_eq!(a.flag_parse("m", 7usize).unwrap(), 7);
+        assert!(a.flag_parse("n", 1.5f64).is_ok());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&sv(&["--batch"]), &[]).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let a = Args::parse(&sv(&["--typo", "1"]), &[]).unwrap();
+        assert!(a.ensure_known(&["batch"]).is_err());
+        assert!(a.ensure_known(&["typo"]).is_ok());
+    }
+}

@@ -1,0 +1,12 @@
+//! In-tree replacements for the usual small dependencies (the offline
+//! build has no crates.io access beyond `xla` and `anyhow`):
+//!
+//! - [`rng`] — a seedable, reproducible PRNG (xoshiro256**);
+//! - [`cli`] — a tiny declarative flag parser for the `portatune` binary;
+//! - [`tmp`] — unique temp directories for tests;
+//! - [`bench`] — the mini criterion-style harness behind `cargo bench`.
+
+pub mod bench;
+pub mod cli;
+pub mod rng;
+pub mod tmp;

@@ -1,0 +1,65 @@
+//! Unique temporary directories for tests (tempfile is unavailable
+//! offline).  Directories are removed on drop.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A temp directory deleted on drop.
+#[derive(Debug)]
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    pub fn new(prefix: &str) -> std::io::Result<TempDir> {
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let pid = std::process::id();
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.subsec_nanos())
+            .unwrap_or(0);
+        let path = std::env::temp_dir().join(format!("portatune-{prefix}-{pid}-{n}-{nanos}"));
+        std::fs::create_dir_all(&path)?;
+        Ok(TempDir { path })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn join(&self, rel: &str) -> PathBuf {
+        self.path.join(rel)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn creates_and_cleans_up() {
+        let p;
+        {
+            let t = TempDir::new("x").unwrap();
+            p = t.path().to_path_buf();
+            assert!(p.exists());
+            std::fs::write(t.join("f.txt"), "hi").unwrap();
+        }
+        assert!(!p.exists());
+    }
+
+    #[test]
+    fn unique_paths() {
+        let a = TempDir::new("u").unwrap();
+        let b = TempDir::new("u").unwrap();
+        assert_ne!(a.path(), b.path());
+    }
+}

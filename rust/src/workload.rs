@@ -1,0 +1,242 @@
+//! Workload descriptors: the *scenario* a kernel configuration is tuned for.
+//!
+//! The paper's central observation is that the optimal kernel configuration
+//! depends on **both** the platform and the workload (tensor shapes, dtype,
+//! batch size) — so workloads are first-class values, used as cache keys,
+//! sweep axes, and inputs to the analytical cost models.
+
+/// Element type of kernel operands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F16,
+    BF16,
+}
+
+impl DType {
+    pub fn bytes(self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::F16 | DType::BF16 => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F16 => "f16",
+            DType::BF16 => "bf16",
+        }
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A concrete kernel invocation scenario.
+///
+/// `Attention` follows the paper's Llama-3 geometry: `q_heads` query heads
+/// sharing `kv_heads` KV heads (GQA), `seq_len` is the *maximum* sequence
+/// length in the batch; actual per-sequence lengths are drawn by
+/// [`crate::experiments::workload_gen`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Workload {
+    Attention {
+        batch: usize,
+        q_heads: usize,
+        kv_heads: usize,
+        seq_len: usize,
+        head_dim: usize,
+        dtype: DType,
+        causal: bool,
+    },
+    RmsNorm {
+        n_rows: usize,
+        hidden: usize,
+        dtype: DType,
+    },
+    VectorAdd {
+        n: usize,
+        dtype: DType,
+    },
+}
+
+impl Workload {
+    /// The paper's primary workload: Llama-3.1-8B attention (128 head dim,
+    /// 32 query heads, 8 KV heads) at a given batch size and seq length.
+    pub fn llama3_attention(batch: usize, seq_len: usize) -> Self {
+        Workload::Attention {
+            batch,
+            q_heads: 32,
+            kv_heads: 8,
+            seq_len,
+            head_dim: 128,
+            dtype: DType::F16,
+            causal: true,
+        }
+    }
+
+    /// RMS norm over the hidden states of Llama-3-8B for `batch` sequences
+    /// of length `seq_len` (rows = tokens).
+    pub fn llama3_rms(batch: usize, seq_len: usize) -> Self {
+        Workload::RmsNorm {
+            n_rows: batch * seq_len,
+            hidden: 4096,
+            dtype: DType::F16,
+        }
+    }
+
+    /// Model FLOPs (useful work, not hardware-inflated).
+    pub fn flops(&self) -> f64 {
+        match *self {
+            Workload::Attention {
+                batch,
+                q_heads,
+                seq_len,
+                head_dim,
+                causal,
+                ..
+            } => {
+                let full = 4.0 * batch as f64 * q_heads as f64 * (seq_len as f64).powi(2) * head_dim as f64;
+                if causal {
+                    full / 2.0
+                } else {
+                    full
+                }
+            }
+            Workload::RmsNorm { n_rows, hidden, .. } => 3.0 * n_rows as f64 * hidden as f64,
+            Workload::VectorAdd { n, .. } => n as f64,
+        }
+    }
+
+    /// Minimum HBM traffic in bytes (the memory-roofline denominator):
+    /// each operand read once, output written once.
+    pub fn min_bytes(&self) -> f64 {
+        match *self {
+            Workload::Attention {
+                batch,
+                q_heads,
+                kv_heads,
+                seq_len,
+                head_dim,
+                dtype,
+                ..
+            } => {
+                let q = (batch * q_heads * seq_len * head_dim) as f64;
+                let kv = 2.0 * (batch * kv_heads * seq_len * head_dim) as f64;
+                (2.0 * q + kv) * dtype.bytes() as f64
+            }
+            Workload::RmsNorm { n_rows, hidden, dtype } => {
+                (2.0 * (n_rows * hidden) as f64 + hidden as f64) * dtype.bytes() as f64
+            }
+            Workload::VectorAdd { n, dtype } => 3.0 * n as f64 * dtype.bytes() as f64,
+        }
+    }
+
+    /// Arithmetic intensity (FLOPs per byte of compulsory traffic).
+    pub fn arithmetic_intensity(&self) -> f64 {
+        self.flops() / self.min_bytes()
+    }
+
+    pub fn dtype(&self) -> DType {
+        match *self {
+            Workload::Attention { dtype, .. }
+            | Workload::RmsNorm { dtype, .. }
+            | Workload::VectorAdd { dtype, .. } => dtype,
+        }
+    }
+
+    /// Stable string key for caches and file names, e.g.
+    /// `attn_b64_h32kv8_s1024_d128_f16_causal`.
+    pub fn key(&self) -> String {
+        match *self {
+            Workload::Attention {
+                batch,
+                q_heads,
+                kv_heads,
+                seq_len,
+                head_dim,
+                dtype,
+                causal,
+            } => format!(
+                "attn_b{batch}_h{q_heads}kv{kv_heads}_s{seq_len}_d{head_dim}_{dtype}{}",
+                if causal { "_causal" } else { "" }
+            ),
+            Workload::RmsNorm { n_rows, hidden, dtype } => {
+                format!("rms_n{n_rows}_h{hidden}_{dtype}")
+            }
+            Workload::VectorAdd { n, dtype } => format!("vecadd_n{n}_{dtype}"),
+        }
+    }
+
+    pub fn kernel_name(&self) -> &'static str {
+        match self {
+            Workload::Attention { .. } => "attention",
+            Workload::RmsNorm { .. } => "rms_norm",
+            Workload::VectorAdd { .. } => "vector_add",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_bytes() {
+        assert_eq!(DType::F32.bytes(), 4);
+        assert_eq!(DType::F16.bytes(), 2);
+        assert_eq!(DType::BF16.bytes(), 2);
+    }
+
+    #[test]
+    fn llama3_attention_geometry() {
+        let w = Workload::llama3_attention(64, 1024);
+        match w {
+            Workload::Attention { q_heads, kv_heads, head_dim, .. } => {
+                assert_eq!((q_heads, kv_heads, head_dim), (32, 8, 128));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn causal_halves_flops() {
+        let mk = |causal| Workload::Attention {
+            batch: 2,
+            q_heads: 4,
+            kv_heads: 4,
+            seq_len: 128,
+            head_dim: 64,
+            dtype: DType::F16,
+            causal,
+        };
+        assert!((mk(true).flops() * 2.0 - mk(false).flops()).abs() < 1.0);
+    }
+
+    #[test]
+    fn attention_is_compute_bound_at_scale() {
+        // Flash attention at seq 1024 should have high arithmetic intensity
+        // (that's why the naive baseline loses: it destroys this ratio).
+        let w = Workload::llama3_attention(64, 1024);
+        assert!(w.arithmetic_intensity() > 100.0);
+    }
+
+    #[test]
+    fn rms_is_memory_bound() {
+        let w = Workload::llama3_rms(64, 1024);
+        assert!(w.arithmetic_intensity() < 2.0);
+    }
+
+    #[test]
+    fn keys_are_unique_per_shape() {
+        let a = Workload::llama3_attention(1, 512).key();
+        let b = Workload::llama3_attention(2, 512).key();
+        assert_ne!(a, b);
+        assert!(a.starts_with("attn_b1_"));
+    }
+
+}

@@ -1,0 +1,140 @@
+//! Cross-language numerical contract: HLO artifacts produced by the
+//! Python AOT path must reproduce the Python-computed golden outputs
+//! when executed from Rust via PJRT.
+//!
+//! This is THE correctness link between Layer 1/2 (JAX/Pallas) and
+//! Layer 3 (Rust): if it holds, the autotuner is choosing among
+//! *numerically identical* kernels, exactly as the paper requires.
+
+use portatune::json;
+use portatune::runtime::{allclose, Engine, Manifest, TensorF32};
+
+struct Golden {
+    artifact: String,
+    inputs: Vec<TensorF32>,
+    expected: Vec<f32>,
+    atol: f32,
+    rtol: f32,
+}
+
+fn load_golden(name: &str) -> Option<Golden> {
+    let dir = portatune::artifact_dir();
+    let path = dir.join("golden").join(name);
+    let text = std::fs::read_to_string(path).ok()?;
+    let v = json::parse(&text).ok()?;
+    let tensor = |t: &json::Value| -> Option<TensorF32> {
+        let shape: Vec<usize> = t.req_arr("shape").ok()?.iter().map(|d| d.as_usize().unwrap()).collect();
+        let data: Vec<f32> = t
+            .req_arr("data")
+            .ok()?
+            .iter()
+            .map(|x| x.as_f64().unwrap() as f32)
+            .collect();
+        Some(TensorF32::new(data, &shape))
+    };
+    Some(Golden {
+        artifact: v.req_str("artifact").ok()?.to_string(),
+        inputs: v.req_arr("inputs").ok()?.iter().map(|t| tensor(t).unwrap()).collect(),
+        expected: tensor(v.req("expected").ok()?)?.data,
+        atol: v.req_f64("atol").ok()? as f32,
+        rtol: v.req_f64("rtol").ok()? as f32,
+    })
+}
+
+fn check_golden(name: &str) {
+    let dir = portatune::artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping {name}: run `make artifacts` first");
+        return;
+    }
+    let g = load_golden(name).unwrap_or_else(|| panic!("golden file {name} unreadable"));
+    let engine = Engine::cpu().expect("pjrt cpu client");
+    let exe = engine.load_hlo_text(dir.join(&g.artifact)).expect("compile artifact");
+    let out = exe.run_f32(&g.inputs).expect("execute artifact");
+    assert_eq!(out.len(), g.expected.len(), "output arity");
+    assert!(
+        allclose(&out, &g.expected, g.atol, g.rtol),
+        "{name}: rust PJRT output diverges from python golden (max diff {})",
+        out.iter()
+            .zip(&g.expected)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    );
+}
+
+#[test]
+fn attention_matches_python_golden() {
+    check_golden("attn_tiny.json");
+}
+
+#[test]
+fn rms_norm_matches_python_golden() {
+    check_golden("rms_tiny.json");
+}
+
+#[test]
+fn vector_add_matches_python_golden() {
+    check_golden("vecadd_tiny.json");
+}
+
+#[test]
+fn buffer_path_matches_literal_path() {
+    // run_f32 (literal args) and run_buffers (device-resident args) must
+    // agree bit-for-bit — the serving fast path cannot change numerics.
+    let dir = portatune::artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    let Some(g) = load_golden("vecadd_tiny.json") else { return };
+    let engine = Engine::cpu().unwrap();
+    let exe = engine.load_hlo_text(dir.join(&g.artifact)).unwrap();
+    let via_literals = exe.run_f32(&g.inputs).unwrap();
+    let bufs: Vec<xla::PjRtBuffer> = g.inputs.iter().map(|t| engine.upload(t).unwrap()).collect();
+    let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+    let via_buffers = exe.run_buffers(&refs).unwrap();
+    assert_eq!(via_literals, via_buffers);
+}
+
+#[test]
+fn every_attention_config_artifact_matches_native() {
+    // Config invariance at the artifact level: for the smallest bucket,
+    // every Pallas configuration must agree with the native-baseline
+    // artifact on the same inputs (the real-system analogue of the
+    // python `test_block_config_invariance`).
+    let dir = portatune::artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let bucket = manifest
+        .workload_buckets("attention")
+        .into_iter()
+        .min_by_key(|w| match w {
+            portatune::workload::Workload::Attention { batch, seq_len, .. } => batch * seq_len,
+            _ => usize::MAX,
+        })
+        .expect("attention buckets exist");
+    let native = manifest.native_for(&bucket).expect("native artifact");
+    let native_exe = engine.load_artifact(&manifest.root, native).unwrap();
+    let inputs: Vec<TensorF32> = native
+        .inputs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| TensorF32::random(&s.shape, 7 + i as u64))
+        .collect();
+    let reference = native_exe.run_f32(&inputs).unwrap();
+
+    let mut checked = 0;
+    for a in manifest.candidates_for(&bucket).iter().take(6) {
+        let exe = engine.load_artifact(&manifest.root, a).unwrap();
+        let out = exe.run_f32(&inputs).unwrap();
+        assert!(
+            allclose(&out, &reference, 3e-3, 3e-3),
+            "config {} diverges from native",
+            a.config()
+        );
+        checked += 1;
+    }
+    assert!(checked > 0);
+}

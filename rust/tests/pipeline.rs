@@ -1,0 +1,226 @@
+//! Integration tests across module boundaries: real PJRT autotuning,
+//! cache persistence through the full tune path, cross-platform
+//! tune/transplant pipeline, and the serving router end to end.
+
+use portatune::autotuner::{self, PjrtEvaluator, SimEvaluator, Strategy};
+use portatune::cache::TuningCache;
+use portatune::config::spaces;
+use portatune::experiments;
+use portatune::kernels::baselines::{triton_codegen, TemplateLibrary};
+use portatune::platform::{PlatformId, SimGpu};
+use portatune::runtime::{Engine, Manifest};
+use portatune::serving::{router::synth_trace, Router, ServerConfig};
+use portatune::util::tmp::TempDir;
+use portatune::workload::Workload;
+
+fn artifacts_present() -> bool {
+    portatune::artifact_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn real_pjrt_autotune_vecadd() {
+    // The full empirical loop on real artifacts: enumerate -> compile ->
+    // measure -> pick. Uses vector-add (cheapest kernel).
+    if !artifacts_present() {
+        return;
+    }
+    let manifest = Manifest::load_default().unwrap();
+    let engine = Engine::cpu().unwrap();
+    let w = manifest.workload_buckets("vector_add")[0];
+    let space = spaces::aot_space_for(&w);
+    let mut eval = PjrtEvaluator::new(&engine, &manifest, w, 1, 3).unwrap();
+    let out = autotuner::tune(&space, &w, &mut eval, &Strategy::Exhaustive, 0).unwrap();
+    assert!(out.best_latency_us > 0.0);
+    assert_eq!(out.evaluated, space.enumerate(&w).len());
+    assert!(space.contains(&out.best, &w));
+}
+
+#[test]
+fn real_pjrt_autotune_rms_with_persistent_cache() {
+    if !artifacts_present() {
+        return;
+    }
+    let manifest = Manifest::load_default().unwrap();
+    let engine = Engine::cpu().unwrap();
+    let w = manifest.workload_buckets("rms_norm")[0];
+    let space = spaces::aot_space_for(&w);
+    // The AOT space enumerates more configs than were lowered for this
+    // bucket; missing artifacts must surface as invalid, not errors.
+    let dir = TempDir::new("pipeline-cache").unwrap();
+    let cache_path = dir.join("cache.json");
+    let best_first;
+    {
+        let mut cache = TuningCache::open(&cache_path).unwrap();
+        let mut eval = PjrtEvaluator::new(&engine, &manifest, w, 1, 3).unwrap();
+        let out = autotuner::tune_cached(&mut cache, &space, &w, &mut eval, &Strategy::Exhaustive, 0).unwrap();
+        assert!(!out.from_cache);
+        best_first = out.best.clone();
+        cache.save().unwrap();
+    }
+    // Re-open: the déjà-vu path (paper Q4.3) must serve from disk.
+    {
+        let mut cache = TuningCache::open(&cache_path).unwrap();
+        assert_eq!(cache.len(), 1);
+        let mut eval = PjrtEvaluator::new(&engine, &manifest, w, 1, 3).unwrap();
+        let out = autotuner::tune_cached(&mut cache, &space, &w, &mut eval, &Strategy::Exhaustive, 0).unwrap();
+        assert!(out.from_cache);
+        assert_eq!(out.best, best_first);
+        assert_eq!(out.evaluated, 0);
+    }
+}
+
+#[test]
+fn cross_platform_tune_then_transplant_pipeline() {
+    // Sim pipeline mirroring the paper's Q2 experiment end to end.
+    let w = Workload::llama3_attention(8, 1024);
+    let space = spaces::attention_sim_space();
+    let a100 = SimGpu::a100();
+    let mi250 = SimGpu::mi250();
+
+    let mut ea = SimEvaluator::new(a100.clone(), w, triton_codegen(a100.spec.vendor));
+    let oa = autotuner::tune(&space, &w, &mut ea, &Strategy::Exhaustive, 0).unwrap();
+    let mut em = SimEvaluator::new(mi250.clone(), w, triton_codegen(mi250.spec.vendor));
+    let om = autotuner::tune(&space, &w, &mut em, &Strategy::Exhaustive, 0).unwrap();
+
+    // Native optima differ and transplants lose (or are invalid).
+    assert_ne!(oa.best, om.best);
+    match mi250.attention_latency_us(&oa.best, &w, &triton_codegen(mi250.spec.vendor)) {
+        Ok(us) => assert!(us >= om.best_latency_us),
+        Err(_) => {} // invalid on MI250: also a paper outcome
+    }
+    let back = a100
+        .attention_latency_us(&om.best, &w, &triton_codegen(a100.spec.vendor))
+        .expect("MI250 optima are small-staging; they run on A100");
+    assert!(back > oa.best_latency_us, "transplant cannot beat native tuning");
+}
+
+#[test]
+fn serving_router_end_to_end_smoke() {
+    if !artifacts_present() {
+        return;
+    }
+    let manifest = Manifest::load_default().unwrap();
+    let router = Router::new(
+        manifest,
+        &ServerConfig { max_wait_us: 500, idle_tuning: false, cache_path: None },
+    )
+    .unwrap();
+    let trace = synth_trace(6, router.policy().seq_buckets.last().copied().unwrap(), 9);
+    let report = router.serve_trace(trace).unwrap();
+    assert_eq!(report.requests, 6);
+    assert_eq!(report.rejected, 0);
+    assert!(report.throughput_rps > 0.0);
+    assert!(report.latency_p50_us > 0.0);
+    assert!(report.latency_p99_us >= report.latency_p50_us);
+}
+
+#[test]
+fn serving_background_tuning_improves_or_keeps_active_variants() {
+    if !artifacts_present() {
+        return;
+    }
+    let manifest = Manifest::load_default().unwrap();
+    let router = Router::new(
+        manifest,
+        &ServerConfig { max_wait_us: 500, idle_tuning: true, cache_path: None },
+    )
+    .unwrap();
+    router.finish_tuning().unwrap();
+    let stats = router.executor().stats().unwrap();
+    assert!(stats.variants_measured >= stats.active.len());
+    // Every swap must claim a strict improvement.
+    for s in &stats.swaps {
+        assert!(s.gain > 1.0, "swap {:?} without improvement", s.shape);
+    }
+    // After tuning, the active variant of each shape is its measured argmin.
+    assert!(!stats.active_us.is_empty());
+}
+
+#[test]
+fn serving_winners_survive_restart_via_cache() {
+    // Q4.3 x Q4.4: tune once, persist, restart the server -> warm start
+    // with zero re-tuning.
+    if !artifacts_present() {
+        return;
+    }
+    let dir = TempDir::new("serve-cache").unwrap();
+    let cache_path = dir.join("serving_cache.json");
+    let cfg = ServerConfig {
+        max_wait_us: 500,
+        idle_tuning: true,
+        cache_path: Some(cache_path.clone()),
+    };
+    let (actives, measured);
+    {
+        let router = Router::new(Manifest::load_default().unwrap(), &cfg).unwrap();
+        router.finish_tuning().unwrap();
+        let stats = router.executor().stats().unwrap();
+        assert_eq!(stats.warm_started, 0, "first boot is cold");
+        measured = stats.variants_measured;
+        assert!(measured > 0);
+        actives = stats.active.clone();
+    }
+    assert!(cache_path.exists(), "winners persisted");
+    {
+        let router = Router::new(Manifest::load_default().unwrap(), &cfg).unwrap();
+        let stats = router.executor().stats().unwrap();
+        assert_eq!(stats.warm_started, actives.len(), "all buckets warm-started");
+        assert_eq!(stats.variants_measured, 0, "no re-tuning on restart");
+        assert_eq!(stats.active, actives, "cached winners adopted");
+        // finish_tuning is now a no-op (queue emptied by warm start).
+        router.finish_tuning().unwrap();
+        assert_eq!(router.executor().stats().unwrap().variants_measured, 0);
+    }
+}
+
+#[test]
+fn experiments_run_all_produces_every_report() {
+    let reports = experiments::run_all();
+    let slugs: Vec<&str> = reports.iter().map(|(s, _)| s.as_str()).collect();
+    for expected in [
+        "fig1a", "fig1b", "fig1c", "fig2a", "fig2b", "fig2_summary", "fig3", "fig4", "fig5a",
+        "fig5b", "fig5_real_hlo", "table1", "table2",
+    ] {
+        assert!(slugs.contains(&expected), "missing report {expected}");
+    }
+    for (slug, rep) in &reports {
+        assert!(!rep.columns.is_empty(), "{slug} has no columns");
+        if slug != "fig5_real_hlo" {
+            assert!(!rep.rows.is_empty(), "{slug} has no rows");
+        }
+        // TSV render includes every row.
+        let tsv = rep.to_tsv();
+        assert_eq!(
+            tsv.lines().filter(|l| !l.starts_with('#')).count(),
+            rep.rows.len() + 1,
+            "{slug} TSV row count"
+        );
+    }
+}
+
+#[test]
+fn reports_save_to_disk() {
+    let dir = TempDir::new("reports").unwrap();
+    let rep = experiments::tables::table2();
+    rep.save_tsv(dir.path(), "table2").unwrap();
+    let text = std::fs::read_to_string(dir.join("table2.tsv")).unwrap();
+    assert!(text.contains("sglang"));
+}
+
+#[test]
+fn platform_fingerprints_are_distinct_and_stable() {
+    let a = PlatformId::SimA100.fingerprint();
+    let b = PlatformId::SimMi250.fingerprint();
+    let c = PlatformId::CpuPjrt.fingerprint();
+    assert_ne!(a, b);
+    assert_ne!(a, c);
+    assert_eq!(a, PlatformId::SimA100.fingerprint());
+}
+
+#[test]
+fn vendor_library_never_serves_foreign_platform() {
+    let lib = TemplateLibrary::flash_attn();
+    assert!(lib.latency_us(&SimGpu::mi250(), &Workload::llama3_attention(4, 512)).is_err());
+    let rocm = TemplateLibrary::rocm_flash_attn();
+    assert!(rocm.latency_us(&SimGpu::a100(), &Workload::llama3_attention(4, 512)).is_err());
+}

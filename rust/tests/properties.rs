@@ -1,0 +1,347 @@
+//! Property-based tests (seeded randomized invariants; proptest is not
+//! available in the offline build, so generation runs on the in-tree
+//! deterministic RNG — failures always reproduce).
+
+use std::collections::HashSet;
+use std::time::Instant;
+
+use portatune::cache::{entry_now, TuningCache};
+use portatune::config::{spaces, Config, ConfigSpace};
+use portatune::json::{self, Value};
+use portatune::kernels::baselines::{triton_codegen, HAND_TUNED};
+use portatune::platform::SimGpu;
+use portatune::serving::batcher::{BucketPolicy, DynamicBatcher};
+use portatune::serving::Request;
+use portatune::util::rng::Rng;
+use portatune::workload::{DType, Workload};
+
+const CASES: usize = 60;
+
+fn random_attention_workload(rng: &mut Rng) -> Workload {
+    let batches = [1usize, 2, 4, 8, 16, 32, 64, 128];
+    let seqs = [128usize, 256, 512, 1024, 2048, 4096, 8192];
+    Workload::Attention {
+        batch: *rng.choose(&batches).unwrap(),
+        q_heads: 32,
+        kv_heads: *rng.choose(&[8usize, 32]).unwrap(),
+        seq_len: *rng.choose(&seqs).unwrap(),
+        head_dim: *rng.choose(&[64usize, 128]).unwrap(),
+        dtype: if rng.f64() < 0.5 { DType::F16 } else { DType::BF16 },
+        causal: rng.f64() < 0.8,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Configuration-space invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_enumerated_configs_always_satisfy_contains() {
+    let mut rng = Rng::seed_from(11);
+    for _ in 0..CASES {
+        let w = random_attention_workload(&mut rng);
+        let space = spaces::attention_sim_space();
+        for cfg in space.enumerate(&w) {
+            assert!(space.contains(&cfg, &w), "{cfg} for {}", w.key());
+        }
+    }
+}
+
+#[test]
+fn prop_samples_are_members_and_deterministic() {
+    let mut rng = Rng::seed_from(12);
+    for case in 0..CASES {
+        let w = random_attention_workload(&mut rng);
+        let space = spaces::attention_sim_space();
+        let mut r1 = Rng::seed_from(case as u64);
+        let mut r2 = Rng::seed_from(case as u64);
+        let a = space.sample(&w, &mut r1, 100);
+        let b = space.sample(&w, &mut r2, 100);
+        assert_eq!(a, b, "sampling must be deterministic per seed");
+        if let Some(cfg) = a {
+            assert!(space.contains(&cfg, &w));
+        }
+    }
+}
+
+#[test]
+fn prop_neighbors_are_valid_and_one_step() {
+    let mut rng = Rng::seed_from(13);
+    for _ in 0..CASES {
+        let w = random_attention_workload(&mut rng);
+        let space = spaces::attention_sim_space();
+        let Some(cfg) = space.sample(&w, &mut rng, 100) else { continue };
+        for n in space.neighbors(&cfg, &w) {
+            assert!(space.contains(&n, &w));
+            let diffs = n.0.iter().filter(|(k, v)| cfg.get(k) != Some(**v)).count();
+            assert_eq!(diffs, 1);
+        }
+    }
+}
+
+#[test]
+fn prop_config_key_roundtrips() {
+    let mut rng = Rng::seed_from(14);
+    let space = spaces::attention_sim_space();
+    let w = Workload::llama3_attention(8, 1024);
+    for _ in 0..CASES {
+        let Some(cfg) = space.sample(&w, &mut rng, 100) else { continue };
+        assert_eq!(Config::parse(&cfg.key()), Some(cfg));
+    }
+}
+
+#[test]
+fn prop_constraint_rejection_is_sound() {
+    // A config violating a named constraint is never enumerated.
+    let space = ConfigSpace::new("t")
+        .param("x", &[1, 2, 3, 4])
+        .param("y", &[1, 2, 3, 4])
+        .constraint("x_le_y", |c, _| c.req("x") <= c.req("y"));
+    let w = Workload::VectorAdd { n: 64, dtype: DType::F32 };
+    let all = space.enumerate(&w);
+    assert_eq!(all.len(), 10); // upper triangle of 4x4
+    for c in all {
+        assert!(c.req("x") <= c.req("y"));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Platform-model invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_model_latency_finite_positive_or_invalid() {
+    let mut rng = Rng::seed_from(21);
+    let space = spaces::attention_sim_space();
+    for _ in 0..CASES {
+        let w = random_attention_workload(&mut rng);
+        let Some(cfg) = space.sample(&w, &mut rng, 100) else { continue };
+        for gpu in [SimGpu::a100(), SimGpu::mi250()] {
+            match gpu.attention_latency_us(&cfg, &w, &HAND_TUNED) {
+                Ok(us) => assert!(us.is_finite() && us > 0.0, "{cfg} on {}", gpu.spec.name),
+                Err(e) => assert!(!e.reason.is_empty()),
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_model_monotone_in_batch() {
+    // Fixed config, doubled batch => strictly more time.
+    let mut rng = Rng::seed_from(22);
+    let space = spaces::attention_sim_space();
+    for _ in 0..CASES {
+        let seq = *rng.choose(&[512usize, 1024, 2048]).unwrap();
+        let b = *rng.choose(&[1usize, 2, 4, 8, 16]).unwrap();
+        let w1 = Workload::llama3_attention(b, seq);
+        let w2 = Workload::llama3_attention(b * 4, seq);
+        let Some(cfg) = space.sample(&w1, &mut rng, 100) else { continue };
+        let gpu = SimGpu::a100();
+        let (Ok(t1), Ok(t2)) = (
+            gpu.attention_latency_us(&cfg, &w1, &HAND_TUNED),
+            gpu.attention_latency_us(&cfg, &w2, &HAND_TUNED),
+        ) else {
+            continue;
+        };
+        assert!(t2 > t1, "{cfg}: batch {b}x4 {t2:.1}us <= {t1:.1}us");
+    }
+}
+
+#[test]
+fn prop_codegen_efficiency_never_helps() {
+    // Triton codegen (eff < 1) can never beat hand-tuned on the same
+    // config — autotuning wins by config choice, not by magic.
+    let mut rng = Rng::seed_from(23);
+    let space = spaces::attention_sim_space();
+    for _ in 0..CASES {
+        let w = random_attention_workload(&mut rng);
+        let Some(cfg) = space.sample(&w, &mut rng, 100) else { continue };
+        for gpu in [SimGpu::a100(), SimGpu::mi250()] {
+            let cg = triton_codegen(gpu.spec.vendor);
+            if let (Ok(hand), Ok(triton)) = (
+                gpu.attention_latency_us(&cfg, &w, &HAND_TUNED),
+                gpu.attention_latency_us(&cfg, &w, &cg),
+            ) {
+                assert!(triton >= hand * 0.999, "{cfg}: triton {triton} < hand {hand}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_validity_agrees_with_latency() {
+    // latency_us errors iff validate_attention errors.
+    let mut rng = Rng::seed_from(24);
+    let space = spaces::attention_sim_space();
+    for _ in 0..CASES {
+        let w = random_attention_workload(&mut rng);
+        let Some(cfg) = space.sample(&w, &mut rng, 100) else { continue };
+        let gpu = SimGpu::mi250();
+        assert_eq!(
+            gpu.validate_attention(&cfg, &w).is_ok(),
+            gpu.attention_latency_us(&cfg, &w, &HAND_TUNED).is_ok()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Cache invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_cache_put_get_identity() {
+    let mut rng = Rng::seed_from(31);
+    let mut cache = TuningCache::ephemeral();
+    let mut inserted = Vec::new();
+    for i in 0..CASES {
+        let w = random_attention_workload(&mut rng);
+        let platform = format!("p{}", rng.below(3));
+        let space = format!("s{}", rng.below(2));
+        let cfg = Config::new(&[("BLOCK_M", 16 << rng.below(4) as i64)]);
+        let e = entry_now(&cfg, i as f64 + 1.0, 10, 1, &platform, &space, 0.1);
+        cache.put(&w, e.clone());
+        inserted.push((w, platform, space, e));
+    }
+    // Last write per key wins; every inserted key resolves consistently.
+    for (w, platform, space, _) in &inserted {
+        let got = cache.get(w, platform, space).expect("inserted key must hit");
+        assert_eq!(&got.platform, platform);
+        assert_eq!(&got.space, space);
+    }
+}
+
+#[test]
+fn prop_cache_disk_roundtrip_random() {
+    let dir = portatune::util::tmp::TempDir::new("prop-cache").unwrap();
+    let path = dir.join("c.json");
+    let mut rng = Rng::seed_from(32);
+    let mut entries = Vec::new();
+    {
+        let mut cache = TuningCache::open(&path).unwrap();
+        for i in 0..30 {
+            let w = random_attention_workload(&mut rng);
+            let cfg = Config::new(&[("BLOCK_M", 32), ("num_warps", 1 << rng.below(4) as i64)]);
+            let e = entry_now(&cfg, rng.range(1.0, 1e6), i, i / 2, "plat", "space", rng.f64());
+            cache.put(&w, e.clone());
+            entries.push((w, e));
+        }
+        cache.save().unwrap();
+    }
+    let cache = TuningCache::open(&path).unwrap();
+    for (w, e) in &entries {
+        let got = cache.get(w, "plat", "space").expect("persisted");
+        // floats survive the JSON roundtrip to f64 precision
+        if got.config == e.config {
+            assert!((got.latency_us - e.latency_us).abs() < 1e-9 * e.latency_us.max(1.0));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Batcher invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_batcher_conserves_requests() {
+    let mut rng = Rng::seed_from(41);
+    for _ in 0..20 {
+        let policy = BucketPolicy::new(
+            vec![(128, 1), (128, 4), (256, 2), (512, 1)],
+            rng.below(5000) as u64,
+        );
+        let mut b = DynamicBatcher::new(policy);
+        let now = Instant::now();
+        let n = 50 + rng.below(200);
+        let mut pushed = HashSet::new();
+        let mut popped = HashSet::new();
+        for id in 0..n as u64 {
+            let tokens = 1 + rng.below(700);
+            b.push(Request { id, tokens }, now);
+            pushed.insert(id);
+            // Randomly interleave batch pops.
+            if rng.f64() < 0.3 {
+                while let Some(batch) = b.next_batch(now, false) {
+                    for r in batch.requests {
+                        assert!(popped.insert(r.id), "duplicate {}", r.id);
+                    }
+                }
+            }
+        }
+        while let Some(batch) = b.next_batch(now, true) {
+            assert!(batch.requests.len() <= batch.batch_shape);
+            for r in &batch.requests {
+                assert!(r.tokens <= batch.seq_len, "request overflows bucket");
+                assert!(popped.insert(r.id), "duplicate {}", r.id);
+            }
+        }
+        let rejected: HashSet<u64> = b.rejected.iter().map(|r| r.id).collect();
+        assert_eq!(popped.len() + rejected.len(), pushed.len(), "requests lost");
+        assert!(popped.is_disjoint(&rejected));
+    }
+}
+
+#[test]
+fn prop_batcher_batch_shape_is_compiled_shape() {
+    let mut rng = Rng::seed_from(42);
+    let policy = BucketPolicy::new(vec![(128, 1), (128, 2), (128, 4), (256, 2)], 0);
+    let shapes: HashSet<(usize, usize)> =
+        [(128, 1), (128, 2), (128, 4), (256, 2)].into_iter().collect();
+    let mut b = DynamicBatcher::new(policy);
+    let now = Instant::now();
+    for id in 0..300u64 {
+        b.push(Request { id, tokens: 1 + rng.below(256) }, now);
+        while let Some(batch) = b.next_batch(now, false) {
+            assert!(
+                shapes.contains(&(batch.seq_len, batch.batch_shape)),
+                "batch shape ({}, {}) was never compiled",
+                batch.seq_len,
+                batch.batch_shape
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// JSON fuzz
+// ---------------------------------------------------------------------
+
+fn random_json(rng: &mut Rng, depth: usize) -> Value {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Value::Null,
+        1 => Value::Bool(rng.f64() < 0.5),
+        2 => Value::Num((rng.f64() * 2e6).round() / 8.0 - 1e5),
+        3 => {
+            let len = rng.below(12);
+            Value::Str((0..len).map(|_| *rng.choose(&['a', 'β', '"', '\\', '\n', '😀', ' ']).unwrap()).collect())
+        }
+        4 => Value::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => Value::Obj(
+            (0..rng.below(5))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_trees() {
+    let mut rng = Rng::seed_from(51);
+    for _ in 0..200 {
+        let v = random_json(&mut rng, 4);
+        let compact = json::parse(&v.dump()).unwrap_or_else(|e| panic!("{e}: {}", v.dump()));
+        assert_eq!(compact, v);
+        let pretty = json::parse(&v.pretty(2)).unwrap();
+        assert_eq!(pretty, v);
+    }
+}
+
+#[test]
+fn prop_json_parser_never_panics_on_garbage() {
+    let mut rng = Rng::seed_from(52);
+    let alphabet: Vec<char> = "{}[]\",:0123456789.eE+-truefalsn \\u\n".chars().collect();
+    for _ in 0..500 {
+        let len = rng.below(60);
+        let s: String = (0..len).map(|_| *rng.choose(&alphabet).unwrap()).collect();
+        let _ = json::parse(&s); // must return, never panic
+    }
+}
