@@ -25,7 +25,7 @@ fn main() -> portatune::Result<()> {
         "space {:?}: {} raw configurations, {} valid for this workload",
         space.name,
         space.cardinality(),
-        space.enumerate(&w).len()
+        space.enumerate(&w).count()
     );
 
     // ----------------------------------------------------------------
@@ -52,10 +52,10 @@ fn main() -> portatune::Result<()> {
         "[cpu-pjrt] best {} @ {:.1} us measured ({} artifacts compiled+timed)",
         real.best, real.best_latency_us, real.evaluated
     );
-    for (cfg, lat) in &real.history {
+    for (fp, lat) in &real.history {
         match lat {
-            Some(us) => println!("    {cfg:<16} {us:>8.1} us"),
-            None => println!("    {cfg:<16}  INVALID"),
+            Some(us) => println!("    cfg#{fp:016x} {us:>8.1} us"),
+            None => println!("    cfg#{fp:016x}  INVALID"),
         }
     }
 

@@ -1,19 +1,23 @@
 //! Evaluators: attach latencies to configurations.
 //!
 //! - [`SimEvaluator`] asks an analytical platform model (instant,
-//!   deterministic) — used for the paper-figure reproductions.
-//! - [`PjrtEvaluator`] compiles and *actually executes* the AOT artifact
-//!   for a configuration on the PJRT CPU client and reports measured
-//!   wall-clock — the real autotuning loop (compile cost dominates, just
-//!   as the paper notes: "compilation time accounts for around 80 % of
-//!   the autotuning time").
-
-use std::collections::HashMap;
+//!   deterministic) — used for the paper-figure reproductions.  It is
+//!   `Send + Sync` and overrides [`Evaluator::evaluate_batch`] with a
+//!   `std::thread::scope` worker pool sized by `available_parallelism`,
+//!   so batching strategies evaluate configurations on every core while
+//!   results merge back in submission order (bit-identical to the
+//!   sequential path).
+//! - [`PjrtEvaluator`] (feature `pjrt`) compiles and *actually executes*
+//!   the AOT artifact for a configuration on the PJRT CPU client and
+//!   reports measured wall-clock — the real autotuning loop (compile
+//!   cost dominates, just as the paper notes: "compilation time accounts
+//!   for around 80 % of the autotuning time").  PJRT handles are not
+//!   `Send`, so it relies on the trait's sequential `evaluate_batch`
+//!   default.
 
 use crate::autotuner::Evaluator;
 use crate::config::Config;
 use crate::platform::model::{Codegen, InvalidConfig, SimGpu};
-use crate::runtime::{Engine, Executable, Manifest, TensorF32};
 use crate::workload::Workload;
 
 /// Evaluate against an analytical GPU model.
@@ -23,12 +27,61 @@ pub struct SimEvaluator {
     pub codegen: Codegen,
     /// Count of model evaluations performed (profiling aid).
     pub calls: usize,
+    /// Fan batches across a worker pool (on by default; the merge is
+    /// deterministic, so the only observable difference is wall-clock).
+    parallel: bool,
+    /// Synthetic per-evaluation work (spin iterations) standing in for
+    /// the compile+measure cost a real evaluator pays.  0 = pure model.
+    /// The autotuner bench uses this to measure thread-pool scaling at a
+    /// realistic per-config cost; it never changes the returned latency.
+    eval_cost: u32,
 }
 
 impl SimEvaluator {
     pub fn new(gpu: SimGpu, workload: Workload, codegen: Codegen) -> Self {
-        SimEvaluator { gpu, workload, codegen, calls: 0 }
+        SimEvaluator { gpu, workload, codegen, calls: 0, parallel: true, eval_cost: 0 }
     }
+
+    /// Disable the worker pool: every evaluation runs on the caller's
+    /// thread.  Used as the baseline in equivalence tests and benches.
+    pub fn sequential(mut self) -> Self {
+        self.parallel = false;
+        self
+    }
+
+    /// Attach a synthetic per-evaluation cost (spin iterations).
+    pub fn with_eval_cost(mut self, iters: u32) -> Self {
+        self.eval_cost = iters;
+        self
+    }
+}
+
+/// The model query itself, free of `&mut self` so worker threads can
+/// share the evaluator state immutably.
+fn eval_config(
+    gpu: &SimGpu,
+    workload: &Workload,
+    codegen: &Codegen,
+    cost: u32,
+    cfg: &Config,
+    _fidelity: f64,
+) -> Result<f64, InvalidConfig> {
+    burn(cost, cfg);
+    gpu.latency_us(cfg, workload, codegen)
+}
+
+/// Deterministic spin standing in for per-config compile/measure time.
+/// Serial sqrt chain: the compiler cannot collapse it, and the result
+/// feeds `black_box`, so `cost` iterations really execute.
+fn burn(cost: u32, cfg: &Config) {
+    if cost == 0 {
+        return;
+    }
+    let mut x = 1.0 + (cfg.fingerprint() & 0x3FF) as f64 * 1e-12;
+    for _ in 0..cost {
+        x = (x * 1.000_000_1).sqrt();
+    }
+    std::hint::black_box(x);
 }
 
 impl Evaluator for SimEvaluator {
@@ -44,89 +97,145 @@ impl Evaluator for SimEvaluator {
         )
     }
 
-    fn evaluate_fidelity(&mut self, cfg: &Config, _fidelity: f64) -> Result<f64, InvalidConfig> {
-        self.calls += 1;
-        self.gpu.latency_us(cfg, &self.workload, &self.codegen)
-    }
-}
-
-/// Evaluate by executing the real AOT artifact for a configuration.
-///
-/// Compiled executables are memoized, so re-evaluations (e.g. at higher
-/// fidelity) only pay the execution cost.
-pub struct PjrtEvaluator<'a> {
-    engine: &'a Engine,
-    manifest: &'a Manifest,
-    workload: Workload,
-    /// Inputs pre-uploaded as device buffers: conversions stay off the
-    /// measurement hot path (§Perf L3).
-    buffers: Vec<xla::PjRtBuffer>,
-    warmup: usize,
-    iters: usize,
-    compiled: HashMap<String, Executable>,
-    /// Cumulative compile count (the dominant tuning cost).
-    pub compiles: usize,
-}
-
-impl<'a> PjrtEvaluator<'a> {
-    /// `iters` at fidelity 1.0; lower fidelity proportionally reduces the
-    /// measured iterations (min 1).
-    pub fn new(engine: &'a Engine, manifest: &'a Manifest, workload: Workload, warmup: usize, iters: usize) -> crate::Result<Self> {
-        let entry = manifest
-            .candidates_for(&workload)
-            .into_iter()
-            .next()
-            .ok_or_else(|| anyhow::anyhow!("no artifacts for workload {}", workload.key()))?;
-        let buffers = entry
-            .inputs
-            .iter()
-            .enumerate()
-            .map(|(i, spec)| {
-                engine.upload(&TensorF32::random(&spec.shape, 0xC0FFEE + i as u64))
-            })
-            .collect::<crate::Result<Vec<_>>>()?;
-        Ok(PjrtEvaluator {
-            engine,
-            manifest,
-            workload,
-            buffers,
-            warmup,
-            iters,
-            compiled: HashMap::new(),
-            compiles: 0,
-        })
-    }
-
-    fn executable(&mut self, cfg: &Config) -> Result<&Executable, InvalidConfig> {
-        let key = cfg.key();
-        if !self.compiled.contains_key(&key) {
-            let entry = self.manifest.find(&self.workload, cfg).ok_or_else(|| InvalidConfig {
-                reason: format!("no AOT artifact for config {cfg} on {}", self.workload.key()),
-            })?;
-            let exe = self
-                .engine
-                .load_artifact(&self.manifest.root, entry)
-                .map_err(|e| InvalidConfig { reason: format!("compile failed: {e}") })?;
-            self.compiles += 1;
-            self.compiled.insert(key.clone(), exe);
-        }
-        Ok(&self.compiled[&key])
-    }
-}
-
-impl Evaluator for PjrtEvaluator<'_> {
-    fn name(&self) -> String {
-        crate::platform::PlatformId::CpuPjrt.fingerprint()
-    }
-
     fn evaluate_fidelity(&mut self, cfg: &Config, fidelity: f64) -> Result<f64, InvalidConfig> {
-        let warmup = self.warmup;
-        let iters = ((self.iters as f64 * fidelity).round() as usize).max(1);
-        self.executable(cfg)?; // borrow dance: compile first
-        let args: Vec<&xla::PjRtBuffer> = self.buffers.iter().collect();
-        let exe = &self.compiled[&cfg.key()];
-        exe.time_us_buffers(&args, warmup, iters)
-            .map_err(|e| InvalidConfig { reason: format!("execute: {e}") })
+        self.calls += 1;
+        eval_config(&self.gpu, &self.workload, &self.codegen, self.eval_cost, cfg, fidelity)
+    }
+
+    /// Parallel batched evaluation: contiguous chunks of the batch go to
+    /// scoped worker threads; each worker writes into its own disjoint
+    /// slice of the result vector, so the merge is in submission order
+    /// by construction.
+    fn evaluate_batch(
+        &mut self,
+        cfgs: &[Config],
+        fidelity: f64,
+    ) -> Vec<Result<f64, InvalidConfig>> {
+        self.calls += cfgs.len();
+        let pool = if self.parallel {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            1
+        };
+        let workers = pool.min(cfgs.len());
+        let (gpu, workload, codegen) = (&self.gpu, &self.workload, &self.codegen);
+        let cost = self.eval_cost;
+        if workers <= 1 {
+            return cfgs
+                .iter()
+                .map(|c| eval_config(gpu, workload, codegen, cost, c, fidelity))
+                .collect();
+        }
+        let mut results: Vec<Option<Result<f64, InvalidConfig>>> = vec![None; cfgs.len()];
+        let chunk = cfgs.len().div_ceil(workers);
+        std::thread::scope(|s| {
+            for (cfg_chunk, out_chunk) in cfgs.chunks(chunk).zip(results.chunks_mut(chunk)) {
+                s.spawn(move || {
+                    for (cfg, slot) in cfg_chunk.iter().zip(out_chunk.iter_mut()) {
+                        *slot = Some(eval_config(gpu, workload, codegen, cost, cfg, fidelity));
+                    }
+                });
+            }
+        });
+        results.into_iter().map(|r| r.expect("worker filled every slot")).collect()
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtEvaluator;
+
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use std::collections::HashMap;
+
+    use super::*;
+    use crate::runtime::{Engine, Executable, Manifest, TensorF32};
+
+    /// Evaluate by executing the real AOT artifact for a configuration.
+    ///
+    /// Compiled executables are memoized under the config's u64
+    /// fingerprint (no per-lookup string allocation), so re-evaluations
+    /// (e.g. at higher fidelity) only pay the execution cost.
+    pub struct PjrtEvaluator<'a> {
+        engine: &'a Engine,
+        manifest: &'a Manifest,
+        workload: Workload,
+        /// Inputs pre-uploaded as device buffers: conversions stay off the
+        /// measurement hot path (§Perf L3).
+        buffers: Vec<xla::PjRtBuffer>,
+        warmup: usize,
+        iters: usize,
+        compiled: HashMap<u64, Executable>,
+        /// Cumulative compile count (the dominant tuning cost).
+        pub compiles: usize,
+    }
+
+    impl<'a> PjrtEvaluator<'a> {
+        /// `iters` at fidelity 1.0; lower fidelity proportionally reduces the
+        /// measured iterations (min 1).
+        pub fn new(
+            engine: &'a Engine,
+            manifest: &'a Manifest,
+            workload: Workload,
+            warmup: usize,
+            iters: usize,
+        ) -> crate::Result<Self> {
+            let entry = manifest
+                .candidates_for(&workload)
+                .into_iter()
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("no artifacts for workload {}", workload.key()))?;
+            let buffers = entry
+                .inputs
+                .iter()
+                .enumerate()
+                .map(|(i, spec)| {
+                    engine.upload(&TensorF32::random(&spec.shape, 0xC0FFEE + i as u64))
+                })
+                .collect::<crate::Result<Vec<_>>>()?;
+            Ok(PjrtEvaluator {
+                engine,
+                manifest,
+                workload,
+                buffers,
+                warmup,
+                iters,
+                compiled: HashMap::new(),
+                compiles: 0,
+            })
+        }
+
+        fn executable(&mut self, cfg: &Config) -> Result<&Executable, InvalidConfig> {
+            let key = cfg.fingerprint();
+            if !self.compiled.contains_key(&key) {
+                let entry = self.manifest.find(&self.workload, cfg).ok_or_else(|| InvalidConfig {
+                    reason: format!("no AOT artifact for config {cfg} on {}", self.workload.key()),
+                })?;
+                let exe = self
+                    .engine
+                    .load_artifact(&self.manifest.root, entry)
+                    .map_err(|e| InvalidConfig { reason: format!("compile failed: {e}") })?;
+                self.compiles += 1;
+                self.compiled.insert(key, exe);
+            }
+            Ok(&self.compiled[&key])
+        }
+    }
+
+    impl Evaluator for PjrtEvaluator<'_> {
+        fn name(&self) -> String {
+            crate::platform::PlatformId::CpuPjrt.fingerprint()
+        }
+
+        fn evaluate_fidelity(&mut self, cfg: &Config, fidelity: f64) -> Result<f64, InvalidConfig> {
+            let warmup = self.warmup;
+            let iters = ((self.iters as f64 * fidelity).round() as usize).max(1);
+            self.executable(cfg)?; // borrow dance: compile first
+            let args: Vec<&xla::PjRtBuffer> = self.buffers.iter().collect();
+            let exe = &self.compiled[&cfg.fingerprint()];
+            exe.time_us_buffers(&args, warmup, iters)
+                .map_err(|e| InvalidConfig { reason: format!("execute: {e}") })
+        }
     }
 }
 
@@ -155,5 +264,50 @@ mod tests {
         let w = Workload::llama3_attention(4, 512);
         let e = SimEvaluator::new(SimGpu::mi250(), w, HAND_TUNED);
         assert_eq!(e.name(), crate::platform::PlatformId::SimMi250.fingerprint());
+    }
+
+    #[test]
+    fn sim_evaluator_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<SimEvaluator>();
+    }
+
+    #[test]
+    fn parallel_batch_is_bit_identical_to_sequential() {
+        let w = Workload::llama3_attention(8, 512);
+        let space = crate::config::spaces::attention_sim_space();
+        let cfgs: Vec<Config> = space.enumerate(&w).collect();
+        assert!(cfgs.len() > 100, "need a real batch");
+        let mut par = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
+        let mut seq = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED).sequential();
+        let a = par.evaluate_batch(&cfgs, 1.0);
+        let b = seq.evaluate_batch(&cfgs, 1.0);
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            match (x, y) {
+                (Ok(p), Ok(q)) => assert_eq!(p.to_bits(), q.to_bits(), "cfg {i} latency differs"),
+                (Err(_), Err(_)) => {}
+                _ => panic!("cfg {i}: validity differs between parallel and sequential"),
+            }
+        }
+        assert_eq!(par.calls, cfgs.len());
+        assert_eq!(seq.calls, cfgs.len());
+    }
+
+    #[test]
+    fn eval_cost_does_not_change_results() {
+        let w = Workload::llama3_attention(4, 512);
+        let cfg = Config::new(&[
+            ("BLOCK_M", 64),
+            ("BLOCK_N", 64),
+            ("num_warps", 4),
+            ("num_stages", 2),
+            ("waves_per_eu", 0),
+        ]);
+        let mut plain = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
+        let mut costly = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED).with_eval_cost(500);
+        let a = plain.evaluate(&cfg).unwrap();
+        let b = costly.evaluate(&cfg).unwrap();
+        assert_eq!(a.to_bits(), b.to_bits());
     }
 }

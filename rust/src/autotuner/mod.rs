@@ -11,11 +11,20 @@
 //! here is (a) cached persistently via [`crate::cache`], (b) composable
 //! with background execution ([`crate::serving::executor`]), and (c)
 //! explicit about invalid configurations (they are counted, not hidden).
+//!
+//! **Throughput** (the paper's §Q4.2 time budget): evaluation goes
+//! through [`Evaluator::evaluate_batch`], which parallel evaluators
+//! ([`SimEvaluator`]) fan across a thread pool.  Results are merged in
+//! submission order, so parallel runs are bit-identical to sequential
+//! ones — `cargo bench --bench autotuner` reports configs/second both
+//! ways.
 
 pub mod evaluators;
 pub mod search;
 
-pub use evaluators::{PjrtEvaluator, SimEvaluator};
+#[cfg(feature = "pjrt")]
+pub use evaluators::PjrtEvaluator;
+pub use evaluators::SimEvaluator;
 pub use search::Strategy;
 
 use std::time::Instant;
@@ -37,6 +46,23 @@ pub trait Evaluator {
     }
 
     fn evaluate_fidelity(&mut self, cfg: &Config, fidelity: f64) -> Result<f64, InvalidConfig>;
+
+    /// Evaluate a batch of configurations, returning results in
+    /// submission order (`out[i]` belongs to `cfgs[i]`).
+    ///
+    /// The default implementation is sequential, so evaluators that
+    /// cannot parallelize — [`PjrtEvaluator`]'s PJRT handles are not
+    /// `Send` — work unchanged.  Parallel evaluators override this and
+    /// fan the batch across a worker pool; because the contract fixes
+    /// the output *order*, callers cannot observe the difference except
+    /// in wall-clock time.
+    fn evaluate_batch(
+        &mut self,
+        cfgs: &[Config],
+        fidelity: f64,
+    ) -> Vec<Result<f64, InvalidConfig>> {
+        cfgs.iter().map(|c| self.evaluate_fidelity(c, fidelity)).collect()
+    }
 }
 
 /// One tuning run's outcome.
@@ -48,8 +74,11 @@ pub struct TuneOutcome {
     pub evaluated: usize,
     /// Configurations rejected as invalid on this platform.
     pub invalid: usize,
-    /// (config, latency) pairs in evaluation order; `None` = invalid.
-    pub history: Vec<(Config, Option<f64>)>,
+    /// (config fingerprint, latency) pairs in evaluation order;
+    /// `None` = invalid.  Fingerprints, not configs: the log exists for
+    /// counting/spread analysis, and cloning hundreds of `BTreeMap`s
+    /// per run was pure overhead (only `best` needs the full config).
+    pub history: Vec<(u64, Option<f64>)>,
     pub wall_seconds: f64,
     /// True when the result was served from the persistent cache.
     pub from_cache: bool,
@@ -84,9 +113,9 @@ pub fn tune(
     Some(TuneOutcome {
         best,
         best_latency_us,
-        evaluated: rec.history.len(),
+        evaluated: rec.len(),
         invalid: rec.invalid,
-        history: rec.history,
+        history: rec.evals,
         wall_seconds: t0.elapsed().as_secs_f64(),
         from_cache: false,
     })
@@ -109,45 +138,53 @@ pub fn tune_guided(
 ) -> Option<TuneOutcome> {
     let t0 = Instant::now();
     // Rank by prior (invalid-on-prior configs go last, not dropped: the
-    // prior is a model, not ground truth).
-    let mut ranked: Vec<(Config, Option<f64>)> = space
-        .enumerate(workload)
-        .into_iter()
-        .map(|c| {
-            let p = prior.evaluate(&c).ok();
-            (c, p)
-        })
-        .collect();
-    ranked.sort_by(|a, b| match (a.1, b.1) {
-        (Some(x), Some(y)) => x.total_cmp(&y),
-        (Some(_), None) => std::cmp::Ordering::Less,
-        (None, Some(_)) => std::cmp::Ordering::Greater,
-        (None, None) => std::cmp::Ordering::Equal,
-    });
-    let mut history = Vec::new();
-    let mut invalid = 0;
-    let mut best: Option<(Config, f64)> = None;
-    for (cfg, _) in ranked.into_iter().take(top_k.max(1)) {
-        match target.evaluate(&cfg) {
-            Ok(us) => {
-                if best.as_ref().map(|(_, b)| us < *b).unwrap_or(true) {
-                    best = Some((cfg.clone(), us));
-                }
-                history.push((cfg, Some(us)));
-            }
-            Err(_) => {
-                invalid += 1;
-                history.push((cfg, None));
-            }
-        }
+    // prior is a model, not ground truth).  The ranking pass streams
+    // through the batch API so a parallel prior uses every core.
+    let configs: Vec<Config> = space.enumerate(workload).collect();
+    let mut priors: Vec<Option<f64>> = Vec::with_capacity(configs.len());
+    for chunk in configs.chunks(search::EVAL_BATCH) {
+        priors.extend(prior.evaluate_batch(chunk, 1.0).into_iter().map(|r| r.ok()));
     }
-    let (best, best_latency_us) = best?;
+    let mut ranked: Vec<(Config, Option<f64>)> = configs.into_iter().zip(priors).collect();
+
+    // Total order: prior-score ties (common when the prior ignores a
+    // parameter) break on the config fingerprint, so the measured
+    // top-k set is pinned regardless of `select_nth_unstable_by`'s
+    // unspecified ordering among equals.
+    fn by_prior(a: &(Config, Option<f64>), b: &(Config, Option<f64>)) -> std::cmp::Ordering {
+        let primary = match (a.1, b.1) {
+            (Some(x), Some(y)) => x.total_cmp(&y),
+            (Some(_), None) => std::cmp::Ordering::Less,
+            (None, Some(_)) => std::cmp::Ordering::Greater,
+            (None, None) => std::cmp::Ordering::Equal,
+        };
+        primary.then_with(|| a.0.fingerprint().cmp(&b.0.fingerprint()))
+    }
+
+    // Only top_k configs are ever measured, so an O(n) partial selection
+    // replaces the old full O(n log n) sort of the entire ranked space;
+    // only the k survivors are sorted (for measurement order).
+    let k = top_k.max(1).min(ranked.len());
+    if k < ranked.len() {
+        ranked.select_nth_unstable_by(k - 1, by_prior);
+        ranked.truncate(k);
+    }
+    ranked.sort_by(by_prior);
+
+    // Measure the survivors through a Recorder: same bookkeeping
+    // (fingerprint history, invalid count, running best) as every
+    // search strategy.
+    let mut rec = search::Recorder::default();
+    for (cfg, _) in ranked {
+        rec.eval(target, &cfg, 1.0);
+    }
+    let (best, best_latency_us) = rec.best()?;
     Some(TuneOutcome {
         best,
         best_latency_us,
-        evaluated: history.len(),
-        invalid,
-        history,
+        evaluated: rec.len(),
+        invalid: rec.invalid,
+        history: rec.evals,
         wall_seconds: t0.elapsed().as_secs_f64(),
         from_cache: false,
     })
@@ -155,6 +192,15 @@ pub fn tune_guided(
 
 /// Cache-aware tuning (Q4.3): return a reusable cached result when the
 /// platform/space fingerprints match, otherwise tune and persist.
+///
+/// The space component of the cache key is
+/// [`ConfigSpace::fingerprint_key`] — a stable FNV-1a digest of the
+/// space definition (name, parameters, choices, constraint *names*) —
+/// so edits to parameters or choices invalidate old entries, not just
+/// cardinality changes.  Constraint *bodies* are closures and cannot be
+/// hashed, so a hit is additionally re-validated with
+/// [`ConfigSpace::contains`]; a cached winner the current space rejects
+/// falls through to a fresh tune instead of being served.
 pub fn tune_cached(
     cache: &mut TuningCache,
     space: &ConfigSpace,
@@ -164,18 +210,22 @@ pub fn tune_cached(
     seed: u64,
 ) -> Option<TuneOutcome> {
     let platform = eval.name();
-    let space_fp = format!("{}#{}", space.name, space.cardinality());
+    let space_fp = space.fingerprint_key();
     if let Some(hit) = cache.get(workload, &platform, &space_fp) {
-        let best = hit.config()?;
-        return Some(TuneOutcome {
-            best,
-            best_latency_us: hit.latency_us,
-            evaluated: 0,
-            invalid: hit.invalid,
-            history: Vec::new(),
-            wall_seconds: 0.0,
-            from_cache: true,
-        });
+        if let Some(best) = hit.config() {
+            if space.contains(&best, workload) {
+                return Some(TuneOutcome {
+                    best,
+                    best_latency_us: hit.latency_us,
+                    evaluated: 0,
+                    invalid: hit.invalid,
+                    history: Vec::new(),
+                    wall_seconds: 0.0,
+                    from_cache: true,
+                });
+            }
+        }
+        // Unparseable or no-longer-valid entry: re-tune and overwrite.
     }
     let outcome = tune(space, workload, eval, strategy, seed)?;
     cache.put(
@@ -215,8 +265,7 @@ mod tests {
         let gpu = SimGpu::a100();
         let best_direct = space
             .enumerate(&w)
-            .iter()
-            .filter_map(|c| gpu.latency_us(c, &w, &HAND_TUNED).ok())
+            .filter_map(|c| gpu.latency_us(&c, &w, &HAND_TUNED).ok())
             .fold(f64::INFINITY, f64::min);
         assert!((out.best_latency_us - best_direct).abs() < 1e-9);
         assert!(out.evaluated > 400);
@@ -278,6 +327,62 @@ mod tests {
     }
 
     #[test]
+    fn tune_cached_misses_when_space_definition_changes() {
+        // A space with the same name and cardinality but different
+        // choices must NOT reuse the entry (the old name#cardinality
+        // fingerprint could not tell these apart).
+        let w = Workload::llama3_attention(8, 1024);
+        let mut eval = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
+        let mut cache = TuningCache::ephemeral();
+        let s1 = ConfigSpace::new("s")
+            .param("BLOCK_M", &[32, 64])
+            .param("BLOCK_N", &[32, 64])
+            .param("num_warps", &[2, 4])
+            .param("num_stages", &[1, 2]);
+        let s2 = ConfigSpace::new("s")
+            .param("BLOCK_M", &[64, 128])
+            .param("BLOCK_N", &[32, 64])
+            .param("num_warps", &[2, 4])
+            .param("num_stages", &[1, 2]);
+        assert_eq!(s1.cardinality(), s2.cardinality());
+        let first = tune_cached(&mut cache, &s1, &w, &mut eval, &Strategy::Exhaustive, 0).unwrap();
+        assert!(!first.from_cache);
+        let second = tune_cached(&mut cache, &s2, &w, &mut eval, &Strategy::Exhaustive, 0).unwrap();
+        assert!(!second.from_cache, "changed choices must invalidate the cache");
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn tune_cached_revalidates_hit_against_current_space() {
+        // Constraint *bodies* are closures and not part of the space
+        // fingerprint, so a predicate change can leave a stale entry
+        // under a matching key: the hit must be re-validated, not
+        // served blindly.
+        let w = Workload::llama3_attention(8, 1024);
+        let mut eval = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
+        let mut cache = TuningCache::ephemeral();
+        let space = ConfigSpace::new("reval")
+            .param("BLOCK_M", &[32, 64])
+            .param("BLOCK_N", &[32, 64])
+            .param("num_warps", &[4])
+            .param("num_stages", &[1])
+            .constraint("block_m_bound", |c, _| c.req("BLOCK_M") <= 32);
+        let stale = Config::new(&[
+            ("BLOCK_M", 64), // violates the (tightened) constraint
+            ("BLOCK_N", 32),
+            ("num_warps", 4),
+            ("num_stages", 1),
+        ]);
+        cache.put(
+            &w,
+            entry_now(&stale, 1.0, 10, 0, &eval.name(), &space.fingerprint_key(), 0.1),
+        );
+        let out = tune_cached(&mut cache, &space, &w, &mut eval, &Strategy::Exhaustive, 0).unwrap();
+        assert!(!out.from_cache, "a no-longer-valid cached winner must not be served");
+        assert!(space.contains(&out.best, &w));
+    }
+
+    #[test]
     fn guided_tuning_prunes_but_stays_close_to_exhaustive() {
         // Prior = hand-tuned model, target = triton-codegen model with
         // a different efficiency surface: the prior's ranking transfers.
@@ -311,6 +416,16 @@ mod tests {
         );
         let guided = tune_guided(&space, &w, &mut prior, &mut target, 60);
         assert!(guided.is_some());
+    }
+
+    #[test]
+    fn guided_top_k_larger_than_space_measures_everything() {
+        let (space, w, _) = setup();
+        let mut prior = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
+        let mut target = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
+        let n_valid = space.enumerate(&w).count();
+        let guided = tune_guided(&space, &w, &mut prior, &mut target, n_valid + 100).unwrap();
+        assert_eq!(guided.evaluated, n_valid);
     }
 
     #[test]

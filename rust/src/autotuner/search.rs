@@ -16,13 +16,29 @@
 //!
 //! Every strategy records through a [`Recorder`] so outcomes are
 //! comparable (#evaluated, #invalid, best).
+//!
+//! **Batched evaluation**: the strategies whose evaluation order does not
+//! depend on earlier results (exhaustive, random, each successive-halving
+//! rung) submit work through [`Evaluator::evaluate_batch`] so a parallel
+//! evaluator can fan the batch across a worker pool.  Results are folded
+//! back into the [`Recorder`] in submission order, which keeps the
+//! evaluation history — and therefore `best()` and per-seed
+//! reproducibility — bit-identical to sequential evaluation.  The
+//! inherently sequential strategies (hill climb, annealing: every step
+//! depends on the previous measurement) stay on the one-at-a-time path.
 
 use std::collections::HashSet;
 
-use crate::util::rng::Rng;
 use super::Evaluator;
 use crate::config::{Config, ConfigSpace};
+use crate::util::rng::Rng;
 use crate::workload::Workload;
+
+/// How many configurations the batching strategies submit per
+/// [`Evaluator::evaluate_batch`] call.  Large enough to amortize a
+/// thread-pool dispatch across every worker, small enough to keep
+/// streaming (lazy enumeration never materializes more than one batch).
+pub const EVAL_BATCH: usize = 256;
 
 /// Search strategy selector (all deterministic given a seed).
 #[derive(Debug, Clone, PartialEq)]
@@ -47,43 +63,98 @@ impl Strategy {
 }
 
 /// Records every evaluation a strategy performs.
+///
+/// The recorder keeps the evaluation log as `(fingerprint, latency)`
+/// pairs rather than cloning every [`Config`]: strategies only ever
+/// re-read the *count* and the *best*, so the single running-best clone
+/// is the only config the recorder owns.
 #[derive(Debug, Default)]
 pub struct Recorder {
-    pub history: Vec<(Config, Option<f64>)>,
+    /// (config fingerprint, latency µs) in evaluation order; `None` =
+    /// invalid on this platform.
+    pub evals: Vec<(u64, Option<f64>)>,
     pub invalid: usize,
-    seen: HashSet<String>,
+    seen: HashSet<u64>,
+    best: Option<(Config, f64)>,
 }
 
 impl Recorder {
-    /// Evaluate through the recorder (dedup + bookkeeping).
-    /// Returns the latency if the config is valid.
-    fn eval(&mut self, eval: &mut dyn Evaluator, cfg: &Config, fidelity: f64) -> Option<f64> {
-        // Re-evaluations at higher fidelity are allowed; plain repeats of
-        // the same config+fidelity are served from history implicitly by
-        // strategies tracking `seen` themselves where needed.
-        match eval.evaluate_fidelity(cfg, fidelity) {
+    /// Number of evaluations performed so far (valid + invalid).
+    pub fn len(&self) -> usize {
+        self.evals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.evals.is_empty()
+    }
+
+    /// Fold one evaluation result into the log (dedup-independent).
+    fn record(
+        &mut self,
+        cfg: &Config,
+        res: Result<f64, crate::platform::model::InvalidConfig>,
+    ) -> Option<f64> {
+        match res {
             Ok(us) => {
-                self.history.push((cfg.clone(), Some(us)));
+                if self.best.as_ref().map(|(_, b)| us < *b).unwrap_or(true) {
+                    self.best = Some((cfg.clone(), us));
+                }
+                self.evals.push((cfg.fingerprint(), Some(us)));
                 Some(us)
             }
             Err(_) => {
                 self.invalid += 1;
-                self.history.push((cfg.clone(), None));
+                self.evals.push((cfg.fingerprint(), None));
                 None
             }
         }
     }
 
+    /// Evaluate through the recorder (bookkeeping + best tracking).
+    /// Returns the latency if the config is valid.
+    pub(crate) fn eval(
+        &mut self,
+        eval: &mut dyn Evaluator,
+        cfg: &Config,
+        fidelity: f64,
+    ) -> Option<f64> {
+        let res = eval.evaluate_fidelity(cfg, fidelity);
+        self.record(cfg, res)
+    }
+
+    /// Batched counterpart of [`Recorder::eval`]: submit `cfgs` in one
+    /// evaluator call, fold results back in submission order.  The
+    /// returned latencies line up index-for-index with `cfgs`.
+    pub(crate) fn eval_batch(
+        &mut self,
+        eval: &mut dyn Evaluator,
+        cfgs: &[Config],
+        fidelity: f64,
+    ) -> Vec<Option<f64>> {
+        let results = eval.evaluate_batch(cfgs, fidelity);
+        // A short/long result vector would silently misattribute
+        // latencies to configs via zip — fail loudly instead.
+        assert_eq!(
+            results.len(),
+            cfgs.len(),
+            "evaluate_batch broke its contract: {} results for {} configs",
+            results.len(),
+            cfgs.len()
+        );
+        results
+            .into_iter()
+            .zip(cfgs)
+            .map(|(res, cfg)| self.record(cfg, res))
+            .collect()
+    }
+
     fn mark_seen(&mut self, cfg: &Config) -> bool {
-        self.seen.insert(cfg.key())
+        self.seen.insert(cfg.fingerprint())
     }
 
     /// Best valid (config, latency) seen so far.
     pub fn best(&self) -> Option<(Config, f64)> {
-        self.history
-            .iter()
-            .filter_map(|(c, l)| l.map(|l| (c.clone(), l)))
-            .min_by(|a, b| a.1.total_cmp(&b.1))
+        self.best.clone()
     }
 }
 
@@ -112,12 +183,25 @@ impl Strategy {
     }
 }
 
+/// Stream the lazy enumeration into evaluation batches: at most one
+/// batch of configs is resident at a time.
 fn exhaustive(space: &ConfigSpace, w: &Workload, eval: &mut dyn Evaluator, rec: &mut Recorder) {
+    let mut batch: Vec<Config> = Vec::with_capacity(EVAL_BATCH);
     for cfg in space.enumerate(w) {
-        rec.eval(eval, &cfg, 1.0);
+        batch.push(cfg);
+        if batch.len() == EVAL_BATCH {
+            rec.eval_batch(eval, &batch, 1.0);
+            batch.clear();
+        }
+    }
+    if !batch.is_empty() {
+        rec.eval_batch(eval, &batch, 1.0);
     }
 }
 
+/// Sampling is independent of measurement, so the whole budget is drawn
+/// (and deduped) first, then measured in batches — identical history to
+/// the old sample-measure-sample loop.
 fn random(
     space: &ConfigSpace,
     w: &Workload,
@@ -127,16 +211,18 @@ fn random(
     rec: &mut Recorder,
 ) {
     let mut rng = Rng::seed_from(seed);
-    let mut tried = 0;
+    let mut picked: Vec<Config> = Vec::new();
     let mut stall = 0;
-    while tried < budget && stall < budget * 10 {
+    while picked.len() < budget && stall < budget * 10 {
         let Some(cfg) = space.sample(w, &mut rng, 200) else { break };
         if !rec.mark_seen(&cfg) {
             stall += 1;
             continue;
         }
-        rec.eval(eval, &cfg, 1.0);
-        tried += 1;
+        picked.push(cfg);
+    }
+    for chunk in picked.chunks(EVAL_BATCH) {
+        rec.eval_batch(eval, chunk, 1.0);
     }
 }
 
@@ -153,7 +239,7 @@ fn hill_climb(
     'restart: for _ in 0..restarts.max(1) {
         // Keep sampling until a platform-valid starting point is found.
         let (mut cur, mut cur_lat) = loop {
-            if rec.history.len() >= budget {
+            if rec.len() >= budget {
                 return;
             }
             let Some(c) = space.sample(w, &mut rng, 200) else { continue 'restart };
@@ -165,13 +251,13 @@ fn hill_climb(
             }
         };
         loop {
-            if rec.history.len() >= budget {
+            if rec.len() >= budget {
                 return;
             }
             // Best improving neighbour (steepest descent).
             let mut improved = false;
             for n in space.neighbors(&cur, w) {
-                if rec.history.len() >= budget {
+                if rec.len() >= budget {
                     return;
                 }
                 if !rec.mark_seen(&n) {
@@ -215,7 +301,7 @@ fn anneal(
     }
     let Some((mut cur, mut cur_lat)) = start else { return };
     let mut temp = t0;
-    while rec.history.len() < budget {
+    while rec.len() < budget {
         let neighbors = space.neighbors(&cur, w);
         if neighbors.is_empty() {
             break;
@@ -262,9 +348,13 @@ fn successive_halving(
     let rungs = (pool.len() as f64).log(eta as f64).ceil() as usize;
     let mut fidelity = 1.0 / eta.pow(rungs.max(1) as u32 - 1).max(1) as f64;
     while pool.len() > 1 {
+        // Whole rung in one batch: every member is measured at the same
+        // fidelity regardless of the others' results.
+        let latencies = rec.eval_batch(eval, &pool, fidelity);
         let mut scored: Vec<(Config, f64)> = pool
             .drain(..)
-            .filter_map(|c| rec.eval(eval, &c, fidelity).map(|l| (c, l)))
+            .zip(latencies)
+            .filter_map(|(c, l)| l.map(|l| (c, l)))
             .collect();
         scored.sort_by(|a, b| a.1.total_cmp(&b.1));
         let keep = (scored.len() / eta).max(1);
@@ -345,14 +435,14 @@ mod tests {
         Strategy::SuccessiveHalving { initial: 8, eta: 2 }.run(&space(), &w(), &mut Quadratic, 5, &mut rec);
         assert!(rec.best().is_some());
         // History must contain at least one full-fidelity evaluation.
-        assert!(!rec.history.is_empty());
+        assert!(!rec.is_empty());
     }
 
     #[test]
     fn random_respects_budget() {
         let mut rec = Recorder::default();
         Strategy::Random { budget: 7 }.run(&space(), &w(), &mut Quadratic, 1, &mut rec);
-        assert!(rec.history.len() <= 7);
+        assert!(rec.len() <= 7);
     }
 
     #[test]
@@ -362,5 +452,31 @@ mod tests {
         assert!(rec.eval(&mut Quadratic, &bad, 1.0).is_none());
         assert_eq!(rec.invalid, 1);
         assert!(rec.best().is_none());
+    }
+
+    #[test]
+    fn recorder_log_is_fingerprint_keyed() {
+        let mut rec = Recorder::default();
+        let good = Config::new(&[("a", 4), ("b", 20)]);
+        let bad = Config::new(&[("a", 8), ("b", 5)]);
+        rec.eval(&mut Quadratic, &good, 1.0);
+        rec.eval(&mut Quadratic, &bad, 1.0);
+        assert_eq!(rec.evals.len(), 2);
+        assert_eq!(rec.evals[0], (good.fingerprint(), Some(10.0)));
+        assert_eq!(rec.evals[1], (bad.fingerprint(), None));
+    }
+
+    #[test]
+    fn recorder_eval_batch_matches_sequential() {
+        let cfgs: Vec<Config> = space().enumerate(&w()).collect();
+        let mut seq = Recorder::default();
+        for c in &cfgs {
+            seq.eval(&mut Quadratic, c, 1.0);
+        }
+        let mut bat = Recorder::default();
+        bat.eval_batch(&mut Quadratic, &cfgs, 1.0);
+        assert_eq!(seq.evals, bat.evals);
+        assert_eq!(seq.invalid, bat.invalid);
+        assert_eq!(seq.best(), bat.best());
     }
 }

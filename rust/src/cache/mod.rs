@@ -35,8 +35,13 @@ pub struct CacheEntry {
     pub invalid: usize,
     /// Platform fingerprint the result is valid for.
     pub platform: String,
-    /// Configuration-space fingerprint (name + cardinality): a changed
-    /// space invalidates the entry.
+    /// Configuration-space fingerprint.  [`crate::autotuner::tune_cached`]
+    /// writes [`crate::config::ConfigSpace::fingerprint_key`]
+    /// (`name#<fnv1a-64 of name, params, choices, constraint names>`),
+    /// so edits to parameters or choices invalidate the entry, not just
+    /// cardinality changes.  Constraint bodies are closures and cannot
+    /// be hashed; `tune_cached` therefore re-validates every hit
+    /// against the live space before serving it.
     pub space: String,
     /// Seconds of tuning spent producing this entry.
     pub tuning_seconds: f64,
@@ -330,6 +335,33 @@ mod tests {
         assert_eq!(c.invalidate_platform("pA"), 2);
         assert_eq!(c.len(), 1);
         assert!(c.get(&wl(), "pB", "attention_sim#1000").is_some());
+    }
+
+    #[test]
+    fn fingerprint_space_keys_roundtrip_to_disk() {
+        // The space component written by tune_cached is the
+        // `name#<fnv64>` fingerprint form; entries must survive a disk
+        // round-trip and only match a space with the identical
+        // definition.
+        let space = crate::config::ConfigSpace::new("attn")
+            .param("BLOCK_M", &[32, 64])
+            .param("num_warps", &[2, 4]);
+        let fp = space.fingerprint_key();
+        assert_eq!(fp, format!("attn#{:016x}", space.fingerprint()));
+        let dir = crate::util::tmp::TempDir::new("fp-cache").unwrap();
+        let path = dir.join("c.json");
+        {
+            let mut c = TuningCache::open(&path).unwrap();
+            c.put(&wl(), entry_now(&Config::new(&[("BLOCK_M", 64)]), 9.0, 4, 0, "p", &fp, 0.2));
+            c.save().unwrap();
+        }
+        let c = TuningCache::open(&path).unwrap();
+        assert!(c.get(&wl(), "p", &fp).is_some());
+        // A space differing only in one choice has a different key.
+        let other = crate::config::ConfigSpace::new("attn")
+            .param("BLOCK_M", &[32, 128])
+            .param("num_warps", &[2, 4]);
+        assert!(c.get(&wl(), "p", &other.fingerprint_key()).is_none());
     }
 
     #[test]

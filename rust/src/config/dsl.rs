@@ -479,8 +479,8 @@ mod tests {
         for n in [64usize, 256, 1024, 4096, 100] {
             let w = Workload::VectorAdd { n, dtype: DType::F32 };
             assert_eq!(
-                json_space.enumerate(&w),
-                builtin.enumerate(&w),
+                json_space.enumerate(&w).collect::<Vec<_>>(),
+                builtin.enumerate(&w).collect::<Vec<_>>(),
                 "mismatch at n={n}"
             );
         }
@@ -502,7 +502,7 @@ mod tests {
         let space = space_from_json(ATTN_SPACE).unwrap();
         let w = Workload::VectorAdd { n: 64, dtype: DType::F32 };
         // seq_len is undefined for vecadd -> every constraint fails closed.
-        assert!(space.enumerate(&w).is_empty());
+        assert_eq!(space.enumerate(&w).count(), 0);
     }
 
     #[test]

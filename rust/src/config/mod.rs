@@ -22,4 +22,4 @@ pub mod dsl;
 mod space;
 pub mod spaces;
 
-pub use space::{Config, ConfigSpace, Constraint, Param};
+pub use space::{Config, ConfigSpace, Constraint, Enumerate, Param};

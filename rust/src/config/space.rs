@@ -4,6 +4,7 @@ use std::collections::BTreeMap;
 use std::fmt;
 use std::sync::Arc;
 
+use crate::util::fnv::Fnv64;
 use crate::util::rng::Rng;
 use crate::workload::Workload;
 
@@ -39,6 +40,20 @@ impl Config {
     pub fn key(&self) -> String {
         let parts: Vec<String> = self.0.iter().map(|(k, v)| format!("{k}={v}")).collect();
         parts.join(",")
+    }
+
+    /// Stable 64-bit fingerprint of the assignment (FNV-1a over the
+    /// sorted parameter names and values).  This is the dedup/memo key
+    /// on the hot tuning path: unlike [`Config::key`] it allocates
+    /// nothing, and unlike `DefaultHasher` it is stable across runs and
+    /// toolchains, so it may appear in persistent cache keys.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv64::new();
+        for (k, v) in &self.0 {
+            h.write_str(k);
+            h.write_i64(*v);
+        }
+        h.finish()
     }
 
     /// Parse the canonical `key()` form back into a config.
@@ -168,33 +183,46 @@ impl ConfigSpace {
 
     /// Enumerate every *valid* configuration for workload `w`,
     /// lexicographically by parameter order.
-    pub fn enumerate(&self, w: &Workload) -> Vec<Config> {
-        let mut out = Vec::new();
-        let mut cur = Config::default();
-        self.enum_rec(0, &mut cur, w, &mut out);
-        out
-    }
-
-    fn enum_rec(&self, depth: usize, cur: &mut Config, w: &Workload, out: &mut Vec<Config>) {
-        if depth == self.params.len() {
-            if self.violated_constraint(cur, w).is_none() {
-                out.push(cur.clone());
-            }
-            return;
-        }
-        let p = &self.params[depth];
-        for &v in &p.choices {
-            cur.set(&p.name, v);
-            self.enum_rec(depth + 1, cur, w, out);
-        }
-        cur.0.remove(&p.name);
+    ///
+    /// The iterator is **lazy**: nothing is materialized up front, so
+    /// exhaustive search streams configurations straight into batched
+    /// evaluation instead of allocating the whole space first.  Collect
+    /// it when random access is needed.
+    pub fn enumerate<'a>(&'a self, w: &'a Workload) -> Enumerate<'a> {
+        Enumerate { space: self, w, idx: vec![0; self.params.len()], done: false }
     }
 
     /// Count valid and invalid configurations (the paper reports both:
     /// "some of which are invalid on certain GPU platforms").
     pub fn count_valid(&self, w: &Workload) -> (usize, usize) {
-        let valid = self.enumerate(w).len();
+        let valid = self.enumerate(w).count();
         (valid, self.cardinality() - valid)
+    }
+
+    /// Stable 64-bit fingerprint of the space *definition*: name,
+    /// parameters with their choice lists, and constraint names.  Used
+    /// by [`crate::autotuner::tune_cached`] as the cache's space
+    /// component — any edit to the space (not just a cardinality
+    /// change) invalidates persisted results.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv64::new();
+        h.write_str(&self.name);
+        for p in &self.params {
+            h.write_str(&p.name);
+            for &c in &p.choices {
+                h.write_i64(c);
+            }
+            h.write_u64(p.choices.len() as u64);
+        }
+        for c in &self.constraints {
+            h.write_str(&c.name);
+        }
+        h.finish()
+    }
+
+    /// Human-greppable cache key form of [`ConfigSpace::fingerprint`].
+    pub fn fingerprint_key(&self) -> String {
+        format!("{}#{:016x}", self.name, self.fingerprint())
     }
 
     /// Sample one configuration uniformly from the cartesian product,
@@ -236,7 +264,7 @@ impl ConfigSpace {
     /// the paper's "five hyperparameters, equally sampled across the
     /// configuration space" protocol for the manually-tuned baseline.
     pub fn equally_spaced(&self, w: &Workload, n: usize) -> Vec<Config> {
-        let all = self.enumerate(w);
+        let all: Vec<Config> = self.enumerate(w).collect();
         if all.is_empty() || n == 0 {
             return Vec::new();
         }
@@ -246,6 +274,49 @@ impl ConfigSpace {
         (0..n)
             .map(|i| all[i * (all.len() - 1) / (n - 1).max(1)].clone())
             .collect()
+    }
+}
+
+/// Lazy enumeration of a [`ConfigSpace`]'s valid configurations
+/// (odometer over the cartesian product, last parameter varying
+/// fastest — the same lexicographic order the old materializing
+/// implementation produced).
+pub struct Enumerate<'a> {
+    space: &'a ConfigSpace,
+    w: &'a Workload,
+    /// Current choice index per parameter.
+    idx: Vec<usize>,
+    done: bool,
+}
+
+impl Iterator for Enumerate<'_> {
+    type Item = Config;
+
+    fn next(&mut self) -> Option<Config> {
+        while !self.done {
+            let mut cfg = Config::default();
+            for (p, &i) in self.space.params.iter().zip(&self.idx) {
+                cfg.set(&p.name, p.choices[i]);
+            }
+            // Advance the odometer (last parameter fastest).
+            let mut d = self.space.params.len();
+            loop {
+                if d == 0 {
+                    self.done = true;
+                    break;
+                }
+                d -= 1;
+                self.idx[d] += 1;
+                if self.idx[d] < self.space.params[d].choices.len() {
+                    break;
+                }
+                self.idx[d] = 0;
+            }
+            if self.space.violated_constraint(&cfg, self.w).is_none() {
+                return Some(cfg);
+            }
+        }
+        None
     }
 }
 
@@ -273,12 +344,77 @@ mod tests {
     #[test]
     fn enumerate_respects_constraints() {
         let s = space();
-        let all = s.enumerate(&w());
+        let all: Vec<Config> = s.enumerate(&w()).collect();
         // invalid: a=4,b=20 (80) -> 5 valid out of 6
         assert_eq!(all.len(), 5);
         for c in &all {
             assert!(s.contains(c, &w()));
         }
+    }
+
+    #[test]
+    fn enumerate_is_lazy_and_lexicographic() {
+        let s = space();
+        let wl = w();
+        let mut it = s.enumerate(&wl);
+        // First config: all params at their first choice.
+        assert_eq!(it.next(), Some(Config::new(&[("a", 1), ("b", 10)])));
+        // Last param varies fastest.
+        assert_eq!(it.next(), Some(Config::new(&[("a", 1), ("b", 20)])));
+        // The invalid (a=4,b=20) combination is skipped transparently.
+        let rest: Vec<Config> = it.collect();
+        assert_eq!(
+            rest,
+            vec![
+                Config::new(&[("a", 2), ("b", 10)]),
+                Config::new(&[("a", 2), ("b", 20)]),
+                Config::new(&[("a", 4), ("b", 10)]),
+            ]
+        );
+    }
+
+    #[test]
+    fn enumerate_handles_empty_space() {
+        let s = ConfigSpace::new("empty");
+        let wl = w();
+        // Zero parameters: the single empty assignment.
+        assert_eq!(s.enumerate(&wl).count(), 1);
+        let never = ConfigSpace::new("never")
+            .param("a", &[1])
+            .constraint("impossible", |_, _| false);
+        assert_eq!(never.enumerate(&wl).count(), 0);
+    }
+
+    #[test]
+    fn config_fingerprint_distinguishes_and_is_order_free() {
+        let a = Config::new(&[("x", 1), ("y", 2)]);
+        let b = Config::new(&[("y", 2), ("x", 1)]);
+        let c = Config::new(&[("x", 2), ("y", 1)]);
+        assert_eq!(a.fingerprint(), b.fingerprint(), "BTreeMap order is canonical");
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        // All configs of a real space are pairwise distinct.
+        let s = space();
+        let wl = w();
+        let fps: std::collections::HashSet<u64> =
+            s.enumerate(&wl).map(|c| c.fingerprint()).collect();
+        assert_eq!(fps.len(), s.enumerate(&wl).count());
+    }
+
+    #[test]
+    fn space_fingerprint_tracks_definition_changes() {
+        let base = space().fingerprint();
+        assert_eq!(space().fingerprint(), base, "fingerprint is stable");
+        let grown = ConfigSpace::new("test")
+            .param("a", &[1, 2, 4, 8]) // extra choice, same cardinality class
+            .param("b", &[10, 20])
+            .constraint("a_times_b_le_40", |c, _| c.req("a") * c.req("b") <= 40);
+        assert_ne!(grown.fingerprint(), base);
+        let renamed = ConfigSpace::new("test2")
+            .param("a", &[1, 2, 4])
+            .param("b", &[10, 20])
+            .constraint("a_times_b_le_40", |c, _| c.req("a") * c.req("b") <= 40);
+        assert_ne!(renamed.fingerprint(), base);
+        assert!(space().fingerprint_key().starts_with("test#"));
     }
 
     #[test]
@@ -328,7 +464,7 @@ mod tests {
     #[test]
     fn equally_spaced_endpoints() {
         let s = space();
-        let all = s.enumerate(&w());
+        let all: Vec<Config> = s.enumerate(&w()).collect();
         let five = s.equally_spaced(&w(), 5);
         assert_eq!(five.len(), 5);
         assert_eq!(five.first(), all.first());

@@ -87,8 +87,8 @@ mod tests {
         let a100 = SimGpu::a100();
         let space = spaces::attention_sim_space();
         let (valid_h, valid_a) = (
-            space.enumerate(&w).iter().filter(|c| h100.validate_attention(c, &w).is_ok()).count(),
-            space.enumerate(&w).iter().filter(|c| a100.validate_attention(c, &w).is_ok()).count(),
+            space.enumerate(&w).filter(|c| h100.validate_attention(c, &w).is_ok()).count(),
+            space.enumerate(&w).filter(|c| a100.validate_attention(c, &w).is_ok()).count(),
         );
         assert!(valid_h > valid_a, "H100 {valid_h} vs A100 {valid_a} valid configs");
     }

@@ -65,8 +65,7 @@ pub fn tune_triton_rms(gpu: &SimGpu, w: &Workload) -> Option<(f64, Config)> {
 pub fn oracle_attention(gpu: &SimGpu, w: &Workload) -> Option<f64> {
     spaces::attention_sim_space()
         .enumerate(w)
-        .iter()
-        .filter_map(|c| gpu.attention_latency_us(c, w, &HAND_TUNED).ok())
+        .filter_map(|c| gpu.attention_latency_us(&c, w, &HAND_TUNED).ok())
         .min_by(f64::total_cmp)
 }
 

@@ -333,8 +333,7 @@ mod tests {
             let (t, _) = lib.latency_us(&gpu, &w).unwrap();
             let best_possible = spaces::attention_sim_space()
                 .enumerate(&w)
-                .iter()
-                .filter_map(|c| gpu.latency_us(c, &w, &HAND_TUNED).ok())
+                .filter_map(|c| gpu.latency_us(&c, &w, &HAND_TUNED).ok())
                 .fold(f64::INFINITY, f64::min);
             assert!(
                 t <= best_possible * 1.6,
@@ -353,8 +352,7 @@ mod tests {
         let (cuda_us, _) = TemplateLibrary::vllm_cuda_rms().latency_us(&gpu, &w).unwrap();
         let best_triton = spaces::rms_sim_space()
             .enumerate(&w)
-            .iter()
-            .filter_map(|c| gpu.latency_us(c, &w, &TRITON_AMD).ok())
+            .filter_map(|c| gpu.latency_us(&c, &w, &TRITON_AMD).ok())
             .fold(f64::INFINITY, f64::min);
         assert!(
             cuda_us / best_triton > 1.15,
@@ -371,8 +369,7 @@ mod tests {
         let (cuda_us, _) = TemplateLibrary::vllm_cuda_rms().latency_us(&gpu, &w).unwrap();
         let best_triton = spaces::rms_sim_space()
             .enumerate(&w)
-            .iter()
-            .filter_map(|c| gpu.latency_us(c, &w, &TRITON_NVIDIA).ok())
+            .filter_map(|c| gpu.latency_us(&c, &w, &TRITON_NVIDIA).ok())
             .fold(f64::INFINITY, f64::min);
         assert!(cuda_us < best_triton, "cuda {cuda_us:.1} vs triton {best_triton:.1}");
     }

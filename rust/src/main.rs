@@ -11,7 +11,9 @@
 
 use anyhow::{anyhow, Result};
 
-use portatune::autotuner::{self, PjrtEvaluator, SimEvaluator, Strategy};
+#[cfg(feature = "pjrt")]
+use portatune::autotuner::PjrtEvaluator;
+use portatune::autotuner::{self, SimEvaluator, Strategy};
 use portatune::cache::TuningCache;
 use portatune::codegen::hlo;
 use portatune::config::spaces;
@@ -19,7 +21,10 @@ use portatune::experiments;
 use portatune::kernels::baselines::triton_codegen;
 use portatune::platform::PlatformId;
 use portatune::report::Report;
-use portatune::runtime::{Engine, Manifest};
+#[cfg(feature = "pjrt")]
+use portatune::runtime::Engine;
+use portatune::runtime::Manifest;
+#[cfg(feature = "pjrt")]
 use portatune::serving::{router::synth_trace, Router, ServerConfig};
 use portatune::util::cli::Args;
 use portatune::workload::{DType, Workload};
@@ -127,12 +132,19 @@ fn cmd_tune(args: &Args) -> Result<()> {
     };
 
     let outcome = match platform {
+        #[cfg(feature = "pjrt")]
         PlatformId::CpuPjrt => {
             let space = spaces::aot_space_for(&w);
             let engine = Engine::cpu()?;
             let manifest = Manifest::load_default()?;
             let mut eval = PjrtEvaluator::new(&engine, &manifest, w, 1, 5)?;
             autotuner::tune_cached(&mut cache, &space, &w, &mut eval, &strat, seed)
+        }
+        #[cfg(not(feature = "pjrt"))]
+        PlatformId::CpuPjrt => {
+            return Err(anyhow!(
+                "platform cpu-pjrt requires a build with `--features pjrt`"
+            ));
         }
         sim => {
             let gpu = sim.sim().unwrap();
@@ -167,6 +179,14 @@ fn cmd_tune(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve(_args: &Args) -> Result<()> {
+    Err(anyhow!(
+        "`portatune serve` requires a build with `--features pjrt` (the PJRT executor)"
+    ))
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_serve(args: &Args) -> Result<()> {
     let requests = args.flag_parse("requests", 64usize)?;
     let seed = args.flag_parse("seed", 42u64)?;
@@ -199,6 +219,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn print_serve(tag: &str, r: &portatune::serving::ServeReport) {
     println!(
         "[{tag}] served {} req ({} rejected) in {:.2}s  | {:.1} req/s  {:.0} tok/s",

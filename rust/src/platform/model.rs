@@ -496,8 +496,7 @@ mod tests {
             let native = gpu.native_attention_latency_us(&w).unwrap();
             let best = spaces::attention_sim_space()
                 .enumerate(&w)
-                .iter()
-                .filter_map(|c| gpu.attention_latency_us(c, &w, &HAND_TUNED).ok())
+                .filter_map(|c| gpu.attention_latency_us(&c, &w, &HAND_TUNED).ok())
                 .fold(f64::INFINITY, f64::min);
             let ratio = native / best;
             assert!(
@@ -515,7 +514,6 @@ mod tests {
         let best = |gpu: &SimGpu| {
             space
                 .enumerate(&w)
-                .into_iter()
                 .filter_map(|c| gpu.attention_latency_us(&c, &w, &HAND_TUNED).ok().map(|t| (c, t)))
                 .min_by(|a, b| a.1.total_cmp(&b.1))
                 .unwrap()
@@ -532,8 +530,7 @@ mod tests {
         let gpu = SimGpu::a100();
         let times: Vec<f64> = spaces::attention_sim_space()
             .enumerate(&w)
-            .iter()
-            .filter_map(|c| gpu.attention_latency_us(c, &w, &HAND_TUNED).ok())
+            .filter_map(|c| gpu.attention_latency_us(&c, &w, &HAND_TUNED).ok())
             .collect();
         let best = times.iter().cloned().fold(f64::INFINITY, f64::min);
         let worst = times.iter().cloned().fold(0.0, f64::max);

@@ -8,23 +8,34 @@
 //! Interchange is HLO *text*: jax >= 0.5 serializes `HloModuleProto`s
 //! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Everything touching XLA/PJRT ([`Engine`], [`Executable`]) is gated
+//! behind the off-by-default `pjrt` feature so the default build needs
+//! no GPU/XLA toolchain; [`Manifest`], [`TensorF32`] and [`allclose`]
+//! are always available.
 
 pub mod manifest;
 
 pub use manifest::{ArtifactEntry, Manifest};
 
+#[cfg(feature = "pjrt")]
 use std::path::Path;
+#[cfg(feature = "pjrt")]
 use std::time::Instant;
 
+#[cfg(feature = "pjrt")]
 use anyhow::{anyhow, Context};
 
+#[cfg(feature = "pjrt")]
 use crate::Result;
 
 /// A PJRT client plus compilation helpers. One per process.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     client: xla::PjRtClient,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Create the CPU PJRT client.
     pub fn cpu() -> Result<Self> {
@@ -98,7 +109,10 @@ impl TensorF32 {
             .collect();
         TensorF32 { data, shape: shape.to_vec() }
     }
+}
 
+#[cfg(feature = "pjrt")]
+impl TensorF32 {
     fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
         xla::Literal::vec1(&self.data)
@@ -108,11 +122,13 @@ impl TensorF32 {
 }
 
 /// A compiled HLO module ready to execute.
+#[cfg(feature = "pjrt")]
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
     pub name: String,
 }
 
+#[cfg(feature = "pjrt")]
 impl Executable {
     /// Execute with f32 inputs; returns the flattened f32 output of the
     /// (single-element) result tuple.

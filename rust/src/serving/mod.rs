@@ -23,12 +23,16 @@
 //! active kernel variant when tuning finds a faster one.
 
 pub mod batcher;
+#[cfg(feature = "pjrt")]
 pub mod executor;
 pub mod router;
 
 pub use batcher::{Batch, BucketPolicy, DynamicBatcher};
+#[cfg(feature = "pjrt")]
 pub use executor::{ExecutorCommand, ExecutorHandle, ExecutorStats};
-pub use router::{Router, ServeReport, ServerConfig};
+#[cfg(feature = "pjrt")]
+pub use router::{Router, ServeReport};
+pub use router::ServerConfig;
 
 /// One inference request: a prompt of `tokens` tokens.
 #[derive(Debug, Clone, PartialEq, Eq)]

@@ -5,14 +5,22 @@
 //! aggregates a [`ServeReport`] — the end-to-end driver behind
 //! `examples/serve_attention.rs` and `portatune serve`.
 
+#[cfg(feature = "pjrt")]
 use std::time::Instant;
 
-use crate::util::rng::Rng;
+#[cfg(feature = "pjrt")]
 use super::batcher::{BucketPolicy, DynamicBatcher};
+#[cfg(feature = "pjrt")]
 use super::executor::{ExecutorCommand, ExecutorHandle, ExecutorStats};
-use super::{Completion, Request};
+#[cfg(feature = "pjrt")]
+use super::Completion;
+use super::Request;
+#[cfg(feature = "pjrt")]
 use crate::metrics::Summary;
+#[cfg(feature = "pjrt")]
 use crate::runtime::Manifest;
+use crate::util::rng::Rng;
+#[cfg(feature = "pjrt")]
 use crate::Result;
 
 /// Server configuration.
@@ -34,6 +42,7 @@ impl Default for ServerConfig {
 }
 
 /// Aggregated serving statistics.
+#[cfg(feature = "pjrt")]
 #[derive(Debug, Clone)]
 pub struct ServeReport {
     pub requests: usize,
@@ -51,11 +60,13 @@ pub struct ServeReport {
 }
 
 /// The serving front end.
+#[cfg(feature = "pjrt")]
 pub struct Router {
     executor: ExecutorHandle,
     policy: BucketPolicy,
 }
 
+#[cfg(feature = "pjrt")]
 impl Router {
     /// Build a router over the manifest's compiled model shapes.
     pub fn new(manifest: Manifest, cfg: &ServerConfig) -> Result<Self> {

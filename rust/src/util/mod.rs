@@ -4,9 +4,11 @@
 //! - [`rng`] — a seedable, reproducible PRNG (xoshiro256**);
 //! - [`cli`] — a tiny declarative flag parser for the `portatune` binary;
 //! - [`tmp`] — unique temp directories for tests;
-//! - [`bench`] — the mini criterion-style harness behind `cargo bench`.
+//! - [`bench`] — the mini criterion-style harness behind `cargo bench`;
+//! - [`fnv`] — stable FNV-1a 64 hashing for config/space fingerprints.
 
 pub mod bench;
 pub mod cli;
+pub mod fnv;
 pub mod rng;
 pub mod tmp;

@@ -6,6 +6,8 @@
 //! Layer 3 (Rust): if it holds, the autotuner is choosing among
 //! *numerically identical* kernels, exactly as the paper requires.
 
+#![cfg(feature = "pjrt")]
+
 use portatune::json;
 use portatune::runtime::{allclose, Engine, Manifest, TensorF32};
 

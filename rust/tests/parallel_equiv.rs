@@ -1,0 +1,140 @@
+//! Parallel/sequential equivalence contract for the batched autotuner.
+//!
+//! The tentpole guarantee of the parallel evaluation engine: a parallel
+//! [`SimEvaluator`] must produce, for every strategy and seed, exactly
+//! the outcome the sequential evaluator produces — same best config,
+//! same invalid count, same evaluation log (fingerprints AND latencies,
+//! bitwise).  Results are merged in submission order, so any divergence
+//! here is a real bug, not scheduling noise.
+
+use portatune::autotuner::{self, Evaluator, SimEvaluator, Strategy, TuneOutcome};
+use portatune::cache::TuningCache;
+use portatune::config::spaces;
+use portatune::kernels::baselines::{HAND_TUNED, TRITON_NVIDIA};
+use portatune::platform::SimGpu;
+use portatune::util::tmp::TempDir;
+use portatune::workload::Workload;
+
+fn run(parallel: bool, strat: &Strategy, seed: u64) -> TuneOutcome {
+    let w = Workload::llama3_attention(8, 1024);
+    let space = spaces::attention_sim_space();
+    let mut eval = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
+    if !parallel {
+        eval = eval.sequential();
+    }
+    autotuner::tune(&space, &w, &mut eval, strat, seed).expect("space is non-empty")
+}
+
+fn all_strategies() -> Vec<Strategy> {
+    vec![
+        Strategy::Exhaustive,
+        Strategy::Random { budget: 120 },
+        Strategy::HillClimb { restarts: 3, budget: 200 },
+        Strategy::Anneal { budget: 150, t0: 2.0, alpha: 0.95 },
+        Strategy::SuccessiveHalving { initial: 32, eta: 2 },
+    ]
+}
+
+#[test]
+fn same_seed_same_outcome_for_every_strategy() {
+    for strat in all_strategies() {
+        for seed in [0u64, 7, 42] {
+            let seq = run(false, &strat, seed);
+            let par = run(true, &strat, seed);
+            assert_eq!(seq.best, par.best, "{strat:?} seed {seed}: best config differs");
+            assert_eq!(
+                seq.best_latency_us.to_bits(),
+                par.best_latency_us.to_bits(),
+                "{strat:?} seed {seed}: best latency differs"
+            );
+            assert_eq!(seq.invalid, par.invalid, "{strat:?} seed {seed}: invalid count differs");
+            assert_eq!(seq.evaluated, par.evaluated, "{strat:?} seed {seed}: evaluated differs");
+            // The full evaluation log must match entry for entry:
+            // identical fingerprints in identical order, and bitwise
+            // identical latencies.
+            assert_eq!(seq.history.len(), par.history.len());
+            for (i, (s, p)) in seq.history.iter().zip(&par.history).enumerate() {
+                assert_eq!(s.0, p.0, "{strat:?} seed {seed}: eval {i} config differs");
+                assert_eq!(
+                    s.1.map(f64::to_bits),
+                    p.1.map(f64::to_bits),
+                    "{strat:?} seed {seed}: eval {i} latency differs"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn guided_tuning_parallel_prior_matches_sequential() {
+    let w = Workload::llama3_attention(8, 1024);
+    let space = spaces::attention_sim_space();
+    let outcome = |parallel: bool| {
+        let mut prior = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
+        let mut target = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
+        if !parallel {
+            prior = prior.sequential();
+            target = target.sequential();
+        }
+        autotuner::tune_guided(&space, &w, &mut prior, &mut target, 25).unwrap()
+    };
+    let seq = outcome(false);
+    let par = outcome(true);
+    assert_eq!(seq.best, par.best);
+    assert_eq!(seq.best_latency_us.to_bits(), par.best_latency_us.to_bits());
+    assert_eq!(seq.evaluated, par.evaluated);
+    assert_eq!(seq.invalid, par.invalid);
+}
+
+#[test]
+fn raw_batch_api_is_order_preserving() {
+    // evaluate_batch's contract: out[i] belongs to cfgs[i].
+    let w = Workload::llama3_attention(8, 1024);
+    let space = spaces::attention_sim_space();
+    let cfgs: Vec<portatune::config::Config> = space.enumerate(&w).collect();
+    let mut par = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
+    let batch = par.evaluate_batch(&cfgs, 1.0);
+    let mut one_by_one = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
+    for (cfg, from_batch) in cfgs.iter().zip(&batch) {
+        let single = one_by_one.evaluate(cfg);
+        match (from_batch, single) {
+            (Ok(a), Ok(b)) => assert_eq!(a.to_bits(), b.to_bits(), "{cfg}"),
+            (Err(_), Err(_)) => {}
+            _ => panic!("validity mismatch for {cfg}"),
+        }
+    }
+}
+
+#[test]
+fn tuning_cache_roundtrip_under_fingerprint_keys() {
+    // tune_cached keys entries by the space-definition fingerprint; a
+    // restart (fresh TuningCache from the same file, fresh space
+    // instance) must hit, and the hit must reproduce the tuned best.
+    let w = Workload::llama3_attention(8, 1024);
+    let dir = TempDir::new("equiv-cache").unwrap();
+    let path = dir.join("tune_cache.json");
+    let first;
+    {
+        let mut cache = TuningCache::open(&path).unwrap();
+        let space = spaces::attention_sim_space();
+        let mut eval = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
+        first = autotuner::tune_cached(&mut cache, &space, &w, &mut eval, &Strategy::Exhaustive, 0)
+            .unwrap();
+        assert!(!first.from_cache);
+        cache.save().unwrap();
+    }
+    {
+        let mut cache = TuningCache::open(&path).unwrap();
+        assert_eq!(cache.len(), 1);
+        // A fresh space instance fingerprints identically.
+        let space = spaces::attention_sim_space();
+        let mut eval = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
+        let second =
+            autotuner::tune_cached(&mut cache, &space, &w, &mut eval, &Strategy::Exhaustive, 0)
+                .unwrap();
+        assert!(second.from_cache, "restart must hit the fingerprint key");
+        assert_eq!(second.best, first.best);
+        assert_eq!(second.evaluated, 0);
+        assert_eq!(eval.calls, 0, "cache hit performs zero evaluations");
+    }
+}

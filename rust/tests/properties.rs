@@ -98,7 +98,7 @@ fn prop_constraint_rejection_is_sound() {
         .param("y", &[1, 2, 3, 4])
         .constraint("x_le_y", |c, _| c.req("x") <= c.req("y"));
     let w = Workload::VectorAdd { n: 64, dtype: DType::F32 };
-    let all = space.enumerate(&w);
+    let all: Vec<Config> = space.enumerate(&w).collect();
     assert_eq!(all.len(), 10); // upper triangle of 4x4
     for c in all {
         assert!(c.req("x") <= c.req("y"));
