@@ -3,15 +3,19 @@
 //! "efficient search" design choice (Q4.2).
 //!
 //! The headline table compares the **sequential** evaluation path
-//! (`SimEvaluator::sequential()`) against the **parallel batched** path
-//! (worker pool sized by `available_parallelism`) at a synthetic
-//! per-evaluation cost standing in for compile+measure time — the
-//! regime real autotuning lives in ("compilation time accounts for
-//! around 80 % of the autotuning time").  The `same best` column
-//! documents the equivalence contract: both paths must find the
+//! against the three parallel engines — per-batch **scoped threads**
+//! (the PR 1 baseline), the persistent **worker pool**, and the
+//! sharded **multi-device** fleet — at a synthetic per-evaluation cost
+//! standing in for compile+measure time ("compilation time accounts
+//! for around 80 % of the autotuning time").  The `same best` column
+//! documents the equivalence contract: every path must find the
 //! identical best config for the same seed.
+//!
+//! On ≥ 4 cores (full mode) it asserts the pool is ≥ 2x faster than
+//! sequential AND at least as fast as scoped threads — the point of
+//! replacing the per-batch thread respawn.
 
-use portatune::autotuner::{self, SimEvaluator, Strategy, TuneOutcome};
+use portatune::autotuner::{self, Evaluator, MultiDeviceEvaluator, SimEvaluator, Strategy, TuneOutcome};
 use portatune::config::spaces;
 use portatune::kernels::baselines::TRITON_NVIDIA;
 use portatune::platform::SimGpu;
@@ -22,20 +26,44 @@ use portatune::workload::Workload;
 /// the stand-in for per-config compile+measure cost.
 const EVAL_COST: u32 = 4_000;
 
-fn tune_once(parallel: bool, strat: &Strategy, cost: u32, seed: u64) -> TuneOutcome {
+/// Which evaluation engine a tuning run goes through.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Engine {
+    Sequential,
+    ScopedThreads,
+    Pool,
+    MultiDevice(usize),
+}
+
+impl Engine {
+    fn label(self) -> String {
+        match self {
+            Engine::Sequential => "seq".into(),
+            Engine::ScopedThreads => "scoped".into(),
+            Engine::Pool => "pool".into(),
+            Engine::MultiDevice(n) => format!("multi{n}"),
+        }
+    }
+}
+
+fn tune_once(engine: Engine, strat: &Strategy, cost: u32, seed: u64) -> TuneOutcome {
     let w = Workload::llama3_attention(64, 1024);
     let space = spaces::attention_sim_space();
-    let mut eval = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA).with_eval_cost(cost);
-    if !parallel {
-        eval = eval.sequential();
-    }
-    autotuner::tune(&space, &w, &mut eval, strat, seed).unwrap()
+    let base = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA).with_eval_cost(cost);
+    let mut eval: Box<dyn Evaluator> = match engine {
+        Engine::Sequential => Box::new(base.sequential()),
+        Engine::ScopedThreads => Box::new(base.scoped_threads()),
+        Engine::Pool => Box::new(base),
+        Engine::MultiDevice(n) => Box::new(MultiDeviceEvaluator::replicate(&base, n)),
+    };
+    autotuner::tune(&space, &w, eval.as_mut(), strat, seed).unwrap()
 }
 
 fn main() {
     let w = Workload::llama3_attention(64, 1024);
     let space = spaces::attention_sim_space();
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let fleet = cores.clamp(2, 8);
 
     // Ablation: quality vs cost per strategy (printed once).
     println!("\n## Q4.2 ablation: search strategy vs result quality\n");
@@ -61,55 +89,71 @@ fn main() {
     }
 
     // -----------------------------------------------------------------
-    // Tentpole measurement: configs/second, sequential vs parallel.
+    // Tentpole measurement: configs/second per evaluation engine.
     // -----------------------------------------------------------------
     let mut b = Bench::new();
+    let engines = [
+        Engine::Sequential,
+        Engine::ScopedThreads,
+        Engine::Pool,
+        Engine::MultiDevice(fleet),
+    ];
     println!(
-        "\n## configs/second at eval_cost={EVAL_COST} spins (~compile+measure), {cores} cores\n"
+        "\n## configs/second at eval_cost={EVAL_COST} spins (~compile+measure), {cores} cores, fleet of {fleet}\n"
     );
-    println!("| strategy | evaluated | seq cfg/s | par cfg/s | speedup | same best |");
-    println!("|---|---|---|---|---|---|");
-    let mut rows = Vec::new();
+    println!("| strategy | evaluated | seq cfg/s | scoped cfg/s | pool cfg/s | multi{fleet} cfg/s | pool/scoped | same best |");
+    println!("|---|---|---|---|---|---|---|---|");
+    // Per strategy: (median_us, min_us) per engine, in `engines` order.
+    let mut rows: Vec<(&str, Vec<(f64, f64)>, bool)> = Vec::new();
     for (name, strat) in [
         ("exhaustive", Strategy::Exhaustive),
         ("random400", Strategy::Random { budget: 400 }),
         ("sha128", Strategy::SuccessiveHalving { initial: 128, eta: 2 }),
     ] {
-        let seq_out = tune_once(false, &strat, EVAL_COST, 3);
-        let par_out = tune_once(true, &strat, EVAL_COST, 3);
-        let same_best = seq_out.best == par_out.best
-            && seq_out.best_latency_us.to_bits() == par_out.best_latency_us.to_bits();
-        let seq_us = b
-            .run(&format!("autotuner/{name}/sequential"), || {
-                tune_once(false, &strat, EVAL_COST, 3)
+        let reference = tune_once(Engine::Sequential, &strat, EVAL_COST, 3);
+        let mut same_best = true;
+        for engine in &engines[1..] {
+            let out = tune_once(*engine, &strat, EVAL_COST, 3);
+            same_best &= out.best == reference.best
+                && out.best_latency_us.to_bits() == reference.best_latency_us.to_bits();
+        }
+        let stats: Vec<(f64, f64)> = engines
+            .iter()
+            .map(|engine| {
+                let r = b.run(&format!("autotuner/{name}/{}", engine.label()), || {
+                    tune_once(*engine, &strat, EVAL_COST, 3)
+                });
+                (r.median_us, r.min_us)
             })
-            .median_us;
-        let par_us = b
-            .run(&format!("autotuner/{name}/parallel"), || tune_once(true, &strat, EVAL_COST, 3))
-            .median_us;
-        let seq_rate = seq_out.evaluated as f64 / (seq_us * 1e-6);
-        let par_rate = par_out.evaluated as f64 / (par_us * 1e-6);
-        rows.push((name, seq_rate, par_rate, seq_us / par_us, same_best));
+            .collect();
+        let rate = |us: f64| reference.evaluated as f64 / (us * 1e-6);
         println!(
-            "| {name} | {} | {seq_rate:.0} | {par_rate:.0} | {:.2}x | {same_best} |",
-            seq_out.evaluated,
-            seq_us / par_us,
+            "| {name} | {} | {:.0} | {:.0} | {:.0} | {:.0} | {:.2}x | {same_best} |",
+            reference.evaluated,
+            rate(stats[0].0),
+            rate(stats[1].0),
+            rate(stats[2].0),
+            rate(stats[3].0),
+            stats[1].0 / stats[2].0,
         );
+        rows.push((name, stats, same_best));
     }
 
-    // Pure-model overhead check (eval_cost = 0): how much the thread
-    // pool costs when each evaluation is nanoseconds.  Expected ~1x or
-    // slightly below on tiny costs — the pool pays off as soon as the
-    // per-config cost is real.
+    // Pure-model overhead check (eval_cost = 0): how much the pool costs
+    // when each evaluation is nanoseconds.  Expected ~1x or slightly
+    // below on tiny costs — the pool pays off as soon as the per-config
+    // cost is real.
     let seq0 = b
-        .run("autotuner/exhaustive/sequential-cost0", || {
-            tune_once(false, &Strategy::Exhaustive, 0, 3)
+        .run("autotuner/exhaustive/seq-cost0", || {
+            tune_once(Engine::Sequential, &Strategy::Exhaustive, 0, 3)
         })
         .median_us;
-    let par0 = b
-        .run("autotuner/exhaustive/parallel-cost0", || tune_once(true, &Strategy::Exhaustive, 0, 3))
+    let pool0 = b
+        .run("autotuner/exhaustive/pool-cost0", || {
+            tune_once(Engine::Pool, &Strategy::Exhaustive, 0, 3)
+        })
         .median_us;
-    println!("\nzero-cost exhaustive: sequential {seq0:.0} us vs parallel {par0:.0} us");
+    println!("\nzero-cost exhaustive: sequential {seq0:.0} us vs pool {pool0:.0} us");
 
     // Lazy enumeration: streaming the first few configs must not pay
     // for the whole space.
@@ -118,25 +162,37 @@ fn main() {
         space.enumerate(&w).take(10).collect::<Vec<_>>()
     });
 
-    for (name, seq_rate, par_rate, speedup, same) in &rows {
-        assert!(*same, "{name}: parallel and sequential disagree on the best config");
-        let _ = (seq_rate, par_rate, speedup);
+    for (name, _, same) in &rows {
+        assert!(*same, "{name}: a parallel engine disagrees with sequential on the best config");
     }
-    // The hard >= 2x acceptance assert only runs in full mode: fast mode
+    // The hard wall-clock asserts only run in full mode: fast mode
     // (PORTATUNE_BENCH_FAST, used by CI) takes too few samples for a
     // wall-clock assert to be reliable on shared runners.
     let fast = std::env::var("PORTATUNE_BENCH_FAST").is_ok();
     if cores >= 4 {
-        let (_, _, _, speedup, _) = rows[0];
+        let (_, stats, _) = &rows[0]; // exhaustive
+        let speedup = stats[0].0 / stats[2].0; // seq/pool medians
+        // The pool-vs-scoped comparison uses per-engine MINIMA: the two
+        // engines differ by a fixed per-batch spawn cost, so best-case
+        // times compare the mechanisms while medians absorb scheduler
+        // noise that could flip a zero-tolerance >= assert spuriously.
+        let (scoped_min, pool_min) = (stats[1].1, stats[2].1);
+        let vs_scoped = scoped_min / pool_min;
         if fast {
-            println!("\nfast mode: exhaustive parallel speedup {speedup:.2}x (assert skipped)");
+            println!(
+                "\nfast mode: exhaustive pool speedup {speedup:.2}x vs seq, {vs_scoped:.2}x vs scoped (asserts skipped)"
+            );
         } else {
             assert!(
                 speedup >= 2.0,
-                "exhaustive parallel speedup {speedup:.2}x < 2x on {cores} cores"
+                "exhaustive pool speedup {speedup:.2}x < 2x vs sequential on {cores} cores"
+            );
+            assert!(
+                vs_scoped >= 1.0,
+                "persistent pool (min {pool_min:.0} us) slower than per-batch scoped threads (min {scoped_min:.0} us) on {cores} cores"
             );
             println!(
-                "\nacceptance: exhaustive parallel speedup {speedup:.2}x on {cores} cores (>= 2x)"
+                "\nacceptance: exhaustive pool {speedup:.2}x vs sequential, {vs_scoped:.2}x vs scoped threads on {cores} cores"
             );
         }
     }

@@ -2,12 +2,18 @@
 //!
 //! - [`SimEvaluator`] asks an analytical platform model (instant,
 //!   deterministic) — used for the paper-figure reproductions.  It is
-//!   `Send + Sync` and overrides [`Evaluator::evaluate_batch`] with a
-//!   `std::thread::scope` worker pool sized by `available_parallelism`,
-//!   so batching strategies evaluate configurations on every core while
-//!   results merge back in submission order (bit-identical to the
-//!   sequential path).
-//! - [`PjrtEvaluator`] (feature `pjrt`) compiles and *actually executes*
+//!   `Send + Sync` and overrides [`Evaluator::evaluate_batch`]: by
+//!   default batches fan out over the persistent shared
+//!   [`WorkerPool`](crate::util::pool::WorkerPool) ([`BatchMode::Pool`]);
+//!   the PR 1 per-batch `std::thread::scope` path is kept as
+//!   [`BatchMode::ScopedThreads`] so the bench can measure what the pool
+//!   buys.  All modes merge results in submission order, so every mode
+//!   is bit-identical to the sequential path.
+//! - [`MultiDeviceEvaluator`] shards each batch across N per-device
+//!   evaluators (simulated device replicas for now) — the
+//!   placement-agnostic step toward the ROADMAP's multi-GPU evaluator —
+//!   and tracks per-device utilization via [`crate::metrics::DeviceUtil`].
+//! - `PjrtEvaluator` (feature `pjrt`) compiles and *actually executes*
 //!   the AOT artifact for a configuration on the PJRT CPU client and
 //!   reports measured wall-clock — the real autotuning loop (compile
 //!   cost dominates, just as the paper notes: "compilation time accounts
@@ -15,21 +21,48 @@
 //!   `Send`, so it relies on the trait's sequential `evaluate_batch`
 //!   default.
 
+use std::time::Instant;
+
 use crate::autotuner::Evaluator;
 use crate::config::Config;
+use crate::metrics::DeviceUtil;
 use crate::platform::model::{Codegen, InvalidConfig, SimGpu};
+use crate::util::pool;
 use crate::workload::Workload;
 
+/// How a [`SimEvaluator`] executes [`Evaluator::evaluate_batch`].
+///
+/// Every mode produces bit-identical results (the merge is in
+/// submission order and the model is deterministic); they differ only
+/// in wall-clock cost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchMode {
+    /// Every evaluation on the caller's thread — the equivalence
+    /// baseline for tests and benches.
+    Sequential,
+    /// One `std::thread::scope` per batch (the PR 1 engine): threads
+    /// are re-spawned for every batch.  Kept as the bench baseline the
+    /// persistent pool is measured against.
+    ScopedThreads,
+    /// The persistent shared worker pool (`util::pool::global`) —
+    /// the default: no per-batch thread spawn, one thread set shared by
+    /// every evaluator in the process.
+    Pool,
+}
+
 /// Evaluate against an analytical GPU model.
+#[derive(Debug, Clone)]
 pub struct SimEvaluator {
+    /// The modeled device.
     pub gpu: SimGpu,
+    /// The workload being tuned.
     pub workload: Workload,
+    /// Codegen-quality knobs of the software stack under test.
     pub codegen: Codegen,
     /// Count of model evaluations performed (profiling aid).
     pub calls: usize,
-    /// Fan batches across a worker pool (on by default; the merge is
-    /// deterministic, so the only observable difference is wall-clock).
-    parallel: bool,
+    /// Batch execution mode (default [`BatchMode::Pool`]).
+    mode: BatchMode,
     /// Synthetic per-evaluation work (spin iterations) standing in for
     /// the compile+measure cost a real evaluator pays.  0 = pure model.
     /// The autotuner bench uses this to measure thread-pool scaling at a
@@ -38,15 +71,29 @@ pub struct SimEvaluator {
 }
 
 impl SimEvaluator {
+    /// A pool-parallel evaluator (the default mode) for `workload` on
+    /// the modeled `gpu` at `codegen` quality.
     pub fn new(gpu: SimGpu, workload: Workload, codegen: Codegen) -> Self {
-        SimEvaluator { gpu, workload, codegen, calls: 0, parallel: true, eval_cost: 0 }
+        SimEvaluator { gpu, workload, codegen, calls: 0, mode: BatchMode::Pool, eval_cost: 0 }
     }
 
-    /// Disable the worker pool: every evaluation runs on the caller's
+    /// Disable parallelism: every evaluation runs on the caller's
     /// thread.  Used as the baseline in equivalence tests and benches.
     pub fn sequential(mut self) -> Self {
-        self.parallel = false;
+        self.mode = BatchMode::Sequential;
         self
+    }
+
+    /// Use a fresh `std::thread::scope` per batch (the PR 1 engine) —
+    /// the bench baseline the persistent pool is compared against.
+    pub fn scoped_threads(mut self) -> Self {
+        self.mode = BatchMode::ScopedThreads;
+        self
+    }
+
+    /// Current batch execution mode.
+    pub fn mode(&self) -> BatchMode {
+        self.mode
     }
 
     /// Attach a synthetic per-evaluation cost (spin iterations).
@@ -103,21 +150,21 @@ impl Evaluator for SimEvaluator {
     }
 
     /// Parallel batched evaluation: contiguous chunks of the batch go to
-    /// scoped worker threads; each worker writes into its own disjoint
-    /// slice of the result vector, so the merge is in submission order
-    /// by construction.
+    /// worker threads (persistent pool by default, per-batch scoped
+    /// threads in [`BatchMode::ScopedThreads`]); each worker writes into
+    /// its own disjoint slice of the result vector, so the merge is in
+    /// submission order by construction.
     fn evaluate_batch(
         &mut self,
         cfgs: &[Config],
         fidelity: f64,
     ) -> Vec<Result<f64, InvalidConfig>> {
         self.calls += cfgs.len();
-        let pool = if self.parallel {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        } else {
-            1
-        };
-        let workers = pool.min(cfgs.len());
+        let workers = match self.mode {
+            BatchMode::Sequential => 1,
+            BatchMode::ScopedThreads | BatchMode::Pool => pool::default_workers(),
+        }
+        .min(cfgs.len());
         let (gpu, workload, codegen) = (&self.gpu, &self.workload, &self.codegen);
         let cost = self.eval_cost;
         if workers <= 1 {
@@ -128,16 +175,182 @@ impl Evaluator for SimEvaluator {
         }
         let mut results: Vec<Option<Result<f64, InvalidConfig>>> = vec![None; cfgs.len()];
         let chunk = cfgs.len().div_ceil(workers);
-        std::thread::scope(|s| {
-            for (cfg_chunk, out_chunk) in cfgs.chunks(chunk).zip(results.chunks_mut(chunk)) {
-                s.spawn(move || {
-                    for (cfg, slot) in cfg_chunk.iter().zip(out_chunk.iter_mut()) {
-                        *slot = Some(eval_config(gpu, workload, codegen, cost, cfg, fidelity));
+        // One worker body shared by both engines — the engines differ
+        // only in who runs it, so they can never diverge behaviorally.
+        let run_chunk =
+            |cfg_chunk: &[Config], out_chunk: &mut [Option<Result<f64, InvalidConfig>>]| {
+                for (cfg, slot) in cfg_chunk.iter().zip(out_chunk.iter_mut()) {
+                    *slot = Some(eval_config(gpu, workload, codegen, cost, cfg, fidelity));
+                }
+            };
+        let run_chunk = &run_chunk;
+        match self.mode {
+            BatchMode::ScopedThreads => {
+                std::thread::scope(|s| {
+                    for (cfg_chunk, out_chunk) in cfgs.chunks(chunk).zip(results.chunks_mut(chunk))
+                    {
+                        s.spawn(move || run_chunk(cfg_chunk, out_chunk));
                     }
                 });
             }
-        });
+            BatchMode::Pool => {
+                pool::global().scope(|s| {
+                    for (cfg_chunk, out_chunk) in cfgs.chunks(chunk).zip(results.chunks_mut(chunk))
+                    {
+                        s.spawn(move || run_chunk(cfg_chunk, out_chunk));
+                    }
+                });
+            }
+            BatchMode::Sequential => unreachable!("workers > 1 implies a parallel mode"),
+        }
         results.into_iter().map(|r| r.expect("worker filled every slot")).collect()
+    }
+}
+
+/// Shards each evaluation batch across a fleet of per-device
+/// evaluators — the placement-agnostic multi-device evaluator the batch
+/// API was designed for (ROADMAP: "wire `evaluate_batch` into a future
+/// multi-GPU evaluator").
+///
+/// Each device receives one contiguous shard of the batch and evaluates
+/// it *sequentially* (a device is serial hardware); shards run
+/// concurrently on the shared worker pool.  Results merge back in
+/// submission order, so for a fleet of identical replicas the outcome is
+/// bit-identical to a single sequential evaluator — pinned by
+/// `tests/parallel_equiv.rs`.
+///
+/// Per-device work counters ([`crate::metrics::DeviceUtil`]) record how
+/// many configurations and shards each device processed and how long it
+/// was busy; [`MultiDeviceEvaluator::utilization`] exposes them together
+/// with the fleet wall-clock ([`MultiDeviceEvaluator::wall_us`]).
+///
+/// The real-execution path (`PjrtEvaluator`) stays sequential behind the
+/// `pjrt` feature: PJRT handles are not `Send`, so a per-device-thread
+/// engine story is a prerequisite (see ROADMAP).
+pub struct MultiDeviceEvaluator {
+    devices: Vec<SimEvaluator>,
+    util: Vec<DeviceUtil>,
+    wall_us: f64,
+}
+
+impl MultiDeviceEvaluator {
+    /// Build a fleet from per-device evaluators.  Each device is forced
+    /// into sequential mode — intra-device parallelism would nest
+    /// scopes for no benefit; the fleet's parallelism is across devices.
+    ///
+    /// # Panics
+    /// Panics when `devices` is empty.
+    pub fn new(devices: Vec<SimEvaluator>) -> Self {
+        assert!(!devices.is_empty(), "a device fleet needs at least one device");
+        let devices: Vec<SimEvaluator> = devices.into_iter().map(|d| d.sequential()).collect();
+        let util = devices
+            .iter()
+            .map(|d| DeviceUtil { device: d.name(), ..DeviceUtil::default() })
+            .collect();
+        MultiDeviceEvaluator { devices, util, wall_us: 0.0 }
+    }
+
+    /// A fleet of `n` identical replicas of `proto` — the homogeneous
+    /// case (tuning one platform faster).  Heterogeneous fleets (one
+    /// evaluator per distinct device model) go through
+    /// [`MultiDeviceEvaluator::new`].
+    pub fn replicate(proto: &SimEvaluator, n: usize) -> Self {
+        assert!(n > 0, "a device fleet needs at least one device");
+        Self::new((0..n).map(|_| proto.clone()).collect())
+    }
+
+    /// Number of devices in the fleet.
+    pub fn devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Per-device work counters, index-aligned with the fleet.
+    pub fn utilization(&self) -> &[DeviceUtil] {
+        &self.util
+    }
+
+    /// Total wall-clock time spent inside batch evaluation, µs (the
+    /// denominator for [`crate::metrics::DeviceUtil::utilization`]).
+    pub fn wall_us(&self) -> f64 {
+        self.wall_us
+    }
+}
+
+impl Evaluator for MultiDeviceEvaluator {
+    /// Fleet platform identity: the sorted set of *distinct* device
+    /// platforms — never the device count or shard layout, which cannot
+    /// change results.  A homogeneous fleet therefore shares its cache
+    /// key (and persisted winners) with a single device of the same
+    /// platform: the results are bit-identical, so cached entries are
+    /// interchangeable.  Only a genuinely heterogeneous fleet gets its
+    /// own `multi[...]` key, and that key is order-independent.
+    fn name(&self) -> String {
+        let mut names: Vec<String> = self.devices.iter().map(|d| d.name()).collect();
+        names.sort();
+        names.dedup();
+        if names.len() == 1 {
+            names.pop().expect("fleet is non-empty")
+        } else {
+            format!("multi[{}]", names.join("+"))
+        }
+    }
+
+    /// Single evaluations route to device 0 (no fan-out to pay for).
+    fn evaluate_fidelity(&mut self, cfg: &Config, fidelity: f64) -> Result<f64, InvalidConfig> {
+        let t0 = Instant::now();
+        let res = self.devices[0].evaluate_fidelity(cfg, fidelity);
+        let dt = t0.elapsed().as_secs_f64() * 1e6;
+        self.util[0].evaluated += 1;
+        self.util[0].busy_us += dt;
+        self.wall_us += dt;
+        res
+    }
+
+    /// Shard the batch into one contiguous chunk per device and
+    /// evaluate the shards concurrently on the shared worker pool;
+    /// results merge in submission order.
+    fn evaluate_batch(
+        &mut self,
+        cfgs: &[Config],
+        fidelity: f64,
+    ) -> Vec<Result<f64, InvalidConfig>> {
+        if cfgs.is_empty() {
+            return Vec::new();
+        }
+        let n = self.devices.len().min(cfgs.len());
+        let t0 = Instant::now();
+        let mut results: Vec<Option<Result<f64, InvalidConfig>>> = vec![None; cfgs.len()];
+        let chunk = cfgs.len().div_ceil(n);
+        if n <= 1 {
+            let out = self.devices[0].evaluate_batch(cfgs, fidelity);
+            let dt = t0.elapsed().as_secs_f64() * 1e6;
+            self.util[0].evaluated += cfgs.len();
+            self.util[0].shards += 1;
+            self.util[0].busy_us += dt;
+            self.wall_us += dt;
+            return out;
+        }
+        pool::global().scope(|s| {
+            for ((dev, util), (cfg_chunk, out_chunk)) in self
+                .devices
+                .iter_mut()
+                .zip(self.util.iter_mut())
+                .zip(cfgs.chunks(chunk).zip(results.chunks_mut(chunk)))
+            {
+                s.spawn(move || {
+                    let t = Instant::now();
+                    let out = dev.evaluate_batch(cfg_chunk, fidelity);
+                    for (slot, r) in out_chunk.iter_mut().zip(out) {
+                        *slot = Some(r);
+                    }
+                    util.evaluated += cfg_chunk.len();
+                    util.shards += 1;
+                    util.busy_us += t.elapsed().as_secs_f64() * 1e6;
+                });
+            }
+        });
+        self.wall_us += t0.elapsed().as_secs_f64() * 1e6;
+        results.into_iter().map(|r| r.expect("device filled every slot")).collect()
     }
 }
 
@@ -273,25 +486,142 @@ mod tests {
     }
 
     #[test]
-    fn parallel_batch_is_bit_identical_to_sequential() {
+    fn default_mode_is_pool() {
+        let w = Workload::llama3_attention(4, 512);
+        let e = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
+        assert_eq!(e.mode(), BatchMode::Pool);
+        assert_eq!(e.sequential().mode(), BatchMode::Sequential);
+    }
+
+    #[test]
+    fn every_parallel_mode_is_bit_identical_to_sequential() {
         let w = Workload::llama3_attention(8, 512);
         let space = crate::config::spaces::attention_sim_space();
         let cfgs: Vec<Config> = space.enumerate(&w).collect();
         assert!(cfgs.len() > 100, "need a real batch");
-        let mut par = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
         let mut seq = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED).sequential();
-        let a = par.evaluate_batch(&cfgs, 1.0);
-        let b = seq.evaluate_batch(&cfgs, 1.0);
+        let baseline = seq.evaluate_batch(&cfgs, 1.0);
+        for par in [
+            SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED), // pool default
+            SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED).scoped_threads(),
+        ] {
+            let mut par = par;
+            let a = par.evaluate_batch(&cfgs, 1.0);
+            assert_eq!(a.len(), baseline.len());
+            for (i, (x, y)) in a.iter().zip(&baseline).enumerate() {
+                match (x, y) {
+                    (Ok(p), Ok(q)) => {
+                        assert_eq!(p.to_bits(), q.to_bits(), "cfg {i} latency differs")
+                    }
+                    (Err(_), Err(_)) => {}
+                    _ => panic!("cfg {i}: validity differs between parallel and sequential"),
+                }
+            }
+            assert_eq!(par.calls, cfgs.len());
+        }
+        assert_eq!(seq.calls, cfgs.len());
+    }
+
+    #[test]
+    fn pool_evaluator_is_reusable_across_batches() {
+        // The persistent pool must give the same answers batch after
+        // batch (no state leaks between scopes).
+        let w = Workload::llama3_attention(8, 512);
+        let space = crate::config::spaces::attention_sim_space();
+        let cfgs: Vec<Config> = space.enumerate(&w).collect();
+        let mut pooled = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
+        let first = pooled.evaluate_batch(&cfgs, 1.0);
+        for _ in 0..2 {
+            let again = pooled.evaluate_batch(&cfgs, 1.0);
+            for (a, b) in first.iter().zip(&again) {
+                match (a, b) {
+                    (Ok(p), Ok(q)) => assert_eq!(p.to_bits(), q.to_bits()),
+                    (Err(_), Err(_)) => {}
+                    _ => panic!("validity flapped across batches"),
+                }
+            }
+        }
+        assert_eq!(pooled.calls, 3 * cfgs.len());
+    }
+
+    #[test]
+    fn multi_device_matches_single_device_bitwise() {
+        let w = Workload::llama3_attention(8, 512);
+        let space = crate::config::spaces::attention_sim_space();
+        let cfgs: Vec<Config> = space.enumerate(&w).collect();
+        let mut single = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED).sequential();
+        let mut fleet =
+            MultiDeviceEvaluator::replicate(&SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED), 3);
+        let a = single.evaluate_batch(&cfgs, 1.0);
+        let b = fleet.evaluate_batch(&cfgs, 1.0);
         assert_eq!(a.len(), b.len());
         for (i, (x, y)) in a.iter().zip(&b).enumerate() {
             match (x, y) {
-                (Ok(p), Ok(q)) => assert_eq!(p.to_bits(), q.to_bits(), "cfg {i} latency differs"),
+                (Ok(p), Ok(q)) => assert_eq!(p.to_bits(), q.to_bits(), "cfg {i} differs"),
                 (Err(_), Err(_)) => {}
-                _ => panic!("cfg {i}: validity differs between parallel and sequential"),
+                _ => panic!("cfg {i}: validity differs between fleet and single device"),
             }
         }
-        assert_eq!(par.calls, cfgs.len());
-        assert_eq!(seq.calls, cfgs.len());
+    }
+
+    #[test]
+    fn multi_device_utilization_counters_add_up() {
+        let w = Workload::llama3_attention(8, 512);
+        let space = crate::config::spaces::attention_sim_space();
+        let cfgs: Vec<Config> = space.enumerate(&w).collect();
+        let mut fleet =
+            MultiDeviceEvaluator::replicate(&SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED), 3);
+        assert_eq!(fleet.devices(), 3);
+        let _ = fleet.evaluate_batch(&cfgs, 1.0);
+        let total: usize = fleet.utilization().iter().map(|u| u.evaluated).sum();
+        assert_eq!(total, cfgs.len(), "every config lands on exactly one device");
+        for u in fleet.utilization() {
+            assert!(u.evaluated > 0, "batch larger than fleet must reach every device");
+            assert_eq!(u.shards, 1);
+            assert!(!u.device.is_empty());
+        }
+        assert!(fleet.wall_us() > 0.0);
+    }
+
+    #[test]
+    fn multi_device_small_batch_reaches_fewer_devices() {
+        let w = Workload::llama3_attention(4, 512);
+        let cfg = Config::new(&[
+            ("BLOCK_M", 64),
+            ("BLOCK_N", 64),
+            ("num_warps", 4),
+            ("num_stages", 2),
+            ("waves_per_eu", 0),
+        ]);
+        let mut fleet =
+            MultiDeviceEvaluator::replicate(&SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED), 4);
+        let out = fleet.evaluate_batch(std::slice::from_ref(&cfg), 1.0);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].is_ok());
+        let reached: usize = fleet.utilization().iter().filter(|u| u.evaluated > 0).count();
+        assert_eq!(reached, 1, "a 1-config batch occupies exactly one device");
+    }
+
+    #[test]
+    fn homogeneous_fleet_shares_cache_key_with_single_device() {
+        // Fleet results are bit-identical to a single device's, so a
+        // replica fleet must hit the same cache entries (same name).
+        let w = Workload::llama3_attention(4, 512);
+        let base = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
+        let fleet = MultiDeviceEvaluator::replicate(&base, 4);
+        assert_eq!(fleet.name(), base.name());
+    }
+
+    #[test]
+    fn heterogeneous_fleet_name_is_order_independent() {
+        let w = Workload::llama3_attention(4, 512);
+        let a = || SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
+        let m = || SimEvaluator::new(SimGpu::mi250(), w, HAND_TUNED);
+        let h1 = MultiDeviceEvaluator::new(vec![a(), m(), a()]);
+        let h2 = MultiDeviceEvaluator::new(vec![m(), a(), a()]);
+        assert_eq!(h1.name(), h2.name(), "same platform set, same key");
+        assert!(h1.name().starts_with("multi["), "{}", h1.name());
+        assert_ne!(h1.name(), a().name(), "mixed fleets must not alias a single platform");
     }
 
     #[test]

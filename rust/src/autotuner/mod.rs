@@ -9,22 +9,28 @@
 //!
 //! Unlike the Triton built-in autotuner the paper critiques (§Q3), tuning
 //! here is (a) cached persistently via [`crate::cache`], (b) composable
-//! with background execution ([`crate::serving::executor`]), and (c)
-//! explicit about invalid configurations (they are counted, not hidden).
+//! with background execution (`serving::executor`, feature `pjrt`), and
+//! (c) explicit about invalid configurations (they are counted, not
+//! hidden).
 //!
-//! **Throughput** (the paper's §Q4.2 time budget): evaluation goes
-//! through [`Evaluator::evaluate_batch`], which parallel evaluators
-//! ([`SimEvaluator`]) fan across a thread pool.  Results are merged in
-//! submission order, so parallel runs are bit-identical to sequential
-//! ones — `cargo bench --bench autotuner` reports configs/second both
-//! ways.
+//! **Throughput** (the paper's §Q4.2 time budget): every entry point
+//! ([`tune`], [`tune_guided`], [`tune_cached`]) and every [`search`]
+//! strategy takes *any* `&mut dyn Evaluator` and drives it through
+//! [`Evaluator::evaluate_batch`].  Parallel evaluators fan batches
+//! across the persistent worker pool ([`crate::util::pool`]):
+//! [`SimEvaluator`] chunks a batch over every core, and
+//! [`MultiDeviceEvaluator`] shards it across a fleet of per-device
+//! evaluators.  Results are merged in submission order, so parallel and
+//! multi-device runs are bit-identical to sequential ones — `cargo
+//! bench --bench autotuner` reports configs/second for the scoped,
+//! pooled, and multi-device paths.
 
 pub mod evaluators;
 pub mod search;
 
 #[cfg(feature = "pjrt")]
 pub use evaluators::PjrtEvaluator;
-pub use evaluators::SimEvaluator;
+pub use evaluators::{BatchMode, MultiDeviceEvaluator, SimEvaluator};
 pub use search::Strategy;
 
 use std::time::Instant;
@@ -39,23 +45,27 @@ use crate::workload::Workload;
 /// `fidelity` ∈ (0, 1] lets multi-fidelity searches (successive halving)
 /// ask for cheaper, noisier measurements; evaluators may ignore it.
 pub trait Evaluator {
+    /// Stable platform identifier — part of persistent cache keys, so
+    /// it must only change when tuning results stop being comparable.
     fn name(&self) -> String;
 
+    /// Evaluate one configuration at full fidelity.
     fn evaluate(&mut self, cfg: &Config) -> Result<f64, InvalidConfig> {
         self.evaluate_fidelity(cfg, 1.0)
     }
 
+    /// Evaluate one configuration at the given measurement fidelity.
     fn evaluate_fidelity(&mut self, cfg: &Config, fidelity: f64) -> Result<f64, InvalidConfig>;
 
     /// Evaluate a batch of configurations, returning results in
     /// submission order (`out[i]` belongs to `cfgs[i]`).
     ///
     /// The default implementation is sequential, so evaluators that
-    /// cannot parallelize — [`PjrtEvaluator`]'s PJRT handles are not
+    /// cannot parallelize — `PjrtEvaluator`'s PJRT handles are not
     /// `Send` — work unchanged.  Parallel evaluators override this and
-    /// fan the batch across a worker pool; because the contract fixes
-    /// the output *order*, callers cannot observe the difference except
-    /// in wall-clock time.
+    /// fan the batch across the worker pool (or a device fleet); because
+    /// the contract fixes the output *order*, callers cannot observe the
+    /// difference except in wall-clock time.
     fn evaluate_batch(
         &mut self,
         cfgs: &[Config],
@@ -68,7 +78,9 @@ pub trait Evaluator {
 /// One tuning run's outcome.
 #[derive(Debug, Clone)]
 pub struct TuneOutcome {
+    /// The fastest valid configuration found.
     pub best: Config,
+    /// Measured/modeled latency of [`TuneOutcome::best`], µs.
     pub best_latency_us: f64,
     /// Configurations actually evaluated (cache-miss cost of the run).
     pub evaluated: usize,
@@ -79,6 +91,7 @@ pub struct TuneOutcome {
     /// counting/spread analysis, and cloning hundreds of `BTreeMap`s
     /// per run was pure overhead (only `best` needs the full config).
     pub history: Vec<(u64, Option<f64>)>,
+    /// Wall-clock duration of the tuning run, seconds.
     pub wall_seconds: f64,
     /// True when the result was served from the persistent cache.
     pub from_cache: bool,

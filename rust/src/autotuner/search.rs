@@ -43,14 +43,41 @@ pub const EVAL_BATCH: usize = 256;
 /// Search strategy selector (all deterministic given a seed).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Strategy {
+    /// Measure every valid configuration (the ground truth).
     Exhaustive,
-    Random { budget: usize },
-    HillClimb { restarts: usize, budget: usize },
-    Anneal { budget: usize, t0: f64, alpha: f64 },
-    SuccessiveHalving { initial: usize, eta: usize },
+    /// `budget` distinct uniform samples.
+    Random {
+        /// Maximum number of evaluations.
+        budget: usize,
+    },
+    /// Restarted steepest-descent over one-parameter neighbourhoods.
+    HillClimb {
+        /// Number of random restarts.
+        restarts: usize,
+        /// Maximum number of evaluations across all restarts.
+        budget: usize,
+    },
+    /// Simulated annealing over the neighbourhood graph.
+    Anneal {
+        /// Maximum number of evaluations.
+        budget: usize,
+        /// Initial temperature.
+        t0: f64,
+        /// Per-step geometric cooling factor.
+        alpha: f64,
+    },
+    /// Multi-fidelity racing: start `initial` configs cheap, promote the
+    /// best `1/eta` fraction per rung.
+    SuccessiveHalving {
+        /// Rung-0 population size.
+        initial: usize,
+        /// Promotion ratio between rungs (≥ 2).
+        eta: usize,
+    },
 }
 
 impl Strategy {
+    /// Compact human-readable identifier (used in reports and caches).
     pub fn label(&self) -> String {
         match self {
             Strategy::Exhaustive => "exhaustive".into(),
@@ -84,6 +111,7 @@ impl Recorder {
         self.evals.len()
     }
 
+    /// True when nothing has been evaluated yet.
     pub fn is_empty(&self) -> bool {
         self.evals.is_empty()
     }
@@ -159,6 +187,10 @@ impl Recorder {
 }
 
 impl Strategy {
+    /// Execute the strategy over `space` for `w`, recording every
+    /// evaluation into `rec`.  Works with any [`Evaluator`] — batching
+    /// strategies submit through `evaluate_batch`, so parallel and
+    /// multi-device evaluators are used transparently.
     pub fn run(
         &self,
         space: &ConfigSpace,

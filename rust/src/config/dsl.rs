@@ -41,13 +41,20 @@ use crate::workload::Workload;
 /// Parsed constraint expression (integer arithmetic + boolean logic).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Expr {
+    /// Integer literal.
     Num(i64),
+    /// Parameter or workload-field reference.
     Var(String),
+    /// Binary operation.
     Binary(Op, Rc<Expr>, Rc<Expr>),
+    /// Logical negation (`!e`; 0 becomes 1, non-zero becomes 0).
     Not(Rc<Expr>),
 }
 
+/// Binary operators of the constraint expression language.  Comparisons
+/// and logic evaluate to 0/1 integers.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[allow(missing_docs)] // one-to-one with the operator tokens below
 pub enum Op {
     Add,
     Sub,

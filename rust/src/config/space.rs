@@ -13,13 +13,18 @@ use crate::workload::Workload;
 ///
 /// Ordered map so that [`Config::key`] is canonical.
 #[derive(Debug, Clone, PartialEq, Eq, Hash, Default)]
-pub struct Config(pub BTreeMap<String, i64>);
+pub struct Config(
+    /// The assignment itself: parameter name → chosen value, sorted.
+    pub BTreeMap<String, i64>,
+);
 
 impl Config {
+    /// Build a config from (parameter, value) pairs.
     pub fn new(pairs: &[(&str, i64)]) -> Self {
         Config(pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect())
     }
 
+    /// Value of parameter `name`, if assigned.
     pub fn get(&self, name: &str) -> Option<i64> {
         self.0.get(name).copied()
     }
@@ -32,6 +37,7 @@ impl Config {
             .unwrap_or_else(|| panic!("config missing parameter {name:?}"))
     }
 
+    /// Assign parameter `name` to `value` (inserting or overwriting).
     pub fn set(&mut self, name: &str, value: i64) {
         self.0.insert(name.to_string(), value);
     }
@@ -76,11 +82,17 @@ impl fmt::Display for Config {
 /// One tunable parameter with its discrete choice list.
 #[derive(Debug, Clone)]
 pub struct Param {
+    /// Parameter name (e.g. `BLOCK_M`).
     pub name: String,
+    /// Legal values, in definition order.
     pub choices: Vec<i64>,
 }
 
 impl Param {
+    /// A parameter with a non-empty choice list.
+    ///
+    /// # Panics
+    /// Panics when `choices` is empty.
     pub fn new(name: &str, choices: &[i64]) -> Self {
         assert!(!choices.is_empty(), "parameter {name} has no choices");
         Param { name: name.to_string(), choices: choices.to_vec() }
@@ -95,11 +107,13 @@ impl Param {
 /// was rejected (the paper notes invalid configs are platform-specific).
 #[derive(Clone)]
 pub struct Constraint {
+    /// Human-readable constraint name, reported on rejection.
     pub name: String,
     pred: Arc<dyn Fn(&Config, &Workload) -> bool + Send + Sync>,
 }
 
 impl Constraint {
+    /// A named validity predicate.
     pub fn new(
         name: &str,
         pred: impl Fn(&Config, &Workload) -> bool + Send + Sync + 'static,
@@ -107,6 +121,7 @@ impl Constraint {
         Constraint { name: name.to_string(), pred: Arc::new(pred) }
     }
 
+    /// Does `cfg` satisfy this constraint for `w`?
     pub fn check(&self, cfg: &Config, w: &Workload) -> bool {
         (self.pred)(cfg, w)
     }
@@ -122,12 +137,17 @@ impl fmt::Debug for Constraint {
 /// choices, filtered by constraints.
 #[derive(Debug, Clone)]
 pub struct ConfigSpace {
+    /// Space name — part of cache keys via [`ConfigSpace::fingerprint_key`].
     pub name: String,
+    /// Tunable parameters, in definition order.
     pub params: Vec<Param>,
+    /// Named validity predicates coupling parameters and workload.
     pub constraints: Vec<Constraint>,
 }
 
 impl ConfigSpace {
+    /// An empty space named `name`; add parameters/constraints with the
+    /// builder methods.
     pub fn new(name: &str) -> Self {
         ConfigSpace { name: name.to_string(), params: Vec::new(), constraints: Vec::new() }
     }

@@ -4,6 +4,7 @@
 //! portatune bench <fig1|fig2|fig3|fig4|fig5|tables|all> [--out-dir D]
 //! portatune tune  [--kernel K] [--platform P] [--batch N] [--seq N]
 //!                 [--strategy S] [--budget N] [--cache F] [--seed N]
+//!                 [--devices N]
 //! portatune serve [--requests N] [--seed N] [--no-tuning]
 //! portatune analyze <kernels|hlo> [path]
 //! portatune cache <show|clear> [--file F]
@@ -13,7 +14,7 @@ use anyhow::{anyhow, Result};
 
 #[cfg(feature = "pjrt")]
 use portatune::autotuner::PjrtEvaluator;
-use portatune::autotuner::{self, SimEvaluator, Strategy};
+use portatune::autotuner::{self, MultiDeviceEvaluator, SimEvaluator, Strategy};
 use portatune::cache::TuningCache;
 use portatune::codegen::hlo;
 use portatune::config::spaces;
@@ -39,6 +40,7 @@ USAGE:
                   [--batch N] [--seq N]
                   [--strategy exhaustive|random|hillclimb|anneal|sha]
                   [--budget N] [--cache FILE] [--seed N] [--space FILE.json]
+                  [--devices N]   (shard evaluation across N simulated devices)
   portatune serve [--requests N] [--seed N] [--no-tuning]
   portatune analyze kernels
   portatune analyze hlo <path>
@@ -124,6 +126,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
     let seq = args.flag_parse("seq", 1024usize)?;
     let budget = args.flag_parse("budget", 200usize)?;
     let seed = args.flag_parse("seed", 0u64)?;
+    let devices = args.flag_parse_at_least("devices", 1, 1)?;
     let strat = parse_strategy(&args.flag_or("strategy", "exhaustive"), budget)?;
     let w = workload_for(&kernel, batch, seq)?;
     let mut cache = match args.flag("cache") {
@@ -131,9 +134,17 @@ fn cmd_tune(args: &Args) -> Result<()> {
         None => TuningCache::ephemeral(),
     };
 
+    // Filled by the multi-device path: one line per device.
+    let mut device_report: Vec<String> = Vec::new();
     let outcome = match platform {
         #[cfg(feature = "pjrt")]
         PlatformId::CpuPjrt => {
+            if devices > 1 {
+                return Err(anyhow!(
+                    "--devices applies to sim platforms only: the PJRT path is sequential \
+                     (PJRT handles are not Send; see ROADMAP)"
+                ));
+            }
             let space = spaces::aot_space_for(&w);
             let engine = Engine::cpu()?;
             let manifest = Manifest::load_default()?;
@@ -155,8 +166,35 @@ fn cmd_tune(args: &Args) -> Result<()> {
                 None => spaces::sim_space_for(&w),
             };
             let cg = triton_codegen(gpu.spec.vendor);
-            let mut eval = SimEvaluator::new(gpu, w, cg);
-            autotuner::tune_cached(&mut cache, &space, &w, &mut eval, &strat, seed)
+            if devices > 1 {
+                // Shard every evaluation batch across a fleet of
+                // simulated device replicas; results are bit-identical
+                // to a single device, only faster.
+                let mut eval =
+                    MultiDeviceEvaluator::replicate(&SimEvaluator::new(gpu, w, cg), devices);
+                let outcome =
+                    autotuner::tune_cached(&mut cache, &space, &w, &mut eval, &strat, seed);
+                let wall = eval.wall_us();
+                device_report = eval
+                    .utilization()
+                    .iter()
+                    .enumerate()
+                    .map(|(i, u)| {
+                        format!(
+                            "  device {i} [{}]: {} cfgs in {} shards, busy {:.0} us ({:.0}% util)",
+                            u.device,
+                            u.evaluated,
+                            u.shards,
+                            u.busy_us,
+                            100.0 * u.utilization(wall)
+                        )
+                    })
+                    .collect();
+                outcome
+            } else {
+                let mut eval = SimEvaluator::new(gpu, w, cg);
+                autotuner::tune_cached(&mut cache, &space, &w, &mut eval, &strat, seed)
+            }
         }
     }
     .ok_or_else(|| anyhow!("no valid configuration found"))?;
@@ -172,6 +210,12 @@ fn cmd_tune(args: &Args) -> Result<()> {
     }
     println!("from cache    : {}", outcome.from_cache);
     println!("wall time     : {:.2} s", outcome.wall_seconds);
+    if !device_report.is_empty() {
+        println!("devices       : {devices} (sharded simulated fleet)");
+        for line in &device_report {
+            println!("{line}");
+        }
+    }
     cache.save()?;
     if args.flag("cache").is_some() {
         println!("cache         : {} entries @ {}", cache.len(), cache.path().display());
@@ -334,7 +378,7 @@ fn main() -> Result<()> {
         }
         "tune" => {
             let args = Args::parse(rest, &[])?;
-            args.ensure_known(&["kernel", "platform", "batch", "seq", "strategy", "budget", "cache", "seed", "space"])?;
+            args.ensure_known(&["kernel", "platform", "batch", "seq", "strategy", "budget", "cache", "seed", "space", "devices"])?;
             cmd_tune(&args)
         }
         "serve" => {

@@ -1,7 +1,9 @@
-//! Small statistics toolkit: summaries, percentiles, CDFs, histograms.
+//! Small statistics toolkit: summaries, percentiles, CDFs, histograms,
+//! and per-device work counters.
 //!
-//! Used by the serving layer (latency percentiles) and the experiment
-//! harness (Fig. 3's cumulative distributions).
+//! Used by the serving layer (latency percentiles), the experiment
+//! harness (Fig. 3's cumulative distributions), and the multi-device
+//! evaluator ([`DeviceUtil`] utilization accounting).
 
 /// Streaming-ish summary of a sample set (stores the samples; the scales
 /// here never exceed a few hundred thousand points).
@@ -12,24 +14,29 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// An empty summary.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Add one sample.
     pub fn record(&mut self, v: f64) {
         self.samples.push(v);
         self.sorted = false;
     }
 
+    /// Add many samples.
     pub fn extend(&mut self, vs: impl IntoIterator<Item = f64>) {
         self.samples.extend(vs);
         self.sorted = false;
     }
 
+    /// Number of recorded samples.
     pub fn len(&self) -> usize {
         self.samples.len()
     }
 
+    /// True when no samples have been recorded.
     pub fn is_empty(&self) -> bool {
         self.samples.is_empty()
     }
@@ -41,6 +48,7 @@ impl Summary {
         }
     }
 
+    /// Arithmetic mean (NaN when empty).
     pub fn mean(&self) -> f64 {
         if self.samples.is_empty() {
             return f64::NAN;
@@ -48,10 +56,12 @@ impl Summary {
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
 
+    /// Smallest sample (+inf when empty).
     pub fn min(&self) -> f64 {
         self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
     }
 
+    /// Largest sample (-inf when empty).
     pub fn max(&self) -> f64 {
         self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
     }
@@ -69,14 +79,17 @@ impl Summary {
         self.samples[lo] * (1.0 - frac) + self.samples[hi] * frac
     }
 
+    /// Median.
     pub fn p50(&mut self) -> f64 {
         self.percentile(50.0)
     }
 
+    /// 95th percentile.
     pub fn p95(&mut self) -> f64 {
         self.percentile(95.0)
     }
 
+    /// 99th percentile.
     pub fn p99(&mut self) -> f64 {
         self.percentile(99.0)
     }
@@ -89,6 +102,7 @@ pub struct Cdf {
 }
 
 impl Cdf {
+    /// Build the CDF of a sample set.
     pub fn new(mut samples: Vec<f64>) -> Self {
         samples.sort_by(f64::total_cmp);
         Cdf { sorted: samples }
@@ -127,12 +141,46 @@ impl Cdf {
             .collect()
     }
 
+    /// Number of underlying samples.
     pub fn len(&self) -> usize {
         self.sorted.len()
     }
 
+    /// True when the CDF was built from no samples.
     pub fn is_empty(&self) -> bool {
         self.sorted.is_empty()
+    }
+}
+
+/// Work counters for one device of a sharded multi-device evaluator
+/// (`autotuner::evaluators::MultiDeviceEvaluator`).
+///
+/// The evaluator updates these as it fans batch shards out; utilization
+/// is the fraction of the fleet's wall-clock time this device spent
+/// evaluating — a perfectly balanced fleet shows every device near 1.0,
+/// while a skewed shard split (or a straggler device model) shows up as
+/// low utilization on the idle devices.
+#[derive(Debug, Clone, Default)]
+pub struct DeviceUtil {
+    /// Evaluator/platform name of the device.
+    pub device: String,
+    /// Configurations evaluated on this device.
+    pub evaluated: usize,
+    /// Batch shards this device has processed.
+    pub shards: usize,
+    /// Cumulative time this device spent evaluating, µs.
+    pub busy_us: f64,
+}
+
+impl DeviceUtil {
+    /// Busy fraction of `wall_us` (total fleet wall-clock), clamped to
+    /// [0, 1]; 0.0 when no wall time has elapsed.
+    pub fn utilization(&self, wall_us: f64) -> f64 {
+        if wall_us <= 0.0 {
+            0.0
+        } else {
+            (self.busy_us / wall_us).clamp(0.0, 1.0)
+        }
     }
 }
 
@@ -190,6 +238,15 @@ mod tests {
     fn geomean_of_ratios() {
         assert!((geomean(&[2.0, 0.5]) - 1.0).abs() < 1e-12);
         assert!((geomean(&[4.0]) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn device_util_fractions() {
+        let u = DeviceUtil { device: "sim".into(), evaluated: 10, shards: 2, busy_us: 50.0 };
+        assert!((u.utilization(100.0) - 0.5).abs() < 1e-12);
+        assert_eq!(u.utilization(0.0), 0.0);
+        // Clock skew cannot push utilization above 1.
+        assert_eq!(u.utilization(25.0), 1.0);
     }
 
     #[test]

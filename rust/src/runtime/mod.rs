@@ -9,7 +9,7 @@
 //! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
 //!
-//! Everything touching XLA/PJRT ([`Engine`], [`Executable`]) is gated
+//! Everything touching XLA/PJRT (`Engine`, `Executable`) is gated
 //! behind the off-by-default `pjrt` feature so the default build needs
 //! no GPU/XLA toolchain; [`Manifest`], [`TensorF32`] and [`allclose`]
 //! are always available.

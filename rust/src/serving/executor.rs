@@ -8,6 +8,14 @@
 //! variant when a faster one has been proven.  This is the paper's Q4.4
 //! ("move autotuning off the critical path ... using idle GPU times")
 //! made concrete.
+//!
+//! The drain is fed by the shared worker pool
+//! ([`crate::util::pool`]): measurement *inputs* (synthetic activation
+//! tensors, one per bucket shape — potentially tens of MB each) are
+//! generated on pool workers ahead of the measurements that need them
+//! and memoized per shape, so the executor thread spends its idle
+//! slices measuring instead of filling buffers.  The PJRT work itself
+//! stays on this thread (PJRT handles are not `Send`).
 
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
@@ -94,6 +102,11 @@ struct ExecutorState {
     /// Persistent tuning cache (Q4.3): bucket winners survive restarts,
     /// so a re-deployed server starts warm instead of re-tuning.
     cache: Option<TuningCache>,
+    /// Synthetic measurement inputs, memoized per bucket shape and
+    /// generated ahead of need on the shared worker pool (the tensors
+    /// are deterministic per shape, so caching changes nothing but
+    /// wall-clock).
+    tune_inputs: HashMap<ShapeKey, TensorF32>,
     model_geom: (usize, usize, usize), // (q_heads, kv_heads, head_dim)
 }
 
@@ -216,6 +229,7 @@ impl ExecutorState {
             tune_warmup: 1,
             tune_iters: 3,
             cache,
+            tune_inputs: HashMap::new(),
             model_geom: (model.n_q_heads, model.n_kv_heads, model.head_dim),
         };
         state.warm_start_from_cache();
@@ -273,16 +287,61 @@ impl ExecutorState {
             .collect())
     }
 
+    /// Generate (on the shared worker pool, in parallel) the synthetic
+    /// input tensors for the next up-to-[`IDLE_TUNE_BATCH`] queued
+    /// measurements that don't have one memoized yet.  The tensors are
+    /// deterministic per shape, so this is purely a wall-clock
+    /// optimization: the executor thread measures while the pool fills
+    /// buffers for upcoming shapes.
+    fn prefetch_tune_inputs(&mut self) {
+        let hidden = self.hidden;
+        let mut todo: Vec<ShapeKey> = Vec::new();
+        // `tune_queue.pop()` takes from the back, so the *next* items
+        // are the tail.
+        for (key, _) in self.tune_queue.iter().rev().take(IDLE_TUNE_BATCH) {
+            if !self.tune_inputs.contains_key(key) && !todo.contains(key) {
+                todo.push(*key);
+            }
+        }
+        if todo.is_empty() {
+            return;
+        }
+        let mut made: Vec<Option<TensorF32>> = vec![None; todo.len()];
+        crate::util::pool::global().scope(|s| {
+            for (key, slot) in todo.iter().zip(made.iter_mut()) {
+                let key = *key;
+                s.spawn(move || {
+                    *slot = Some(TensorF32::random(&[key.0, key.1, hidden], 0xEE));
+                });
+            }
+        });
+        for (key, tensor) in todo.into_iter().zip(made) {
+            if let Some(t) = tensor {
+                self.tune_inputs.insert(key, t);
+            }
+        }
+    }
+
     /// Run ONE background tuning measurement. Returns false when the
     /// queue is exhausted.
     fn tune_step(&mut self) -> bool {
-        let Some((key, idx)) = self.tune_queue.pop() else { return false };
+        self.prefetch_tune_inputs();
+        let Some((key, idx)) = self.tune_queue.pop() else {
+            // Queue drained: the memoized inputs (tens of MB per shape)
+            // have nothing left to serve.
+            self.tune_inputs.clear();
+            return false;
+        };
         if self.ensure_compiled(key, idx).is_err() {
             return true; // skip uncompilable variant, keep tuning
         }
         let hidden = self.hidden;
-        let x = TensorF32::random(&[key.0, key.1, hidden], 0xEE);
-        let Ok(x_buf) = self.engine.upload(&x) else { return true };
+        if !self.tune_inputs.contains_key(&key) {
+            // Prefetch miss (e.g. shape beyond the lookahead window).
+            self.tune_inputs.insert(key, TensorF32::random(&[key.0, key.1, hidden], 0xEE));
+        }
+        let x = &self.tune_inputs[&key];
+        let Ok(x_buf) = self.engine.upload(x) else { return true };
         let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.weights.len());
         args.push(&x_buf);
         args.extend(self.weights.iter());
@@ -322,6 +381,11 @@ impl ExecutorState {
             self.stats.active.insert(shape_name.clone(), best_id);
             self.stats.active_us.insert(shape_name, best_us);
             self.persist_winner(key, best, best_us, n);
+        }
+        // Drop the memoized input once its shape has no queued
+        // measurements left (the whole map is cleared on exhaustion).
+        if !self.tune_queue.iter().any(|(k, _)| *k == key) {
+            self.tune_inputs.remove(&key);
         }
         true
     }

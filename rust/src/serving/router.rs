@@ -1,8 +1,9 @@
 //! The request router: trace replay, dynamic batching, reporting.
 //!
-//! [`Router::serve_trace`] replays a (deterministic, seeded) arrival
-//! trace through the [`DynamicBatcher`] into the executor thread and
-//! aggregates a [`ServeReport`] — the end-to-end driver behind
+//! `Router::serve_trace` (feature `pjrt`) replays a (deterministic,
+//! seeded) arrival trace through the
+//! [`DynamicBatcher`](super::batcher::DynamicBatcher) into the executor
+//! thread and aggregates a `ServeReport` — the end-to-end driver behind
 //! `examples/serve_attention.rs` and `portatune serve`.
 
 #[cfg(feature = "pjrt")]

@@ -10,10 +10,15 @@ use std::time::Instant;
 /// One benchmark result.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Case name as registered with [`Bench::run`].
     pub name: String,
+    /// Measured iterations (after the warmup run).
     pub iters: usize,
+    /// Mean time per iteration, µs.
     pub mean_us: f64,
+    /// Median time per iteration, µs.
     pub median_us: f64,
+    /// Fastest iteration, µs.
     pub min_us: f64,
 }
 
@@ -30,6 +35,7 @@ impl Default for Bench {
 }
 
 impl Bench {
+    /// A runner honoring `PORTATUNE_BENCH_FAST` (fewer iterations in CI).
     pub fn new() -> Self {
         let fast = std::env::var("PORTATUNE_BENCH_FAST").is_ok();
         Bench { results: Vec::new(), target_iters: if fast { 5 } else { 15 } }
@@ -62,6 +68,7 @@ impl Bench {
         self.results.last().unwrap()
     }
 
+    /// All results recorded so far.
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }

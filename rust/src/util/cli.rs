@@ -10,6 +10,7 @@ use anyhow::{anyhow, bail, Result};
 /// Parsed arguments: positionals in order + flag map.
 #[derive(Debug, Default)]
 pub struct Args {
+    /// Positional arguments, in the order given.
     pub positional: Vec<String>,
     flags: BTreeMap<String, String>,
     bools: Vec<String>,
@@ -40,14 +41,17 @@ impl Args {
         Ok(out)
     }
 
+    /// Value of `--name`, if given.
     pub fn flag(&self, name: &str) -> Option<&str> {
         self.flags.get(name).map(String::as_str)
     }
 
+    /// Value of `--name`, or `default` when absent.
     pub fn flag_or(&self, name: &str, default: &str) -> String {
         self.flag(name).unwrap_or(default).to_string()
     }
 
+    /// Parse the value of `--name`, or return `default` when absent.
     pub fn flag_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
     where
         T::Err: std::fmt::Display,
@@ -58,6 +62,17 @@ impl Args {
         }
     }
 
+    /// Like [`Args::flag_parse`] for counts with a lower bound — flags
+    /// like `--devices N` reject zero instead of silently clamping.
+    pub fn flag_parse_at_least(&self, name: &str, default: usize, min: usize) -> Result<usize> {
+        let v = self.flag_parse(name, default)?;
+        if v < min {
+            bail!("--{name} must be at least {min} (got {v})");
+        }
+        Ok(v)
+    }
+
+    /// Was the boolean flag `--name` given?
     pub fn has(&self, name: &str) -> bool {
         self.bools.iter().any(|b| b == name)
     }
@@ -107,6 +122,16 @@ mod tests {
     #[test]
     fn missing_value_is_error() {
         assert!(Args::parse(&sv(&["--batch"]), &[]).is_err());
+    }
+
+    #[test]
+    fn flag_parse_at_least_enforces_minimum() {
+        let a = Args::parse(&sv(&["--devices", "0"]), &[]).unwrap();
+        assert!(a.flag_parse_at_least("devices", 1, 1).is_err());
+        let b = Args::parse(&sv(&["--devices", "4"]), &[]).unwrap();
+        assert_eq!(b.flag_parse_at_least("devices", 1, 1).unwrap(), 4);
+        let c = Args::parse(&sv(&[]), &[]).unwrap();
+        assert_eq!(c.flag_parse_at_least("devices", 1, 1).unwrap(), 1);
     }
 
     #[test]

@@ -7,6 +7,22 @@
 //! must be pinned down to a spelled-out algorithm.  FNV-1a is tiny,
 //! allocation-free, and plenty for the few-thousand-element spaces the
 //! autotuner dedups over.
+//!
+//! # Invariants the tuning cache relies on
+//!
+//! 1. **Byte-for-byte stability**: the digest of a byte sequence is the
+//!    FNV-1a 64 of the spec (offset `0xcbf29ce484222325`, prime
+//!    `0x100000001b3`) — it never varies across runs, platforms,
+//!    toolchains, or releases.  Changing it silently invalidates every
+//!    persisted cache entry, so it is pinned by known-answer tests.
+//! 2. **Fixed-width integer encoding**: [`Fnv64::write_u64`] /
+//!    [`Fnv64::write_i64`] hash the value's 8 little-endian bytes, so
+//!    numeric fingerprints don't depend on decimal formatting.
+//! 3. **Delimited strings**: [`Fnv64::write_str`] appends the string
+//!    length after the bytes, so adjacent fields can never collide by
+//!    re-splitting (`("ab","c")` ≠ `("a","bc")`).  Every multi-field
+//!    fingerprint in the crate (config assignments, space definitions)
+//!    depends on this framing.
 
 const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
 const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
@@ -22,10 +38,13 @@ impl Default for Fnv64 {
 }
 
 impl Fnv64 {
+    /// A hasher primed with the FNV offset basis.
     pub fn new() -> Self {
         Fnv64(FNV_OFFSET)
     }
 
+    /// Absorb raw bytes (no framing — compose with the typed writers
+    /// when field boundaries matter).
     pub fn write(&mut self, bytes: &[u8]) {
         for &b in bytes {
             self.0 ^= b as u64;
@@ -33,24 +52,30 @@ impl Fnv64 {
         }
     }
 
+    /// Absorb one byte.
     pub fn write_u8(&mut self, v: u8) {
         self.write(&[v]);
     }
 
+    /// Absorb a `u64` as its 8 little-endian bytes (invariant 2).
     pub fn write_u64(&mut self, v: u64) {
         self.write(&v.to_le_bytes());
     }
 
+    /// Absorb an `i64` as its 8 little-endian bytes (invariant 2).
     pub fn write_i64(&mut self, v: i64) {
         self.write(&v.to_le_bytes());
     }
 
+    /// Absorb a string with length framing (invariant 3): the bytes
+    /// followed by the length, so `("ab","c")` never collides with
+    /// `("a","bc")`.
     pub fn write_str(&mut self, s: &str) {
         self.write(s.as_bytes());
-        // Length terminator so ("ab","c") never collides with ("a","bc").
         self.write_u64(s.len() as u64);
     }
 
+    /// The current digest (the hasher can keep absorbing afterwards).
     pub fn finish(&self) -> u64 {
         self.0
     }

@@ -5,10 +5,13 @@
 //! - [`cli`] — a tiny declarative flag parser for the `portatune` binary;
 //! - [`tmp`] — unique temp directories for tests;
 //! - [`bench`] — the mini criterion-style harness behind `cargo bench`;
-//! - [`fnv`] — stable FNV-1a 64 hashing for config/space fingerprints.
+//! - [`fnv`] — stable FNV-1a 64 hashing for config/space fingerprints;
+//! - [`pool`] — the persistent scoped worker pool behind batched
+//!   evaluation (replaces the per-batch `thread::scope` respawn).
 
 pub mod bench;
 pub mod cli;
 pub mod fnv;
+pub mod pool;
 pub mod rng;
 pub mod tmp;

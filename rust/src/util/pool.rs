@@ -1,0 +1,396 @@
+//! A persistent scoped worker pool — the evaluation engine's thread
+//! substrate.
+//!
+//! PR 1 parallelized batched evaluation with one `std::thread::scope`
+//! per batch, which re-spawns OS threads every `EVAL_BATCH`
+//! configurations.  That is fine when one evaluation costs tens of
+//! microseconds and batches are large, but the spawn cost is pure
+//! overhead the moment batches stream continuously (exhaustive search
+//! over a thousand-config space issues several batches per tuning run,
+//! and a serving process tunes in every idle slice).  [`WorkerPool`]
+//! keeps a fixed set of long-lived threads fed through a shared queue
+//! instead:
+//!
+//! - **Scoped borrowing**: [`WorkerPool::scope`] gives the same
+//!   borrow-from-the-stack ergonomics as `std::thread::scope` — tasks
+//!   may capture non-`'static` references because the scope joins every
+//!   spawned task before it returns.
+//! - **Caller participation**: while a scope waits for its tasks it
+//!   helps drain the shared queue, so the submitting thread is never
+//!   parked while work it could do sits queued (this also makes nested
+//!   scopes deadlock-free).
+//! - **Deterministic by construction**: the pool itself never reorders
+//!   *results* — callers hand each task a disjoint output slot, exactly
+//!   like the scoped-thread code it replaces, so parallel evaluation
+//!   stays bit-identical to sequential evaluation.
+//! - **Graceful shutdown**: dropping the pool wakes every worker and
+//!   joins it; no thread outlives the pool.
+//!
+//! One process-wide pool (sized by `available_parallelism`) is shared by
+//! every evaluator via [`global`]; private pools can be created for
+//! tests or custom sizing with [`WorkerPool::new`].
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// A type-erased unit of work, as stored in the shared queue.
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// A queued task plus the completion bookkeeping of the scope that
+/// spawned it.
+struct Job {
+    task: Task,
+    scope: Arc<ScopeState>,
+}
+
+/// Completion state shared between one [`WorkerPool::scope`] call and
+/// the workers executing its tasks.
+struct ScopeState {
+    pending: Mutex<ScopePending>,
+    /// Notified whenever the pending count reaches zero.
+    done: Condvar,
+}
+
+/// Mutex-protected part of [`ScopeState`].
+struct ScopePending {
+    /// Tasks still queued or running.
+    running: usize,
+    /// First panic payload from a task, resumed on the scope's thread.
+    panic: Option<Box<dyn Any + Send + 'static>>,
+}
+
+impl ScopeState {
+    fn new() -> Arc<Self> {
+        Arc::new(ScopeState {
+            pending: Mutex::new(ScopePending { running: 0, panic: None }),
+            done: Condvar::new(),
+        })
+    }
+
+    fn add_one(&self) {
+        self.pending.lock().unwrap().running += 1;
+    }
+
+    fn complete_one(&self, panic: Option<Box<dyn Any + Send + 'static>>) {
+        let mut g = self.pending.lock().unwrap();
+        g.running -= 1;
+        if g.panic.is_none() {
+            g.panic = panic;
+        }
+        if g.running == 0 {
+            self.done.notify_all();
+        }
+    }
+}
+
+/// State shared between the pool handle and its worker threads.
+struct PoolShared {
+    /// (job queue, shutdown flag).
+    queue: Mutex<(VecDeque<Job>, bool)>,
+    /// Notified when a job is pushed or shutdown begins.
+    ready: Condvar,
+}
+
+/// A fixed-size pool of long-lived worker threads with a scoped
+/// submission API (see the [module docs](self)).
+///
+/// The pool is `Sync`: any number of threads may open scopes
+/// concurrently; each scope tracks only its own tasks.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<JoinHandle<()>>,
+    workers: usize,
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `workers` threads (clamped to at least 1).
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new((VecDeque::new(), false)),
+            ready: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("portatune-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn worker-pool thread")
+            })
+            .collect();
+        WorkerPool { shared, handles, workers }
+    }
+
+    /// Number of worker threads in the pool.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `f` with a [`Scope`] on which tasks can be spawned; returns
+    /// only after **every** spawned task has completed (that join is
+    /// what makes borrowing non-`'static` data sound).  If any task
+    /// panicked, the panic is re-raised here on the calling thread.
+    pub fn scope<'pool, 'scope, F, R>(&'pool self, f: F) -> R
+    where
+        F: FnOnce(&Scope<'pool, 'scope>) -> R,
+    {
+        let scope = Scope { pool: self, state: ScopeState::new(), _marker: PhantomData };
+        let result = f(&scope);
+        drop(scope); // waits for all tasks; re-raises task panics
+        result
+    }
+
+    fn push(&self, job: Job) {
+        self.shared.queue.lock().unwrap().0.push_back(job);
+        self.shared.ready.notify_one();
+    }
+
+    /// Pop and run one queued job on the calling thread, if any.
+    fn try_run_one(&self) -> bool {
+        let job = self.shared.queue.lock().unwrap().0.pop_front();
+        match job {
+            Some(job) => {
+                run_job(job);
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    /// Graceful shutdown: signal every worker and join it.  Scopes wait
+    /// for their own tasks before returning, so the queue is normally
+    /// empty here; any straggler jobs are still drained by the workers
+    /// before they exit.
+    fn drop(&mut self) {
+        self.shared.queue.lock().unwrap().1 = true;
+        self.shared.ready.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        let job = {
+            let mut g = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = g.0.pop_front() {
+                    break Some(job);
+                }
+                if g.1 {
+                    break None;
+                }
+                g = shared.ready.wait(g).unwrap();
+            }
+        };
+        match job {
+            Some(job) => run_job(job),
+            None => return,
+        }
+    }
+}
+
+/// Execute one job, trapping panics so a bad task can neither kill a
+/// pool thread nor leave its scope waiting forever; the original panic
+/// payload is resumed on the thread that opened the scope.
+fn run_job(job: Job) {
+    let panic = catch_unwind(AssertUnwindSafe(job.task)).err();
+    job.scope.complete_one(panic);
+}
+
+/// Handle for spawning borrowing tasks inside one [`WorkerPool::scope`]
+/// call.
+pub struct Scope<'pool, 'scope> {
+    pool: &'pool WorkerPool,
+    state: Arc<ScopeState>,
+    /// Invariant over `'scope`, mirroring `std::thread::Scope`: spawned
+    /// tasks may borrow anything that outlives `'scope`, and the scope
+    /// cannot be smuggled into a region where those borrows are dead.
+    _marker: PhantomData<std::cell::Cell<&'scope mut ()>>,
+}
+
+impl<'pool, 'scope> Scope<'pool, 'scope> {
+    /// Queue `f` for execution on the pool.  Unlike `std::thread::spawn`
+    /// — and like `std::thread::scope` — `f` only needs to outlive the
+    /// scope, not `'static`, so it can borrow from the caller's stack.
+    pub fn spawn<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'scope,
+    {
+        self.state.add_one();
+        let task: Box<dyn FnOnce() + Send + 'scope> = Box::new(f);
+        // SAFETY: the scope's Drop blocks until every spawned task has
+        // completed (`wait_all`), so no task — nor anything it borrows —
+        // is ever used after 'scope ends, even though the queue stores
+        // it under a 'static type.
+        let task: Task = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Task>(task)
+        };
+        self.pool.push(Job { task, scope: Arc::clone(&self.state) });
+    }
+
+    /// Block until every task spawned on this scope has completed,
+    /// helping to drain the shared queue while waiting.  If a task
+    /// panicked, its original payload is resumed here (unless this
+    /// thread is already unwinding).
+    fn wait_all(&self) {
+        loop {
+            // Help: run queued jobs (ours or another scope's) instead of
+            // parking this thread while work is available.
+            while self.pool.try_run_one() {}
+            let mut g = self.state.pending.lock().unwrap();
+            loop {
+                if g.running == 0 {
+                    let panic = g.panic.take();
+                    drop(g);
+                    if let Some(payload) = panic {
+                        if !std::thread::panicking() {
+                            resume_unwind(payload);
+                        }
+                    }
+                    return;
+                }
+                // Timed wait so we periodically go back to helping: our
+                // remaining tasks may be sitting in the queue behind a
+                // busy worker set.
+                let (g2, timeout) = self
+                    .state
+                    .done
+                    .wait_timeout(g, Duration::from_millis(1))
+                    .unwrap();
+                g = g2;
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+impl Drop for Scope<'_, '_> {
+    fn drop(&mut self) {
+        self.wait_all();
+    }
+}
+
+/// Default worker count: one per available core.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// The process-wide shared pool (created on first use, sized by
+/// [`default_workers`]).  Evaluators submit through this so that
+/// concurrent tuning runs share one thread set instead of
+/// oversubscribing the machine.  It is never dropped; its threads end
+/// with the process.
+pub fn global() -> &'static WorkerPool {
+    static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+    GLOBAL.get_or_init(|| WorkerPool::new(default_workers()))
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    use super::*;
+
+    #[test]
+    fn scope_runs_every_task_before_returning() {
+        let pool = WorkerPool::new(4);
+        let mut slots = vec![0usize; 64];
+        pool.scope(|s| {
+            for (i, slot) in slots.iter_mut().enumerate() {
+                s.spawn(move || *slot = i + 1);
+            }
+        });
+        // The scope joined, so every borrowed slot is written.
+        for (i, v) in slots.iter().enumerate() {
+            assert_eq!(*v, i + 1);
+        }
+    }
+
+    #[test]
+    fn drop_joins_all_threads_after_work() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        let pool = WorkerPool::new(3);
+        pool.scope(|s| {
+            for _ in 0..12 {
+                let c = Arc::clone(&counter);
+                s.spawn(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 12);
+        let shared = Arc::clone(&pool.shared);
+        drop(pool); // must wake + join all workers without hanging
+        // Workers dropped their Arc clones when they exited: only our
+        // probe reference remains, i.e. every thread really terminated.
+        assert_eq!(Arc::strong_count(&shared), 1);
+    }
+
+    #[test]
+    fn pool_is_reusable_across_scopes() {
+        let pool = WorkerPool::new(2);
+        let mut total = 0u64;
+        for round in 0..5u64 {
+            let mut out = vec![0u64; 16];
+            pool.scope(|s| {
+                for (i, slot) in out.iter_mut().enumerate() {
+                    s.spawn(move || *slot = round * 100 + i as u64);
+                }
+            });
+            total += out.iter().sum::<u64>();
+        }
+        let per_round: u64 = (0..16).sum();
+        let expected: u64 = (0..5u64).map(|r| r * 100 * 16 + per_round).sum();
+        assert_eq!(total, expected);
+    }
+
+    #[test]
+    fn task_panic_propagates_to_scope_caller() {
+        let pool = WorkerPool::new(2);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.scope(|s| {
+                s.spawn(|| panic!("boom"));
+            });
+        }));
+        let payload = caught.expect_err("scope must re-raise task panics");
+        // The ORIGINAL payload is resumed, not a generic wrapper.
+        assert_eq!(payload.downcast_ref::<&str>().copied(), Some("boom"));
+        // The pool survives a panicking task.
+        let mut v = [0; 4];
+        pool.scope(|s| {
+            for slot in v.iter_mut() {
+                s.spawn(move || *slot = 7);
+            }
+        });
+        assert_eq!(v, [7; 4]);
+    }
+
+    #[test]
+    fn zero_requested_workers_clamps_to_one() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.workers(), 1);
+        let mut x = 0;
+        pool.scope(|s| s.spawn(|| x = 1));
+        assert_eq!(x, 1);
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_core_sized() {
+        assert_eq!(global().workers(), default_workers());
+        let a = global() as *const WorkerPool;
+        let b = global() as *const WorkerPool;
+        assert_eq!(a, b);
+    }
+}

@@ -13,6 +13,8 @@ pub struct TempDir {
 }
 
 impl TempDir {
+    /// Create a fresh directory under the system temp dir, unique per
+    /// process/counter/clock.
     pub fn new(prefix: &str) -> std::io::Result<TempDir> {
         let n = COUNTER.fetch_add(1, Ordering::Relaxed);
         let pid = std::process::id();
@@ -25,10 +27,12 @@ impl TempDir {
         Ok(TempDir { path })
     }
 
+    /// The directory's path.
     pub fn path(&self) -> &Path {
         &self.path
     }
 
+    /// A path inside the directory.
     pub fn join(&self, rel: &str) -> PathBuf {
         self.path.join(rel)
     }

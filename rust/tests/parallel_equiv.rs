@@ -1,13 +1,17 @@
 //! Parallel/sequential equivalence contract for the batched autotuner.
 //!
-//! The tentpole guarantee of the parallel evaluation engine: a parallel
-//! [`SimEvaluator`] must produce, for every strategy and seed, exactly
-//! the outcome the sequential evaluator produces — same best config,
-//! same invalid count, same evaluation log (fingerprints AND latencies,
-//! bitwise).  Results are merged in submission order, so any divergence
-//! here is a real bug, not scheduling noise.
+//! The tentpole guarantee of the parallel evaluation engine: every
+//! parallel path — per-batch scoped threads, the persistent worker
+//! pool, and the sharded multi-device fleet — must produce, for every
+//! strategy and seed, exactly the outcome the sequential evaluator
+//! produces: same best config, same invalid count, same evaluation log
+//! (fingerprints AND latencies, bitwise).  Results are merged in
+//! submission order, so any divergence here is a real bug, not
+//! scheduling noise.
 
-use portatune::autotuner::{self, Evaluator, SimEvaluator, Strategy, TuneOutcome};
+use portatune::autotuner::{
+    self, Evaluator, MultiDeviceEvaluator, SimEvaluator, Strategy, TuneOutcome,
+};
 use portatune::cache::TuningCache;
 use portatune::config::spaces;
 use portatune::kernels::baselines::{HAND_TUNED, TRITON_NVIDIA};
@@ -15,14 +19,26 @@ use portatune::platform::SimGpu;
 use portatune::util::tmp::TempDir;
 use portatune::workload::Workload;
 
-fn run(parallel: bool, strat: &Strategy, seed: u64) -> TuneOutcome {
+/// Which evaluation engine a run goes through.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    Sequential,
+    ScopedThreads,
+    Pool,
+    MultiDevice,
+}
+
+fn run(mode: Mode, strat: &Strategy, seed: u64) -> TuneOutcome {
     let w = Workload::llama3_attention(8, 1024);
     let space = spaces::attention_sim_space();
-    let mut eval = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
-    if !parallel {
-        eval = eval.sequential();
-    }
-    autotuner::tune(&space, &w, &mut eval, strat, seed).expect("space is non-empty")
+    let base = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
+    let mut eval: Box<dyn Evaluator> = match mode {
+        Mode::Sequential => Box::new(base.sequential()),
+        Mode::ScopedThreads => Box::new(base.scoped_threads()),
+        Mode::Pool => Box::new(base),
+        Mode::MultiDevice => Box::new(MultiDeviceEvaluator::replicate(&base, 3)),
+    };
+    autotuner::tune(&space, &w, eval.as_mut(), strat, seed).expect("space is non-empty")
 }
 
 fn all_strategies() -> Vec<Strategy> {
@@ -35,34 +51,88 @@ fn all_strategies() -> Vec<Strategy> {
     ]
 }
 
+/// Full-outcome equality: best config + latency bits, counters, and the
+/// entire evaluation log entry for entry.
+fn assert_same_outcome(seq: &TuneOutcome, other: &TuneOutcome, label: &str) {
+    assert_eq!(seq.best, other.best, "{label}: best config differs");
+    assert_eq!(
+        seq.best_latency_us.to_bits(),
+        other.best_latency_us.to_bits(),
+        "{label}: best latency differs"
+    );
+    assert_eq!(seq.invalid, other.invalid, "{label}: invalid count differs");
+    assert_eq!(seq.evaluated, other.evaluated, "{label}: evaluated differs");
+    assert_eq!(seq.history.len(), other.history.len(), "{label}: history length differs");
+    for (i, (s, p)) in seq.history.iter().zip(&other.history).enumerate() {
+        assert_eq!(s.0, p.0, "{label}: eval {i} config differs");
+        assert_eq!(
+            s.1.map(f64::to_bits),
+            p.1.map(f64::to_bits),
+            "{label}: eval {i} latency differs"
+        );
+    }
+}
+
 #[test]
-fn same_seed_same_outcome_for_every_strategy() {
+fn same_seed_same_outcome_for_every_strategy_and_engine() {
     for strat in all_strategies() {
         for seed in [0u64, 7, 42] {
-            let seq = run(false, &strat, seed);
-            let par = run(true, &strat, seed);
-            assert_eq!(seq.best, par.best, "{strat:?} seed {seed}: best config differs");
-            assert_eq!(
-                seq.best_latency_us.to_bits(),
-                par.best_latency_us.to_bits(),
-                "{strat:?} seed {seed}: best latency differs"
-            );
-            assert_eq!(seq.invalid, par.invalid, "{strat:?} seed {seed}: invalid count differs");
-            assert_eq!(seq.evaluated, par.evaluated, "{strat:?} seed {seed}: evaluated differs");
-            // The full evaluation log must match entry for entry:
-            // identical fingerprints in identical order, and bitwise
-            // identical latencies.
-            assert_eq!(seq.history.len(), par.history.len());
-            for (i, (s, p)) in seq.history.iter().zip(&par.history).enumerate() {
-                assert_eq!(s.0, p.0, "{strat:?} seed {seed}: eval {i} config differs");
-                assert_eq!(
-                    s.1.map(f64::to_bits),
-                    p.1.map(f64::to_bits),
-                    "{strat:?} seed {seed}: eval {i} latency differs"
-                );
+            let seq = run(Mode::Sequential, &strat, seed);
+            for mode in [Mode::ScopedThreads, Mode::Pool, Mode::MultiDevice] {
+                let par = run(mode, &strat, seed);
+                assert_same_outcome(&seq, &par, &format!("{strat:?} seed {seed} {mode:?}"));
             }
         }
     }
+}
+
+#[test]
+fn pool_reuse_across_batches_matches_scoped_threads() {
+    // One pooled evaluator reused across several batches must keep
+    // producing exactly what a fresh scoped-thread evaluation produces:
+    // the persistent pool carries no state between scopes.
+    let w = Workload::llama3_attention(8, 1024);
+    let space = spaces::attention_sim_space();
+    let cfgs: Vec<portatune::config::Config> = space.enumerate(&w).collect();
+    let mut pooled = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
+    for round in 0..3 {
+        let mut scoped = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA).scoped_threads();
+        let a = pooled.evaluate_batch(&cfgs, 1.0);
+        let b = scoped.evaluate_batch(&cfgs, 1.0);
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            match (x, y) {
+                (Ok(p), Ok(q)) => {
+                    assert_eq!(p.to_bits(), q.to_bits(), "round {round} cfg {i} differs")
+                }
+                (Err(_), Err(_)) => {}
+                _ => panic!("round {round} cfg {i}: validity differs"),
+            }
+        }
+    }
+    assert_eq!(pooled.calls, 3 * cfgs.len());
+}
+
+#[test]
+fn multi_device_fleet_spreads_work_without_changing_results() {
+    // Equivalence is covered per-strategy above; this pins the sharding
+    // itself: every device of the fleet participates in a large tune,
+    // and the per-device counters account for every evaluation.
+    let w = Workload::llama3_attention(8, 1024);
+    let space = spaces::attention_sim_space();
+    let base = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
+    let mut fleet = MultiDeviceEvaluator::replicate(&base, 4);
+    let out = autotuner::tune(&space, &w, &mut fleet, &Strategy::Exhaustive, 0).unwrap();
+    // `evaluated` counts valid + invalid submissions, exactly what the
+    // per-device counters see.
+    let counted: usize = fleet.utilization().iter().map(|u| u.evaluated).sum();
+    assert_eq!(counted, out.evaluated, "counters must cover the whole run");
+    assert_eq!(counted, out.history.len());
+    for (i, u) in fleet.utilization().iter().enumerate() {
+        assert!(u.evaluated > 0, "device {i} never saw work");
+        assert!(u.shards > 0, "device {i} processed no shards");
+    }
+    assert!(fleet.wall_us() > 0.0);
 }
 
 #[test]
