@@ -52,8 +52,9 @@ fn main() -> portatune::Result<()> {
         "[cpu-pjrt] best {} @ {:.1} us measured ({} artifacts compiled+timed)",
         real.best, real.best_latency_us, real.evaluated
     );
-    for (fp, lat) in &real.history {
-        match lat {
+    for rec in &real.history {
+        let fp = rec.fingerprint;
+        match rec.latency_us {
             Some(us) => println!("    cfg#{fp:016x} {us:>8.1} us"),
             None => println!("    cfg#{fp:016x}  INVALID"),
         }

@@ -91,6 +91,14 @@ impl SimEvaluator {
         self
     }
 
+    /// Use the persistent shared worker pool (the default for new
+    /// evaluators; this restores it on a clone whose mode was changed,
+    /// e.g. a fleet device pinned to sequential).
+    pub fn pooled(mut self) -> Self {
+        self.mode = BatchMode::Pool;
+        self
+    }
+
     /// Current batch execution mode.
     pub fn mode(&self) -> BatchMode {
         self.mode
@@ -133,13 +141,14 @@ fn burn(cost: u32, cfg: &Config) {
 
 impl Evaluator for SimEvaluator {
     fn name(&self) -> String {
-        // Matches PlatformId::fingerprint for the sim platforms.
+        // Matches PlatformId::fingerprint for the sim platforms.  The
+        // identity is the GPU *model* slug ([`GpuSpec::model`]), not
+        // the vendor: fleets key `platforms()`/`platform_evaluator()`
+        // on this name, so two different models must never alias (an
+        // H100 is not an A100, even though both are NVIDIA).
         format!(
             "sim-{}/model-v{}",
-            match self.gpu.spec.vendor {
-                crate::platform::Vendor::Nvidia => "a100",
-                crate::platform::Vendor::Amd => "mi250",
-            },
+            self.gpu.spec.model,
             crate::platform::model::MODEL_VERSION
         )
     }
@@ -219,6 +228,18 @@ impl Evaluator for SimEvaluator {
 /// bit-identical to a single sequential evaluator — pinned by
 /// `tests/parallel_equiv.rs`.
 ///
+/// **Heterogeneous fleets**: in the sharded mode, *which platform
+/// measures a config* is determined by the config's position in the
+/// batch — deterministic and reproducible (the cache key encodes the
+/// exact device layout), but a search over such a fleet optimizes
+/// "fastest (config, placement)" over one logical mixed pool, not any
+/// single platform; adaptive strategies additionally confirm through
+/// the single-eval path (device 0) and would rank cross-platform
+/// measurements against each other.  The per-platform argmin the paper
+/// calls for is [`crate::autotuner::tune_fleet`], which drives the
+/// measure-everywhere merge
+/// ([`MultiDeviceEvaluator::evaluate_batch_everywhere`]) instead.
+///
 /// Per-device work counters ([`crate::metrics::DeviceUtil`]) record how
 /// many configurations and shards each device processed and how long it
 /// was busy; [`MultiDeviceEvaluator::utilization`] exposes them together
@@ -239,9 +260,26 @@ impl MultiDeviceEvaluator {
     /// scopes for no benefit; the fleet's parallelism is across devices.
     ///
     /// # Panics
-    /// Panics when `devices` is empty.
+    /// Panics when `devices` is empty, or when two devices share a
+    /// platform name but differ in workload or codegen: the platform
+    /// name is the cache and argmin identity, so same-name devices must
+    /// be true replicas (otherwise a platform's sharded results would
+    /// mix two different models and change with shard boundaries).
     pub fn new(devices: Vec<SimEvaluator>) -> Self {
         assert!(!devices.is_empty(), "a device fleet needs at least one device");
+        for (i, a) in devices.iter().enumerate() {
+            for b in &devices[i + 1..] {
+                if a.name() == b.name() {
+                    assert!(
+                        a.codegen == b.codegen && a.workload == b.workload,
+                        "devices sharing platform {} must be identical replicas \
+                         (same workload and codegen): the platform name is the \
+                         cache/argmin identity",
+                        a.name()
+                    );
+                }
+            }
+        }
         let devices: Vec<SimEvaluator> = devices.into_iter().map(|d| d.sequential()).collect();
         let util = devices
             .iter()
@@ -264,6 +302,108 @@ impl MultiDeviceEvaluator {
         self.devices.len()
     }
 
+    /// The *distinct* device platforms in the fleet, sorted by name —
+    /// the row order of [`MultiDeviceEvaluator::evaluate_batch_everywhere`]
+    /// and of `autotuner::tune_fleet`'s per-platform outcomes.
+    pub fn platforms(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.devices.iter().map(|d| d.name()).collect();
+        names.sort();
+        names.dedup();
+        names
+    }
+
+    /// A standalone sequential evaluator for one platform of the fleet
+    /// (a clone of its first device) — used by `tune_fleet` to run the
+    /// adaptive strategies once per platform, and handy for re-checking
+    /// a fleet result against a single device.
+    pub fn platform_evaluator(&self, platform: &str) -> Option<SimEvaluator> {
+        self.devices.iter().find(|d| d.name() == platform).cloned()
+    }
+
+    /// Credit work performed outside the fleet's own batch paths (e.g.
+    /// `tune_fleet`'s per-platform adaptive searches) to the first
+    /// device of `platform`, so utilization reports cover the whole run.
+    pub(crate) fn credit_platform(&mut self, platform: &str, evaluated: usize, busy_us: f64) {
+        if let Some(i) = self.devices.iter().position(|d| d.name() == platform) {
+            self.util[i].evaluated += evaluated;
+            self.util[i].busy_us += busy_us;
+            self.wall_us += busy_us;
+        }
+    }
+
+    /// **Measure-everywhere** merge (the "A Few Fit Most" regime): the
+    /// whole batch is evaluated on *every distinct platform* of the
+    /// fleet, concurrently on the shared worker pool.  `out[p][i]` is
+    /// platform `p`'s result for `cfgs[i]`, with `p` indexing
+    /// [`MultiDeviceEvaluator::platforms`] order.
+    ///
+    /// Replicas of the same platform split their platform's copy of the
+    /// batch into contiguous shards (more replicas of a platform finish
+    /// its copy faster); each shard is evaluated sequentially, so every
+    /// platform row is bit-identical to a single sequential evaluator
+    /// of that platform — the property `tune_fleet` builds its
+    /// per-platform argmin on.
+    ///
+    /// This is the *other* merge over the same batch API: sharded
+    /// [`MultiDeviceEvaluator::evaluate_batch`] splits a batch across
+    /// the fleet for throughput (each config measured once), while this
+    /// mode replicates it for coverage (each config measured once per
+    /// platform, counted in [`DeviceUtil::replicated`]).
+    pub fn evaluate_batch_everywhere(
+        &mut self,
+        cfgs: &[Config],
+        fidelity: f64,
+    ) -> Vec<Vec<Result<f64, InvalidConfig>>> {
+        let platforms = self.platforms();
+        if cfgs.is_empty() {
+            return platforms.iter().map(|_| Vec::new()).collect();
+        }
+        let t0 = Instant::now();
+        let mut results: Vec<Vec<Option<Result<f64, InvalidConfig>>>> =
+            platforms.iter().map(|_| vec![None; cfgs.len()]).collect();
+        let mut dev_refs: Vec<(String, &mut SimEvaluator, &mut DeviceUtil)> = self
+            .devices
+            .iter_mut()
+            .zip(self.util.iter_mut())
+            .map(|(d, u)| {
+                let name = d.name();
+                (name, d, u)
+            })
+            .collect();
+        pool::global().scope(|s| {
+            for (platform, out) in platforms.iter().zip(results.iter_mut()) {
+                // Peel this platform's devices off; the rest stay for
+                // later iterations.
+                let (mine, rest): (Vec<_>, Vec<_>) =
+                    dev_refs.drain(..).partition(|entry| &entry.0 == platform);
+                dev_refs = rest;
+                let shard = cfgs.len().div_ceil(mine.len());
+                for ((_, dev, util), (cfg_chunk, out_chunk)) in
+                    mine.into_iter().zip(cfgs.chunks(shard).zip(out.chunks_mut(shard)))
+                {
+                    s.spawn(move || {
+                        let t = Instant::now();
+                        let res = dev.evaluate_batch(cfg_chunk, fidelity);
+                        for (slot, r) in out_chunk.iter_mut().zip(res) {
+                            *slot = Some(r);
+                        }
+                        util.evaluated += cfg_chunk.len();
+                        util.replicated += cfg_chunk.len();
+                        util.shards += 1;
+                        util.busy_us += t.elapsed().as_secs_f64() * 1e6;
+                    });
+                }
+            }
+        });
+        self.wall_us += t0.elapsed().as_secs_f64() * 1e6;
+        results
+            .into_iter()
+            .map(|per| {
+                per.into_iter().map(|r| r.expect("platform filled every slot")).collect()
+            })
+            .collect()
+    }
+
     /// Per-device work counters, index-aligned with the fleet.
     pub fn utilization(&self) -> &[DeviceUtil] {
         &self.util
@@ -277,19 +417,25 @@ impl MultiDeviceEvaluator {
 }
 
 impl Evaluator for MultiDeviceEvaluator {
-    /// Fleet platform identity: the sorted set of *distinct* device
-    /// platforms — never the device count or shard layout, which cannot
-    /// change results.  A homogeneous fleet therefore shares its cache
-    /// key (and persisted winners) with a single device of the same
-    /// platform: the results are bit-identical, so cached entries are
-    /// interchangeable.  Only a genuinely heterogeneous fleet gets its
-    /// own `multi[...]` key, and that key is order-independent.
+    /// Fleet platform identity.  A **homogeneous** fleet shares its
+    /// cache key (and persisted winners) with a single device of the
+    /// same platform: sharded results are bit-identical to a single
+    /// device regardless of replica count or order, so cached entries
+    /// are interchangeable.  A **heterogeneous** fleet's sharded
+    /// results, however, depend on which platform each contiguous
+    /// shard lands on — i.e. on the exact device sequence — so its
+    /// `multi[...]` key encodes the layout verbatim, replicas and
+    /// order included: two different orderings of the same device set
+    /// are NOT interchangeable and must not share a cache entry.
+    /// (Fleet *tuning* sidesteps all of this: `tune_fleet_cached`
+    /// persists per-platform winners under each platform's own key.)
     fn name(&self) -> String {
-        let mut names: Vec<String> = self.devices.iter().map(|d| d.name()).collect();
-        names.sort();
-        names.dedup();
-        if names.len() == 1 {
-            names.pop().expect("fleet is non-empty")
+        let names: Vec<String> = self.devices.iter().map(|d| d.name()).collect();
+        let mut distinct = names.clone();
+        distinct.sort();
+        distinct.dedup();
+        if distinct.len() == 1 {
+            distinct.pop().expect("fleet is non-empty")
         } else {
             format!("multi[{}]", names.join("+"))
         }
@@ -477,6 +623,23 @@ mod tests {
         let w = Workload::llama3_attention(4, 512);
         let e = SimEvaluator::new(SimGpu::mi250(), w, HAND_TUNED);
         assert_eq!(e.name(), crate::platform::PlatformId::SimMi250.fingerprint());
+        let a = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
+        assert_eq!(a.name(), crate::platform::PlatformId::SimA100.fingerprint());
+    }
+
+    #[test]
+    fn distinct_gpu_models_never_alias_as_one_platform() {
+        // The platform identity is the GPU *model*, not the vendor: an
+        // H100 device in a fleet must form its own platform row, not be
+        // merged into the A100's (which would mix two models' latencies
+        // under one argmin).
+        let w = Workload::llama3_attention(4, 512);
+        let a = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
+        let h = SimEvaluator::new(SimGpu::h100(), w, HAND_TUNED);
+        assert_ne!(a.name(), h.name(), "an H100 is not an A100");
+        let fleet = MultiDeviceEvaluator::new(vec![a, h]);
+        assert_eq!(fleet.platforms().len(), 2);
+        assert!(fleet.name().starts_with("multi["), "{}", fleet.name());
     }
 
     #[test]
@@ -613,15 +776,100 @@ mod tests {
     }
 
     #[test]
-    fn heterogeneous_fleet_name_is_order_independent() {
+    fn measure_everywhere_matches_each_platform_alone() {
+        // out[p][i] must be bit-identical to platform p's sequential
+        // evaluator on cfgs[i] — the property tune_fleet's per-platform
+        // argmin is built on.
+        let w = Workload::llama3_attention(8, 512);
+        let space = crate::config::spaces::attention_sim_space();
+        let cfgs: Vec<Config> = space.enumerate(&w).collect();
+        let a = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
+        let m = SimEvaluator::new(SimGpu::mi250(), w, crate::kernels::baselines::TRITON_AMD);
+        // Two a100 replicas: the a100 copy of the batch is sharded.
+        let mut fleet = MultiDeviceEvaluator::new(vec![a.clone(), m.clone(), a.clone()]);
+        let platforms = fleet.platforms();
+        assert_eq!(platforms.len(), 2, "two distinct platforms expected");
+        let everywhere = fleet.evaluate_batch_everywhere(&cfgs, 1.0);
+        assert_eq!(everywhere.len(), platforms.len());
+        for (platform, got) in platforms.iter().zip(&everywhere) {
+            let mut solo = fleet.platform_evaluator(platform).unwrap();
+            let want = solo.evaluate_batch(&cfgs, 1.0);
+            assert_eq!(got.len(), want.len());
+            for (i, (g, w_)) in got.iter().zip(&want).enumerate() {
+                match (g, w_) {
+                    (Ok(p), Ok(q)) => {
+                        assert_eq!(p.to_bits(), q.to_bits(), "{platform} cfg {i} differs")
+                    }
+                    (Err(_), Err(_)) => {}
+                    _ => panic!("{platform} cfg {i}: validity differs from solo evaluation"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn measure_everywhere_counts_replicated_work_per_platform() {
+        let w = Workload::llama3_attention(8, 512);
+        let space = crate::config::spaces::attention_sim_space();
+        let cfgs: Vec<Config> = space.enumerate(&w).collect();
+        let a = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
+        let m = SimEvaluator::new(SimGpu::mi250(), w, crate::kernels::baselines::TRITON_AMD);
+        let mut fleet = MultiDeviceEvaluator::new(vec![a.clone(), m, a]);
+        let _ = fleet.evaluate_batch_everywhere(&cfgs, 1.0);
+        // Every platform measured the whole batch once, split across its
+        // replicas.
+        for platform in fleet.platforms() {
+            let on_platform: usize = fleet
+                .utilization()
+                .iter()
+                .filter(|u| u.device == platform)
+                .map(|u| u.evaluated)
+                .sum();
+            assert_eq!(on_platform, cfgs.len(), "{platform} must see the whole batch");
+        }
+        let replicated: usize = fleet.utilization().iter().map(|u| u.replicated).sum();
+        assert_eq!(replicated, 2 * cfgs.len(), "each config measured once per platform");
+        // The two a100 replicas split the a100 copy.
+        let a100_shards: Vec<usize> = fleet
+            .utilization()
+            .iter()
+            .filter(|u| u.device.starts_with("sim-a100"))
+            .map(|u| u.evaluated)
+            .collect();
+        assert_eq!(a100_shards.len(), 2);
+        assert!(a100_shards.iter().all(|&n| n > 0), "both replicas must share the copy");
+        assert!(fleet.wall_us() > 0.0);
+    }
+
+    #[test]
+    fn measure_everywhere_empty_batch_is_empty_per_platform() {
+        let w = Workload::llama3_attention(4, 512);
+        let a = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
+        let m = SimEvaluator::new(SimGpu::mi250(), w, crate::kernels::baselines::TRITON_AMD);
+        let mut fleet = MultiDeviceEvaluator::new(vec![a, m]);
+        let out = fleet.evaluate_batch_everywhere(&[], 1.0);
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(Vec::is_empty));
+    }
+
+    #[test]
+    fn heterogeneous_fleet_name_encodes_exact_layout() {
+        // Sharded heterogeneous results depend on which platform each
+        // contiguous shard lands on, so the cache identity must encode
+        // the device sequence verbatim: reordering (or re-replicating)
+        // the same platform set changes the results and must change
+        // the key.
         let w = Workload::llama3_attention(4, 512);
         let a = || SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
         let m = || SimEvaluator::new(SimGpu::mi250(), w, HAND_TUNED);
         let h1 = MultiDeviceEvaluator::new(vec![a(), m(), a()]);
         let h2 = MultiDeviceEvaluator::new(vec![m(), a(), a()]);
-        assert_eq!(h1.name(), h2.name(), "same platform set, same key");
+        assert_ne!(h1.name(), h2.name(), "different layouts must not share a cache key");
         assert!(h1.name().starts_with("multi["), "{}", h1.name());
         assert_ne!(h1.name(), a().name(), "mixed fleets must not alias a single platform");
+        // Every component platform appears, so invalidate_platform's
+        // component matching covers the entry.
+        assert!(h1.name().contains(&a().name()) && h1.name().contains(&m().name()));
     }
 
     #[test]

@@ -15,7 +15,12 @@
 //!   many configs cheaply, promote the best survivors to full fidelity.
 //!
 //! Every strategy records through a [`Recorder`] so outcomes are
-//! comparable (#evaluated, #invalid, best).
+//! comparable (#evaluated, #invalid, best).  The recorder is
+//! **fidelity-correct**: each log entry carries the fidelity it was
+//! measured at, and only full-fidelity results may become `best` —
+//! successive halving's cheap rung measurements can race configs but
+//! never speak for the final latency (the survivor is re-confirmed at
+//! fidelity 1.0).
 //!
 //! **Batched evaluation**: the strategies whose evaluation order does not
 //! depend on earlier results (exhaustive, random, each successive-halving
@@ -27,8 +32,9 @@
 //! inherently sequential strategies (hill climb, annealing: every step
 //! depends on the previous measurement) stay on the one-at-a-time path.
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 
+use super::evaluators::MultiDeviceEvaluator;
 use super::Evaluator;
 use crate::config::{Config, ConfigSpace};
 use crate::util::rng::Rng;
@@ -39,6 +45,14 @@ use crate::workload::Workload;
 /// thread-pool dispatch across every worker, small enough to keep
 /// streaming (lazy enumeration never materializes more than one batch).
 pub const EVAL_BATCH: usize = 256;
+
+/// Floor for [`Strategy::SuccessiveHalving`]'s rung-0 fidelity.  The
+/// rung schedule is computed in `f64` (the previous integer
+/// `eta.pow(rungs - 1)` overflowed in debug builds for extreme
+/// `eta`/`initial` combinations), and no rung is ever asked to measure
+/// below this fidelity — cheaper measurements than this stop being
+/// informative long before they stop being representable.
+pub const MIN_SHA_FIDELITY: f64 = 1e-4;
 
 /// Search strategy selector (all deterministic given a seed).
 #[derive(Debug, Clone, PartialEq)]
@@ -89,23 +103,63 @@ impl Strategy {
     }
 }
 
+/// One logged evaluation: what was measured, what came back, and at
+/// which fidelity.  Fidelity matters for correctness, not just
+/// bookkeeping: latencies measured at different fidelities are not
+/// comparable, so every consumer of the log ([`Recorder::best`],
+/// [`crate::autotuner::TuneOutcome::spread`]) must filter on it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalRecord {
+    /// Fingerprint of the evaluated [`Config`].
+    pub fingerprint: u64,
+    /// Measured/modeled latency in µs; `None` = invalid on this platform.
+    pub latency_us: Option<f64>,
+    /// Measurement fidelity in (0, 1]; 1.0 = a full-fidelity result.
+    pub fidelity: f64,
+}
+
+impl EvalRecord {
+    /// True when this is a trustworthy full-fidelity measurement.
+    pub fn is_full_fidelity(&self) -> bool {
+        self.fidelity >= 1.0
+    }
+}
+
 /// Records every evaluation a strategy performs.
 ///
-/// The recorder keeps the evaluation log as `(fingerprint, latency)`
-/// pairs rather than cloning every [`Config`]: strategies only ever
-/// re-read the *count* and the *best*, so the single running-best clone
-/// is the only config the recorder owns.
+/// The recorder keeps the evaluation log as [`EvalRecord`]s (fingerprint
+/// + latency + fidelity) rather than cloning every [`Config`]:
+/// strategies only ever re-read the *count* and the *best*, so the
+/// single running-best clone is the only config a default recorder owns
+/// ([`Recorder::capturing`] opts into keeping all of them, for
+/// cross-platform analyses that need the configs back).
+///
+/// **Fidelity correctness**: only full-fidelity (1.0) results may update
+/// [`Recorder::best`].  Multi-fidelity strategies (successive halving)
+/// measure most configs cheaply, and a cheap measurement — noisy, fewer
+/// iterations — must never be reported as the tuning result; the rung
+/// winners are re-confirmed at fidelity 1.0 before they can become
+/// `best`.
 #[derive(Debug, Default)]
 pub struct Recorder {
-    /// (config fingerprint, latency µs) in evaluation order; `None` =
-    /// invalid on this platform.
-    pub evals: Vec<(u64, Option<f64>)>,
+    /// Evaluation log in submission order.
+    pub evals: Vec<EvalRecord>,
+    /// How many evaluations were invalid on this platform.
     pub invalid: usize,
     seen: HashSet<u64>,
     best: Option<(Config, f64)>,
+    captured: Option<HashMap<u64, Config>>,
 }
 
 impl Recorder {
+    /// A recorder that additionally retains every evaluated [`Config`]
+    /// (fingerprint → config).  Used by fleet tuning, where the
+    /// cross-platform portability analysis needs to map the joined
+    /// evaluation logs back to concrete configurations.
+    pub fn capturing() -> Self {
+        Recorder { captured: Some(HashMap::new()), ..Recorder::default() }
+    }
+
     /// Number of evaluations performed so far (valid + invalid).
     pub fn len(&self) -> usize {
         self.evals.len()
@@ -117,22 +171,39 @@ impl Recorder {
     }
 
     /// Fold one evaluation result into the log (dedup-independent).
-    fn record(
+    /// Only full-fidelity results are allowed to update the running
+    /// best: lower-fidelity latencies are not comparable to it.
+    pub(crate) fn record(
         &mut self,
         cfg: &Config,
         res: Result<f64, crate::platform::model::InvalidConfig>,
+        fidelity: f64,
     ) -> Option<f64> {
         match res {
             Ok(us) => {
-                if self.best.as_ref().map(|(_, b)| us < *b).unwrap_or(true) {
+                // Capture only valid configs: invalid ones can never be
+                // portability candidates, and cloning their BTreeMaps
+                // for the whole run would be pure overhead.
+                if let Some(map) = self.captured.as_mut() {
+                    map.entry(cfg.fingerprint()).or_insert_with(|| cfg.clone());
+                }
+                if fidelity >= 1.0 && self.best.as_ref().map(|(_, b)| us < *b).unwrap_or(true) {
                     self.best = Some((cfg.clone(), us));
                 }
-                self.evals.push((cfg.fingerprint(), Some(us)));
+                self.evals.push(EvalRecord {
+                    fingerprint: cfg.fingerprint(),
+                    latency_us: Some(us),
+                    fidelity,
+                });
                 Some(us)
             }
             Err(_) => {
                 self.invalid += 1;
-                self.evals.push((cfg.fingerprint(), None));
+                self.evals.push(EvalRecord {
+                    fingerprint: cfg.fingerprint(),
+                    latency_us: None,
+                    fidelity,
+                });
                 None
             }
         }
@@ -147,7 +218,7 @@ impl Recorder {
         fidelity: f64,
     ) -> Option<f64> {
         let res = eval.evaluate_fidelity(cfg, fidelity);
-        self.record(cfg, res)
+        self.record(cfg, res, fidelity)
     }
 
     /// Batched counterpart of [`Recorder::eval`]: submit `cfgs` in one
@@ -172,17 +243,34 @@ impl Recorder {
         results
             .into_iter()
             .zip(cfgs)
-            .map(|(res, cfg)| self.record(cfg, res))
+            .map(|(res, cfg)| self.record(cfg, res, fidelity))
             .collect()
     }
 
-    fn mark_seen(&mut self, cfg: &Config) -> bool {
+    pub(crate) fn mark_seen(&mut self, cfg: &Config) -> bool {
         self.seen.insert(cfg.fingerprint())
     }
 
-    /// Best valid (config, latency) seen so far.
+    /// Best valid **full-fidelity** (config, latency) seen so far.
     pub fn best(&self) -> Option<(Config, f64)> {
         self.best.clone()
+    }
+
+    /// All valid full-fidelity measurements as a fingerprint → latency
+    /// map (re-evaluations of a config overwrite; every evaluator here
+    /// is deterministic per (config, fidelity), so the value is stable).
+    pub fn full_fidelity_latencies(&self) -> HashMap<u64, f64> {
+        self.evals
+            .iter()
+            .filter(|r| r.is_full_fidelity())
+            .filter_map(|r| r.latency_us.map(|l| (r.fingerprint, l)))
+            .collect()
+    }
+
+    /// The retained [`Config`] for `fingerprint` — `Some` only on
+    /// [`Recorder::capturing`] recorders that evaluated it.
+    pub fn captured_config(&self, fingerprint: u64) -> Option<&Config> {
+        self.captured.as_ref()?.get(&fingerprint)
     }
 }
 
@@ -200,8 +288,10 @@ impl Strategy {
         rec: &mut Recorder,
     ) {
         match *self {
-            Strategy::Exhaustive => exhaustive(space, w, eval, rec),
-            Strategy::Random { budget } => random(space, w, eval, seed, budget, rec),
+            Strategy::Exhaustive | Strategy::Random { .. } => {
+                let mut sink = SoloSink { eval, rec };
+                run_deterministic(space, w, self, seed, &mut sink);
+            }
             Strategy::HillClimb { restarts, budget } => {
                 hill_climb(space, w, eval, seed, restarts, budget, rec)
             }
@@ -215,46 +305,113 @@ impl Strategy {
     }
 }
 
-/// Stream the lazy enumeration into evaluation batches: at most one
-/// batch of configs is resident at a time.
-fn exhaustive(space: &ConfigSpace, w: &Workload, eval: &mut dyn Evaluator, rec: &mut Recorder) {
-    let mut batch: Vec<Config> = Vec::with_capacity(EVAL_BATCH);
-    for cfg in space.enumerate(w) {
-        batch.push(cfg);
-        if batch.len() == EVAL_BATCH {
-            rec.eval_batch(eval, &batch, 1.0);
-            batch.clear();
-        }
+/// Where a deterministic trajectory's batches land: the solo path
+/// records into one recorder through one evaluator; the fleet path
+/// measures each batch on every platform.  One trait so the
+/// *trajectory* — enumeration order, draw sequence, dedup decisions,
+/// batch boundaries — lives in exactly one place
+/// ([`run_deterministic`]) and the two consumers cannot drift apart
+/// (the fleet-vs-solo bit-identity contract pinned by
+/// `tests/parallel_equiv.rs` depends on the batch sequence being
+/// byte-for-byte identical).
+trait TrajectorySink {
+    /// Random-draw dedup filter.  Config-driven only, so every
+    /// consumer makes identical keep/skip decisions.
+    fn mark_seen(&mut self, cfg: &Config) -> bool;
+    /// Measure one batch at full fidelity.
+    fn submit(&mut self, cfgs: &[Config]);
+}
+
+/// One evaluator, one recorder — the ordinary tuning path.  (Separate
+/// lifetime for the trait object: `&mut dyn` is invariant in its
+/// object lifetime, so tying it to the recorder borrow would reject
+/// callers whose two borrows differ.)
+struct SoloSink<'a, 'e> {
+    eval: &'a mut (dyn Evaluator + 'e),
+    rec: &'a mut Recorder,
+}
+
+impl TrajectorySink for SoloSink<'_, '_> {
+    fn mark_seen(&mut self, cfg: &Config) -> bool {
+        self.rec.mark_seen(cfg)
     }
-    if !batch.is_empty() {
-        rec.eval_batch(eval, &batch, 1.0);
+
+    fn submit(&mut self, cfgs: &[Config]) {
+        self.rec.eval_batch(&mut *self.eval, cfgs, 1.0);
     }
 }
 
-/// Sampling is independent of measurement, so the whole budget is drawn
-/// (and deduped) first, then measured in batches — identical history to
-/// the old sample-measure-sample loop.
-fn random(
+/// Measure-everywhere: every batch goes to every distinct platform,
+/// one recorder per platform.
+struct FleetSink<'a> {
+    fleet: &'a mut MultiDeviceEvaluator,
+    recs: &'a mut [Recorder],
+}
+
+impl TrajectorySink for FleetSink<'_> {
+    fn mark_seen(&mut self, cfg: &Config) -> bool {
+        // Mark in every platform recorder so each one's seen-state
+        // matches a solo run of that platform; the decisions always
+        // agree (dedup consults only the config fingerprint), and the
+        // fold is non-short-circuiting so no recorder is skipped.
+        self.recs
+            .iter_mut()
+            .map(|rec| rec.mark_seen(cfg))
+            .fold(true, |acc, fresh| acc && fresh)
+    }
+
+    fn submit(&mut self, cfgs: &[Config]) {
+        record_everywhere(&mut *self.fleet, cfgs, 1.0, &mut *self.recs);
+    }
+}
+
+/// Drive an order-deterministic strategy — one whose evaluation order
+/// is a pure function of (space, workload, seed), never of measured
+/// latencies — batch by batch into `sink`.
+///
+/// Exhaustive streams the lazy enumeration in [`EVAL_BATCH`] chunks (at
+/// most one batch resident at a time).  Random draws and dedups the
+/// whole budget first, then measures in batches — sampling is
+/// independent of measurement, so the history is identical to a
+/// sample-measure-sample loop.
+fn run_deterministic(
     space: &ConfigSpace,
     w: &Workload,
-    eval: &mut dyn Evaluator,
+    strategy: &Strategy,
     seed: u64,
-    budget: usize,
-    rec: &mut Recorder,
+    sink: &mut dyn TrajectorySink,
 ) {
-    let mut rng = Rng::seed_from(seed);
-    let mut picked: Vec<Config> = Vec::new();
-    let mut stall = 0;
-    while picked.len() < budget && stall < budget * 10 {
-        let Some(cfg) = space.sample(w, &mut rng, 200) else { break };
-        if !rec.mark_seen(&cfg) {
-            stall += 1;
-            continue;
+    match *strategy {
+        Strategy::Exhaustive => {
+            let mut batch: Vec<Config> = Vec::with_capacity(EVAL_BATCH);
+            for cfg in space.enumerate(w) {
+                batch.push(cfg);
+                if batch.len() == EVAL_BATCH {
+                    sink.submit(&batch);
+                    batch.clear();
+                }
+            }
+            if !batch.is_empty() {
+                sink.submit(&batch);
+            }
         }
-        picked.push(cfg);
-    }
-    for chunk in picked.chunks(EVAL_BATCH) {
-        rec.eval_batch(eval, chunk, 1.0);
+        Strategy::Random { budget } => {
+            let mut rng = Rng::seed_from(seed);
+            let mut picked: Vec<Config> = Vec::new();
+            let mut stall = 0;
+            while picked.len() < budget && stall < budget.saturating_mul(10) {
+                let Some(cfg) = space.sample(w, &mut rng, 200) else { break };
+                if !sink.mark_seen(&cfg) {
+                    stall += 1;
+                    continue;
+                }
+                picked.push(cfg);
+            }
+            for chunk in picked.chunks(EVAL_BATCH) {
+                sink.submit(chunk);
+            }
+        }
+        _ => unreachable!("only order-deterministic strategies share a trajectory"),
     }
 }
 
@@ -366,39 +523,135 @@ fn successive_halving(
 ) {
     let mut rng = Rng::seed_from(seed);
     let eta = eta.max(2);
-    // Rung 0: distinct random configs at low fidelity.
+    // Rung 0: distinct random configs at low fidelity.  The draw target
+    // is capped by the space cardinality (asking for more distinct
+    // configs than exist can only stall), and the guard counts
+    // *consecutive* failed draws, scaled to the target but bounded —
+    // the previous `initial * 20` total-iteration guard overflowed in
+    // debug builds for large `initial`, while an unscaled constant
+    // would burn thousands of draws on spaces whose workload-valid
+    // region is smaller than the grid.
+    let target = initial.min(space.cardinality()).max(1);
+    let stall_limit = target.saturating_mul(20).clamp(100, 10_000);
     let mut pool: Vec<Config> = Vec::new();
-    let mut guard = 0;
-    while pool.len() < initial && guard < initial * 20 {
-        guard += 1;
-        if let Some(c) = space.sample(w, &mut rng, 200) {
-            if rec.mark_seen(&c) {
+    let mut stall = 0usize;
+    while pool.len() < target && stall < stall_limit {
+        match space.sample(w, &mut rng, 200) {
+            Some(c) if rec.mark_seen(&c) => {
                 pool.push(c);
+                stall = 0;
             }
+            _ => stall += 1,
         }
     }
-    let rungs = (pool.len() as f64).log(eta as f64).ceil() as usize;
-    let mut fidelity = 1.0 / eta.pow(rungs.max(1) as u32 - 1).max(1) as f64;
+    // Fidelity schedule in f64 (integer `eta.pow(rungs - 1)` overflowed
+    // for extreme eta), floored at MIN_SHA_FIDELITY.
+    let rungs = (pool.len().max(1) as f64).log(eta as f64).ceil().max(1.0) as i32;
+    let mut fidelity = (1.0 / (eta as f64).powi(rungs - 1)).max(MIN_SHA_FIDELITY);
+    // Best valid config of the most recent rung that had any valid
+    // result, with the fidelity it was measured at — the fallback
+    // candidate when a later rung invalidates the whole pool (without
+    // it, an all-invalid rung would end the search with nothing to
+    // confirm even though earlier rungs found valid configs).
+    let mut best_survivor: Option<(Config, f64)> = None;
+    // Fidelity of the rung the current pool survived (0.0 = no rung ran).
+    let mut pool_fidelity = 0.0;
     while pool.len() > 1 {
         // Whole rung in one batch: every member is measured at the same
         // fidelity regardless of the others' results.
-        let latencies = rec.eval_batch(eval, &pool, fidelity);
+        let rung_fidelity = fidelity;
+        let latencies = rec.eval_batch(eval, &pool, rung_fidelity);
         let mut scored: Vec<(Config, f64)> = pool
             .drain(..)
             .zip(latencies)
             .filter_map(|(c, l)| l.map(|l| (c, l)))
             .collect();
         scored.sort_by(|a, b| a.1.total_cmp(&b.1));
+        if let Some((c, _)) = scored.first() {
+            best_survivor = Some((c.clone(), rung_fidelity));
+        }
         let keep = (scored.len() / eta).max(1);
         pool = scored.into_iter().take(keep).map(|(c, _)| c).collect();
+        pool_fidelity = rung_fidelity;
         fidelity = (fidelity * eta as f64).min(1.0);
         if pool.len() == 1 {
             break;
         }
     }
-    // Final full-fidelity confirmation of the survivor.
-    if let Some(cfg) = pool.first().cloned() {
-        rec.eval(eval, &cfg, 1.0);
+    // Full-fidelity confirmation — the sole source of SHA's reported
+    // best: rungs run at reduced fidelity, and only fidelity-1.0
+    // measurements may update the recorder's best.  When a rung
+    // invalidated the whole pool, confirm the best earlier survivor
+    // instead of returning nothing.  If the survivor's rung already ran
+    // at full fidelity, its measurement IS the confirmation (and the
+    // fidelity-gated best already holds it) — re-measuring would pay a
+    // second full measurement on a real evaluator for nothing.
+    let survivor = match pool.into_iter().next() {
+        Some(cfg) => Some((cfg, pool_fidelity)),
+        None => best_survivor,
+    };
+    if let Some((cfg, measured_at)) = survivor {
+        if measured_at < 1.0 {
+            rec.eval(eval, &cfg, 1.0);
+        }
+    }
+}
+
+/// Drive one *shared* search trajectory over `space` for the whole
+/// fleet: every submitted batch is measured on every distinct platform
+/// via [`MultiDeviceEvaluator::evaluate_batch_everywhere`], and each
+/// platform's results fold into its own recorder (`recs` is aligned
+/// with [`MultiDeviceEvaluator::platforms`]).
+///
+/// Only the strategies whose evaluation *order* is independent of
+/// measured latencies can share a trajectory — exhaustive enumeration
+/// and seeded random sampling.  For those, each platform's recorder
+/// ends up bit-identical to tuning that platform alone: the config
+/// sequence is a pure function of (space, workload, seed), and the
+/// per-platform measurements are pure functions of the config.  The
+/// adaptive strategies (hill climb, annealing, successive halving)
+/// branch on latencies, so their per-platform trajectories genuinely
+/// diverge; [`crate::autotuner::tune_fleet`] runs those once per
+/// platform instead.
+pub(crate) fn run_fleet_shared(
+    space: &ConfigSpace,
+    w: &Workload,
+    fleet: &mut MultiDeviceEvaluator,
+    strategy: &Strategy,
+    seed: u64,
+    recs: &mut [Recorder],
+) {
+    let mut sink = FleetSink { fleet, recs };
+    run_deterministic(space, w, strategy, seed, &mut sink);
+}
+
+/// Measure `cfgs` on every distinct platform of the fleet and fold each
+/// platform's results into its recorder, in submission order.
+fn record_everywhere(
+    fleet: &mut MultiDeviceEvaluator,
+    cfgs: &[Config],
+    fidelity: f64,
+    recs: &mut [Recorder],
+) {
+    let results = fleet.evaluate_batch_everywhere(cfgs, fidelity);
+    assert_eq!(
+        results.len(),
+        recs.len(),
+        "evaluate_batch_everywhere returned {} platforms for {} recorders",
+        results.len(),
+        recs.len()
+    );
+    for (rec, platform_results) in recs.iter_mut().zip(results) {
+        assert_eq!(
+            platform_results.len(),
+            cfgs.len(),
+            "evaluate_batch_everywhere broke its contract: {} results for {} configs",
+            platform_results.len(),
+            cfgs.len()
+        );
+        for (cfg, res) in cfgs.iter().zip(platform_results) {
+            rec.record(cfg, res, fidelity);
+        }
     }
 }
 
@@ -461,13 +714,136 @@ mod tests {
         assert!(lat < 12.0);
     }
 
+    /// Latency depends on fidelity: cheap measurements are *optimistic*
+    /// (report a fraction of the true latency), full fidelity is the
+    /// truth.  This is the shape that exposed the fidelity-blind best
+    /// bug: a rung-0 measurement always looked faster than any
+    /// full-fidelity one, so the recorder crowned a number no real run
+    /// could reproduce.
+    struct FidelitySensitive;
+
+    impl FidelitySensitive {
+        fn truth(cfg: &Config) -> f64 {
+            let a = cfg.req("a") as f64;
+            let b = cfg.req("b") as f64;
+            10.0 + (a - 4.0).powi(2) + 0.1 * (b - 20.0).powi(2)
+        }
+    }
+
+    impl Evaluator for FidelitySensitive {
+        fn name(&self) -> String {
+            "fidelity-sensitive".into()
+        }
+
+        fn evaluate_fidelity(&mut self, cfg: &Config, f: f64) -> Result<f64, InvalidConfig> {
+            if cfg.req("a") == 8 {
+                return Err(InvalidConfig { reason: "a=8 unsupported".into() });
+            }
+            // f = 1.0 reports the truth; lower fidelities under-report.
+            Ok(Self::truth(cfg) * (0.25 + 0.75 * f))
+        }
+    }
+
     #[test]
     fn sha_promotes_to_full_fidelity() {
         let mut rec = Recorder::default();
         Strategy::SuccessiveHalving { initial: 8, eta: 2 }.run(&space(), &w(), &mut Quadratic, 5, &mut rec);
         assert!(rec.best().is_some());
         // History must contain at least one full-fidelity evaluation.
-        assert!(!rec.is_empty());
+        assert!(rec.evals.iter().any(|r| r.is_full_fidelity()));
+    }
+
+    #[test]
+    fn sha_best_is_a_full_fidelity_measurement() {
+        // With an optimistic low-fidelity evaluator, a fidelity-blind
+        // recorder would report a rung-0 latency as `best`.  The
+        // reported best must instead be the config's true full-fidelity
+        // latency.
+        let mut rec = Recorder::default();
+        Strategy::SuccessiveHalving { initial: 8, eta: 2 }
+            .run(&space(), &w(), &mut FidelitySensitive, 5, &mut rec);
+        let (cfg, lat) = rec.best().expect("sha must confirm a survivor");
+        assert!(
+            (lat - FidelitySensitive::truth(&cfg)).abs() < 1e-9,
+            "reported best {lat} is not the full-fidelity latency {} of {cfg}",
+            FidelitySensitive::truth(&cfg)
+        );
+        // And it must literally appear in the log as a fidelity-1.0
+        // measurement.
+        assert!(rec
+            .evals
+            .iter()
+            .any(|r| r.is_full_fidelity() && r.latency_us == Some(lat)));
+        // Low-fidelity rungs did report smaller numbers — they must not
+        // have leaked into `best`.
+        let cheapest = rec
+            .evals
+            .iter()
+            .filter(|r| !r.is_full_fidelity())
+            .filter_map(|r| r.latency_us)
+            .fold(f64::INFINITY, f64::min);
+        assert!(cheapest < lat, "the trap never armed: low fidelity was not optimistic");
+    }
+
+    /// Valid at rung-0 fidelity and at full fidelity, invalid in
+    /// between — models a platform where mid-length measurement windows
+    /// hit a driver bug.  Drives a whole SHA rung invalid.
+    struct MidFidelityInvalid;
+
+    impl Evaluator for MidFidelityInvalid {
+        fn name(&self) -> String {
+            "mid-fidelity-invalid".into()
+        }
+
+        fn evaluate_fidelity(&mut self, cfg: &Config, f: f64) -> Result<f64, InvalidConfig> {
+            if f > 0.3 && f < 1.0 {
+                return Err(InvalidConfig { reason: "mid-fidelity window".into() });
+            }
+            let a = cfg.req("a") as f64;
+            let b = cfg.req("b") as f64;
+            Ok(10.0 + (a - 4.0).powi(2) + 0.1 * (b - 20.0).powi(2))
+        }
+    }
+
+    #[test]
+    fn sha_all_invalid_rung_falls_back_to_best_survivor() {
+        // initial=8, eta=2 → 3 rungs at fidelities 0.25 / 0.5 / 1.0.
+        // The 0.5 rung is all-invalid, emptying the pool; the search
+        // must confirm the best rung-0 survivor at full fidelity rather
+        // than return nothing.
+        let mut rec = Recorder::default();
+        Strategy::SuccessiveHalving { initial: 8, eta: 2 }
+            .run(&space(), &w(), &mut MidFidelityInvalid, 5, &mut rec);
+        let (cfg, lat) = rec.best().expect("fallback survivor must be confirmed");
+        assert!(space().contains(&cfg, &w()));
+        assert!(lat > 0.0);
+        let last = rec.evals.last().unwrap();
+        assert!(last.is_full_fidelity(), "run must end on the full-fidelity confirmation");
+        assert_eq!(last.latency_us, Some(lat));
+    }
+
+    #[test]
+    fn sha_extreme_eta_and_initial_do_not_overflow() {
+        // `eta.pow(rungs - 1)` and the `initial * 20` sampling guard
+        // both overflowed in debug builds; the f64 schedule and the
+        // consecutive-stall guard must survive the extremes.
+        for (initial, eta) in [(usize::MAX, 2), (64, usize::MAX), (usize::MAX, usize::MAX)] {
+            let mut rec = Recorder::default();
+            Strategy::SuccessiveHalving { initial, eta }.run(&space(), &w(), &mut Quadratic, 5, &mut rec);
+            assert!(rec.best().is_some(), "initial={initial} eta={eta} found nothing");
+        }
+    }
+
+    #[test]
+    fn sha_fidelity_schedule_is_floored() {
+        // A deep schedule can never ask for fidelity below the floor.
+        let mut rec = Recorder::default();
+        Strategy::SuccessiveHalving { initial: 16, eta: 2 }
+            .run(&space(), &w(), &mut Quadratic, 5, &mut rec);
+        for r in &rec.evals {
+            assert!(r.fidelity >= MIN_SHA_FIDELITY);
+            assert!(r.fidelity <= 1.0);
+        }
     }
 
     #[test]
@@ -494,8 +870,38 @@ mod tests {
         rec.eval(&mut Quadratic, &good, 1.0);
         rec.eval(&mut Quadratic, &bad, 1.0);
         assert_eq!(rec.evals.len(), 2);
-        assert_eq!(rec.evals[0], (good.fingerprint(), Some(10.0)));
-        assert_eq!(rec.evals[1], (bad.fingerprint(), None));
+        assert_eq!(
+            rec.evals[0],
+            EvalRecord { fingerprint: good.fingerprint(), latency_us: Some(10.0), fidelity: 1.0 }
+        );
+        assert_eq!(
+            rec.evals[1],
+            EvalRecord { fingerprint: bad.fingerprint(), latency_us: None, fidelity: 1.0 }
+        );
+    }
+
+    #[test]
+    fn recorder_low_fidelity_never_updates_best() {
+        let mut rec = Recorder::default();
+        let cfg = Config::new(&[("a", 4), ("b", 20)]);
+        rec.eval(&mut FidelitySensitive, &cfg, 0.25);
+        assert!(rec.best().is_none(), "a cheap measurement must not become best");
+        assert_eq!(rec.len(), 1);
+        rec.eval(&mut FidelitySensitive, &cfg, 1.0);
+        let (_, lat) = rec.best().unwrap();
+        assert!((lat - FidelitySensitive::truth(&cfg)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn recorder_capture_retains_configs() {
+        let mut plain = Recorder::default();
+        let mut cap = Recorder::capturing();
+        let cfg = Config::new(&[("a", 4), ("b", 20)]);
+        plain.eval(&mut Quadratic, &cfg, 1.0);
+        cap.eval(&mut Quadratic, &cfg, 1.0);
+        assert!(plain.captured_config(cfg.fingerprint()).is_none());
+        assert_eq!(cap.captured_config(cfg.fingerprint()), Some(&cfg));
+        assert_eq!(cap.full_fidelity_latencies().get(&cfg.fingerprint()), Some(&10.0));
     }
 
     #[test]

@@ -50,6 +50,8 @@ pub struct CacheEntry {
 }
 
 impl CacheEntry {
+    /// Parse the stored winning configuration back into a [`Config`]
+    /// (`None` when the stored string is unparseable).
     pub fn config(&self) -> Option<Config> {
         Config::parse(&self.config)
     }
@@ -174,22 +176,34 @@ impl TuningCache {
     }
 
     /// Drop every entry for a platform (e.g. after a driver upgrade).
+    ///
+    /// Heterogeneous-fleet entries are covered too: an entry recorded
+    /// under `multi[a+b]` (a sharded
+    /// [`crate::autotuner::MultiDeviceEvaluator`] run over platforms `a`
+    /// and `b`) was measured *on* `a`, so invalidating `a` must drop it
+    /// as well — the driver upgrade that motivated the call changed some
+    /// of the latencies that entry is built from.
     pub fn invalidate_platform(&mut self, platform: &str) -> usize {
         let before = self.file.entries.len();
-        self.file.entries.retain(|_, e| e.platform != platform);
+        self.file.entries.retain(|_, e| {
+            e.platform != platform && !platform_components(&e.platform).any(|c| c == platform)
+        });
         let removed = before - self.file.entries.len();
         self.dirty |= removed > 0;
         removed
     }
 
+    /// Number of cached entries.
     pub fn len(&self) -> usize {
         self.file.entries.len()
     }
 
+    /// True when the cache holds no entries.
     pub fn is_empty(&self) -> bool {
         self.file.entries.is_empty()
     }
 
+    /// Iterate over `(key, entry)` pairs in key order.
     pub fn entries(&self) -> impl Iterator<Item = (&String, &CacheEntry)> {
         self.file.entries.iter()
     }
@@ -212,6 +226,7 @@ impl TuningCache {
         Ok(())
     }
 
+    /// Backing file path (empty for [`TuningCache::ephemeral`]).
     pub fn path(&self) -> &Path {
         &self.path
     }
@@ -221,6 +236,19 @@ impl Drop for TuningCache {
     fn drop(&mut self) {
         let _ = self.save();
     }
+}
+
+/// The component platforms of a heterogeneous-fleet platform string:
+/// `multi[a+b]` yields `a`, `b`; anything else yields nothing.  The
+/// `multi[...]` framing and `+` separator are produced by
+/// `MultiDeviceEvaluator::name()`, whose component names (platform
+/// fingerprints like `sim-a100/model-v3`) never contain `+`.
+fn platform_components(platform: &str) -> impl Iterator<Item = &str> {
+    platform
+        .strip_prefix("multi[")
+        .and_then(|rest| rest.strip_suffix(']'))
+        .into_iter()
+        .flat_map(|inner| inner.split('+'))
 }
 
 /// Helper: build an entry with the current timestamp.
@@ -335,6 +363,47 @@ mod tests {
         assert_eq!(c.invalidate_platform("pA"), 2);
         assert_eq!(c.len(), 1);
         assert!(c.get(&wl(), "pB", "attention_sim#1000").is_some());
+    }
+
+    #[test]
+    fn invalidate_platform_covers_heterogeneous_fleet_entries() {
+        // A driver upgrade on platform `a` must also drop `multi[a+b]`
+        // entries: the fleet result was measured on `a`.
+        let mut c = TuningCache::ephemeral();
+        c.put(&wl(), entry("sim-a100/model-v3"));
+        c.put(&wl(), entry("multi[sim-a100/model-v3+sim-mi250/model-v3]"));
+        let rms = Workload::RmsNorm { n_rows: 64, hidden: 4096, dtype: DType::F16 };
+        c.put(&rms, entry("sim-mi250/model-v3"));
+        assert_eq!(c.len(), 3);
+        // Invalidating a100 removes its solo entry AND the fleet entry
+        // it participates in, but not the mi250 solo entry.
+        assert_eq!(c.invalidate_platform("sim-a100/model-v3"), 2);
+        assert_eq!(c.len(), 1);
+        assert!(c.get(&rms, "sim-mi250/model-v3", "attention_sim#1000").is_some());
+    }
+
+    #[test]
+    fn invalidate_fleet_key_itself_leaves_components_alone() {
+        // Invalidating the composite key removes only the fleet entry —
+        // the component platforms' own results are still valid.
+        let mut c = TuningCache::ephemeral();
+        c.put(&wl(), entry("sim-a100/model-v3"));
+        let rms = Workload::RmsNorm { n_rows: 64, hidden: 4096, dtype: DType::F16 };
+        c.put(&rms, entry("multi[sim-a100/model-v3+sim-mi250/model-v3]"));
+        assert_eq!(c.invalidate_platform("multi[sim-a100/model-v3+sim-mi250/model-v3]"), 1);
+        assert!(c.get(&wl(), "sim-a100/model-v3", "attention_sim#1000").is_some());
+    }
+
+    #[test]
+    fn invalidate_platform_does_not_match_substrings() {
+        // `sim-a100/model-v3` must not drag down `sim-a100/model-v30`
+        // or fleets containing only the longer name.
+        let mut c = TuningCache::ephemeral();
+        c.put(&wl(), entry("sim-a100/model-v30"));
+        let rms = Workload::RmsNorm { n_rows: 64, hidden: 4096, dtype: DType::F16 };
+        c.put(&rms, entry("multi[sim-a100/model-v30+sim-mi250/model-v3]"));
+        assert_eq!(c.invalidate_platform("sim-a100/model-v3"), 0);
+        assert_eq!(c.len(), 2);
     }
 
     #[test]

@@ -20,9 +20,13 @@ use crate::workload::Workload;
 /// One (platform, seqlen, batch) comparison point.
 #[derive(Debug, Clone)]
 pub struct Point {
+    /// Sequence length of the point.
     pub seq_len: usize,
+    /// Batch size of the point.
     pub batch: usize,
+    /// Vendor-library (SOTA) latency, µs.
     pub sota_us: f64,
+    /// Autotuned-Triton latency, µs.
     pub tuned_us: f64,
 }
 

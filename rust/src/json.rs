@@ -14,17 +14,24 @@ use anyhow::{anyhow, bail, Result};
 /// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// JSON `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always stored as `f64`, like JavaScript).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Value>),
+    /// An object; `BTreeMap` so emission order is deterministic.
     Obj(BTreeMap<String, Value>),
 }
 
 impl Value {
     // ---- typed accessors -------------------------------------------------
 
+    /// The boolean value, if this is a [`Value::Bool`].
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -32,6 +39,7 @@ impl Value {
         }
     }
 
+    /// The numeric value, if this is a [`Value::Num`].
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Num(n) => Some(*n),
@@ -39,14 +47,17 @@ impl Value {
         }
     }
 
+    /// The numeric value as a `usize`, if it is a non-negative integer.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().filter(|n| *n >= 0.0 && n.fract() == 0.0).map(|n| n as usize)
     }
 
+    /// The numeric value as an `i64`, if it is an integer.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().filter(|n| n.fract() == 0.0).map(|n| n as i64)
     }
 
+    /// The string slice, if this is a [`Value::Str`].
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -54,6 +65,7 @@ impl Value {
         }
     }
 
+    /// The element slice, if this is a [`Value::Arr`].
     pub fn as_arr(&self) -> Option<&[Value]> {
         match self {
             Value::Arr(a) => Some(a),
@@ -61,6 +73,7 @@ impl Value {
         }
     }
 
+    /// The field map, if this is a [`Value::Obj`].
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Value>> {
         match self {
             Value::Obj(o) => Some(o),
@@ -76,37 +89,44 @@ impl Value {
         }
     }
 
-    /// Required-field helpers with path-bearing errors.
+    /// Required field, with a descriptive error when absent.
     pub fn req(&self, key: &str) -> Result<&Value> {
         self.get(key).ok_or_else(|| anyhow!("missing field {key:?}"))
     }
 
+    /// Required string field ([`Value::req`] + [`Value::as_str`]).
     pub fn req_str(&self, key: &str) -> Result<&str> {
         self.req(key)?.as_str().ok_or_else(|| anyhow!("field {key:?} is not a string"))
     }
 
+    /// Required non-negative integer field.
     pub fn req_usize(&self, key: &str) -> Result<usize> {
         self.req(key)?.as_usize().ok_or_else(|| anyhow!("field {key:?} is not a usize"))
     }
 
+    /// Required numeric field.
     pub fn req_f64(&self, key: &str) -> Result<f64> {
         self.req(key)?.as_f64().ok_or_else(|| anyhow!("field {key:?} is not a number"))
     }
 
+    /// Required array field.
     pub fn req_arr(&self, key: &str) -> Result<&[Value]> {
         self.req(key)?.as_arr().ok_or_else(|| anyhow!("field {key:?} is not an array"))
     }
 
     // ---- builders --------------------------------------------------------
 
+    /// Build an object from `(key, value)` pairs.
     pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
         Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build a string value.
     pub fn str(s: impl Into<String>) -> Value {
         Value::Str(s.into())
     }
 
+    /// Build a numeric value.
     pub fn num(n: impl Into<f64>) -> Value {
         Value::Num(n.into())
     }

@@ -58,17 +58,26 @@ pub fn triton_codegen(vendor: Vendor) -> Codegen {
 /// Implementation identifiers used by experiments and reports.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ImplId {
+    /// The CUDA `flash_attn` template library.
     FlashAttn,
+    /// The manual ROCm port of `flash_attn`.
     RocmFlashAttn,
+    /// Framework-native fallback (materialized PyTorch ops).
     PyTorchNative,
+    /// Triton with hand-picked configurations.
     TritonManual,
+    /// Triton with autotuning (this work's regime).
     TritonAutotuned,
+    /// vLLM's hand-written CUDA RMS kernel.
     VllmCudaRms,
+    /// The same kernel cross-compiled with hipify.
     HipifyRms,
+    /// Autotuned Triton RMS norm.
     TritonRmsAutotuned,
 }
 
 impl ImplId {
+    /// Human-readable label (matches the paper's Table I naming).
     pub fn label(self) -> &'static str {
         match self {
             ImplId::FlashAttn => "flash_attn",
@@ -99,9 +108,13 @@ impl ImplId {
 /// A vendor template library: a fixed template set + dispatch heuristic.
 #[derive(Debug, Clone)]
 pub struct TemplateLibrary {
+    /// Library name as reported in experiment tables.
     pub name: &'static str,
+    /// The vendor the library was written for.
     pub home_vendor: Vendor,
+    /// The fixed set of hand-written kernel configurations.
     pub templates: Vec<Config>,
+    /// Codegen quality on the home vendor (hand-tuned ceilings).
     pub codegen_home: Codegen,
     /// Codegen quality when cross-compiled to the other vendor
     /// (None = the library simply does not build there, like flash_attn

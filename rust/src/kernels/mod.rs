@@ -15,12 +15,16 @@ pub use baselines::{Codegen, ImplId, TemplateLibrary};
 /// The investigated kernels.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum KernelKind {
+    /// Flash attention (the paper's primary kernel).
     Attention,
+    /// RMS normalization.
     RmsNorm,
+    /// Element-wise vector addition (the minimal bandwidth-bound case).
     VectorAdd,
 }
 
 impl KernelKind {
+    /// Stable snake_case identifier (manifest keys, CLI `--kernel`).
     pub fn name(self) -> &'static str {
         match self {
             KernelKind::Attention => "attention",
@@ -29,6 +33,7 @@ impl KernelKind {
         }
     }
 
+    /// The kernel a workload exercises.
     pub fn of(w: &crate::workload::Workload) -> Self {
         match w {
             crate::workload::Workload::Attention { .. } => KernelKind::Attention,

@@ -36,11 +36,14 @@ portatune — performance-portable LLM kernels via autotuning
 USAGE:
   portatune bench <fig1|fig2|fig3|fig4|fig5|tables|ablation|hopper|all> [--out-dir D]
   portatune tune  [--kernel attention|rms_norm|vector_add]
-                  [--platform sim-a100|sim-mi250|cpu-pjrt]
+                  [--platform sim-a100|sim-mi250|sim-h100|cpu-pjrt]
                   [--batch N] [--seq N]
                   [--strategy exhaustive|random|hillclimb|anneal|sha]
                   [--budget N] [--cache FILE] [--seed N] [--space FILE.json]
                   [--devices N]   (shard evaluation across N simulated devices)
+                  [--fleet P1,P2,...]  (measure every config on every listed
+                                        platform; per-platform winners +
+                                        portability table; sim platforms only)
   portatune serve [--requests N] [--seed N] [--no-tuning]
   portatune analyze kernels
   portatune analyze hlo <path>
@@ -119,7 +122,138 @@ fn cmd_bench(args: &Args) -> Result<()> {
     print_reports(reports, args.flag("out-dir"))
 }
 
+/// `tune --fleet P1,P2,...`: one search, every config measured on every
+/// listed platform, per-platform winners + the portability table.
+fn cmd_tune_fleet(args: &Args, fleet_spec: &str) -> Result<()> {
+    if args.flag("platform").is_some() || args.flag("devices").is_some() {
+        return Err(anyhow!(
+            "--fleet replaces --platform/--devices: list the fleet's platforms \
+             (repeats allowed, e.g. --fleet a100,a100,mi250)"
+        ));
+    }
+    let kernel = args.flag_or("kernel", "attention");
+    let batch = args.flag_parse("batch", 8usize)?;
+    let seq = args.flag_parse("seq", 1024usize)?;
+    let budget = args.flag_parse("budget", 200usize)?;
+    let seed = args.flag_parse("seed", 0u64)?;
+    let strat = parse_strategy(&args.flag_or("strategy", "exhaustive"), budget)?;
+    let w = workload_for(&kernel, batch, seq)?;
+    let mut devices = Vec::new();
+    for name in fleet_spec.split(',').filter(|s| !s.is_empty()) {
+        let pid: PlatformId = name.parse().map_err(|e| anyhow!("--fleet: {e}"))?;
+        let Some(gpu) = pid.sim() else {
+            return Err(anyhow!(
+                "--fleet supports sim platforms only (got {name}): the PJRT path \
+                 is sequential (PJRT handles are not Send; see ROADMAP)"
+            ));
+        };
+        let vendor = gpu.spec.vendor;
+        devices.push(SimEvaluator::new(gpu, w, triton_codegen(vendor)));
+    }
+    if devices.is_empty() {
+        return Err(anyhow!("--fleet needs at least one platform, e.g. --fleet a100,mi250"));
+    }
+    let space = match args.flag("space") {
+        Some(path) => portatune::config::dsl::space_from_file(path)?,
+        None => spaces::sim_space_for(&w),
+    };
+    let mut fleet = MultiDeviceEvaluator::new(devices);
+    let mut cache = match args.flag("cache") {
+        Some(p) => TuningCache::open(p)?,
+        None => TuningCache::ephemeral(),
+    };
+    let out = autotuner::tune_fleet_cached(&mut cache, &space, &w, &mut fleet, &strat, seed)
+        .ok_or_else(|| anyhow!("no valid configuration found on every platform"))?;
+
+    println!("workload      : {}", w.key());
+    println!("strategy      : {}", strat.label());
+    println!("fleet         : {} devices, {} distinct platforms", fleet.devices(), out.outcomes.len());
+    println!("from cache    : {}", out.from_cache);
+    println!("wall time     : {:.2} s", out.wall_seconds);
+
+    let mut winners = Report::new(
+        "fleet tuning — per-platform winners",
+        &["platform", "best config", "best_us", "evaluated", "invalid", "spread"],
+    );
+    winners.note(format!(
+        "{} distinct winner(s) across {} platform(s){}",
+        out.distinct_winners,
+        out.outcomes.len(),
+        if out.distinct_winners == 1 {
+            " — one config wins everywhere"
+        } else {
+            " — per-platform multi-versioning pays (the paper's claim)"
+        }
+    ));
+    for (platform, o) in &out.outcomes {
+        winners.row(vec![
+            platform.clone(),
+            o.best.to_string(),
+            format!("{:.2}", o.best_latency_us),
+            o.evaluated.to_string(),
+            o.invalid.to_string(),
+            o.spread().map(|s| format!("{s:.1}x")).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    println!("{}", winners.to_markdown());
+
+    let mut port = Report::new(
+        "portability — portable-best vs platform-best",
+        &["platform", "platform best_us", "portable_us", "slowdown"],
+    );
+    match &out.portable {
+        Some(pb) => {
+            port.note(format!(
+                "portable config {} (worst-case slowdown {:.2}x)",
+                pb.config, pb.worst_slowdown
+            ));
+            for ((platform, o), (lat, slow)) in
+                out.outcomes.iter().zip(pb.latency_us.iter().zip(&pb.slowdown))
+            {
+                port.row(vec![
+                    platform.clone(),
+                    format!("{:.2}", o.best_latency_us),
+                    format!("{lat:.2}"),
+                    format!("{slow:.2}x"),
+                ]);
+            }
+        }
+        None if out.from_cache => {
+            port.note("cached winners carry no evaluation history; re-run without --cache (or clear it) for the portable-best analysis");
+        }
+        None => {
+            port.note("no measured candidate is valid on every platform — nothing portable to report");
+        }
+    }
+    println!("{}", port.to_markdown());
+
+    // Utilization is only meaningful when the devices actually ran
+    // (a full cache hit performs zero evaluations).
+    if !out.from_cache {
+        let wall = fleet.wall_us();
+        for (i, u) in fleet.utilization().iter().enumerate() {
+            println!(
+                "  device {i} [{}]: {} cfgs ({} replicated) in {} shards, busy {:.0} us ({:.0}% util)",
+                u.device,
+                u.evaluated,
+                u.replicated,
+                u.shards,
+                u.busy_us,
+                100.0 * u.utilization(wall)
+            );
+        }
+    }
+    cache.save()?;
+    if args.flag("cache").is_some() {
+        println!("cache         : {} entries @ {}", cache.len(), cache.path().display());
+    }
+    Ok(())
+}
+
 fn cmd_tune(args: &Args) -> Result<()> {
+    if let Some(fleet_spec) = args.flag("fleet") {
+        return cmd_tune_fleet(args, fleet_spec);
+    }
     let kernel = args.flag_or("kernel", "attention");
     let platform: PlatformId = args.flag_or("platform", "sim-a100").parse().map_err(|e| anyhow!("{e}"))?;
     let batch = args.flag_parse("batch", 8usize)?;
@@ -174,22 +308,26 @@ fn cmd_tune(args: &Args) -> Result<()> {
                     MultiDeviceEvaluator::replicate(&SimEvaluator::new(gpu, w, cg), devices);
                 let outcome =
                     autotuner::tune_cached(&mut cache, &space, &w, &mut eval, &strat, seed);
-                let wall = eval.wall_us();
-                device_report = eval
-                    .utilization()
-                    .iter()
-                    .enumerate()
-                    .map(|(i, u)| {
-                        format!(
-                            "  device {i} [{}]: {} cfgs in {} shards, busy {:.0} us ({:.0}% util)",
-                            u.device,
-                            u.evaluated,
-                            u.shards,
-                            u.busy_us,
-                            100.0 * u.utilization(wall)
-                        )
-                    })
-                    .collect();
+                // Utilization is only meaningful when the devices
+                // actually ran (a cache hit performs zero evaluations).
+                if outcome.as_ref().map(|o| !o.from_cache).unwrap_or(false) {
+                    let wall = eval.wall_us();
+                    device_report = eval
+                        .utilization()
+                        .iter()
+                        .enumerate()
+                        .map(|(i, u)| {
+                            format!(
+                                "  device {i} [{}]: {} cfgs in {} shards, busy {:.0} us ({:.0}% util)",
+                                u.device,
+                                u.evaluated,
+                                u.shards,
+                                u.busy_us,
+                                100.0 * u.utilization(wall)
+                            )
+                        })
+                        .collect();
+                }
                 outcome
             } else {
                 let mut eval = SimEvaluator::new(gpu, w, cg);
@@ -378,7 +516,7 @@ fn main() -> Result<()> {
         }
         "tune" => {
             let args = Args::parse(rest, &[])?;
-            args.ensure_known(&["kernel", "platform", "batch", "seq", "strategy", "budget", "cache", "seed", "space", "devices"])?;
+            args.ensure_known(&["kernel", "platform", "batch", "seq", "strategy", "budget", "cache", "seed", "space", "devices", "fleet"])?;
             cmd_tune(&args)
         }
         "serve" => {

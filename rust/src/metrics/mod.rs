@@ -168,6 +168,11 @@ pub struct DeviceUtil {
     pub evaluated: usize,
     /// Batch shards this device has processed.
     pub shards: usize,
+    /// Of [`DeviceUtil::evaluated`], how many were replicated
+    /// measure-everywhere evaluations (fleet tuning measures each config
+    /// once per *distinct platform*; sharded throughput mode measures it
+    /// on exactly one device and leaves this at 0).
+    pub replicated: usize,
     /// Cumulative time this device spent evaluating, µs.
     pub busy_us: f64,
 }
@@ -242,7 +247,13 @@ mod tests {
 
     #[test]
     fn device_util_fractions() {
-        let u = DeviceUtil { device: "sim".into(), evaluated: 10, shards: 2, busy_us: 50.0 };
+        let u = DeviceUtil {
+            device: "sim".into(),
+            evaluated: 10,
+            shards: 2,
+            replicated: 0,
+            busy_us: 50.0,
+        };
         assert!((u.utilization(100.0) - 0.5).abs() < 1e-12);
         assert_eq!(u.utilization(0.0), 0.0);
         // Clock skew cannot push utilization above 1.

@@ -35,15 +35,21 @@ pub enum PlatformId {
     SimA100,
     /// Analytical model of one GCD of the AMD Instinct MI250-128GB.
     SimMi250,
+    /// Analytical model of the NVIDIA H100-80GB (the day-0 Hopper
+    /// experiment; also lets fleets mix GPU generations, not just
+    /// vendors).
+    SimH100,
     /// Real execution through the XLA PJRT CPU client.
     CpuPjrt,
 }
 
 impl PlatformId {
+    /// Stable CLI/display name (`sim-a100`, `sim-mi250`, `cpu-pjrt`).
     pub fn name(self) -> &'static str {
         match self {
             PlatformId::SimA100 => "sim-a100",
             PlatformId::SimMi250 => "sim-mi250",
+            PlatformId::SimH100 => "sim-h100",
             PlatformId::CpuPjrt => "cpu-pjrt",
         }
     }
@@ -54,14 +60,18 @@ impl PlatformId {
         match self {
             PlatformId::SimA100 => format!("sim-a100/model-v{}", model::MODEL_VERSION),
             PlatformId::SimMi250 => format!("sim-mi250/model-v{}", model::MODEL_VERSION),
+            PlatformId::SimH100 => format!("sim-h100/model-v{}", model::MODEL_VERSION),
             PlatformId::CpuPjrt => format!("cpu-pjrt/{}", std::env::consts::ARCH),
         }
     }
 
+    /// The analytical model behind a sim platform (`None` for real
+    /// execution platforms).
     pub fn sim(self) -> Option<SimGpu> {
         match self {
             PlatformId::SimA100 => Some(SimGpu::a100()),
             PlatformId::SimMi250 => Some(SimGpu::mi250()),
+            PlatformId::SimH100 => Some(SimGpu::h100()),
             PlatformId::CpuPjrt => None,
         }
     }
@@ -80,6 +90,7 @@ impl std::str::FromStr for PlatformId {
         match s {
             "sim-a100" | "a100" => Ok(PlatformId::SimA100),
             "sim-mi250" | "mi250" => Ok(PlatformId::SimMi250),
+            "sim-h100" | "h100" => Ok(PlatformId::SimH100),
             "cpu-pjrt" | "cpu" => Ok(PlatformId::CpuPjrt),
             other => Err(format!("unknown platform {other:?}")),
         }

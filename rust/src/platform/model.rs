@@ -50,6 +50,7 @@ pub const HAND_TUNED: Codegen = Codegen { compute_eff: 1.0, mem_eff: 1.0, f16_pa
 /// Why a configuration cannot run on this platform.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct InvalidConfig {
+    /// Human-readable explanation (which ceiling was exceeded).
     pub reason: String,
 }
 
@@ -72,18 +73,22 @@ fn ceil_div(a: usize, b: usize) -> usize {
 /// An analytically modeled GPU.
 #[derive(Debug, Clone)]
 pub struct SimGpu {
+    /// The architecture sheet driving every model term.
     pub spec: GpuSpec,
 }
 
 impl SimGpu {
+    /// The modeled NVIDIA A100-80GB ([`A100`]).
     pub fn a100() -> Self {
         SimGpu { spec: A100 }
     }
 
+    /// The modeled AMD MI250 GCD ([`MI250`]).
     pub fn mi250() -> Self {
         SimGpu { spec: MI250 }
     }
 
+    /// The modeled NVIDIA H100 ([`H100`], the day-0 Hopper experiment).
     pub fn h100() -> Self {
         SimGpu { spec: H100 }
     }
@@ -409,6 +414,8 @@ impl SimGpu {
     // Vector add
     // -----------------------------------------------------------------
 
+    /// Predicted latency (µs) of one vector-add launch (pure bandwidth
+    /// roofline + device-fill term).
     pub fn vecadd_latency_us(&self, cfg: &Config, w: &Workload, cg: &Codegen) -> Result<f64, InvalidConfig> {
         let Workload::VectorAdd { n, dtype } = *w else {
             return Err(invalid("workload is not vector_add"));

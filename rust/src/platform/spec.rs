@@ -14,11 +14,14 @@
 /// GPU vendor, which selects instruction-set-level modeling details.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Vendor {
+    /// NVIDIA (warp = 32, mma.sync, cp.async on Ampere+).
     Nvidia,
+    /// AMD (wavefront = 64, MFMA, no async copy on CDNA2).
     Amd,
 }
 
 impl Vendor {
+    /// Display name.
     pub fn name(self) -> &'static str {
         match self {
             Vendor::Nvidia => "NVIDIA",
@@ -30,7 +33,15 @@ impl Vendor {
 /// Static architecture description used by the analytical models.
 #[derive(Debug, Clone)]
 pub struct GpuSpec {
+    /// Marketing name of the part.
     pub name: &'static str,
+    /// Short lowercase model slug (`a100`, `mi250`, `h100`) — the
+    /// platform *identity*: evaluator names, cache keys, and fleet
+    /// platform rows are derived from this, so two distinct GPU models
+    /// must never share a slug (an H100 is not an A100, even though
+    /// both are NVIDIA).
+    pub model: &'static str,
+    /// The part's vendor.
     pub vendor: Vendor,
     /// Streaming multiprocessors (NVIDIA) / compute units (AMD).
     pub cus: usize,
@@ -82,6 +93,7 @@ impl GpuSpec {
 /// NVIDIA A100-80GB SXM.
 pub const A100: GpuSpec = GpuSpec {
     name: "A100-80GB",
+    model: "a100",
     vendor: Vendor::Nvidia,
     cus: 108,
     warp_width: 32,
@@ -104,6 +116,7 @@ pub const A100: GpuSpec = GpuSpec {
 /// per-GCD; peak numbers here are per-GCD halves of the card totals).
 pub const MI250: GpuSpec = GpuSpec {
     name: "MI250-128GB",
+    model: "mi250",
     vendor: Vendor::Amd,
     cus: 104,
     warp_width: 64,
@@ -129,6 +142,7 @@ pub const MI250: GpuSpec = GpuSpec {
 /// dense FP16, 3.35 TB/s HBM3, 50 MiB L2, TMA async copies.
 pub const H100: GpuSpec = GpuSpec {
     name: "H100-80GB",
+    model: "h100",
     vendor: Vendor::Nvidia,
     cus: 132,
     warp_width: 32,
@@ -175,6 +189,20 @@ mod tests {
     fn h100_is_a_generational_leap() {
         assert!(H100.fp16_matrix_tflops > 3.0 * A100.fp16_matrix_tflops);
         assert!(H100.smem_per_block > A100.smem_per_block);
+    }
+
+    #[test]
+    fn model_slugs_are_unique_and_lowercase() {
+        // The slug is the platform identity (evaluator names, cache
+        // keys, fleet platform rows): two specs must never share one.
+        let slugs = [A100.model, MI250.model, H100.model];
+        for (i, a) in slugs.iter().enumerate() {
+            assert_eq!(*a, a.to_ascii_lowercase());
+            assert!(!a.is_empty());
+            for b in &slugs[i + 1..] {
+                assert_ne!(a, b, "two GPU models share the slug {a:?}");
+            }
+        }
     }
 
     #[test]

@@ -12,13 +12,18 @@ use crate::Result;
 /// A titled table: the unit of experiment output.
 #[derive(Debug, Clone, Default)]
 pub struct Report {
+    /// Table heading.
     pub title: String,
+    /// Free-form annotations rendered above the table.
     pub notes: Vec<String>,
+    /// Column headers.
     pub columns: Vec<String>,
+    /// Data rows; each must match the column arity.
     pub rows: Vec<Vec<String>>,
 }
 
 impl Report {
+    /// A titled, empty table with the given columns.
     pub fn new(title: impl Into<String>, columns: &[&str]) -> Self {
         Report {
             title: title.into(),
@@ -28,10 +33,12 @@ impl Report {
         }
     }
 
+    /// Append an annotation line.
     pub fn note(&mut self, note: impl Into<String>) {
         self.notes.push(note.into());
     }
 
+    /// Append one row (must match the column arity).
     pub fn row(&mut self, cells: Vec<String>) {
         debug_assert_eq!(cells.len(), self.columns.len(), "row arity mismatch in {}", self.title);
         self.rows.push(cells);

@@ -15,11 +15,14 @@ use crate::workload::{DType, Workload};
 /// Tensor spec: shape + dtype name as written by aot.py.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TensorSpec {
+    /// Tensor dimensions.
     pub shape: Vec<usize>,
+    /// dtype name as written by aot.py (`f32`, `f16`, `bf16`).
     pub dtype: String,
 }
 
 impl TensorSpec {
+    /// Total element count (product of the shape).
     pub fn elements(&self) -> usize {
         self.shape.iter().product()
     }
@@ -37,15 +40,25 @@ impl TensorSpec {
 /// Loose workload record (field set depends on the kernel).
 #[derive(Debug, Clone, Default)]
 pub struct WorkloadRecord {
+    /// Batch size (attention).
     pub batch: Option<usize>,
+    /// Query heads (attention).
     pub q_heads: Option<usize>,
+    /// KV heads (attention).
     pub kv_heads: Option<usize>,
+    /// Sequence length (attention).
     pub seq_len: Option<usize>,
+    /// Per-head dimension (attention).
     pub head_dim: Option<usize>,
+    /// Causal masking (attention).
     pub causal: Option<bool>,
+    /// Row count (rms_norm).
     pub n_rows: Option<usize>,
+    /// Hidden dimension (rms_norm).
     pub hidden: Option<usize>,
+    /// Element count (vector_add).
     pub n_elements: Option<usize>,
+    /// dtype name.
     pub dtype: Option<String>,
 }
 
@@ -101,15 +114,25 @@ impl WorkloadRecord {
 /// One AOT artifact.
 #[derive(Debug, Clone)]
 pub struct ArtifactEntry {
+    /// Stable artifact identifier (directory-style).
     pub id: String,
+    /// Kernel name (`attention`, `rms_norm`, ...).
     pub kernel: String,
+    /// Producing implementation (`pallas`, `native`), if recorded.
     pub impl_name: Option<String>,
+    /// The workload the artifact was lowered for.
     pub workload: WorkloadRecord,
+    /// The kernel configuration baked into the artifact.
     pub config: BTreeMap<String, i64>,
+    /// Input tensor specs, in call order.
     pub inputs: Vec<TensorSpec>,
+    /// Output tensor spec, when recorded.
     pub output: Option<TensorSpec>,
+    /// HLO-text path relative to the artifact root.
     pub path: String,
+    /// Artifact size in bytes.
     pub bytes: usize,
+    /// First 16 hex chars of the artifact's sha256.
     pub sha256_16: String,
 }
 
@@ -152,14 +175,17 @@ impl ArtifactEntry {
         })
     }
 
+    /// The baked-in configuration as a typed [`Config`].
     pub fn config(&self) -> Config {
         Config(self.config.clone())
     }
 
+    /// Reconstruct the typed [`Workload`], if the record is complete.
     pub fn workload(&self) -> Option<Workload> {
         self.workload.to_workload(&self.kernel)
     }
 
+    /// True for Pallas-lowered artifacts (the tuning candidates).
     pub fn is_pallas(&self) -> bool {
         self.impl_name.as_deref() == Some("pallas")
     }
@@ -168,13 +194,21 @@ impl ArtifactEntry {
 /// Serving-model description (geometry + weight order).
 #[derive(Debug, Clone)]
 pub struct ModelDesc {
+    /// Model hidden dimension.
     pub hidden: usize,
+    /// Query heads per block.
     pub n_q_heads: usize,
+    /// KV heads per block.
     pub n_kv_heads: usize,
+    /// Per-head dimension.
     pub head_dim: usize,
+    /// MLP intermediate dimension.
     pub mlp_hidden: usize,
+    /// Weight names in call order.
     pub param_order: Vec<String>,
+    /// Shape of each weight.
     pub param_shapes: BTreeMap<String, Vec<usize>>,
+    /// Total parameters per transformer block.
     pub params_per_block: usize,
 }
 
@@ -213,20 +247,30 @@ impl ModelDesc {
 /// Environment fingerprint of the compile path (Q4.3 reuse safety).
 #[derive(Debug, Clone, Default)]
 pub struct EnvRecord {
+    /// jax version used to lower the artifacts.
     pub jax: String,
+    /// Python version.
     pub python: String,
+    /// Machine architecture string.
     pub machine: String,
+    /// Interchange format tag (e.g. `hlo-text-v1`).
     pub interchange: String,
 }
 
 /// The whole manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Manifest schema version.
     pub version: usize,
+    /// True when produced by a quick (reduced-sweep) compile.
     pub quick: bool,
+    /// Environment fingerprint of the compile path.
     pub env: EnvRecord,
+    /// Serving-model geometry.
     pub model: ModelDesc,
+    /// All artifacts, in manifest order.
     pub artifacts: Vec<ArtifactEntry>,
+    /// Artifact root directory (set by [`Manifest::load`]).
     pub root: PathBuf,
 }
 

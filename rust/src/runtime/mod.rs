@@ -43,6 +43,7 @@ impl Engine {
         Ok(Engine { client })
     }
 
+    /// Name of the PJRT platform backing the client (e.g. `cpu`).
     pub fn platform_name(&self) -> String {
         self.client.platform_name()
     }
@@ -79,16 +80,20 @@ impl Engine {
 /// One f32 input tensor (flattened data + shape).
 #[derive(Debug, Clone)]
 pub struct TensorF32 {
+    /// Row-major flattened elements.
     pub data: Vec<f32>,
+    /// Tensor dimensions.
     pub shape: Vec<usize>,
 }
 
 impl TensorF32 {
+    /// Wrap flattened `data` with its `shape` (panics on mismatch).
     pub fn new(data: Vec<f32>, shape: &[usize]) -> Self {
         assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
         TensorF32 { data, shape: shape.to_vec() }
     }
 
+    /// An all-zero tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Self {
         TensorF32 { data: vec![0.0; shape.iter().product()], shape: shape.to_vec() }
     }
@@ -125,6 +130,7 @@ impl TensorF32 {
 #[cfg(feature = "pjrt")]
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
+    /// Source artifact path (used in error messages).
     pub name: String,
 }
 

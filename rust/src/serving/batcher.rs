@@ -24,6 +24,7 @@ pub struct BucketPolicy {
 }
 
 impl BucketPolicy {
+    /// Build the grid from compiled `(seq, batch)` pairs.
     pub fn new(mut pairs: Vec<(usize, usize)>, max_wait_us: u64) -> Self {
         pairs.sort();
         let mut seq_buckets: Vec<usize> = Vec::new();
@@ -71,11 +72,15 @@ impl BucketPolicy {
 /// A batch ready for execution.
 #[derive(Debug, Clone)]
 pub struct Batch {
+    /// Index into the policy's seq buckets.
     pub bucket: usize,
+    /// The bucket's padded sequence length.
     pub seq_len: usize,
     /// Compiled batch shape (>= requests.len(); remainder is padding).
     pub batch_shape: usize,
+    /// The live requests riding in this batch.
     pub requests: Vec<Request>,
+    /// When the batch was closed (latency accounting).
     pub formed_at: Instant,
 }
 
@@ -101,6 +106,7 @@ pub struct DynamicBatcher {
 }
 
 impl DynamicBatcher {
+    /// An empty batcher over `policy`'s buckets.
     pub fn new(policy: BucketPolicy) -> Self {
         let queues = (0..policy.seq_buckets.len())
             .map(|_| PendingQueue { items: VecDeque::new() })
@@ -108,6 +114,7 @@ impl DynamicBatcher {
         DynamicBatcher { policy, queues, rejected: Vec::new() }
     }
 
+    /// The underlying bucket policy.
     pub fn policy(&self) -> &BucketPolicy {
         &self.policy
     }
@@ -126,6 +133,7 @@ impl DynamicBatcher {
         }
     }
 
+    /// Requests currently queued across all buckets.
     pub fn pending(&self) -> usize {
         self.queues.iter().map(|q| q.items.len()).sum()
     }

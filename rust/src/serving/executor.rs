@@ -48,6 +48,7 @@ pub enum ExecutorCommand {
     /// Flush: measure every pending tuning item *now* (used by examples
     /// to show the "after tuning" steady state without idling).
     FinishTuning { reply: Sender<()> },
+    /// Stop the executor thread.
     Shutdown,
 }
 
@@ -62,8 +63,11 @@ struct Variant {
 /// A record of the executor swapping a bucket's active variant.
 #[derive(Debug, Clone)]
 pub struct SwapEvent {
+    /// The (batch, seq) bucket whose variant changed.
     pub shape: ShapeKey,
+    /// Previous active artifact id.
     pub from: String,
+    /// New active artifact id.
     pub to: String,
     /// measured latency ratio old/new (>1 = improvement).
     pub gain: f64,
@@ -75,10 +79,15 @@ pub struct ExecutorStats {
     /// Buckets whose active variant came from the persistent cache at
     /// startup (warm start; no cold tuning needed).
     pub warm_started: usize,
+    /// Batches executed on the request path.
     pub batches_executed: usize,
+    /// Requests served across all batches.
     pub requests_served: usize,
+    /// Background tuning measurements performed.
     pub variants_measured: usize,
+    /// Artifact compiles (request path + tuning).
     pub compiles: usize,
+    /// Every variant hot-swap, in order.
     pub swaps: Vec<SwapEvent>,
     /// shape -> active artifact id.
     pub active: HashMap<String, String>,
@@ -428,8 +437,10 @@ fn variant_config_matches(artifact_id: &str, cfg: &Config) -> bool {
 
 /// Handle to the executor thread.
 pub struct ExecutorHandle {
+    /// Command channel into the executor thread.
     pub tx: Sender<ExecutorCommand>,
     join: Option<std::thread::JoinHandle<()>>,
+    /// Compiled model (batch, seq) shapes discovered at startup.
     pub shapes: Vec<ShapeKey>,
 }
 
@@ -449,6 +460,7 @@ impl ExecutorHandle {
         Ok(ExecutorHandle { tx, join: Some(join), shapes })
     }
 
+    /// Snapshot the executor's counters.
     pub fn stats(&self) -> Result<ExecutorStats> {
         let (tx, rx) = std::sync::mpsc::channel();
         self.tx

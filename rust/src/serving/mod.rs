@@ -37,14 +37,18 @@ pub use router::ServerConfig;
 /// One inference request: a prompt of `tokens` tokens.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Request {
+    /// Caller-assigned request id.
     pub id: u64,
+    /// Prompt length in tokens.
     pub tokens: usize,
 }
 
 /// Completion record for one request.
 #[derive(Debug, Clone)]
 pub struct Completion {
+    /// The request's id.
     pub id: u64,
+    /// The request's token count.
     pub tokens: usize,
     /// Seq-length bucket the request was served in.
     pub bucket_seq: usize,

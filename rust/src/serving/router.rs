@@ -46,17 +46,29 @@ impl Default for ServerConfig {
 #[cfg(feature = "pjrt")]
 #[derive(Debug, Clone)]
 pub struct ServeReport {
+    /// Requests completed.
     pub requests: usize,
+    /// Requests rejected (no bucket fits them).
     pub rejected: usize,
+    /// Distinct batches executed.
     pub batches: usize,
+    /// Wall-clock duration of the replay, seconds.
     pub wall_seconds: f64,
+    /// Completed requests per second.
     pub throughput_rps: f64,
+    /// Tokens served per second.
     pub tokens_per_second: f64,
+    /// End-to-end latency median, µs.
     pub latency_p50_us: f64,
+    /// End-to-end latency 95th percentile, µs.
     pub latency_p95_us: f64,
+    /// End-to-end latency 99th percentile, µs.
     pub latency_p99_us: f64,
+    /// Pure execution latency median, µs.
     pub exec_p50_us: f64,
+    /// Mean fraction of each compiled batch doing useful work.
     pub mean_batch_occupancy: f64,
+    /// Executor-side counters (tuning, swaps, compiles).
     pub executor: ExecutorStats,
 }
 
@@ -84,10 +96,12 @@ impl Router {
         Ok(Router { executor, policy })
     }
 
+    /// The bucket policy the router batches under.
     pub fn policy(&self) -> &BucketPolicy {
         &self.policy
     }
 
+    /// Handle to the executor thread (stats, tuning control).
     pub fn executor(&self) -> &ExecutorHandle {
         &self.executor
     }

@@ -8,12 +8,16 @@
 /// Element type of kernel operands.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DType {
+    /// 32-bit IEEE float.
     F32,
+    /// 16-bit IEEE half.
     F16,
+    /// bfloat16.
     BF16,
 }
 
 impl DType {
+    /// Bytes per element.
     pub fn bytes(self) -> usize {
         match self {
             DType::F32 => 4,
@@ -21,6 +25,7 @@ impl DType {
         }
     }
 
+    /// Lowercase type name (`f32`, `f16`, `bf16`).
     pub fn name(self) -> &'static str {
         match self {
             DType::F32 => "f32",
@@ -44,22 +49,37 @@ impl std::fmt::Display for DType {
 /// [`crate::experiments::workload_gen`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Workload {
+    /// One (grouped-query) attention launch.
     Attention {
+        /// Sequences in the batch.
         batch: usize,
+        /// Query heads.
         q_heads: usize,
+        /// KV heads (GQA: `q_heads / kv_heads` queries share a KV head).
         kv_heads: usize,
+        /// Maximum sequence length in the batch.
         seq_len: usize,
+        /// Per-head embedding dimension.
         head_dim: usize,
+        /// Operand element type.
         dtype: DType,
+        /// Causal (decoder) masking.
         causal: bool,
     },
+    /// One RMS-norm launch over `n_rows` rows of width `hidden`.
     RmsNorm {
+        /// Number of rows (tokens).
         n_rows: usize,
+        /// Hidden dimension (row width).
         hidden: usize,
+        /// Operand element type.
         dtype: DType,
     },
+    /// One element-wise vector addition of length `n`.
     VectorAdd {
+        /// Element count.
         n: usize,
+        /// Operand element type.
         dtype: DType,
     },
 }
@@ -141,6 +161,7 @@ impl Workload {
         self.flops() / self.min_bytes()
     }
 
+    /// The operand element type.
     pub fn dtype(&self) -> DType {
         match *self {
             Workload::Attention { dtype, .. }
@@ -172,6 +193,7 @@ impl Workload {
         }
     }
 
+    /// The kernel this workload exercises (manifest naming).
     pub fn kernel_name(&self) -> &'static str {
         match self {
             Workload::Attention { .. } => "attention",

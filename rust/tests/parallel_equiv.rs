@@ -5,9 +5,15 @@
 //! pool, and the sharded multi-device fleet — must produce, for every
 //! strategy and seed, exactly the outcome the sequential evaluator
 //! produces: same best config, same invalid count, same evaluation log
-//! (fingerprints AND latencies, bitwise).  Results are merged in
-//! submission order, so any divergence here is a real bug, not
-//! scheduling noise.
+//! (fingerprints, latencies AND fidelities, bitwise).  Results are
+//! merged in submission order, so any divergence here is a real bug,
+//! not scheduling noise.
+//!
+//! The fleet ("measure everywhere") mode extends the contract across
+//! platforms: tuning a heterogeneous fleet must give each platform
+//! exactly the outcome of tuning that platform alone with a sequential
+//! evaluator — however many replicas the fleet has and however its
+//! batches were sharded.
 
 use portatune::autotuner::{
     self, Evaluator, MultiDeviceEvaluator, SimEvaluator, Strategy, TuneOutcome,
@@ -52,7 +58,8 @@ fn all_strategies() -> Vec<Strategy> {
 }
 
 /// Full-outcome equality: best config + latency bits, counters, and the
-/// entire evaluation log entry for entry.
+/// entire evaluation log entry for entry (fingerprint, latency bits,
+/// and the fidelity each measurement was taken at).
 fn assert_same_outcome(seq: &TuneOutcome, other: &TuneOutcome, label: &str) {
     assert_eq!(seq.best, other.best, "{label}: best config differs");
     assert_eq!(
@@ -64,11 +71,16 @@ fn assert_same_outcome(seq: &TuneOutcome, other: &TuneOutcome, label: &str) {
     assert_eq!(seq.evaluated, other.evaluated, "{label}: evaluated differs");
     assert_eq!(seq.history.len(), other.history.len(), "{label}: history length differs");
     for (i, (s, p)) in seq.history.iter().zip(&other.history).enumerate() {
-        assert_eq!(s.0, p.0, "{label}: eval {i} config differs");
+        assert_eq!(s.fingerprint, p.fingerprint, "{label}: eval {i} config differs");
         assert_eq!(
-            s.1.map(f64::to_bits),
-            p.1.map(f64::to_bits),
+            s.latency_us.map(f64::to_bits),
+            p.latency_us.map(f64::to_bits),
             "{label}: eval {i} latency differs"
+        );
+        assert_eq!(
+            s.fidelity.to_bits(),
+            p.fidelity.to_bits(),
+            "{label}: eval {i} fidelity differs"
         );
     }
 }
@@ -133,6 +145,85 @@ fn multi_device_fleet_spreads_work_without_changing_results() {
         assert!(u.shards > 0, "device {i} processed no shards");
     }
     assert!(fleet.wall_us() > 0.0);
+}
+
+/// A heterogeneous fleet for the measure-everywhere tests: two a100
+/// replicas + one mi250, each with its vendor's codegen model.
+fn het_fleet(w: Workload) -> MultiDeviceEvaluator {
+    let a100 = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
+    let mi250 = SimEvaluator::new(SimGpu::mi250(), w, portatune::kernels::baselines::TRITON_AMD);
+    MultiDeviceEvaluator::new(vec![a100.clone(), mi250, a100])
+}
+
+/// Solo tuning of one fleet platform with a freshly built *sequential*
+/// evaluator — ground truth constructed without any fleet machinery, so
+/// the comparison cannot be circular.
+fn solo_outcome(platform: &str, strat: &Strategy, seed: u64) -> TuneOutcome {
+    let w = Workload::llama3_attention(8, 1024);
+    let space = spaces::attention_sim_space();
+    let a100 = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA).sequential();
+    let mi250 = SimEvaluator::new(SimGpu::mi250(), w, portatune::kernels::baselines::TRITON_AMD)
+        .sequential();
+    let mut eval = if a100.name() == platform {
+        a100
+    } else {
+        assert_eq!(mi250.name(), platform, "unknown fleet platform {platform}");
+        mi250
+    };
+    autotuner::tune(&space, &w, &mut eval, strat, seed).expect("space is non-empty")
+}
+
+#[test]
+fn fleet_measure_everywhere_is_bit_identical_to_solo_tuning_per_platform() {
+    // The tentpole guarantee of fleet tuning: for every strategy and
+    // seed, each platform's outcome — winner, latency bits, counters,
+    // and the full (fingerprint, latency, fidelity) log — is exactly
+    // what tuning that platform alone with a sequential evaluator
+    // produces.  Exhaustive/random share one measure-everywhere
+    // trajectory; the adaptive strategies run per platform; neither may
+    // be observable in the result.
+    let w = Workload::llama3_attention(8, 1024);
+    let space = spaces::attention_sim_space();
+    for strat in all_strategies() {
+        for seed in [0u64, 7] {
+            let mut fleet = het_fleet(w);
+            let out = autotuner::tune_fleet(&space, &w, &mut fleet, &strat, seed)
+                .expect("fleet tune must succeed");
+            assert_eq!(out.outcomes.len(), 2, "two distinct platforms");
+            for (platform, got) in &out.outcomes {
+                let want = solo_outcome(platform, &strat, seed);
+                assert_same_outcome(&want, got, &format!("{strat:?} seed {seed} {platform}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn fleet_replicas_shard_platform_copies_without_changing_results() {
+    // 1 vs 2 a100 replicas: the a100 copy of each batch is sharded
+    // differently, but the a100 outcome must not change.
+    let w = Workload::llama3_attention(8, 1024);
+    let space = spaces::attention_sim_space();
+    let a100 = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
+    let mi250 = SimEvaluator::new(SimGpu::mi250(), w, portatune::kernels::baselines::TRITON_AMD);
+    let mut small = MultiDeviceEvaluator::new(vec![a100.clone(), mi250.clone()]);
+    let mut wide = MultiDeviceEvaluator::new(vec![a100.clone(), mi250, a100]);
+    let a = autotuner::tune_fleet(&space, &w, &mut small, &Strategy::Exhaustive, 0).unwrap();
+    let b = autotuner::tune_fleet(&space, &w, &mut wide, &Strategy::Exhaustive, 0).unwrap();
+    assert_eq!(a.outcomes.len(), b.outcomes.len());
+    for ((p1, o1), (p2, o2)) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(p1, p2);
+        assert_same_outcome(o1, o2, &format!("replica widths for {p1}"));
+    }
+    assert_eq!(a.distinct_winners, b.distinct_winners);
+    match (&a.portable, &b.portable) {
+        (Some(x), Some(y)) => {
+            assert_eq!(x.config, y.config, "portable pick must not depend on replica count");
+            assert_eq!(x.worst_slowdown.to_bits(), y.worst_slowdown.to_bits());
+        }
+        (None, None) => {}
+        _ => panic!("portable-best presence differs with replica count"),
+    }
 }
 
 #[test]
