@@ -1,18 +1,36 @@
-//! Quickstart: define a configuration space, autotune the Listing-1
-//! vector-add kernel on a simulated GPU *and* on the real PJRT CPU
-//! backend, and reuse the result through the persistent cache.
+//! Quickstart: the `TuningSession` builder end to end — define a
+//! configuration space, autotune the Listing-1 vector-add kernel on a
+//! simulated GPU (streaming progress through an `Observer`, capping a
+//! run with a `Budget`), and reuse the result through the persistent
+//! cache.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
+//!
+//! The default build runs entirely against the analytical platform
+//! models (no GPU, no XLA toolchain — this is what CI executes).  With
+//! `--features pjrt` and AOT artifacts (`make artifacts`), it
+//! additionally autotunes for real by executing every artifact via
+//! PJRT.
 
-use portatune::autotuner::{self, PjrtEvaluator, SimEvaluator, Strategy};
+use portatune::autotuner::{
+    Budget, Observer, SessionOutcome, SimEvaluator, Strategy, TuningSession,
+};
 use portatune::cache::TuningCache;
-use portatune::config::spaces;
+use portatune::config::{spaces, Config};
 use portatune::kernels::baselines::triton_codegen;
 use portatune::platform::SimGpu;
-use portatune::runtime::{Engine, Manifest};
 use portatune::workload::{DType, Workload};
+
+/// Minimal observer: print each new best as the search finds it.
+struct PrintBests;
+
+impl Observer for PrintBests {
+    fn on_new_best(&mut self, config: &Config, latency_us: f64) {
+        println!("    new best {config} @ {latency_us:.2} us");
+    }
+}
 
 fn main() -> portatune::Result<()> {
     // ----------------------------------------------------------------
@@ -29,24 +47,89 @@ fn main() -> portatune::Result<()> {
     );
 
     // ----------------------------------------------------------------
-    // 2. Autotune on a simulated GPU (instant, deterministic).
+    // 2. Autotune on a simulated GPU (instant, deterministic), watching
+    //    progress through an Observer.
     // ----------------------------------------------------------------
     let gpu = SimGpu::a100();
     let mut sim = SimEvaluator::new(gpu.clone(), w, triton_codegen(gpu.spec.vendor));
-    let out = autotuner::tune(&space, &w, &mut sim, &Strategy::Exhaustive, 0)
+    let mut bests = PrintBests;
+    println!("\n[sim-a100] exhaustive tune:");
+    let out = TuningSession::new(&space, &w)
+        .observe(&mut bests)
+        .evaluator(&mut sim)
+        .run()
+        .and_then(SessionOutcome::into_solo)
         .expect("space is non-empty");
-    println!("\n[sim-a100] best {} @ {:.2} us ({} evaluated)", out.best, out.best_latency_us, out.evaluated);
+    println!(
+        "[sim-a100] best {} @ {:.2} us ({} evaluated, {} invalid)",
+        out.best, out.best_latency_us, out.evaluated, out.invalid
+    );
 
     // ----------------------------------------------------------------
-    // 3. Autotune for real: execute every AOT artifact via PJRT and
-    //    measure wall-clock (Python is nowhere in this process).
+    // 3. Budgets are session options, not strategy knobs: cap ANY
+    //    strategy — even exhaustive enumeration — at N evaluations.
     // ----------------------------------------------------------------
+    if let Some(capped) = TuningSession::new(&space, &w)
+        .budget(Budget::Evals(4))
+        .evaluator(&mut sim)
+        .run()
+        .and_then(SessionOutcome::into_solo)
+    {
+        println!(
+            "\n[sim-a100] budgeted to 4 evals: best {} @ {:.2} us ({} evaluated)",
+            capped.best, capped.best_latency_us, capped.evaluated
+        );
+    }
+
+    // ----------------------------------------------------------------
+    // 4. Reuse: attach a cache and the second run is a hit (Q4.3).
+    // ----------------------------------------------------------------
+    let mut cache = TuningCache::ephemeral();
+    for round in ["cold", "warm"] {
+        let got = TuningSession::new(&space, &w)
+            .strategy(Strategy::Random { budget: 16 })
+            .seed(7)
+            .cache(&mut cache)
+            .evaluator(&mut sim)
+            .run()
+            .and_then(SessionOutcome::into_solo)
+            .expect("random(16) finds a valid vecadd config");
+        println!(
+            "\n[{round}] best {} @ {:.2} us (from cache: {}, {} evaluations)",
+            got.best, got.best_latency_us, got.from_cache, got.evaluated
+        );
+        if round == "warm" {
+            assert!(got.from_cache && got.evaluated == 0);
+        }
+    }
+
+    // ----------------------------------------------------------------
+    // 5. The same session shape drives real PJRT execution (feature
+    //    `pjrt` + `make artifacts`): only the evaluator changes.
+    // ----------------------------------------------------------------
+    #[cfg(feature = "pjrt")]
+    pjrt_tune(&space, &w)?;
+
+    Ok(())
+}
+
+/// Autotune for real: execute every AOT artifact via PJRT and measure
+/// wall-clock (Python is nowhere in this process).
+#[cfg(feature = "pjrt")]
+fn pjrt_tune(space: &portatune::config::ConfigSpace, w: &Workload) -> portatune::Result<()> {
+    use portatune::autotuner::PjrtEvaluator;
+    use portatune::runtime::{Engine, Manifest};
+
     let engine = Engine::cpu()?;
     println!("\n[cpu-pjrt] platform: {}", engine.platform_name());
     let manifest = Manifest::load_default()?;
     let mut cache = TuningCache::ephemeral();
-    let mut eval = PjrtEvaluator::new(&engine, &manifest, w, 2, 7)?;
-    let real = autotuner::tune_cached(&mut cache, &space, &w, &mut eval, &Strategy::Exhaustive, 0)
+    let mut eval = PjrtEvaluator::new(&engine, &manifest, *w, 2, 7)?;
+    let real = TuningSession::new(space, w)
+        .cache(&mut cache)
+        .evaluator(&mut eval)
+        .run()
+        .and_then(SessionOutcome::into_solo)
         .expect("artifacts present (run `make artifacts`)");
     println!(
         "[cpu-pjrt] best {} @ {:.1} us measured ({} artifacts compiled+timed)",
@@ -59,12 +142,13 @@ fn main() -> portatune::Result<()> {
             None => println!("    cfg#{fp:016x}  INVALID"),
         }
     }
-
-    // ----------------------------------------------------------------
-    // 4. Reuse: the second tune is a cache hit (paper Q4.3).
-    // ----------------------------------------------------------------
-    let again = autotuner::tune_cached(&mut cache, &space, &w, &mut eval, &Strategy::Exhaustive, 0).unwrap();
+    let again = TuningSession::new(space, w)
+        .cache(&mut cache)
+        .evaluator(&mut eval)
+        .run()
+        .and_then(SessionOutcome::into_solo)
+        .unwrap();
     assert!(again.from_cache && again.evaluated == 0);
-    println!("\nsecond tune served from cache: {} (0 evaluations)", again.best);
+    println!("\n[cpu-pjrt] second tune served from cache: {} (0 evaluations)", again.best);
     Ok(())
 }

@@ -15,7 +15,10 @@
 //! sequential AND at least as fast as scoped threads — the point of
 //! replacing the per-batch thread respawn.
 
-use portatune::autotuner::{self, Evaluator, MultiDeviceEvaluator, SimEvaluator, Strategy, TuneOutcome};
+use portatune::autotuner::{
+    EvalRecord, Evaluator, MultiDeviceEvaluator, Observer, SessionOutcome, SimEvaluator,
+    Strategy, TuneOutcome, TuningSession,
+};
 use portatune::config::spaces;
 use portatune::kernels::baselines::{TRITON_AMD, TRITON_NVIDIA};
 use portatune::platform::SimGpu;
@@ -56,7 +59,27 @@ fn tune_once(engine: Engine, strat: &Strategy, cost: u32, seed: u64) -> TuneOutc
         Engine::Pool => Box::new(base),
         Engine::MultiDevice(n) => Box::new(MultiDeviceEvaluator::replicate(&base, n)),
     };
-    autotuner::tune(&space, &w, eval.as_mut(), strat, seed).unwrap()
+    TuningSession::new(&space, &w)
+        .strategy(strat.clone())
+        .seed(seed)
+        .evaluator(eval.as_mut())
+        .run()
+        .and_then(SessionOutcome::into_solo)
+        .unwrap()
+}
+
+/// Counts evaluations through the [`Observer`] hook — the bench's
+/// eval totals come from the event stream, not from re-parsing
+/// `TuneOutcome::history`.
+#[derive(Default)]
+struct EvalCounter {
+    evals: usize,
+}
+
+impl Observer for EvalCounter {
+    fn on_eval(&mut self, _record: &EvalRecord) {
+        self.evals += 1;
+    }
 }
 
 fn main() {
@@ -70,7 +93,11 @@ fn main() {
     println!("| strategy | evaluated | best_us | vs exhaustive |");
     println!("|---|---|---|---|");
     let mut eval = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
-    let exhaustive = autotuner::tune(&space, &w, &mut eval, &Strategy::Exhaustive, 0).unwrap();
+    let exhaustive = TuningSession::new(&space, &w)
+        .evaluator(&mut eval)
+        .run()
+        .and_then(SessionOutcome::into_solo)
+        .unwrap();
     for strat in [
         Strategy::Exhaustive,
         Strategy::Random { budget: 100 },
@@ -78,11 +105,22 @@ fn main() {
         Strategy::Anneal { budget: 150, t0: 2.0, alpha: 0.95 },
         Strategy::SuccessiveHalving { initial: 64, eta: 2 },
     ] {
-        let out = autotuner::tune(&space, &w, &mut eval, &strat, 9).unwrap();
+        // Evaluations counted live via the Observer hook; must agree
+        // with the outcome's own counter.
+        let mut counter = EvalCounter::default();
+        let out = TuningSession::new(&space, &w)
+            .strategy(strat.clone())
+            .seed(9)
+            .observe(&mut counter)
+            .evaluator(&mut eval)
+            .run()
+            .and_then(SessionOutcome::into_solo)
+            .unwrap();
+        assert_eq!(counter.evals, out.evaluated, "{}: observer disagrees", strat.label());
         println!(
             "| {} | {} | {:.1} | {:.2}x |",
             strat.label(),
-            out.evaluated,
+            counter.evals,
             out.best_latency_us,
             out.best_latency_us / exhaustive.best_latency_us
         );
@@ -151,15 +189,18 @@ fn main() {
             SimEvaluator::new(SimGpu::mi250(), w, TRITON_AMD).with_eval_cost(EVAL_COST),
         ])
     };
-    let fleet_out = {
+    let fleet_once = || {
         let mut fleet = mk_fleet();
-        autotuner::tune_fleet(&space, &w, &mut fleet, &Strategy::Exhaustive, 3).unwrap()
+        TuningSession::new(&space, &w)
+            .seed(3)
+            .fleet(&mut fleet)
+            .run()
+            .and_then(SessionOutcome::into_fleet)
+            .unwrap()
     };
+    let fleet_out = fleet_once();
     let fleet_evals: usize = fleet_out.outcomes.iter().map(|(_, o)| o.evaluated).sum();
-    let fr = b.run("autotuner/exhaustive/fleet2-everywhere", || {
-        let mut fleet = mk_fleet();
-        autotuner::tune_fleet(&space, &w, &mut fleet, &Strategy::Exhaustive, 3).unwrap()
-    });
+    let fr = b.run("autotuner/exhaustive/fleet2-everywhere", fleet_once);
     println!(
         "\n## fleet measure-everywhere (a100+mi250), exhaustive\n\n\
          | platform evals | cfg-evals/s | distinct winners | portable worst-case |\n\

@@ -236,7 +236,7 @@ impl Evaluator for SimEvaluator {
 /// single platform; adaptive strategies additionally confirm through
 /// the single-eval path (device 0) and would rank cross-platform
 /// measurements against each other.  The per-platform argmin the paper
-/// calls for is [`crate::autotuner::tune_fleet`], which drives the
+/// calls for is [`crate::autotuner::TuningSession::fleet`], which drives the
 /// measure-everywhere merge
 /// ([`MultiDeviceEvaluator::evaluate_batch_everywhere`]) instead.
 ///
@@ -304,7 +304,8 @@ impl MultiDeviceEvaluator {
 
     /// The *distinct* device platforms in the fleet, sorted by name —
     /// the row order of [`MultiDeviceEvaluator::evaluate_batch_everywhere`]
-    /// and of `autotuner::tune_fleet`'s per-platform outcomes.
+    /// and of fleet tuning's per-platform outcomes
+    /// ([`crate::autotuner::FleetOutcome::outcomes`]).
     pub fn platforms(&self) -> Vec<String> {
         let mut names: Vec<String> = self.devices.iter().map(|d| d.name()).collect();
         names.sort();

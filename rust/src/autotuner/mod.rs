@@ -7,17 +7,28 @@
 //! the analytical platform models (simulated A100/MI250) *and* against
 //! real PJRT-CPU executions of the AOT artifacts.
 //!
+//! **The public API is [`TuningSession`]** ([`session`]): one builder
+//! composes everything that used to be five diverging free functions —
+//! strategy and seed, persistent caching ([`TuningSession::cache`]),
+//! model-guided pruning ([`TuningSession::guided`]), device sharding
+//! ([`TuningSession::devices`]), heterogeneous fleets
+//! ([`TuningSession::fleet`]), session budgets ([`Budget`]) and live
+//! progress observers ([`Observer`]).  The legacy entry points
+//! ([`tune`], [`tune_guided`], [`tune_cached`], [`tune_fleet`],
+//! [`tune_fleet_cached`]) remain as deprecated wrappers that delegate
+//! to the builder; `tests/parallel_equiv.rs` pins their outputs
+//! bit-identical to the equivalent builder spelling.
+//!
 //! Unlike the Triton built-in autotuner the paper critiques (§Q3), tuning
 //! here is (a) cached persistently via [`crate::cache`], (b) composable
 //! with background execution (`serving::executor`, feature `pjrt`), and
 //! (c) explicit about invalid configurations (they are counted, not
 //! hidden).
 //!
-//! **Throughput** (the paper's §Q4.2 time budget): every entry point
-//! ([`tune`], [`tune_guided`], [`tune_cached`]) and every [`search`]
-//! strategy takes *any* `&mut dyn Evaluator` and drives it through
-//! [`Evaluator::evaluate_batch`].  Parallel evaluators fan batches
-//! across the persistent worker pool ([`crate::util::pool`]):
+//! **Throughput** (the paper's §Q4.2 time budget): every tuning path and
+//! every [`search`] strategy takes *any* `&mut dyn Evaluator` and drives
+//! it through [`Evaluator::evaluate_batch`].  Parallel evaluators fan
+//! batches across the persistent worker pool ([`crate::util::pool`]):
 //! [`SimEvaluator`] chunks a batch over every core, and
 //! [`MultiDeviceEvaluator`] shards it across a fleet of per-device
 //! evaluators.  Results are merged in submission order, so parallel and
@@ -25,27 +36,26 @@
 //! bench --bench autotuner` reports configs/second for the scoped,
 //! pooled, and multi-device paths.
 //!
-//! **Portability** (the paper's cross-vendor thesis): [`tune_fleet`]
-//! runs one search over a *heterogeneous* fleet in measure-everywhere
-//! mode — every candidate is measured on every distinct device platform
-//! and each platform keeps its own recorder — returning a per-platform
-//! argmin ([`FleetOutcome`]) plus the portability report
-//! ([`PortableBest`]: winner overlap and the cost of shipping one
-//! config fleet-wide).  `portatune tune --fleet a100,mi250` is the CLI
-//! face of this mode.
+//! **Portability** (the paper's cross-vendor thesis):
+//! [`TuningSession::fleet`] runs one search over a *heterogeneous* fleet
+//! in measure-everywhere mode — every candidate is measured on every
+//! distinct device platform and each platform keeps its own recorder —
+//! returning a per-platform argmin ([`FleetOutcome`]) plus the
+//! portability report ([`PortableBest`]: winner overlap and the cost of
+//! shipping one config fleet-wide).  `portatune tune --fleet a100,mi250`
+//! is the CLI face of this mode.
 
 pub mod evaluators;
 pub mod search;
+pub mod session;
 
 #[cfg(feature = "pjrt")]
 pub use evaluators::PjrtEvaluator;
 pub use evaluators::{BatchMode, MultiDeviceEvaluator, SimEvaluator};
-pub use search::{EvalRecord, Strategy};
+pub use search::{EvalRecord, Observer, Strategy};
+pub use session::{Budget, SessionOutcome, TuningSession};
 
-use std::collections::HashMap;
-use std::time::Instant;
-
-use crate::cache::{entry_now, TuningCache};
+use crate::cache::TuningCache;
 use crate::config::{Config, ConfigSpace};
 use crate::platform::model::InvalidConfig;
 use crate::workload::Workload;
@@ -130,151 +140,6 @@ impl TuneOutcome {
     }
 }
 
-/// Run `strategy` over `space` for `workload` using `eval`.
-pub fn tune(
-    space: &ConfigSpace,
-    workload: &Workload,
-    eval: &mut dyn Evaluator,
-    strategy: &Strategy,
-    seed: u64,
-) -> Option<TuneOutcome> {
-    let t0 = Instant::now();
-    let mut rec = search::Recorder::default();
-    strategy.run(space, workload, eval, seed, &mut rec);
-    let (best, best_latency_us) = rec.best()?;
-    Some(TuneOutcome {
-        best,
-        best_latency_us,
-        evaluated: rec.len(),
-        invalid: rec.invalid,
-        history: rec.evals,
-        wall_seconds: t0.elapsed().as_secs_f64(),
-        from_cache: false,
-    })
-}
-
-/// Model-guided (transfer) tuning: rank the whole space with a cheap
-/// *prior* evaluator (e.g. an analytical platform model), then measure
-/// only the `top_k` most promising configurations on the expensive
-/// *target* evaluator (e.g. real PJRT execution).
-///
-/// This is the practical middle road between the paper's 24 h exhaustive
-/// budget and heuristic-only dispatch: the prior prunes the space by an
-/// order of magnitude, the target keeps the decision empirical.
-pub fn tune_guided(
-    space: &ConfigSpace,
-    workload: &Workload,
-    prior: &mut dyn Evaluator,
-    target: &mut dyn Evaluator,
-    top_k: usize,
-) -> Option<TuneOutcome> {
-    let t0 = Instant::now();
-    // Rank by prior (invalid-on-prior configs go last, not dropped: the
-    // prior is a model, not ground truth).  The ranking pass streams
-    // through the batch API so a parallel prior uses every core.
-    let configs: Vec<Config> = space.enumerate(workload).collect();
-    let mut priors: Vec<Option<f64>> = Vec::with_capacity(configs.len());
-    for chunk in configs.chunks(search::EVAL_BATCH) {
-        priors.extend(prior.evaluate_batch(chunk, 1.0).into_iter().map(|r| r.ok()));
-    }
-    let mut ranked: Vec<(Config, Option<f64>)> = configs.into_iter().zip(priors).collect();
-
-    // Total order: prior-score ties (common when the prior ignores a
-    // parameter) break on the config fingerprint, so the measured
-    // top-k set is pinned regardless of `select_nth_unstable_by`'s
-    // unspecified ordering among equals.
-    fn by_prior(a: &(Config, Option<f64>), b: &(Config, Option<f64>)) -> std::cmp::Ordering {
-        let primary = match (a.1, b.1) {
-            (Some(x), Some(y)) => x.total_cmp(&y),
-            (Some(_), None) => std::cmp::Ordering::Less,
-            (None, Some(_)) => std::cmp::Ordering::Greater,
-            (None, None) => std::cmp::Ordering::Equal,
-        };
-        primary.then_with(|| a.0.fingerprint().cmp(&b.0.fingerprint()))
-    }
-
-    // Only top_k configs are ever measured, so an O(n) partial selection
-    // replaces the old full O(n log n) sort of the entire ranked space;
-    // only the k survivors are sorted (for measurement order).
-    let k = top_k.max(1).min(ranked.len());
-    if k < ranked.len() {
-        ranked.select_nth_unstable_by(k - 1, by_prior);
-        ranked.truncate(k);
-    }
-    ranked.sort_by(by_prior);
-
-    // Measure the survivors through a Recorder: same bookkeeping
-    // (fingerprint history, invalid count, running best) as every
-    // search strategy.
-    let mut rec = search::Recorder::default();
-    for (cfg, _) in ranked {
-        rec.eval(target, &cfg, 1.0);
-    }
-    let (best, best_latency_us) = rec.best()?;
-    Some(TuneOutcome {
-        best,
-        best_latency_us,
-        evaluated: rec.len(),
-        invalid: rec.invalid,
-        history: rec.evals,
-        wall_seconds: t0.elapsed().as_secs_f64(),
-        from_cache: false,
-    })
-}
-
-/// Cache-aware tuning (Q4.3): return a reusable cached result when the
-/// platform/space fingerprints match, otherwise tune and persist.
-///
-/// The space component of the cache key is
-/// [`ConfigSpace::fingerprint_key`] — a stable FNV-1a digest of the
-/// space definition (name, parameters, choices, constraint *names*) —
-/// so edits to parameters or choices invalidate old entries, not just
-/// cardinality changes.  Constraint *bodies* are closures and cannot be
-/// hashed, so a hit is additionally re-validated with
-/// [`ConfigSpace::contains`]; a cached winner the current space rejects
-/// falls through to a fresh tune instead of being served.
-pub fn tune_cached(
-    cache: &mut TuningCache,
-    space: &ConfigSpace,
-    workload: &Workload,
-    eval: &mut dyn Evaluator,
-    strategy: &Strategy,
-    seed: u64,
-) -> Option<TuneOutcome> {
-    let platform = eval.name();
-    let space_fp = space.fingerprint_key();
-    if let Some(hit) = cache.get(workload, &platform, &space_fp) {
-        if let Some(best) = hit.config() {
-            if space.contains(&best, workload) {
-                return Some(TuneOutcome {
-                    best,
-                    best_latency_us: hit.latency_us,
-                    evaluated: 0,
-                    invalid: hit.invalid,
-                    history: Vec::new(),
-                    wall_seconds: 0.0,
-                    from_cache: true,
-                });
-            }
-        }
-        // Unparseable or no-longer-valid entry: re-tune and overwrite.
-    }
-    let outcome = tune(space, workload, eval, strategy, seed)?;
-    cache.put(
-        workload,
-        entry_now(
-            &outcome.best,
-            outcome.best_latency_us,
-            outcome.evaluated,
-            outcome.invalid,
-            &platform,
-            &space_fp,
-            outcome.wall_seconds,
-        ),
-    );
-    Some(outcome)
-}
-
 /// Outcome of a fleet ("measure everywhere") tuning run: one tuning
 /// result per *distinct platform* in the fleet, plus the paper's
 /// cross-vendor portability analysis.
@@ -298,7 +163,10 @@ pub struct FleetOutcome {
     pub portable: Option<PortableBest>,
     /// Wall-clock duration of the whole fleet run, seconds.
     pub wall_seconds: f64,
-    /// True when every platform outcome was served from the cache.
+    /// True when every platform outcome was served from the cache.  A
+    /// *partial* cache hit (adaptive strategies reuse cached platforms
+    /// and re-tune the rest) reports `false` here, with the per-platform
+    /// [`TuneOutcome::from_cache`] flags telling the two groups apart.
     pub from_cache: bool,
 }
 
@@ -336,24 +204,79 @@ pub struct PortableBest {
     pub worst_slowdown: f64,
 }
 
+// ---------------------------------------------------------------------
+// Legacy entry points — thin wrappers over `TuningSession`, kept for
+// source compatibility.  Their outputs are pinned bit-identical to the
+// builder spelling by `tests/parallel_equiv.rs`; no internal code calls
+// them (enforced by the `-D deprecated` CI check).
+// ---------------------------------------------------------------------
+
+/// Run `strategy` over `space` for `workload` using `eval`.
+#[deprecated(
+    note = "use TuningSession::new(space, workload).strategy(..).seed(..).evaluator(eval).run()"
+)]
+pub fn tune(
+    space: &ConfigSpace,
+    workload: &Workload,
+    eval: &mut dyn Evaluator,
+    strategy: &Strategy,
+    seed: u64,
+) -> Option<TuneOutcome> {
+    TuningSession::new(space, workload)
+        .strategy(strategy.clone())
+        .seed(seed)
+        .evaluator(eval)
+        .run()
+        .and_then(SessionOutcome::into_solo)
+}
+
+/// Model-guided (transfer) tuning: rank the whole space with a cheap
+/// *prior* evaluator, then measure only the `top_k` most promising
+/// configurations on the expensive *target* evaluator.
+#[deprecated(
+    note = "use TuningSession::new(space, workload).guided(prior, top_k).evaluator(target).run()"
+)]
+pub fn tune_guided(
+    space: &ConfigSpace,
+    workload: &Workload,
+    prior: &mut dyn Evaluator,
+    target: &mut dyn Evaluator,
+    top_k: usize,
+) -> Option<TuneOutcome> {
+    TuningSession::new(space, workload)
+        .guided(prior, top_k)
+        .evaluator(target)
+        .run()
+        .and_then(SessionOutcome::into_solo)
+}
+
+/// Cache-aware tuning (Q4.3): return a reusable cached result when the
+/// platform/space fingerprints match, otherwise tune and persist.
+#[deprecated(
+    note = "use TuningSession::new(space, workload).strategy(..).seed(..).cache(cache).evaluator(eval).run()"
+)]
+pub fn tune_cached(
+    cache: &mut TuningCache,
+    space: &ConfigSpace,
+    workload: &Workload,
+    eval: &mut dyn Evaluator,
+    strategy: &Strategy,
+    seed: u64,
+) -> Option<TuneOutcome> {
+    TuningSession::new(space, workload)
+        .strategy(strategy.clone())
+        .seed(seed)
+        .cache(cache)
+        .evaluator(eval)
+        .run()
+        .and_then(SessionOutcome::into_solo)
+}
+
 /// Tune the shared `space` for every distinct platform of `fleet` at
-/// once — the "A Few Fit Most" regime: each evaluated configuration is
-/// measured on **every** platform (via
-/// [`MultiDeviceEvaluator::evaluate_batch_everywhere`]) and each
-/// platform keeps its own [`search::Recorder`], so the result is a
-/// per-platform argmin plus the portability report, for the cost of one
-/// pass over the space.
-///
-/// Per-platform outcomes are **bit-identical** to tuning each platform
-/// alone with a sequential evaluator (pinned by
-/// `tests/parallel_equiv.rs`): exhaustive and random searches share one
-/// trajectory (their evaluation order never depends on measured
-/// latencies), while the adaptive strategies (hill climb, annealing,
-/// successive halving) are run once per platform — their trajectories
-/// genuinely diverge per platform, which is exactly the per-platform
-/// argmin the regime asks for.
-///
-/// Returns `None` when any platform found no valid configuration.
+/// once (measure everywhere, per-platform argmin + portability report).
+#[deprecated(
+    note = "use TuningSession::new(space, workload).strategy(..).seed(..).fleet(fleet).run()"
+)]
 pub fn tune_fleet(
     space: &ConfigSpace,
     workload: &Workload,
@@ -361,201 +284,21 @@ pub fn tune_fleet(
     strategy: &Strategy,
     seed: u64,
 ) -> Option<FleetOutcome> {
-    let t0 = Instant::now();
-    let platforms = fleet.platforms();
-    let shared_trajectory = matches!(strategy, Strategy::Exhaustive | Strategy::Random { .. });
-    // Only the first recorder captures configs, and only on the
-    // shared-trajectory path (the adaptive analysis works from the
-    // winners, not the capture map): every portable-best candidate is
-    // by definition evaluated on *every* platform — including platform
-    // 0 — so one fingerprint→Config map carries the whole portability
-    // analysis, instead of P identical maps cloning every config once
-    // per platform.
-    let mut recs: Vec<search::Recorder> = platforms
-        .iter()
-        .enumerate()
-        .map(|(i, _)| {
-            if i == 0 && shared_trajectory {
-                search::Recorder::capturing()
-            } else {
-                search::Recorder::default()
-            }
-        })
-        .collect();
-    // Wall-clock attributed to each platform: measured per platform on
-    // the adaptive path, an even share of the shared pass otherwise
-    // (the platforms run concurrently there, so the total is not P
-    // times anyone's cost).
-    let mut per_platform_secs: Vec<f64> = vec![0.0; platforms.len()];
-    if shared_trajectory {
-        search::run_fleet_shared(space, workload, fleet, strategy, seed, &mut recs);
-        let share = t0.elapsed().as_secs_f64() / platforms.len().max(1) as f64;
-        per_platform_secs.fill(share);
-    } else {
-        for (i, (platform, rec)) in platforms.iter().zip(recs.iter_mut()).enumerate() {
-            // Pool mode: the per-platform search still fans its rung
-            // batches across the worker pool — bit-identical to
-            // sequential (the engine contract pinned by
-            // tests/parallel_equiv.rs), just not one-config-per-core-
-            // tick slow.
-            let mut eval = fleet
-                .platform_evaluator(platform)
-                .expect("platform comes from the fleet")
-                .pooled();
-            let t = Instant::now();
-            strategy.run(space, workload, &mut eval, seed, rec);
-            per_platform_secs[i] = t.elapsed().as_secs_f64();
-            fleet.credit_platform(platform, rec.len(), per_platform_secs[i] * 1e6);
-        }
-    }
-    let wall_seconds = t0.elapsed().as_secs_f64();
-    let mut outcomes: Vec<(String, TuneOutcome)> = Vec::with_capacity(platforms.len());
-    for ((platform, rec), secs) in platforms.iter().zip(&recs).zip(&per_platform_secs) {
-        let (best, best_latency_us) = rec.best()?;
-        outcomes.push((
-            platform.clone(),
-            TuneOutcome {
-                best,
-                best_latency_us,
-                evaluated: rec.len(),
-                invalid: rec.invalid,
-                history: rec.evals.clone(),
-                wall_seconds: *secs,
-                from_cache: false,
-            },
-        ));
-    }
-    let portable = if shared_trajectory {
-        portability(&outcomes, &recs)
-    } else {
-        // The adaptive searches measured *different* configs per
-        // platform, so the recorder logs rarely intersect; the honest
-        // portability analysis cross-measures the per-platform winners
-        // on every platform.  This happens outside the recorders, so
-        // the per-platform outcomes stay bit-identical to solo tuning.
-        portable_from_winners(fleet, &outcomes)
-    };
-    Some(FleetOutcome {
-        distinct_winners: distinct_winner_count(&outcomes),
-        outcomes,
-        portable,
-        wall_seconds,
-        from_cache: false,
-    })
-}
-
-/// Number of distinct winning configurations across platform outcomes.
-fn distinct_winner_count(outcomes: &[(String, TuneOutcome)]) -> usize {
-    let mut winners: Vec<u64> = outcomes.iter().map(|(_, o)| o.best.fingerprint()).collect();
-    winners.sort_unstable();
-    winners.dedup();
-    winners.len()
-}
-
-/// The one portable-best selection rule, shared by both analyses:
-/// among `candidates` (fingerprint + per-platform full-fidelity
-/// latencies, aligned with `outcomes`), minimize the worst-case
-/// slowdown versus each platform's own best; ties break on the lower
-/// fingerprint so the selection is deterministic regardless of
-/// candidate order.  Returns `(fingerprint, latencies, slowdown,
-/// worst_slowdown)`.
-fn pick_portable(
-    candidates: impl IntoIterator<Item = (u64, Vec<f64>)>,
-    outcomes: &[(String, TuneOutcome)],
-) -> Option<(u64, Vec<f64>, Vec<f64>, f64)> {
-    let mut best: Option<(f64, u64, Vec<f64>)> = None;
-    for (fp, lats) in candidates {
-        debug_assert_eq!(lats.len(), outcomes.len(), "candidate not measured on every platform");
-        let worst = lats
-            .iter()
-            .zip(outcomes)
-            .map(|(l, (_, o))| l / o.best_latency_us)
-            .fold(0.0f64, f64::max);
-        let better = match &best {
-            None => true,
-            Some((w, f, _)) => worst < *w || (worst == *w && fp < *f),
-        };
-        if better {
-            best = Some((worst, fp, lats));
-        }
-    }
-    best.map(|(worst, fp, lats)| {
-        let slowdown: Vec<f64> = lats
-            .iter()
-            .zip(outcomes)
-            .map(|(l, (_, o))| l / o.best_latency_us)
-            .collect();
-        (fp, lats, slowdown, worst)
-    })
-}
-
-/// Portability analysis for the adaptive strategies: measure each
-/// platform's winner on *every* platform (one measure-everywhere batch)
-/// and pick via [`pick_portable`] among those valid everywhere.
-///
-/// Unlike the shared-trajectory analysis, a budgeted search's portable
-/// slowdown can dip below 1.0 on some platform: another platform's
-/// winner may genuinely beat the local incumbent the search settled on.
-fn portable_from_winners(
-    fleet: &mut MultiDeviceEvaluator,
-    outcomes: &[(String, TuneOutcome)],
-) -> Option<PortableBest> {
-    let mut winners: Vec<Config> = Vec::new();
-    for (_, o) in outcomes {
-        if !winners.iter().any(|c| c.fingerprint() == o.best.fingerprint()) {
-            winners.push(o.best.clone());
-        }
-    }
-    winners.sort_by_key(Config::fingerprint);
-    let results = fleet.evaluate_batch_everywhere(&winners, 1.0);
-    let candidates = winners.iter().enumerate().filter_map(|(i, cfg)| {
-        let lats: Option<Vec<f64>> =
-            results.iter().map(|per_platform| per_platform[i].as_ref().ok().copied()).collect();
-        lats.map(|l| (cfg.fingerprint(), l))
-    });
-    pick_portable(candidates, outcomes).map(|(fp, lats, slowdown, worst)| PortableBest {
-        config: winners
-            .iter()
-            .find(|c| c.fingerprint() == fp)
-            .expect("candidate came from winners")
-            .clone(),
-        latency_us: lats,
-        slowdown,
-        worst_slowdown: worst,
-    })
-}
-
-/// Portability analysis for the shared-trajectory strategies: every
-/// recorder logged the same config sequence, so the candidate set is
-/// every config measured valid at full fidelity on *every* platform,
-/// selected via [`pick_portable`].
-fn portability(
-    outcomes: &[(String, TuneOutcome)],
-    recs: &[search::Recorder],
-) -> Option<PortableBest> {
-    let maps: Vec<HashMap<u64, f64>> =
-        recs.iter().map(|r| r.full_fidelity_latencies()).collect();
-    let first = maps.first()?;
-    let candidates = first.keys().filter_map(|&fp| {
-        let lats: Option<Vec<f64>> = maps.iter().map(|m| m.get(&fp).copied()).collect();
-        lats.map(|l| (fp, l))
-    });
-    let (fp, lats, slowdown, worst) = pick_portable(candidates, outcomes)?;
-    let config = recs.iter().find_map(|r| r.captured_config(fp))?.clone();
-    Some(PortableBest { config, latency_us: lats, slowdown, worst_slowdown: worst })
+    TuningSession::new(space, workload)
+        .strategy(strategy.clone())
+        .seed(seed)
+        .fleet(fleet)
+        .run()
+        .and_then(SessionOutcome::into_fleet)
 }
 
 /// Cache-aware [`tune_fleet`]: every platform's winner is persisted
-/// under **that platform's own cache key** (`workload × platform ×
-/// space`), so a later single-platform [`tune_cached`] run — or a
-/// serving process pinned to one device model — reuses fleet results
-/// directly.  Conversely, the fleet run is served from the cache only
-/// when *every* platform hits: a partial hit cannot shortcut the shared
-/// measure-everywhere pass, and for uniformity the adaptive strategies
-/// currently re-tune all platforms too (skipping cached platforms on
-/// their independent per-platform searches is a queued ROADMAP
-/// follow-up).  Cached fleet outcomes carry no evaluation history, so
-/// [`FleetOutcome::portable`] is `None` on that path.
+/// under **that platform's own cache key**; served from cache when every
+/// platform hits, with partial per-platform reuse for the adaptive
+/// strategies (see [`TuningSession::fleet`]).
+#[deprecated(
+    note = "use TuningSession::new(space, workload).strategy(..).seed(..).cache(cache).fleet(fleet).run()"
+)]
 pub fn tune_fleet_cached(
     cache: &mut TuningCache,
     space: &ConfigSpace,
@@ -564,63 +307,72 @@ pub fn tune_fleet_cached(
     strategy: &Strategy,
     seed: u64,
 ) -> Option<FleetOutcome> {
-    let space_fp = space.fingerprint_key();
-    let platforms = fleet.platforms();
-    let mut hits: Vec<(String, TuneOutcome)> = Vec::with_capacity(platforms.len());
-    for platform in &platforms {
-        let hit = cache.get(workload, platform, &space_fp).and_then(|h| {
-            let best = h.config()?;
-            space.contains(&best, workload).then(|| TuneOutcome {
-                best,
-                best_latency_us: h.latency_us,
-                evaluated: 0,
-                invalid: h.invalid,
-                history: Vec::new(),
-                wall_seconds: 0.0,
-                from_cache: true,
-            })
-        });
-        match hit {
-            Some(o) => hits.push((platform.clone(), o)),
-            None => {
-                hits.clear();
-                break;
-            }
-        }
-    }
-    if !platforms.is_empty() && hits.len() == platforms.len() {
-        return Some(FleetOutcome {
-            distinct_winners: distinct_winner_count(&hits),
-            outcomes: hits,
-            portable: None,
-            wall_seconds: 0.0,
-            from_cache: true,
-        });
-    }
-    let outcome = tune_fleet(space, workload, fleet, strategy, seed)?;
-    for (platform, o) in &outcome.outcomes {
-        cache.put(
-            workload,
-            entry_now(
-                &o.best,
-                o.best_latency_us,
-                o.evaluated,
-                o.invalid,
-                platform,
-                &space_fp,
-                o.wall_seconds,
-            ),
-        );
-    }
-    Some(outcome)
+    TuningSession::new(space, workload)
+        .strategy(strategy.clone())
+        .seed(seed)
+        .cache(cache)
+        .fleet(fleet)
+        .run()
+        .and_then(SessionOutcome::into_fleet)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cache::entry_now;
     use crate::config::spaces;
     use crate::kernels::baselines::HAND_TUNED;
     use crate::platform::SimGpu;
+
+    /// Builder shorthand for the plain solo tune used throughout.
+    fn tune_b(
+        space: &ConfigSpace,
+        w: &Workload,
+        eval: &mut dyn Evaluator,
+        strategy: &Strategy,
+        seed: u64,
+    ) -> Option<TuneOutcome> {
+        TuningSession::new(space, w)
+            .strategy(strategy.clone())
+            .seed(seed)
+            .evaluator(eval)
+            .run()
+            .and_then(SessionOutcome::into_solo)
+    }
+
+    /// Builder shorthand for the cached solo tune.
+    fn tune_cached_b(
+        cache: &mut TuningCache,
+        space: &ConfigSpace,
+        w: &Workload,
+        eval: &mut dyn Evaluator,
+        strategy: &Strategy,
+        seed: u64,
+    ) -> Option<TuneOutcome> {
+        TuningSession::new(space, w)
+            .strategy(strategy.clone())
+            .seed(seed)
+            .cache(cache)
+            .evaluator(eval)
+            .run()
+            .and_then(SessionOutcome::into_solo)
+    }
+
+    /// Builder shorthand for the fleet tune.
+    fn tune_fleet_b(
+        space: &ConfigSpace,
+        w: &Workload,
+        fleet: &mut MultiDeviceEvaluator,
+        strategy: &Strategy,
+        seed: u64,
+    ) -> Option<FleetOutcome> {
+        TuningSession::new(space, w)
+            .strategy(strategy.clone())
+            .seed(seed)
+            .fleet(fleet)
+            .run()
+            .and_then(SessionOutcome::into_fleet)
+    }
 
     fn setup() -> (ConfigSpace, Workload, SimEvaluator) {
         let w = Workload::llama3_attention(8, 1024);
@@ -632,7 +384,7 @@ mod tests {
     #[test]
     fn exhaustive_finds_global_optimum() {
         let (space, w, mut eval) = setup();
-        let out = tune(&space, &w, &mut eval, &Strategy::Exhaustive, 0).unwrap();
+        let out = tune_b(&space, &w, &mut eval, &Strategy::Exhaustive, 0).unwrap();
         // Cross-check against direct enumeration.
         let gpu = SimGpu::a100();
         let best_direct = space
@@ -646,10 +398,10 @@ mod tests {
     #[test]
     fn random_is_reproducible_per_seed() {
         let (space, w, mut eval) = setup();
-        let a = tune(&space, &w, &mut eval, &Strategy::Random { budget: 50 }, 7).unwrap();
-        let b = tune(&space, &w, &mut eval, &Strategy::Random { budget: 50 }, 7).unwrap();
+        let a = tune_b(&space, &w, &mut eval, &Strategy::Random { budget: 50 }, 7).unwrap();
+        let b = tune_b(&space, &w, &mut eval, &Strategy::Random { budget: 50 }, 7).unwrap();
         assert_eq!(a.best, b.best);
-        let c = tune(&space, &w, &mut eval, &Strategy::Random { budget: 50 }, 8).unwrap();
+        let c = tune_b(&space, &w, &mut eval, &Strategy::Random { budget: 50 }, 8).unwrap();
         // different seed may find a different best (not asserted), but
         // must still return a valid config
         assert!(space.contains(&c.best, &w));
@@ -665,7 +417,7 @@ mod tests {
             Strategy::Anneal { budget: 150, t0: 2.0, alpha: 0.95 },
             Strategy::SuccessiveHalving { initial: 32, eta: 2 },
         ] {
-            let out = tune(&space, &w, &mut eval, &strat, 3)
+            let out = tune_b(&space, &w, &mut eval, &strat, 3)
                 .unwrap_or_else(|| panic!("{strat:?} found nothing"));
             assert!(space.contains(&out.best, &w), "{strat:?} returned invalid config");
             assert!(out.best_latency_us > 0.0);
@@ -675,8 +427,10 @@ mod tests {
     #[test]
     fn local_search_competitive_with_exhaustive() {
         let (space, w, mut eval) = setup();
-        let ex = tune(&space, &w, &mut eval, &Strategy::Exhaustive, 0).unwrap();
-        let hc = tune(&space, &w, &mut eval, &Strategy::HillClimb { restarts: 5, budget: 400 }, 11).unwrap();
+        let ex = tune_b(&space, &w, &mut eval, &Strategy::Exhaustive, 0).unwrap();
+        let hc =
+            tune_b(&space, &w, &mut eval, &Strategy::HillClimb { restarts: 5, budget: 400 }, 11)
+                .unwrap();
         assert!(
             hc.best_latency_us <= ex.best_latency_us * 1.3,
             "hill climb {:.1}us vs exhaustive {:.1}us",
@@ -690,9 +444,13 @@ mod tests {
     fn tune_cached_hits_second_time() {
         let (space, w, mut eval) = setup();
         let mut cache = TuningCache::ephemeral();
-        let first = tune_cached(&mut cache, &space, &w, &mut eval, &Strategy::Random { budget: 30 }, 1).unwrap();
+        let first =
+            tune_cached_b(&mut cache, &space, &w, &mut eval, &Strategy::Random { budget: 30 }, 1)
+                .unwrap();
         assert!(!first.from_cache);
-        let second = tune_cached(&mut cache, &space, &w, &mut eval, &Strategy::Random { budget: 30 }, 1).unwrap();
+        let second =
+            tune_cached_b(&mut cache, &space, &w, &mut eval, &Strategy::Random { budget: 30 }, 1)
+                .unwrap();
         assert!(second.from_cache);
         assert_eq!(second.best, first.best);
         assert_eq!(second.evaluated, 0);
@@ -717,9 +475,10 @@ mod tests {
             .param("num_warps", &[2, 4])
             .param("num_stages", &[1, 2]);
         assert_eq!(s1.cardinality(), s2.cardinality());
-        let first = tune_cached(&mut cache, &s1, &w, &mut eval, &Strategy::Exhaustive, 0).unwrap();
+        let first = tune_cached_b(&mut cache, &s1, &w, &mut eval, &Strategy::Exhaustive, 0).unwrap();
         assert!(!first.from_cache);
-        let second = tune_cached(&mut cache, &s2, &w, &mut eval, &Strategy::Exhaustive, 0).unwrap();
+        let second =
+            tune_cached_b(&mut cache, &s2, &w, &mut eval, &Strategy::Exhaustive, 0).unwrap();
         assert!(!second.from_cache, "changed choices must invalidate the cache");
         assert_eq!(cache.len(), 2);
     }
@@ -749,7 +508,7 @@ mod tests {
             &w,
             entry_now(&stale, 1.0, 10, 0, &eval.name(), &space.fingerprint_key(), 0.1),
         );
-        let out = tune_cached(&mut cache, &space, &w, &mut eval, &Strategy::Exhaustive, 0).unwrap();
+        let out = tune_cached_b(&mut cache, &space, &w, &mut eval, &Strategy::Exhaustive, 0).unwrap();
         assert!(!out.from_cache, "a no-longer-valid cached winner must not be served");
         assert!(space.contains(&out.best, &w));
     }
@@ -762,8 +521,13 @@ mod tests {
         let mut prior = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
         let mut target =
             SimEvaluator::new(SimGpu::a100(), w, crate::kernels::baselines::TRITON_NVIDIA);
-        let guided = tune_guided(&space, &w, &mut prior, &mut target, 20).unwrap();
-        let exhaustive = tune(&space, &w, &mut target, &Strategy::Exhaustive, 0).unwrap();
+        let guided = TuningSession::new(&space, &w)
+            .guided(&mut prior, 20)
+            .evaluator(&mut target)
+            .run()
+            .and_then(SessionOutcome::into_solo)
+            .unwrap();
+        let exhaustive = tune_b(&space, &w, &mut target, &Strategy::Exhaustive, 0).unwrap();
         assert!(guided.evaluated <= 20);
         assert!(
             guided.best_latency_us <= exhaustive.best_latency_us * 1.10,
@@ -786,7 +550,10 @@ mod tests {
             w,
             crate::kernels::baselines::TRITON_AMD,
         );
-        let guided = tune_guided(&space, &w, &mut prior, &mut target, 60);
+        let guided = TuningSession::new(&space, &w)
+            .guided(&mut prior, 60)
+            .evaluator(&mut target)
+            .run();
         assert!(guided.is_some());
     }
 
@@ -796,14 +563,19 @@ mod tests {
         let mut prior = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
         let mut target = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
         let n_valid = space.enumerate(&w).count();
-        let guided = tune_guided(&space, &w, &mut prior, &mut target, n_valid + 100).unwrap();
+        let guided = TuningSession::new(&space, &w)
+            .guided(&mut prior, n_valid + 100)
+            .evaluator(&mut target)
+            .run()
+            .and_then(SessionOutcome::into_solo)
+            .unwrap();
         assert_eq!(guided.evaluated, n_valid);
     }
 
     #[test]
     fn invalid_configs_are_counted_not_fatal() {
         let (space, w, mut eval) = setup();
-        let out = tune(&space, &w, &mut eval, &Strategy::Exhaustive, 0).unwrap();
+        let out = tune_b(&space, &w, &mut eval, &Strategy::Exhaustive, 0).unwrap();
         // The A100 rejects big-staging configs (smem) — some must appear.
         assert!(out.invalid > 0);
         assert_eq!(out.evaluated, out.history.len());
@@ -812,7 +584,7 @@ mod tests {
     #[test]
     fn spread_matches_paper_scale() {
         let (space, w, mut eval) = setup();
-        let out = tune(&space, &w, &mut eval, &Strategy::Exhaustive, 0).unwrap();
+        let out = tune_b(&space, &w, &mut eval, &Strategy::Exhaustive, 0).unwrap();
         assert!(out.spread().unwrap() > 5.0);
     }
 
@@ -850,11 +622,11 @@ mod tests {
         let w = Workload::llama3_attention(8, 1024);
         let space = spaces::attention_sim_space();
         let mut fleet = fleet_a100_mi250();
-        let out = tune_fleet(&space, &w, &mut fleet, &Strategy::Exhaustive, 0).unwrap();
+        let out = tune_fleet_b(&space, &w, &mut fleet, &Strategy::Exhaustive, 0).unwrap();
         assert_eq!(out.outcomes.len(), 2);
         for (platform, got) in &out.outcomes {
             let mut solo = fleet.platform_evaluator(platform).unwrap();
-            let want = tune(&space, &w, &mut solo, &Strategy::Exhaustive, 0).unwrap();
+            let want = tune_b(&space, &w, &mut solo, &Strategy::Exhaustive, 0).unwrap();
             assert_eq!(got.best, want.best, "{platform}: winner differs from solo tune");
             assert_eq!(
                 got.best_latency_us.to_bits(),
@@ -871,7 +643,7 @@ mod tests {
         let w = Workload::llama3_attention(8, 1024);
         let space = spaces::attention_sim_space();
         let mut fleet = fleet_a100_mi250();
-        let out = tune_fleet(&space, &w, &mut fleet, &Strategy::Exhaustive, 0).unwrap();
+        let out = tune_fleet_b(&space, &w, &mut fleet, &Strategy::Exhaustive, 0).unwrap();
         assert!(out.distinct_winners >= 1 && out.distinct_winners <= 2);
         let pb = out.portable.as_ref().expect("exhaustive fleet must find a portable config");
         // The portable config is valid (in-space) and its slowdowns are
@@ -899,7 +671,7 @@ mod tests {
         let w = Workload::llama3_attention(8, 1024);
         let space = spaces::attention_sim_space();
         let mut fleet = fleet_a100_mi250();
-        let out = tune_fleet(&space, &w, &mut fleet, &Strategy::Exhaustive, 0).unwrap();
+        let out = tune_fleet_b(&space, &w, &mut fleet, &Strategy::Exhaustive, 0).unwrap();
         let per_platform: usize = out.outcomes.iter().map(|(_, o)| o.evaluated).sum();
         let replicated: usize = fleet.utilization().iter().map(|u| u.replicated).sum();
         assert_eq!(replicated, per_platform, "every config measured on every platform");
@@ -910,7 +682,7 @@ mod tests {
         let w = Workload::llama3_attention(8, 1024);
         let space = spaces::attention_sim_space();
         let mut fleet = fleet_a100_mi250();
-        let out = tune_fleet(
+        let out = tune_fleet_b(
             &space,
             &w,
             &mut fleet,
@@ -920,9 +692,14 @@ mod tests {
         .unwrap();
         for (platform, got) in &out.outcomes {
             let mut solo = fleet.platform_evaluator(platform).unwrap();
-            let want =
-                tune(&space, &w, &mut solo, &Strategy::SuccessiveHalving { initial: 32, eta: 2 }, 7)
-                    .unwrap();
+            let want = tune_b(
+                &space,
+                &w,
+                &mut solo,
+                &Strategy::SuccessiveHalving { initial: 32, eta: 2 },
+                7,
+            )
+            .unwrap();
             assert_eq!(got.best, want.best, "{platform}: SHA winner differs from solo");
             assert_eq!(got.best_latency_us.to_bits(), want.best_latency_us.to_bits());
         }
@@ -948,23 +725,29 @@ mod tests {
         let space = spaces::attention_sim_space();
         let mut cache = TuningCache::ephemeral();
         let mut fleet = fleet_a100_mi250();
-        let first =
-            tune_fleet_cached(&mut cache, &space, &w, &mut fleet, &Strategy::Exhaustive, 0)
-                .unwrap();
+        let first = TuningSession::new(&space, &w)
+            .cache(&mut cache)
+            .fleet(&mut fleet)
+            .run()
+            .and_then(SessionOutcome::into_fleet)
+            .unwrap();
         assert!(!first.from_cache);
         assert_eq!(cache.len(), 2, "one entry per distinct platform");
         // A later SINGLE-platform cached tune hits the fleet's entry.
         for (platform, o) in &first.outcomes {
             let mut solo = fleet.platform_evaluator(platform).unwrap();
             let hit =
-                tune_cached(&mut cache, &space, &w, &mut solo, &Strategy::Exhaustive, 0).unwrap();
+                tune_cached_b(&mut cache, &space, &w, &mut solo, &Strategy::Exhaustive, 0).unwrap();
             assert!(hit.from_cache, "{platform}: solo tune must reuse the fleet entry");
             assert_eq!(hit.best, o.best);
         }
         // And the fleet run itself hits when every platform is cached.
-        let second =
-            tune_fleet_cached(&mut cache, &space, &w, &mut fleet, &Strategy::Exhaustive, 0)
-                .unwrap();
+        let second = TuningSession::new(&space, &w)
+            .cache(&mut cache)
+            .fleet(&mut fleet)
+            .run()
+            .and_then(SessionOutcome::into_fleet)
+            .unwrap();
         assert!(second.from_cache);
         assert_eq!(second.distinct_winners, first.distinct_winners);
         for ((p1, o1), (p2, o2)) in first.outcomes.iter().zip(&second.outcomes) {
@@ -972,5 +755,19 @@ mod tests {
             assert_eq!(o1.best, o2.best);
             assert_eq!(o2.evaluated, 0);
         }
+    }
+
+    /// The wrappers really delegate: legacy spelling == builder
+    /// spelling, bit for bit (the full per-strategy matrix lives in
+    /// tests/parallel_equiv.rs; this is the in-crate smoke check).
+    #[test]
+    #[allow(deprecated)]
+    fn legacy_wrappers_delegate_to_the_builder() {
+        let (space, w, mut eval) = setup();
+        let legacy = tune(&space, &w, &mut eval, &Strategy::Random { budget: 40 }, 5).unwrap();
+        let builder = tune_b(&space, &w, &mut eval, &Strategy::Random { budget: 40 }, 5).unwrap();
+        assert_eq!(legacy.best, builder.best);
+        assert_eq!(legacy.best_latency_us.to_bits(), builder.best_latency_us.to_bits());
+        assert_eq!(legacy.history, builder.history);
     }
 }

@@ -31,8 +31,20 @@
 //! reproducibility — bit-identical to sequential evaluation.  The
 //! inherently sequential strategies (hill climb, annealing: every step
 //! depends on the previous measurement) stay on the one-at-a-time path.
+//!
+//! **Observation and budgets** (the `TuningSession` plumbing): the
+//! recorder is also where [`Observer`]s are threaded through — every
+//! strategy reports progress (`on_eval` / `on_new_best` / `on_rung`)
+//! simply by recording, so the CLI can stream a live tuning log and the
+//! bench can count evaluations without re-parsing the history — and
+//! where session-level budgets ([`crate::autotuner::Budget`]) are
+//! enforced: an exhausted recorder refuses further evaluations (and
+//! truncates in-flight batches deterministically), so every strategy
+//! honors the cap without owning budget logic.  A recorder with no
+//! budget behaves bit-identically to the pre-budget engine.
 
 use std::collections::{HashMap, HashSet};
+use std::time::Instant;
 
 use super::evaluators::MultiDeviceEvaluator;
 use super::Evaluator;
@@ -91,6 +103,17 @@ pub enum Strategy {
 }
 
 impl Strategy {
+    /// True for the strategies whose evaluation *order* is a pure
+    /// function of (space, workload, seed) — never of measured
+    /// latencies — so one trajectory can be shared across a whole
+    /// fleet (exhaustive enumeration, seeded random sampling).  The
+    /// adaptive strategies branch on latencies and must run once per
+    /// platform.  This predicate is the single source of truth for the
+    /// fleet-path routing; keep any new strategy's classification here.
+    pub fn shared_trajectory(&self) -> bool {
+        matches!(self, Strategy::Exhaustive | Strategy::Random { .. })
+    }
+
     /// Compact human-readable identifier (used in reports and caches).
     pub fn label(&self) -> String {
         match self {
@@ -125,6 +148,43 @@ impl EvalRecord {
     }
 }
 
+/// Live view into a tuning run, threaded through [`Recorder`].
+///
+/// Observers are registered on a `TuningSession`
+/// ([`crate::autotuner::TuningSession::observe`]) and receive events
+/// from whichever strategy the session runs — the CLI streams progress
+/// lines from them, the bench counts evaluations without re-parsing
+/// [`crate::autotuner::TuneOutcome::history`].  All methods have
+/// default no-op bodies, so an observer implements only what it needs.
+///
+/// Observers see events but cannot influence the search: every method
+/// takes the event by reference and returns nothing, so an observed run
+/// stays bit-identical to an unobserved one (pinned by
+/// `tests/parallel_equiv.rs`).
+pub trait Observer {
+    /// One evaluation was folded into the log (valid or invalid).
+    fn on_eval(&mut self, record: &EvalRecord) {
+        let _ = record;
+    }
+
+    /// A new full-fidelity running best was found.
+    fn on_new_best(&mut self, config: &Config, latency_us: f64) {
+        let _ = (config, latency_us);
+    }
+
+    /// A successive-halving rung is starting: `pool` configs are about
+    /// to be measured at `fidelity`.
+    fn on_rung(&mut self, fidelity: f64, pool: usize) {
+        let _ = (fidelity, pool);
+    }
+
+    /// A fleet run is switching to (or starting on) `platform`.  Solo
+    /// runs never emit this.
+    fn on_platform(&mut self, platform: &str) {
+        let _ = platform;
+    }
+}
+
 /// Records every evaluation a strategy performs.
 ///
 /// The recorder keeps the evaluation log as [`EvalRecord`]s (fingerprint
@@ -140,8 +200,17 @@ impl EvalRecord {
 /// iterations — must never be reported as the tuning result; the rung
 /// winners are re-confirmed at fidelity 1.0 before they can become
 /// `best`.
-#[derive(Debug, Default)]
-pub struct Recorder {
+///
+/// **Budget enforcement**: the recorder carries the session's
+/// evaluation cap ([`Recorder::limit_evals`]) and wall-clock deadline
+/// ([`Recorder::limit_deadline`]).  Once exhausted, [`Recorder::eval`]
+/// refuses to evaluate and [`Recorder::eval_batch`] truncates its batch
+/// to the remaining allowance — deterministically, so a capped run is
+/// always an exact prefix of the uncapped history.  Strategies
+/// additionally poll [`Recorder::out_of_budget`] so their control loops
+/// terminate promptly.  The `'o` lifetime is the borrow of any attached
+/// [`Observer`]s.
+pub struct Recorder<'o> {
     /// Evaluation log in submission order.
     pub evals: Vec<EvalRecord>,
     /// How many evaluations were invalid on this platform.
@@ -149,15 +218,92 @@ pub struct Recorder {
     seen: HashSet<u64>,
     best: Option<(Config, f64)>,
     captured: Option<HashMap<u64, Config>>,
+    observers: Vec<&'o mut dyn Observer>,
+    /// Maximum number of evaluations this recorder may log
+    /// (`usize::MAX` = unlimited).
+    max_evals: usize,
+    /// Wall-clock cutoff; evaluations stop once it has passed.
+    deadline: Option<Instant>,
 }
 
-impl Recorder {
+impl Default for Recorder<'_> {
+    fn default() -> Self {
+        Recorder {
+            evals: Vec::new(),
+            invalid: 0,
+            seen: HashSet::new(),
+            best: None,
+            captured: None,
+            observers: Vec::new(),
+            max_evals: usize::MAX,
+            deadline: None,
+        }
+    }
+}
+
+impl<'o> Recorder<'o> {
     /// A recorder that additionally retains every evaluated [`Config`]
     /// (fingerprint → config).  Used by fleet tuning, where the
     /// cross-platform portability analysis needs to map the joined
     /// evaluation logs back to concrete configurations.
     pub fn capturing() -> Self {
         Recorder { captured: Some(HashMap::new()), ..Recorder::default() }
+    }
+
+    /// Attach an observer for the rest of this recorder's life.
+    pub fn observe(&mut self, observer: &'o mut dyn Observer) {
+        self.observers.push(observer);
+    }
+
+    /// Replace the observer set (used by fleet tuning to walk one
+    /// observer set across the per-platform recorders in turn).
+    pub(crate) fn set_observers(&mut self, observers: Vec<&'o mut dyn Observer>) {
+        self.observers = observers;
+    }
+
+    /// Detach and return the observer set.
+    pub(crate) fn take_observers(&mut self) -> Vec<&'o mut dyn Observer> {
+        std::mem::take(&mut self.observers)
+    }
+
+    /// Cap the number of evaluations this recorder will perform.
+    pub fn limit_evals(&mut self, max: usize) {
+        self.max_evals = max;
+    }
+
+    /// Stop evaluating once `deadline` has passed.
+    pub fn limit_deadline(&mut self, deadline: Instant) {
+        self.deadline = Some(deadline);
+    }
+
+    /// True when the evaluation cap or the deadline is exhausted.
+    /// Strategies poll this so their control loops terminate promptly
+    /// instead of spinning on refused evaluations.
+    pub fn out_of_budget(&self) -> bool {
+        self.remaining_evals() == 0
+    }
+
+    /// Evaluations still allowed under the budget (`usize::MAX` when
+    /// unlimited; 0 once the deadline has passed).
+    fn remaining_evals(&self) -> usize {
+        if self.deadline.is_some_and(|d| Instant::now() >= d) {
+            return 0;
+        }
+        self.max_evals.saturating_sub(self.evals.len())
+    }
+
+    /// Notify observers that a successive-halving rung is starting.
+    pub(crate) fn rung(&mut self, fidelity: f64, pool: usize) {
+        for obs in self.observers.iter_mut() {
+            obs.on_rung(fidelity, pool);
+        }
+    }
+
+    /// Notify observers that a fleet run switched to `platform`.
+    pub(crate) fn platform(&mut self, platform: &str) {
+        for obs in self.observers.iter_mut() {
+            obs.on_platform(platform);
+        }
     }
 
     /// Number of evaluations performed so far (valid + invalid).
@@ -179,7 +325,7 @@ impl Recorder {
         res: Result<f64, crate::platform::model::InvalidConfig>,
         fidelity: f64,
     ) -> Option<f64> {
-        match res {
+        let entry = match res {
             Ok(us) => {
                 // Capture only valid configs: invalid ones can never be
                 // portability candidates, and cloning their BTreeMaps
@@ -187,64 +333,82 @@ impl Recorder {
                 if let Some(map) = self.captured.as_mut() {
                     map.entry(cfg.fingerprint()).or_insert_with(|| cfg.clone());
                 }
-                if fidelity >= 1.0 && self.best.as_ref().map(|(_, b)| us < *b).unwrap_or(true) {
-                    self.best = Some((cfg.clone(), us));
-                }
-                self.evals.push(EvalRecord {
-                    fingerprint: cfg.fingerprint(),
-                    latency_us: Some(us),
-                    fidelity,
-                });
-                Some(us)
+                EvalRecord { fingerprint: cfg.fingerprint(), latency_us: Some(us), fidelity }
             }
             Err(_) => {
                 self.invalid += 1;
-                self.evals.push(EvalRecord {
-                    fingerprint: cfg.fingerprint(),
-                    latency_us: None,
-                    fidelity,
-                });
-                None
+                EvalRecord { fingerprint: cfg.fingerprint(), latency_us: None, fidelity }
+            }
+        };
+        let new_best = entry.latency_us.is_some_and(|us| {
+            fidelity >= 1.0 && self.best.as_ref().map(|(_, b)| us < *b).unwrap_or(true)
+        });
+        if new_best {
+            self.best = Some((cfg.clone(), entry.latency_us.unwrap()));
+        }
+        self.evals.push(entry);
+        for obs in self.observers.iter_mut() {
+            obs.on_eval(&entry);
+            if new_best {
+                obs.on_new_best(cfg, entry.latency_us.unwrap());
             }
         }
+        entry.latency_us
     }
 
     /// Evaluate through the recorder (bookkeeping + best tracking).
-    /// Returns the latency if the config is valid.
+    /// Returns the latency if the config is valid — or `None` without
+    /// evaluating when the budget is exhausted (callers polling
+    /// [`Recorder::out_of_budget`] never observe that case).
     pub(crate) fn eval(
         &mut self,
         eval: &mut dyn Evaluator,
         cfg: &Config,
         fidelity: f64,
     ) -> Option<f64> {
+        if self.out_of_budget() {
+            return None;
+        }
         let res = eval.evaluate_fidelity(cfg, fidelity);
         self.record(cfg, res, fidelity)
     }
 
     /// Batched counterpart of [`Recorder::eval`]: submit `cfgs` in one
     /// evaluator call, fold results back in submission order.  The
-    /// returned latencies line up index-for-index with `cfgs`.
+    /// returned latencies line up index-for-index with `cfgs`.  Under an
+    /// evaluation budget the batch is truncated to the remaining
+    /// allowance (the unevaluated tail reports `None` without being
+    /// logged), so a capped history is an exact prefix of the uncapped
+    /// one.
     pub(crate) fn eval_batch(
         &mut self,
         eval: &mut dyn Evaluator,
         cfgs: &[Config],
         fidelity: f64,
     ) -> Vec<Option<f64>> {
-        let results = eval.evaluate_batch(cfgs, fidelity);
-        // A short/long result vector would silently misattribute
-        // latencies to configs via zip — fail loudly instead.
-        assert_eq!(
-            results.len(),
-            cfgs.len(),
-            "evaluate_batch broke its contract: {} results for {} configs",
-            results.len(),
-            cfgs.len()
-        );
-        results
-            .into_iter()
-            .zip(cfgs)
-            .map(|(res, cfg)| self.record(cfg, res, fidelity))
-            .collect()
+        let allowed = cfgs.len().min(self.remaining_evals());
+        let (run, skipped) = cfgs.split_at(allowed);
+        let mut out: Vec<Option<f64>> = if run.is_empty() {
+            Vec::new()
+        } else {
+            let results = eval.evaluate_batch(run, fidelity);
+            // A short/long result vector would silently misattribute
+            // latencies to configs via zip — fail loudly instead.
+            assert_eq!(
+                results.len(),
+                run.len(),
+                "evaluate_batch broke its contract: {} results for {} configs",
+                results.len(),
+                run.len()
+            );
+            results
+                .into_iter()
+                .zip(run)
+                .map(|(res, cfg)| self.record(cfg, res, fidelity))
+                .collect()
+        };
+        out.extend(skipped.iter().map(|_| None));
+        out
     }
 
     pub(crate) fn mark_seen(&mut self, cfg: &Config) -> bool {
@@ -285,7 +449,7 @@ impl Strategy {
         w: &Workload,
         eval: &mut dyn Evaluator,
         seed: u64,
-        rec: &mut Recorder,
+        rec: &mut Recorder<'_>,
     ) {
         match *self {
             Strategy::Exhaustive | Strategy::Random { .. } => {
@@ -320,18 +484,26 @@ trait TrajectorySink {
     fn mark_seen(&mut self, cfg: &Config) -> bool;
     /// Measure one batch at full fidelity.
     fn submit(&mut self, cfgs: &[Config]);
+    /// True once the session budget is exhausted — the driver stops
+    /// submitting (already-submitted work was truncated by the
+    /// recorder itself).
+    fn out_of_budget(&self) -> bool;
+    /// Evaluations still allowed under the session budget
+    /// (`usize::MAX` when unlimited).  Lets the random driver avoid
+    /// drawing thousands of samples that could never be measured.
+    fn remaining(&self) -> usize;
 }
 
 /// One evaluator, one recorder — the ordinary tuning path.  (Separate
 /// lifetime for the trait object: `&mut dyn` is invariant in its
 /// object lifetime, so tying it to the recorder borrow would reject
 /// callers whose two borrows differ.)
-struct SoloSink<'a, 'e> {
+struct SoloSink<'a, 'e, 'o> {
     eval: &'a mut (dyn Evaluator + 'e),
-    rec: &'a mut Recorder,
+    rec: &'a mut Recorder<'o>,
 }
 
-impl TrajectorySink for SoloSink<'_, '_> {
+impl TrajectorySink for SoloSink<'_, '_, '_> {
     fn mark_seen(&mut self, cfg: &Config) -> bool {
         self.rec.mark_seen(cfg)
     }
@@ -339,16 +511,24 @@ impl TrajectorySink for SoloSink<'_, '_> {
     fn submit(&mut self, cfgs: &[Config]) {
         self.rec.eval_batch(&mut *self.eval, cfgs, 1.0);
     }
+
+    fn out_of_budget(&self) -> bool {
+        self.rec.out_of_budget()
+    }
+
+    fn remaining(&self) -> usize {
+        self.rec.remaining_evals()
+    }
 }
 
 /// Measure-everywhere: every batch goes to every distinct platform,
 /// one recorder per platform.
-struct FleetSink<'a> {
+struct FleetSink<'a, 'o> {
     fleet: &'a mut MultiDeviceEvaluator,
-    recs: &'a mut [Recorder],
+    recs: &'a mut [Recorder<'o>],
 }
 
-impl TrajectorySink for FleetSink<'_> {
+impl TrajectorySink for FleetSink<'_, '_> {
     fn mark_seen(&mut self, cfg: &Config) -> bool {
         // Mark in every platform recorder so each one's seen-state
         // matches a solo run of that platform; the decisions always
@@ -362,6 +542,17 @@ impl TrajectorySink for FleetSink<'_> {
 
     fn submit(&mut self, cfgs: &[Config]) {
         record_everywhere(&mut *self.fleet, cfgs, 1.0, &mut *self.recs);
+    }
+
+    fn out_of_budget(&self) -> bool {
+        // Budgets are applied uniformly across the per-platform
+        // recorders; `any` keeps this robust if one recorder was
+        // configured tighter.
+        self.recs.iter().any(|rec| rec.out_of_budget())
+    }
+
+    fn remaining(&self) -> usize {
+        self.recs.iter().map(|rec| rec.remaining_evals()).min().unwrap_or(0)
     }
 }
 
@@ -389,17 +580,29 @@ fn run_deterministic(
                 if batch.len() == EVAL_BATCH {
                     sink.submit(&batch);
                     batch.clear();
+                    if sink.out_of_budget() {
+                        return;
+                    }
                 }
             }
-            if !batch.is_empty() {
+            if !batch.is_empty() && !sink.out_of_budget() {
                 sink.submit(&batch);
             }
         }
         Strategy::Random { budget } => {
+            // Sampling happens before any measurement, so the draw
+            // sequence (and therefore a budget-capped history prefix)
+            // is independent of the budget.  The draw *count* is capped
+            // at the session allowance — drawing a huge strategy budget
+            // that could never be measured would be pure waste, and
+            // stopping the draws early keeps the submitted sequence an
+            // exact prefix of the uncapped one (draws never depend on
+            // measurements).
+            let target = budget.min(sink.remaining());
             let mut rng = Rng::seed_from(seed);
             let mut picked: Vec<Config> = Vec::new();
             let mut stall = 0;
-            while picked.len() < budget && stall < budget.saturating_mul(10) {
+            while picked.len() < target && stall < budget.saturating_mul(10) {
                 let Some(cfg) = space.sample(w, &mut rng, 200) else { break };
                 if !sink.mark_seen(&cfg) {
                     stall += 1;
@@ -408,6 +611,9 @@ fn run_deterministic(
                 picked.push(cfg);
             }
             for chunk in picked.chunks(EVAL_BATCH) {
+                if sink.out_of_budget() {
+                    return;
+                }
                 sink.submit(chunk);
             }
         }
@@ -422,13 +628,13 @@ fn hill_climb(
     seed: u64,
     restarts: usize,
     budget: usize,
-    rec: &mut Recorder,
+    rec: &mut Recorder<'_>,
 ) {
     let mut rng = Rng::seed_from(seed);
     'restart: for _ in 0..restarts.max(1) {
         // Keep sampling until a platform-valid starting point is found.
         let (mut cur, mut cur_lat) = loop {
-            if rec.len() >= budget {
+            if rec.len() >= budget || rec.out_of_budget() {
                 return;
             }
             let Some(c) = space.sample(w, &mut rng, 200) else { continue 'restart };
@@ -440,13 +646,13 @@ fn hill_climb(
             }
         };
         loop {
-            if rec.len() >= budget {
+            if rec.len() >= budget || rec.out_of_budget() {
                 return;
             }
             // Best improving neighbour (steepest descent).
             let mut improved = false;
             for n in space.neighbors(&cur, w) {
-                if rec.len() >= budget {
+                if rec.len() >= budget || rec.out_of_budget() {
                     return;
                 }
                 if !rec.mark_seen(&n) {
@@ -476,12 +682,15 @@ fn anneal(
     budget: usize,
     t0: f64,
     alpha: f64,
-    rec: &mut Recorder,
+    rec: &mut Recorder<'_>,
 ) {
     let mut rng = Rng::seed_from(seed);
     // Initial point: keep sampling until one is valid on this platform.
     let mut start = None;
     for _ in 0..budget.max(20) {
+        if rec.out_of_budget() {
+            return;
+        }
         let Some(c) = space.sample(w, &mut rng, 200) else { break };
         if let Some(l) = rec.eval(eval, &c, 1.0) {
             start = Some((c, l));
@@ -490,7 +699,7 @@ fn anneal(
     }
     let Some((mut cur, mut cur_lat)) = start else { return };
     let mut temp = t0;
-    while rec.len() < budget {
+    while rec.len() < budget && !rec.out_of_budget() {
         let neighbors = space.neighbors(&cur, w);
         if neighbors.is_empty() {
             break;
@@ -519,7 +728,7 @@ fn successive_halving(
     seed: u64,
     initial: usize,
     eta: usize,
-    rec: &mut Recorder,
+    rec: &mut Recorder<'_>,
 ) {
     let mut rng = Rng::seed_from(seed);
     let eta = eta.max(2);
@@ -560,6 +769,7 @@ fn successive_halving(
         // Whole rung in one batch: every member is measured at the same
         // fidelity regardless of the others' results.
         let rung_fidelity = fidelity;
+        rec.rung(rung_fidelity, pool.len());
         let latencies = rec.eval_batch(eval, &pool, rung_fidelity);
         let mut scored: Vec<(Config, f64)> = pool
             .drain(..)
@@ -611,7 +821,8 @@ fn successive_halving(
 /// per-platform measurements are pure functions of the config.  The
 /// adaptive strategies (hill climb, annealing, successive halving)
 /// branch on latencies, so their per-platform trajectories genuinely
-/// diverge; [`crate::autotuner::tune_fleet`] runs those once per
+/// diverge; fleet sessions ([`crate::autotuner::TuningSession::fleet`])
+/// run those once per
 /// platform instead.
 pub(crate) fn run_fleet_shared(
     space: &ConfigSpace,
@@ -619,7 +830,7 @@ pub(crate) fn run_fleet_shared(
     fleet: &mut MultiDeviceEvaluator,
     strategy: &Strategy,
     seed: u64,
-    recs: &mut [Recorder],
+    recs: &mut [Recorder<'_>],
 ) {
     let mut sink = FleetSink { fleet, recs };
     run_deterministic(space, w, strategy, seed, &mut sink);
@@ -631,8 +842,18 @@ fn record_everywhere(
     fleet: &mut MultiDeviceEvaluator,
     cfgs: &[Config],
     fidelity: f64,
-    recs: &mut [Recorder],
+    recs: &mut [Recorder<'_>],
 ) {
+    // Session budgets apply to fleet runs too: truncate the batch to
+    // the tightest per-platform allowance (the recorders are configured
+    // uniformly, so this keeps their logs in lockstep — and with no
+    // budget the allowance is unlimited and nothing changes).
+    let allowed =
+        recs.iter().map(|r| r.remaining_evals()).min().unwrap_or(0).min(cfgs.len());
+    let cfgs = &cfgs[..allowed];
+    if cfgs.is_empty() {
+        return;
+    }
     let results = fleet.evaluate_batch_everywhere(cfgs, fidelity);
     assert_eq!(
         results.len(),

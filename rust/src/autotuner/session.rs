@@ -1,0 +1,1298 @@
+//! `TuningSession` — the single public entry point of the autotuner.
+//!
+//! The engine grew five free functions (`tune`, `tune_guided`,
+//! `tune_cached`, `tune_fleet`, `tune_fleet_cached`) whose signatures
+//! drifted apart with every feature: caching, guided priors, fleets and
+//! budgets are *orthogonal options* of one tuning loop, not separate
+//! loops — exactly the paper's point that tuning scope is configuration,
+//! not code.  [`TuningSession`] makes them compose:
+//!
+//! ```
+//! use portatune::autotuner::{SessionOutcome, SimEvaluator, Strategy, TuningSession};
+//! use portatune::config::spaces;
+//! use portatune::kernels::baselines::HAND_TUNED;
+//! use portatune::platform::SimGpu;
+//! use portatune::workload::Workload;
+//!
+//! let w = Workload::llama3_attention(1, 512);
+//! let space = spaces::attention_sim_space();
+//! let mut eval = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
+//! let out = TuningSession::new(&space, &w)
+//!     .strategy(Strategy::Random { budget: 32 })
+//!     .seed(7)
+//!     .evaluator(&mut eval)
+//!     .run()
+//!     .and_then(SessionOutcome::into_solo)
+//!     .expect("space is non-empty");
+//! assert!(out.best_latency_us > 0.0);
+//! ```
+//!
+//! Options compose freely: `.cache(&mut c)` makes any run persistent
+//! (including guided and fleet runs), `.guided(prior, k)` prunes with a
+//! model prior (solo targets only — combining it with `.fleet()`
+//! panics rather than silently running an unguided fleet pass),
+//! `.fleet(&mut f)` tunes every distinct platform at once,
+//! `.budget(Budget::Evals(n))` caps any of them, and `.observe(&mut o)`
+//! streams progress from all of them.  The legacy free functions remain
+//! as thin `#[deprecated]` wrappers whose outputs are pinned
+//! bit-identical to the builder by `tests/parallel_equiv.rs`.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use super::evaluators::{MultiDeviceEvaluator, SimEvaluator};
+use super::search::{self, Observer, Recorder, Strategy};
+use super::{Evaluator, FleetOutcome, PortableBest, TuneOutcome};
+use crate::cache::{entry_now, CacheEntry, TuningCache};
+use crate::config::{Config, ConfigSpace};
+use crate::workload::Workload;
+
+/// A session-level stopping rule, orthogonal to the per-strategy knobs
+/// (`Random { budget }` etc.): the budget caps *any* strategy, including
+/// exhaustive enumeration, which the flat `tune*` signatures could never
+/// express.
+///
+/// Enforcement lives in [`search::Recorder`]: an exhausted recorder
+/// refuses further evaluations and truncates in-flight batches, so a
+/// capped run's history is an exact prefix of the uncapped run's —
+/// which makes [`Budget::Evals`] fully deterministic per seed (pinned
+/// by `tests/parallel_equiv.rs`).  Wall-clock budgets are checked
+/// between evaluations on the sequential strategies and between
+/// *batches* on the batching ones — a deadline expiring mid-batch
+/// still completes the in-flight batch (up to `search::EVAL_BATCH`
+/// configurations), since a dispatched batch cannot be recalled from
+/// the worker pool.
+///
+/// On fleet targets, [`Budget::Evals`] caps evaluations **per
+/// platform** (each platform's recorder counts its own log, which for
+/// the shared-trajectory strategies is the same sequence), while the
+/// wall-clock budgets bound the whole fleet run; if a wall budget
+/// expires partway through the adaptive per-platform loop, the session
+/// returns the platforms completed so far (with no portability report)
+/// instead of discarding them.
+///
+/// Possibly budget-truncated results are **never persisted** to an
+/// attached cache: under the ordinary `workload × platform × space`
+/// key a capped winner would masquerade as a full tuning result on the
+/// next, uncapped run.  They are still returned to the caller.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Budget {
+    /// Stop after at most this many evaluations (valid + invalid).
+    Evals(usize),
+    /// Stop once the session has run for this many wall-clock seconds.
+    WallSecs(f64),
+    /// Stop once this instant has passed.
+    Deadline(Instant),
+}
+
+/// What a [`TuningSession`] produced: solo targets yield a
+/// [`TuneOutcome`], fleet targets a [`FleetOutcome`].
+#[derive(Debug, Clone)]
+pub enum SessionOutcome {
+    /// Outcome of a single-platform (or replicated single-platform) run.
+    Solo(TuneOutcome),
+    /// Outcome of a heterogeneous-fleet run.
+    Fleet(FleetOutcome),
+}
+
+impl SessionOutcome {
+    /// The solo outcome, if this was a solo run.
+    pub fn into_solo(self) -> Option<TuneOutcome> {
+        match self {
+            SessionOutcome::Solo(o) => Some(o),
+            SessionOutcome::Fleet(_) => None,
+        }
+    }
+
+    /// The fleet outcome, if this was a fleet run.
+    pub fn into_fleet(self) -> Option<FleetOutcome> {
+        match self {
+            SessionOutcome::Fleet(o) => Some(o),
+            SessionOutcome::Solo(_) => None,
+        }
+    }
+
+    /// Borrowing accessor for the solo outcome.
+    pub fn as_solo(&self) -> Option<&TuneOutcome> {
+        match self {
+            SessionOutcome::Solo(o) => Some(o),
+            SessionOutcome::Fleet(_) => None,
+        }
+    }
+
+    /// Borrowing accessor for the fleet outcome.
+    pub fn as_fleet(&self) -> Option<&FleetOutcome> {
+        match self {
+            SessionOutcome::Fleet(o) => Some(o),
+            SessionOutcome::Solo(_) => None,
+        }
+    }
+}
+
+/// What the session tunes against.
+enum Target<'a> {
+    /// No target configured yet ([`TuningSession::run`] panics).
+    Unset,
+    /// A caller-owned evaluator.
+    Solo(&'a mut (dyn Evaluator + 'a)),
+    /// A session-owned evaluator (the `.devices(n)` sugar).
+    Owned(Box<dyn Evaluator + 'a>),
+    /// A heterogeneous fleet: measure everywhere, per-platform argmin.
+    Fleet(&'a mut MultiDeviceEvaluator),
+}
+
+/// Builder for one tuning run — see the [module docs](self) for the
+/// full option matrix and an example.
+///
+/// A session borrows everything it tunes with (space, workload,
+/// evaluators, cache, observers) for the lifetime `'a` and is consumed
+/// by [`TuningSession::run`].
+pub struct TuningSession<'a> {
+    space: &'a ConfigSpace,
+    workload: &'a Workload,
+    strategy: Strategy,
+    seed: u64,
+    cache: Option<&'a mut TuningCache>,
+    prior: Option<(&'a mut (dyn Evaluator + 'a), usize)>,
+    budget: Option<Budget>,
+    observers: Vec<&'a mut dyn Observer>,
+    target: Target<'a>,
+}
+
+impl<'a> TuningSession<'a> {
+    /// Start configuring a tuning run over `space` for `workload`.
+    /// Defaults: [`Strategy::Exhaustive`], seed 0, no cache, no prior,
+    /// no budget, no observers.
+    pub fn new(space: &'a ConfigSpace, workload: &'a Workload) -> Self {
+        TuningSession {
+            space,
+            workload,
+            strategy: Strategy::Exhaustive,
+            seed: 0,
+            cache: None,
+            prior: None,
+            budget: None,
+            observers: Vec::new(),
+            target: Target::Unset,
+        }
+    }
+
+    /// Select the search strategy (ignored by guided runs, which rank
+    /// with the prior instead of searching).
+    pub fn strategy(mut self, strategy: Strategy) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
+    /// Seed for the stochastic strategies (deterministic per seed).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Serve from / persist into this cache (paper Q4.3).  Solo hits are
+    /// keyed by `workload × platform × space fingerprint`; fleet runs
+    /// persist every platform's winner under that platform's own key and
+    /// reuse partial hits where the strategy allows (see
+    /// [`TuningSession::fleet`]).
+    ///
+    /// The key is **strategy-agnostic** (as it always has been): a
+    /// winner persisted by a cheap session — `Random { budget: 30 }`,
+    /// successive halving, a guided top-k run — is served to any later
+    /// session with the same workload/platform/space, exhaustive
+    /// included.  Budget-truncated results are the one exception: they
+    /// are never persisted (see [`Budget`]).  Callers who want a
+    /// higher-quality entry than the cache holds should invalidate it
+    /// first ([`TuningCache::invalidate_platform`] or `cache clear`).
+    pub fn cache(mut self, cache: &'a mut TuningCache) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Model-guided (transfer) tuning: rank the whole space with the
+    /// cheap `prior` evaluator, then measure only the `top_k` most
+    /// promising configurations on the target evaluator.  The prior's
+    /// ranking pass is not recorded and does not count against a
+    /// [`Budget::Evals`] cap; the wall-clock budgets bound the whole
+    /// session, ranking included (an already-expired deadline skips the
+    /// ranking pass entirely).  Guided tuning requires a **solo**
+    /// target ([`TuningSession::evaluator`] / [`TuningSession::devices`]);
+    /// combining it with [`TuningSession::fleet`] panics in `run()`.
+    pub fn guided(mut self, prior: &'a mut (dyn Evaluator + 'a), top_k: usize) -> Self {
+        self.prior = Some((prior, top_k));
+        self
+    }
+
+    /// Cap the session with a stopping rule the strategy itself cannot
+    /// express — see [`Budget`].
+    pub fn budget(mut self, budget: Budget) -> Self {
+        self.budget = Some(budget);
+        self
+    }
+
+    /// Stream progress events to `observer` (may be called repeatedly to
+    /// attach several).  Observers never change the outcome.
+    pub fn observe(mut self, observer: &'a mut dyn Observer) -> Self {
+        self.observers.push(observer);
+        self
+    }
+
+    /// Tune against one evaluator — the plain single-platform target.
+    pub fn evaluator(mut self, eval: &'a mut (dyn Evaluator + 'a)) -> Self {
+        self.target = Target::Solo(eval);
+        self
+    }
+
+    /// Tune against `n` sharded replicas of `base` (the CLI's
+    /// `--devices N`): one platform, evaluation batches spread over a
+    /// simulated fleet, results bit-identical to a single device.  The
+    /// session owns the replicated evaluator; callers who want its
+    /// utilization counters afterwards should build a
+    /// [`MultiDeviceEvaluator`] themselves and pass it to
+    /// [`TuningSession::evaluator`].
+    pub fn devices(mut self, base: &SimEvaluator, n: usize) -> Self {
+        self.target = Target::Owned(Box::new(MultiDeviceEvaluator::replicate(base, n)));
+        self
+    }
+
+    /// Tune every distinct platform of a heterogeneous fleet at once
+    /// (measure-everywhere, per-platform argmin + portability report).
+    ///
+    /// With [`TuningSession::cache`]: every platform's winner persists
+    /// under its own key; a run is served entirely from cache only when
+    /// *every* platform hits.  On a **partial** hit the adaptive
+    /// strategies (hill climb, annealing, successive halving — their
+    /// per-platform searches are independent) reuse the cached platforms
+    /// and re-tune only the missing ones; the shared-trajectory
+    /// strategies (exhaustive, random) re-tune the whole fleet, because
+    /// their one measure-everywhere pass cannot skip a platform without
+    /// changing what the other platforms measure.
+    pub fn fleet(mut self, fleet: &'a mut MultiDeviceEvaluator) -> Self {
+        self.target = Target::Fleet(fleet);
+        self
+    }
+
+    /// Execute the session.
+    ///
+    /// Returns `None` when no valid configuration was found (for fleet
+    /// targets: when any platform found none).  Cache hits return with
+    /// `from_cache = true` and zero evaluations.
+    ///
+    /// # Panics
+    ///
+    /// Panics if no target was configured — call
+    /// [`TuningSession::evaluator`], [`TuningSession::devices`] or
+    /// [`TuningSession::fleet`] first — or if [`TuningSession::guided`]
+    /// was combined with a fleet target (guided tuning needs a solo
+    /// target; silently ignoring the prior would run a far more
+    /// expensive unguided fleet pass than the caller asked for).
+    pub fn run(mut self) -> Option<SessionOutcome> {
+        match std::mem::replace(&mut self.target, Target::Unset) {
+            Target::Solo(eval) => self.run_solo(eval).map(SessionOutcome::Solo),
+            Target::Owned(mut owned) => self.run_solo(owned.as_mut()).map(SessionOutcome::Solo),
+            Target::Fleet(fleet) => {
+                assert!(
+                    self.prior.is_none(),
+                    "TuningSession: .guided() requires a solo target \
+                     (.evaluator() or .devices()); guided fleet tuning is not supported"
+                );
+                self.run_fleet(fleet).map(SessionOutcome::Fleet)
+            }
+            Target::Unset => panic!(
+                "TuningSession::run() without a target: call .evaluator(), .devices() or .fleet() first"
+            ),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Solo path (plain / guided / cached — freely combined).
+    // ------------------------------------------------------------------
+
+    fn run_solo<'e>(mut self, eval: &mut (dyn Evaluator + 'e)) -> Option<TuneOutcome> {
+        let t0 = Instant::now();
+        let budget = self.budget;
+        let Some(cache) = self.cache.take() else {
+            return self.execute_solo(eval);
+        };
+        let platform = eval.name();
+        let space_fp = self.space.fingerprint_key();
+        // The space component of the cache key is the stable FNV-1a
+        // digest of the space definition; constraint *bodies* are
+        // closures and cannot be hashed, so a hit is re-validated with
+        // `contains` — a cached winner the current space rejects falls
+        // through to a fresh tune instead of being served.
+        if let Some(hit) = cache.get(self.workload, &platform, &space_fp) {
+            if let Some(best) = hit.config() {
+                if self.space.contains(&best, self.workload) {
+                    return Some(cached_outcome(hit, best));
+                }
+            }
+            // Unparseable or no-longer-valid entry: re-tune, overwrite.
+        }
+        let workload = self.workload;
+        let outcome = self.execute_solo(eval)?;
+        // A budget-truncated result is reported but never persisted:
+        // under the ordinary cache key it would masquerade as a full
+        // tuning run on the next (uncapped) session.
+        if possibly_capped(&budget, outcome.evaluated, t0) {
+            return Some(outcome);
+        }
+        cache.put(
+            workload,
+            entry_now(
+                &outcome.best,
+                outcome.best_latency_us,
+                outcome.evaluated,
+                outcome.invalid,
+                &platform,
+                &space_fp,
+                outcome.wall_seconds,
+            ),
+        );
+        Some(outcome)
+    }
+
+    fn execute_solo<'e>(self, eval: &mut (dyn Evaluator + 'e)) -> Option<TuneOutcome> {
+        let TuningSession { space, workload, strategy, seed, prior, budget, observers, .. } = self;
+        match prior {
+            Some((prior, top_k)) => {
+                guided_impl(space, workload, prior, top_k, eval, &budget, observers)
+            }
+            None => tune_impl(space, workload, eval, &strategy, seed, &budget, observers),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Fleet path (plain / cached, with partial per-platform reuse).
+    // ------------------------------------------------------------------
+
+    fn run_fleet(mut self, fleet: &mut MultiDeviceEvaluator) -> Option<FleetOutcome> {
+        let Some(cache) = self.cache.take() else {
+            let TuningSession { space, workload, strategy, seed, budget, observers, .. } = self;
+            return fleet_impl(
+                space,
+                workload,
+                fleet,
+                &strategy,
+                seed,
+                &budget,
+                observers,
+                HashMap::new(),
+            );
+        };
+        let space_fp = self.space.fingerprint_key();
+        let platforms = fleet.platforms();
+        let mut hits: HashMap<String, TuneOutcome> = HashMap::new();
+        for platform in &platforms {
+            let hit = cache.get(self.workload, platform, &space_fp).and_then(|h| {
+                let best = h.config()?;
+                self.space.contains(&best, self.workload).then(|| cached_outcome(h, best))
+            });
+            if let Some(o) = hit {
+                hits.insert(platform.clone(), o);
+            }
+        }
+        if !platforms.is_empty() && hits.len() == platforms.len() {
+            // Full hit: zero evaluations.  Cached entries store winners
+            // only (no history), so there is nothing to build a
+            // portability report from.
+            let outcomes: Vec<(String, TuneOutcome)> = platforms
+                .iter()
+                .map(|p| (p.clone(), hits.remove(p).expect("hit for every platform")))
+                .collect();
+            return Some(FleetOutcome {
+                distinct_winners: distinct_winner_count(&outcomes),
+                outcomes,
+                portable: None,
+                wall_seconds: 0.0,
+                from_cache: true,
+            });
+        }
+        // Partial (or no) hit.  Adaptive strategies tune per platform
+        // independently, so cached platforms can be served as-is and
+        // only the missing ones re-tuned; the shared-trajectory
+        // strategies re-run the whole measure-everywhere pass.
+        let reuse = if self.strategy.shared_trajectory() { HashMap::new() } else { hits };
+        let workload = self.workload;
+        let t0 = Instant::now();
+        let TuningSession { space, strategy, seed, budget, observers, .. } = self;
+        let outcome =
+            fleet_impl(space, workload, fleet, &strategy, seed, &budget, observers, reuse)?;
+        for (platform, o) in &outcome.outcomes {
+            if o.from_cache {
+                continue; // reused entries are already persisted
+            }
+            // Same rule as the solo path: possibly budget-truncated
+            // winners are reported but never persisted (conservative:
+            // an expired wall budget skips every platform of the
+            // session, even ones that finished early).
+            if possibly_capped(&budget, o.evaluated, t0) {
+                continue;
+            }
+            cache.put(
+                workload,
+                entry_now(
+                    &o.best,
+                    o.best_latency_us,
+                    o.evaluated,
+                    o.invalid,
+                    platform,
+                    &space_fp,
+                    o.wall_seconds,
+                ),
+            );
+        }
+        Some(outcome)
+    }
+}
+
+/// Apply a session budget to a recorder.  `t0` anchors
+/// [`Budget::WallSecs`] at the start of the whole session, so on fleet
+/// targets the wall-clock budgets bound the fleet run, not each
+/// platform.
+fn apply_budget(rec: &mut Recorder<'_>, budget: &Option<Budget>, t0: Instant) {
+    match budget {
+        Some(Budget::Evals(n)) => rec.limit_evals(*n),
+        Some(Budget::WallSecs(s)) => {
+            // NaN, infinite or overflowing seconds mean "effectively
+            // unlimited": fall through to no deadline instead of
+            // panicking in Duration::from_secs_f64 / Instant addition
+            // (NaN needs its own check — `NAN.max(0.0)` is 0.0, which
+            // would stop the session immediately).
+            if !s.is_nan() {
+                if let Some(deadline) = Duration::try_from_secs_f64(s.max(0.0))
+                    .ok()
+                    .and_then(|d| t0.checked_add(d))
+                {
+                    rec.limit_deadline(deadline);
+                }
+            }
+        }
+        Some(Budget::Deadline(d)) => rec.limit_deadline(*d),
+        None => {}
+    }
+}
+
+/// Conservatively true when a finished run may have been truncated by
+/// the session budget.  Used to gate cache persistence: a capped
+/// winner stored under the ordinary `workload × platform × space` key
+/// would masquerade as a full tuning result on the next (uncapped)
+/// run, so possibly-truncated outcomes are reported but never
+/// persisted.  `evaluated >= n` over-approximates for [`Budget::Evals`]
+/// (a search that finished naturally at exactly the cap is also
+/// skipped) — losing a cache write is harmless, serving a truncated
+/// winner as the optimum is not.
+fn possibly_capped(budget: &Option<Budget>, evaluated: usize, t0: Instant) -> bool {
+    match budget {
+        None => false,
+        Some(Budget::Evals(n)) => evaluated >= *n,
+        Some(Budget::WallSecs(s)) => t0.elapsed().as_secs_f64() >= *s,
+        Some(Budget::Deadline(d)) => Instant::now() >= *d,
+    }
+}
+
+/// A validated cache hit as a zero-cost outcome (`best` is the entry's
+/// config, already re-validated against the live space by the caller).
+fn cached_outcome(hit: &CacheEntry, best: Config) -> TuneOutcome {
+    TuneOutcome {
+        best,
+        best_latency_us: hit.latency_us,
+        evaluated: 0,
+        invalid: hit.invalid,
+        history: Vec::new(),
+        wall_seconds: 0.0,
+        from_cache: true,
+    }
+}
+
+/// Build a [`TuneOutcome`] from a finished recorder.
+fn finish(rec: Recorder<'_>, t0: Instant) -> Option<TuneOutcome> {
+    let (best, best_latency_us) = rec.best()?;
+    Some(TuneOutcome {
+        best,
+        best_latency_us,
+        evaluated: rec.len(),
+        invalid: rec.invalid,
+        history: rec.evals,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        from_cache: false,
+    })
+}
+
+/// The plain search engine: run `strategy` over `space` through one
+/// recorder carrying the session's budget and observers.
+fn tune_impl<'o, 'e>(
+    space: &ConfigSpace,
+    workload: &Workload,
+    eval: &mut (dyn Evaluator + 'e),
+    strategy: &Strategy,
+    seed: u64,
+    budget: &Option<Budget>,
+    observers: Vec<&'o mut dyn Observer>,
+) -> Option<TuneOutcome> {
+    let t0 = Instant::now();
+    let mut rec = Recorder::default();
+    rec.set_observers(observers);
+    apply_budget(&mut rec, budget, t0);
+    strategy.run(space, workload, eval, seed, &mut rec);
+    finish(rec, t0)
+}
+
+/// Model-guided (transfer) tuning: rank the whole space with a cheap
+/// *prior* evaluator (e.g. an analytical platform model), then measure
+/// only the `top_k` most promising configurations on the expensive
+/// *target* evaluator (e.g. real PJRT execution).
+///
+/// This is the practical middle road between the paper's 24 h exhaustive
+/// budget and heuristic-only dispatch: the prior prunes the space by an
+/// order of magnitude, the target keeps the decision empirical.
+fn guided_impl<'o, 'p, 'e>(
+    space: &ConfigSpace,
+    workload: &Workload,
+    prior: &mut (dyn Evaluator + 'p),
+    top_k: usize,
+    target: &mut (dyn Evaluator + 'e),
+    budget: &Option<Budget>,
+    observers: Vec<&'o mut dyn Observer>,
+) -> Option<TuneOutcome> {
+    let t0 = Instant::now();
+    // The measurement recorder is built up front so wall-clock budgets
+    // cover the whole session: an already-expired deadline skips the
+    // ranking pass instead of paying for a full prior sweep whose
+    // results could never be measured.  (An Evals cap does not apply
+    // to the ranking pass — the prior is not recorded.)
+    let mut rec = Recorder::default();
+    rec.set_observers(observers);
+    apply_budget(&mut rec, budget, t0);
+    if rec.out_of_budget() {
+        return finish(rec, t0);
+    }
+    // Rank by prior (invalid-on-prior configs go last, not dropped: the
+    // prior is a model, not ground truth).  The ranking pass streams
+    // through the batch API so a parallel prior uses every core, and a
+    // wall-clock deadline is honored between chunks (an Evals cap never
+    // fires here: the ranking pass is not recorded).
+    let configs: Vec<Config> = space.enumerate(workload).collect();
+    let mut priors: Vec<Option<f64>> = Vec::with_capacity(configs.len());
+    for chunk in configs.chunks(search::EVAL_BATCH) {
+        if rec.out_of_budget() {
+            return finish(rec, t0);
+        }
+        priors.extend(prior.evaluate_batch(chunk, 1.0).into_iter().map(|r| r.ok()));
+    }
+    let mut ranked: Vec<(Config, Option<f64>)> = configs.into_iter().zip(priors).collect();
+
+    // Total order: prior-score ties (common when the prior ignores a
+    // parameter) break on the config fingerprint, so the measured
+    // top-k set is pinned regardless of `select_nth_unstable_by`'s
+    // unspecified ordering among equals.
+    fn by_prior(a: &(Config, Option<f64>), b: &(Config, Option<f64>)) -> std::cmp::Ordering {
+        let primary = match (a.1, b.1) {
+            (Some(x), Some(y)) => x.total_cmp(&y),
+            (Some(_), None) => std::cmp::Ordering::Less,
+            (None, Some(_)) => std::cmp::Ordering::Greater,
+            (None, None) => std::cmp::Ordering::Equal,
+        };
+        primary.then_with(|| a.0.fingerprint().cmp(&b.0.fingerprint()))
+    }
+
+    // Only top_k configs are ever measured, so an O(n) partial selection
+    // replaces a full sort of the entire ranked space; only the k
+    // survivors are sorted (for measurement order).
+    let k = top_k.max(1).min(ranked.len());
+    if k < ranked.len() {
+        ranked.select_nth_unstable_by(k - 1, by_prior);
+        ranked.truncate(k);
+    }
+    ranked.sort_by(by_prior);
+
+    // Measure the survivors through the recorder: same bookkeeping
+    // (fingerprint history, invalid count, running best) as every
+    // search strategy — budget and observers included.
+    for (cfg, _) in ranked {
+        if rec.out_of_budget() {
+            break;
+        }
+        rec.eval(target, &cfg, 1.0);
+    }
+    finish(rec, t0)
+}
+
+/// The fleet engine: tune the shared `space` for every distinct
+/// platform of `fleet` at once — the "A Few Fit Most" regime.
+///
+/// Exhaustive and random share one measure-everywhere trajectory (their
+/// evaluation order never depends on measured latencies); the adaptive
+/// strategies run once per platform — their trajectories genuinely
+/// diverge, which is exactly the per-platform argmin the regime asks
+/// for.  Either way each platform's outcome is **bit-identical** to
+/// tuning that platform alone with a sequential evaluator (pinned by
+/// `tests/parallel_equiv.rs`).
+///
+/// `reuse` carries cached per-platform outcomes to serve instead of
+/// re-tuning; it is consulted only on the adaptive path (callers pass
+/// it empty for the shared-trajectory strategies, whose single shared
+/// pass cannot skip a platform).  Returns `None` when any platform
+/// found no valid configuration — except when a session budget expired
+/// partway through the adaptive per-platform loop, in which case the
+/// platforms completed so far are returned (portability report
+/// omitted: it needs every platform).
+#[allow(clippy::too_many_arguments)]
+fn fleet_impl<'o>(
+    space: &ConfigSpace,
+    workload: &Workload,
+    fleet: &mut MultiDeviceEvaluator,
+    strategy: &Strategy,
+    seed: u64,
+    budget: &Option<Budget>,
+    mut observers: Vec<&'o mut dyn Observer>,
+    reuse: HashMap<String, TuneOutcome>,
+) -> Option<FleetOutcome> {
+    let t0 = Instant::now();
+    let platforms = fleet.platforms();
+    if strategy.shared_trajectory() {
+        debug_assert!(reuse.is_empty(), "shared trajectories cannot partially reuse");
+        // Only the first recorder captures configs (every portable-best
+        // candidate is by definition evaluated on every platform —
+        // including platform 0 — so one fingerprint→Config map carries
+        // the whole portability analysis).  Observers also attach to
+        // the first recorder: the trajectory is shared, so platform 0's
+        // event stream *is* the progress of the whole pass.
+        let mut recs: Vec<Recorder<'_>> = platforms
+            .iter()
+            .enumerate()
+            .map(|(i, _)| {
+                if i == 0 {
+                    Recorder::capturing()
+                } else {
+                    Recorder::default()
+                }
+            })
+            .collect();
+        for rec in &mut recs {
+            apply_budget(rec, budget, t0);
+        }
+        if let (Some(first), Some(platform)) = (recs.first_mut(), platforms.first()) {
+            first.set_observers(observers);
+            first.platform(platform);
+        }
+        search::run_fleet_shared(space, workload, fleet, strategy, seed, &mut recs);
+        let wall_seconds = t0.elapsed().as_secs_f64();
+        // The platforms run concurrently inside the shared pass, so the
+        // total is not P times anyone's cost: attribute an even share.
+        let share = wall_seconds / platforms.len().max(1) as f64;
+        let mut outcomes: Vec<(String, TuneOutcome)> = Vec::with_capacity(platforms.len());
+        for (platform, rec) in platforms.iter().zip(&recs) {
+            let (best, best_latency_us) = rec.best()?;
+            outcomes.push((
+                platform.clone(),
+                TuneOutcome {
+                    best,
+                    best_latency_us,
+                    evaluated: rec.len(),
+                    invalid: rec.invalid,
+                    history: rec.evals.clone(),
+                    wall_seconds: share,
+                    from_cache: false,
+                },
+            ));
+        }
+        let portable = portability(&outcomes, &recs);
+        Some(FleetOutcome {
+            distinct_winners: distinct_winner_count(&outcomes),
+            outcomes,
+            portable,
+            wall_seconds,
+            from_cache: false,
+        })
+    } else {
+        // Adaptive strategies: independent per-platform searches, so a
+        // cached outcome can be served verbatim and only the missing
+        // platforms re-tuned (the partial-reuse path of
+        // `TuningSession::cache` + `TuningSession::fleet`).
+        let mut outcomes: Vec<(String, TuneOutcome)> = Vec::with_capacity(platforms.len());
+        for platform in &platforms {
+            if let Some(hit) = reuse.get(platform) {
+                outcomes.push((platform.clone(), hit.clone()));
+                continue;
+            }
+            // Pool mode: the per-platform search still fans its rung
+            // batches across the worker pool — bit-identical to
+            // sequential (the engine contract pinned by
+            // tests/parallel_equiv.rs), just not one-config-per-core-
+            // tick slow.
+            let mut eval = fleet
+                .platform_evaluator(platform)
+                .expect("platform comes from the fleet")
+                .pooled();
+            let mut rec = Recorder::default();
+            apply_budget(&mut rec, budget, t0);
+            for obs in observers.iter_mut() {
+                obs.on_platform(platform);
+            }
+            rec.set_observers(std::mem::take(&mut observers));
+            let t = Instant::now();
+            strategy.run(space, workload, &mut eval, seed, &mut rec);
+            let secs = t.elapsed().as_secs_f64();
+            fleet.credit_platform(platform, rec.len(), secs * 1e6);
+            observers = rec.take_observers();
+            let Some((best, best_latency_us)) = rec.best() else {
+                if rec.out_of_budget() {
+                    // The session budget expired before this platform
+                    // could finish: return the platforms already tuned
+                    // instead of discarding the whole session's work.
+                    break;
+                }
+                return None; // genuinely no valid config on this platform
+            };
+            outcomes.push((
+                platform.clone(),
+                TuneOutcome {
+                    best,
+                    best_latency_us,
+                    evaluated: rec.len(),
+                    invalid: rec.invalid,
+                    history: rec.evals,
+                    wall_seconds: secs,
+                    from_cache: false,
+                },
+            ));
+        }
+        if outcomes.is_empty() {
+            return None; // budget expired before any platform finished
+        }
+        // The adaptive searches measured *different* configs per
+        // platform, so the recorder logs rarely intersect; the honest
+        // portability analysis cross-measures the per-platform winners
+        // on every platform.  This happens outside the recorders, so
+        // the per-platform outcomes stay bit-identical to solo tuning —
+        // and it works for reused (cached) winners too.  A
+        // budget-shortened run that covered only some platforms has no
+        // whole-fleet portability story to tell (the cross-measured
+        // latency rows would not align with the missing outcomes).
+        let portable = if outcomes.len() == platforms.len() {
+            portable_from_winners(fleet, &outcomes)
+        } else {
+            None
+        };
+        Some(FleetOutcome {
+            distinct_winners: distinct_winner_count(&outcomes),
+            outcomes,
+            portable,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            from_cache: false,
+        })
+    }
+}
+
+/// Number of distinct winning configurations across platform outcomes.
+fn distinct_winner_count(outcomes: &[(String, TuneOutcome)]) -> usize {
+    let mut winners: Vec<u64> = outcomes.iter().map(|(_, o)| o.best.fingerprint()).collect();
+    winners.sort_unstable();
+    winners.dedup();
+    winners.len()
+}
+
+/// The one portable-best selection rule, shared by both analyses:
+/// among `candidates` (fingerprint + per-platform full-fidelity
+/// latencies, aligned with `outcomes`), minimize the worst-case
+/// slowdown versus each platform's own best; ties break on the lower
+/// fingerprint so the selection is deterministic regardless of
+/// candidate order.  Returns `(fingerprint, latencies, slowdown,
+/// worst_slowdown)`.
+fn pick_portable(
+    candidates: impl IntoIterator<Item = (u64, Vec<f64>)>,
+    outcomes: &[(String, TuneOutcome)],
+) -> Option<(u64, Vec<f64>, Vec<f64>, f64)> {
+    let mut best: Option<(f64, u64, Vec<f64>)> = None;
+    for (fp, lats) in candidates {
+        debug_assert_eq!(lats.len(), outcomes.len(), "candidate not measured on every platform");
+        let worst = lats
+            .iter()
+            .zip(outcomes)
+            .map(|(l, (_, o))| l / o.best_latency_us)
+            .fold(0.0f64, f64::max);
+        let better = match &best {
+            None => true,
+            Some((w, f, _)) => worst < *w || (worst == *w && fp < *f),
+        };
+        if better {
+            best = Some((worst, fp, lats));
+        }
+    }
+    best.map(|(worst, fp, lats)| {
+        let slowdown: Vec<f64> = lats
+            .iter()
+            .zip(outcomes)
+            .map(|(l, (_, o))| l / o.best_latency_us)
+            .collect();
+        (fp, lats, slowdown, worst)
+    })
+}
+
+/// Portability analysis for the adaptive strategies: measure each
+/// platform's winner on *every* platform (one measure-everywhere batch)
+/// and pick via [`pick_portable`] among those valid everywhere.
+///
+/// Unlike the shared-trajectory analysis, a budgeted search's portable
+/// slowdown can dip below 1.0 on some platform: another platform's
+/// winner may genuinely beat the local incumbent the search settled on.
+fn portable_from_winners(
+    fleet: &mut MultiDeviceEvaluator,
+    outcomes: &[(String, TuneOutcome)],
+) -> Option<PortableBest> {
+    let mut winners: Vec<Config> = Vec::new();
+    for (_, o) in outcomes {
+        if !winners.iter().any(|c| c.fingerprint() == o.best.fingerprint()) {
+            winners.push(o.best.clone());
+        }
+    }
+    winners.sort_by_key(Config::fingerprint);
+    let results = fleet.evaluate_batch_everywhere(&winners, 1.0);
+    let candidates = winners.iter().enumerate().filter_map(|(i, cfg)| {
+        let lats: Option<Vec<f64>> =
+            results.iter().map(|per_platform| per_platform[i].as_ref().ok().copied()).collect();
+        lats.map(|l| (cfg.fingerprint(), l))
+    });
+    pick_portable(candidates, outcomes).map(|(fp, lats, slowdown, worst)| PortableBest {
+        config: winners
+            .iter()
+            .find(|c| c.fingerprint() == fp)
+            .expect("candidate came from winners")
+            .clone(),
+        latency_us: lats,
+        slowdown,
+        worst_slowdown: worst,
+    })
+}
+
+/// Portability analysis for the shared-trajectory strategies: every
+/// recorder logged the same config sequence, so the candidate set is
+/// every config measured valid at full fidelity on *every* platform,
+/// selected via [`pick_portable`].
+fn portability(
+    outcomes: &[(String, TuneOutcome)],
+    recs: &[Recorder<'_>],
+) -> Option<PortableBest> {
+    let maps: Vec<HashMap<u64, f64>> =
+        recs.iter().map(|r| r.full_fidelity_latencies()).collect();
+    let first = maps.first()?;
+    let candidates = first.keys().filter_map(|&fp| {
+        let lats: Option<Vec<f64>> = maps.iter().map(|m| m.get(&fp).copied()).collect();
+        lats.map(|l| (fp, l))
+    });
+    let (fp, lats, slowdown, worst) = pick_portable(candidates, outcomes)?;
+    let config = recs.iter().find_map(|r| r.captured_config(fp))?.clone();
+    Some(PortableBest { config, latency_us: lats, slowdown, worst_slowdown: worst })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::spaces;
+    use crate::kernels::baselines::{HAND_TUNED, TRITON_AMD, TRITON_NVIDIA};
+    use crate::platform::SimGpu;
+    use crate::workload::Workload;
+
+    fn setup() -> (ConfigSpace, Workload, SimEvaluator) {
+        let w = Workload::llama3_attention(8, 1024);
+        let space = spaces::attention_sim_space();
+        let eval = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
+        (space, w, eval)
+    }
+
+    fn fleet_a100_mi250() -> MultiDeviceEvaluator {
+        let w = Workload::llama3_attention(8, 1024);
+        MultiDeviceEvaluator::new(vec![
+            SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA),
+            SimEvaluator::new(SimGpu::mi250(), w, TRITON_AMD),
+        ])
+    }
+
+    /// Counts every observer event; used to prove the plumbing fires.
+    #[derive(Default)]
+    struct Counting {
+        evals: usize,
+        bests: usize,
+        rungs: usize,
+        platforms: Vec<String>,
+        last_best_us: f64,
+    }
+
+    impl Observer for Counting {
+        fn on_eval(&mut self, _r: &search::EvalRecord) {
+            self.evals += 1;
+        }
+        fn on_new_best(&mut self, _c: &Config, us: f64) {
+            self.bests += 1;
+            self.last_best_us = us;
+        }
+        fn on_rung(&mut self, _f: f64, _p: usize) {
+            self.rungs += 1;
+        }
+        fn on_platform(&mut self, p: &str) {
+            self.platforms.push(p.to_string());
+        }
+    }
+
+    #[test]
+    fn observer_counts_match_outcome() {
+        let (space, w, mut eval) = setup();
+        let mut obs = Counting::default();
+        let out = TuningSession::new(&space, &w)
+            .observe(&mut obs)
+            .evaluator(&mut eval)
+            .run()
+            .and_then(SessionOutcome::into_solo)
+            .unwrap();
+        assert_eq!(obs.evals, out.evaluated, "observer must see every evaluation");
+        assert!(obs.bests >= 1, "at least the first best fires");
+        assert_eq!(obs.last_best_us.to_bits(), out.best_latency_us.to_bits());
+        assert!(obs.platforms.is_empty(), "solo runs emit no platform events");
+    }
+
+    #[test]
+    fn observer_sees_sha_rungs() {
+        let (space, w, mut eval) = setup();
+        let mut obs = Counting::default();
+        TuningSession::new(&space, &w)
+            .strategy(Strategy::SuccessiveHalving { initial: 32, eta: 2 })
+            .seed(7)
+            .observe(&mut obs)
+            .evaluator(&mut eval)
+            .run()
+            .unwrap();
+        assert!(obs.rungs >= 1, "successive halving must announce its rungs");
+    }
+
+    #[test]
+    fn observer_never_changes_the_outcome() {
+        let (space, w, _) = setup();
+        let run = |observed: bool| {
+            let mut eval = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
+            let mut obs = Counting::default();
+            let mut s = TuningSession::new(&space, &w)
+                .strategy(Strategy::SuccessiveHalving { initial: 32, eta: 2 })
+                .seed(7);
+            if observed {
+                s = s.observe(&mut obs);
+            }
+            s.evaluator(&mut eval).run().and_then(SessionOutcome::into_solo).unwrap()
+        };
+        let (plain, observed) = (run(false), run(true));
+        assert_eq!(plain.best, observed.best);
+        assert_eq!(plain.best_latency_us.to_bits(), observed.best_latency_us.to_bits());
+        assert_eq!(plain.history, observed.history);
+    }
+
+    #[test]
+    fn budget_evals_caps_any_strategy() {
+        let (space, w, _) = setup();
+        for cap in [1usize, 7, 50] {
+            let mut eval = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
+            let out = TuningSession::new(&space, &w)
+                .budget(Budget::Evals(cap))
+                .evaluator(&mut eval)
+                .run()
+                .and_then(SessionOutcome::into_solo);
+            // Exhaustive would evaluate hundreds; the cap must hold
+            // exactly (a capped history is a prefix of the uncapped
+            // one, so with cap >= 1 the first config was evaluated —
+            // but it may be invalid, in which case there is no best).
+            if let Some(out) = out {
+                assert!(out.evaluated <= cap, "cap {cap}: evaluated {}", out.evaluated);
+                assert_eq!(out.evaluated, out.history.len());
+            }
+        }
+    }
+
+    #[test]
+    fn budget_evals_is_a_prefix_of_the_uncapped_run() {
+        let (space, w, _) = setup();
+        let run = |budget: Option<Budget>| {
+            let mut eval = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
+            let mut s = TuningSession::new(&space, &w)
+                .strategy(Strategy::Random { budget: 120 })
+                .seed(42);
+            if let Some(b) = budget {
+                s = s.budget(b);
+            }
+            s.evaluator(&mut eval).run().and_then(SessionOutcome::into_solo).unwrap()
+        };
+        let full = run(None);
+        let capped = run(Some(Budget::Evals(30)));
+        assert_eq!(capped.evaluated, 30);
+        assert_eq!(capped.history[..], full.history[..30]);
+    }
+
+    #[test]
+    fn budget_wallsecs_zero_stops_immediately() {
+        let (space, w, mut eval) = setup();
+        let out = TuningSession::new(&space, &w)
+            .budget(Budget::WallSecs(0.0))
+            .evaluator(&mut eval)
+            .run();
+        // Deadline already passed: nothing may be evaluated, so there
+        // is no best and the session reports no outcome.
+        assert!(out.is_none());
+        assert_eq!(eval.calls, 0);
+    }
+
+    #[test]
+    fn budget_deadline_in_the_past_stops_fleet_runs() {
+        let w = Workload::llama3_attention(8, 1024);
+        let space = spaces::attention_sim_space();
+        let mut fleet = fleet_a100_mi250();
+        let out = TuningSession::new(&space, &w)
+            .budget(Budget::Deadline(Instant::now() - Duration::from_secs(1)))
+            .fleet(&mut fleet)
+            .run();
+        assert!(out.is_none());
+    }
+
+    #[test]
+    fn fleet_observer_sees_each_adaptive_platform() {
+        let w = Workload::llama3_attention(8, 1024);
+        let space = spaces::attention_sim_space();
+        let mut fleet = fleet_a100_mi250();
+        let mut obs = Counting::default();
+        let out = TuningSession::new(&space, &w)
+            .strategy(Strategy::SuccessiveHalving { initial: 16, eta: 2 })
+            .seed(3)
+            .observe(&mut obs)
+            .fleet(&mut fleet)
+            .run()
+            .and_then(SessionOutcome::into_fleet)
+            .unwrap();
+        let platforms: Vec<String> = out.outcomes.iter().map(|(p, _)| p.clone()).collect();
+        assert_eq!(obs.platforms, platforms, "one on_platform per tuned platform, in order");
+        let total: usize = out.outcomes.iter().map(|(_, o)| o.evaluated).sum();
+        assert_eq!(obs.evals, total, "observer follows the recorder across platforms");
+    }
+
+    #[test]
+    fn devices_target_matches_plain_evaluator() {
+        let (space, w, _) = setup();
+        let base = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
+        let sharded = TuningSession::new(&space, &w)
+            .devices(&base, 3)
+            .run()
+            .and_then(SessionOutcome::into_solo)
+            .unwrap();
+        let mut solo = base.clone().sequential();
+        let plain = TuningSession::new(&space, &w)
+            .evaluator(&mut solo)
+            .run()
+            .and_then(SessionOutcome::into_solo)
+            .unwrap();
+        assert_eq!(sharded.best, plain.best);
+        assert_eq!(sharded.best_latency_us.to_bits(), plain.best_latency_us.to_bits());
+        assert_eq!(sharded.evaluated, plain.evaluated);
+    }
+
+    #[test]
+    #[should_panic(expected = "without a target")]
+    fn run_without_target_panics() {
+        let (space, w, _) = setup();
+        let _ = TuningSession::new(&space, &w).run();
+    }
+
+    #[test]
+    #[should_panic(expected = "guided fleet tuning is not supported")]
+    fn guided_with_fleet_target_panics() {
+        // Silently dropping the prior would run a far more expensive
+        // unguided fleet pass than the caller asked for.
+        let (space, w, _) = setup();
+        let mut prior = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
+        let mut fleet = fleet_a100_mi250();
+        let _ = TuningSession::new(&space, &w)
+            .guided(&mut prior, 10)
+            .fleet(&mut fleet)
+            .run();
+    }
+
+    #[test]
+    fn budget_capped_results_are_not_persisted() {
+        let (space, w, mut eval) = setup();
+        let mut cache = TuningCache::ephemeral();
+        // Truncated run (5 of several hundred configs): reported, but
+        // never written under the full-run cache key.
+        let capped = TuningSession::new(&space, &w)
+            .budget(Budget::Evals(5))
+            .cache(&mut cache)
+            .evaluator(&mut eval)
+            .run();
+        assert_eq!(cache.len(), 0, "a truncated winner must not be persisted");
+        drop(capped);
+        // A budget that never binds persists normally.
+        let full = TuningSession::new(&space, &w)
+            .budget(Budget::Evals(1_000_000))
+            .cache(&mut cache)
+            .evaluator(&mut eval)
+            .run()
+            .and_then(SessionOutcome::into_solo)
+            .unwrap();
+        assert!(!full.from_cache);
+        assert_eq!(cache.len(), 1, "an unbound budget must not block persistence");
+    }
+
+    #[test]
+    fn budget_wallsecs_huge_values_mean_unlimited() {
+        // Non-finite or overflowing wall budgets must not panic in
+        // Duration/Instant arithmetic — they behave as "no deadline".
+        let (space, w, _) = setup();
+        for secs in [f64::INFINITY, f64::NAN, 1e300, 1e15] {
+            let mut eval = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
+            let out = TuningSession::new(&space, &w)
+                .strategy(Strategy::Random { budget: 10 })
+                .budget(Budget::WallSecs(secs))
+                .evaluator(&mut eval)
+                .run();
+            assert!(out.is_some(), "wall-secs {secs} must run to completion");
+        }
+    }
+
+    #[test]
+    fn guided_expired_deadline_skips_the_prior_sweep() {
+        let (space, w, _) = setup();
+        let mut prior = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
+        let mut target = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
+        let out = TuningSession::new(&space, &w)
+            .guided(&mut prior, 20)
+            .budget(Budget::WallSecs(0.0))
+            .evaluator(&mut target)
+            .run();
+        assert!(out.is_none());
+        assert_eq!(prior.calls, 0, "expired deadline must skip the ranking pass");
+        assert_eq!(target.calls, 0);
+    }
+
+    #[test]
+    fn guided_composes_with_cache() {
+        // The builder allows guided + cache — a combination the flat
+        // signatures never offered: the second run is a cache hit.
+        let (space, w, _) = setup();
+        let mut cache = TuningCache::ephemeral();
+        let run = |cache: &mut TuningCache| {
+            let mut prior = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
+            let mut target = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
+            TuningSession::new(&space, &w)
+                .guided(&mut prior, 20)
+                .cache(cache)
+                .evaluator(&mut target)
+                .run()
+                .and_then(SessionOutcome::into_solo)
+                .unwrap()
+        };
+        let first = run(&mut cache);
+        assert!(!first.from_cache);
+        assert!(first.evaluated <= 20);
+        let second = run(&mut cache);
+        assert!(second.from_cache);
+        assert_eq!(second.best, first.best);
+        assert_eq!(second.evaluated, 0);
+    }
+
+    #[test]
+    fn fleet_partial_cache_reuse_hit_miss_mixed() {
+        // The satellite contract: with an adaptive strategy, a partial
+        // per-platform hit serves the cached platforms and re-tunes
+        // only the missing ones.
+        let w = Workload::llama3_attention(8, 1024);
+        let space = spaces::attention_sim_space();
+        let strat = Strategy::SuccessiveHalving { initial: 32, eta: 2 };
+        let mut cache = TuningCache::ephemeral();
+
+        // MISS: cold cache, every platform tunes.
+        let mut fleet = fleet_a100_mi250();
+        let miss = TuningSession::new(&space, &w)
+            .strategy(strat.clone())
+            .seed(7)
+            .cache(&mut cache)
+            .fleet(&mut fleet)
+            .run()
+            .and_then(SessionOutcome::into_fleet)
+            .unwrap();
+        assert!(!miss.from_cache);
+        assert!(miss.outcomes.iter().all(|(_, o)| !o.from_cache && o.evaluated > 0));
+        assert_eq!(cache.len(), 2, "one entry per platform");
+
+        // MIXED: invalidate one platform's entry; only that platform
+        // re-tunes, the other is served from cache — and the re-tuned
+        // outcome is bit-identical to its cold-cache run.
+        let (gone, kept) =
+            (miss.outcomes[0].0.clone(), miss.outcomes[1].0.clone());
+        cache.invalidate_platform(&gone);
+        let mut fleet = fleet_a100_mi250();
+        let mixed = TuningSession::new(&space, &w)
+            .strategy(strat.clone())
+            .seed(7)
+            .cache(&mut cache)
+            .fleet(&mut fleet)
+            .run()
+            .and_then(SessionOutcome::into_fleet)
+            .unwrap();
+        assert!(!mixed.from_cache, "a partial hit is not a cached outcome");
+        let retuned = mixed.outcomes.iter().find(|(p, _)| *p == gone).unwrap();
+        let served = mixed.outcomes.iter().find(|(p, _)| *p == kept).unwrap();
+        assert!(!retuned.1.from_cache && retuned.1.evaluated > 0);
+        assert!(served.1.from_cache, "{kept} must be served from cache");
+        assert_eq!(served.1.evaluated, 0);
+        let cold = miss.outcomes.iter().find(|(p, _)| *p == gone).unwrap();
+        assert_eq!(retuned.1.best, cold.1.best);
+        assert_eq!(retuned.1.best_latency_us.to_bits(), cold.1.best_latency_us.to_bits());
+        assert_eq!(retuned.1.history, cold.1.history);
+        // When a portable pick exists, the cross-measured report covers
+        // both platforms (cached winners are re-measured, not guessed).
+        if let Some(pb) = &mixed.portable {
+            assert_eq!(pb.latency_us.len(), 2);
+            assert_eq!(pb.slowdown.len(), 2);
+        }
+        assert_eq!(cache.len(), 2, "the re-tuned winner is persisted again");
+
+        // HIT: everything cached, zero evaluations.
+        let mut fleet = fleet_a100_mi250();
+        let hit = TuningSession::new(&space, &w)
+            .strategy(strat)
+            .seed(7)
+            .cache(&mut cache)
+            .fleet(&mut fleet)
+            .run()
+            .and_then(SessionOutcome::into_fleet)
+            .unwrap();
+        assert!(hit.from_cache);
+        assert!(hit.outcomes.iter().all(|(_, o)| o.from_cache && o.evaluated == 0));
+    }
+
+    #[test]
+    fn fleet_partial_hit_with_shared_trajectory_retunes_everything() {
+        // Exhaustive/random share one measure-everywhere pass; a
+        // partial hit cannot skip a platform, so the whole fleet
+        // re-tunes (and the result matches a cold run bit-for-bit).
+        let w = Workload::llama3_attention(8, 1024);
+        let space = spaces::attention_sim_space();
+        let mut cache = TuningCache::ephemeral();
+        let mut fleet = fleet_a100_mi250();
+        let cold = TuningSession::new(&space, &w)
+            .cache(&mut cache)
+            .fleet(&mut fleet)
+            .run()
+            .and_then(SessionOutcome::into_fleet)
+            .unwrap();
+        cache.invalidate_platform(&cold.outcomes[0].0);
+        let mut fleet = fleet_a100_mi250();
+        let partial = TuningSession::new(&space, &w)
+            .cache(&mut cache)
+            .fleet(&mut fleet)
+            .run()
+            .and_then(SessionOutcome::into_fleet)
+            .unwrap();
+        assert!(!partial.from_cache);
+        for ((p1, o1), (p2, o2)) in cold.outcomes.iter().zip(&partial.outcomes) {
+            assert_eq!(p1, p2);
+            assert!(!o2.from_cache, "{p2}: shared trajectory re-tunes every platform");
+            assert_eq!(o1.best, o2.best);
+            assert_eq!(o1.evaluated, o2.evaluated);
+        }
+    }
+}

@@ -35,8 +35,8 @@ pub struct CacheEntry {
     pub invalid: usize,
     /// Platform fingerprint the result is valid for.
     pub platform: String,
-    /// Configuration-space fingerprint.  [`crate::autotuner::tune_cached`]
-    /// writes [`crate::config::ConfigSpace::fingerprint_key`]
+    /// Configuration-space fingerprint.  A cached tuning session
+    /// ([`crate::autotuner::TuningSession::cache`]) writes [`crate::config::ConfigSpace::fingerprint_key`]
     /// (`name#<fnv1a-64 of name, params, choices, constraint names>`),
     /// so edits to parameters or choices invalidate the entry, not just
     /// cardinality changes.  Constraint bodies are closures and cannot

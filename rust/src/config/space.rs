@@ -221,7 +221,8 @@ impl ConfigSpace {
 
     /// Stable 64-bit fingerprint of the space *definition*: name,
     /// parameters with their choice lists, and constraint names.  Used
-    /// by [`crate::autotuner::tune_cached`] as the cache's space
+    /// by cached tuning sessions ([`crate::autotuner::TuningSession::cache`])
+    /// as the cache's space
     /// component — any edit to the space (not just a cardinality
     /// change) invalidates persisted results.
     pub fn fingerprint(&self) -> u64 {

@@ -9,13 +9,31 @@
 //! - **cache reuse** (Q4.3): evaluations saved by the déjà-vu cache
 //!   across repeated deployments.
 
-use crate::autotuner::{self, SimEvaluator, Strategy};
+use crate::autotuner::{SessionOutcome, SimEvaluator, Strategy, TuneOutcome, TuningSession};
 use crate::cache::TuningCache;
 use crate::config::spaces;
 use crate::kernels::baselines::{triton_codegen, HAND_TUNED};
 use crate::platform::SimGpu;
 use crate::report::Report;
 use crate::workload::Workload;
+
+/// One solo builder run (the ablations never use cache or budget here,
+/// so the spelling is short enough to share).
+fn run_tune(
+    space: &crate::config::ConfigSpace,
+    w: &Workload,
+    eval: &mut SimEvaluator,
+    strategy: Strategy,
+    seed: u64,
+) -> TuneOutcome {
+    TuningSession::new(space, w)
+        .strategy(strategy)
+        .seed(seed)
+        .evaluator(eval)
+        .run()
+        .and_then(SessionOutcome::into_solo)
+        .expect("ablation spaces are non-empty")
+}
 
 /// Strategy-quality ablation over several workloads.
 pub fn search_strategies() -> Report {
@@ -33,7 +51,7 @@ pub fn search_strategies() -> Report {
     ] {
         let cg = triton_codegen(gpu.spec.vendor);
         let mut eval = SimEvaluator::new(gpu.clone(), w, cg);
-        let exhaustive = autotuner::tune(&space, &w, &mut eval, &Strategy::Exhaustive, 0).unwrap();
+        let exhaustive = run_tune(&space, &w, &mut eval, Strategy::Exhaustive, 0);
         for strat in [
             Strategy::Exhaustive,
             Strategy::Random { budget: 50 },
@@ -42,7 +60,7 @@ pub fn search_strategies() -> Report {
             Strategy::Anneal { budget: 150, t0: 2.0, alpha: 0.95 },
             Strategy::SuccessiveHalving { initial: 64, eta: 2 },
         ] {
-            let out = autotuner::tune(&space, &w, &mut eval, &strat, 7).unwrap();
+            let out = run_tune(&space, &w, &mut eval, strat.clone(), 7);
             rep.row(vec![
                 w.key(),
                 strat.label(),
@@ -68,10 +86,15 @@ pub fn guided_pruning() -> Report {
     for w in [Workload::llama3_attention(1, 512), Workload::llama3_attention(64, 2048)] {
         let cg = triton_codegen(gpu.spec.vendor);
         let mut target = SimEvaluator::new(gpu.clone(), w, cg);
-        let exhaustive = autotuner::tune(&space, &w, &mut target, &Strategy::Exhaustive, 0).unwrap();
+        let exhaustive = run_tune(&space, &w, &mut target, Strategy::Exhaustive, 0);
         for top_k in [5usize, 10, 20, 50] {
             let mut prior = SimEvaluator::new(gpu.clone(), w, HAND_TUNED);
-            let out = autotuner::tune_guided(&space, &w, &mut prior, &mut target, top_k).unwrap();
+            let out = TuningSession::new(&space, &w)
+                .guided(&mut prior, top_k)
+                .evaluator(&mut target)
+                .run()
+                .and_then(SessionOutcome::into_solo)
+                .unwrap();
             rep.row(vec![
                 w.key(),
                 top_k.to_string(),
@@ -98,9 +121,12 @@ pub fn cache_reuse() -> Report {
     for deployment in 1..=3 {
         let cg = triton_codegen(gpu.spec.vendor);
         let mut eval = SimEvaluator::new(gpu.clone(), w, cg);
-        let out =
-            autotuner::tune_cached(&mut cache, &space, &w, &mut eval, &Strategy::Exhaustive, 0)
-                .unwrap();
+        let out = TuningSession::new(&space, &w)
+            .cache(&mut cache)
+            .evaluator(&mut eval)
+            .run()
+            .and_then(SessionOutcome::into_solo)
+            .unwrap();
         rep.row(vec![
             format!("run{deployment}"),
             out.from_cache.to_string(),

@@ -13,7 +13,7 @@
 //! (deeper staging in 228 KiB smem) immediately.
 
 use super::{BATCH_SWEEP, SEQLEN_SWEEP};
-use crate::autotuner::{self, SimEvaluator, Strategy};
+use crate::autotuner::{SessionOutcome, SimEvaluator, TuningSession};
 use crate::config::spaces;
 use crate::kernels::baselines::{Codegen, TemplateLibrary};
 use crate::platform::SimGpu;
@@ -36,7 +36,11 @@ pub fn day0_point(w: &Workload) -> Option<(f64, f64)> {
     let cfg = lib.dispatch(&h100, w)?;
     let lib_us = h100.attention_latency_us(&cfg, w, &AMPERE_BINARY_ON_HOPPER).ok()?;
     let mut eval = SimEvaluator::new(h100, *w, TRITON_HOPPER);
-    let tuned = autotuner::tune(&spaces::attention_sim_space(), w, &mut eval, &Strategy::Exhaustive, 0)?;
+    let space = spaces::attention_sim_space();
+    let tuned = TuningSession::new(&space, w)
+        .evaluator(&mut eval)
+        .run()
+        .and_then(SessionOutcome::into_solo)?;
     Some((lib_us, tuned.best_latency_us))
 }
 

@@ -24,7 +24,7 @@ pub mod fig5;
 pub mod hopper;
 pub mod tables;
 
-use crate::autotuner::{self, SimEvaluator, Strategy};
+use crate::autotuner::{SessionOutcome, SimEvaluator, TuningSession};
 use crate::config::{spaces, Config};
 use crate::kernels::baselines::{triton_codegen, HAND_TUNED};
 use crate::platform::{PlatformId, SimGpu};
@@ -48,7 +48,11 @@ pub fn fig1_workload() -> Workload {
 pub fn tune_triton_attention(gpu: &SimGpu, w: &Workload) -> Option<(f64, Config, usize, usize)> {
     let space = spaces::attention_sim_space();
     let mut eval = SimEvaluator::new(gpu.clone(), *w, triton_codegen(gpu.spec.vendor));
-    let out = autotuner::tune(&space, w, &mut eval, &Strategy::Exhaustive, 0)?;
+    // Builder defaults are exactly this experiment: exhaustive, seed 0.
+    let out = TuningSession::new(&space, w)
+        .evaluator(&mut eval)
+        .run()
+        .and_then(SessionOutcome::into_solo)?;
     Some((out.best_latency_us, out.best, out.evaluated, out.invalid))
 }
 
@@ -56,7 +60,10 @@ pub fn tune_triton_attention(gpu: &SimGpu, w: &Workload) -> Option<(f64, Config,
 pub fn tune_triton_rms(gpu: &SimGpu, w: &Workload) -> Option<(f64, Config)> {
     let space = spaces::rms_sim_space();
     let mut eval = SimEvaluator::new(gpu.clone(), *w, triton_codegen(gpu.spec.vendor));
-    let out = autotuner::tune(&space, w, &mut eval, &Strategy::Exhaustive, 0)?;
+    let out = TuningSession::new(&space, w)
+        .evaluator(&mut eval)
+        .run()
+        .and_then(SessionOutcome::into_solo)?;
     Some((out.best_latency_us, out.best))
 }
 

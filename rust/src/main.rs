@@ -14,8 +14,12 @@ use anyhow::{anyhow, Result};
 
 #[cfg(feature = "pjrt")]
 use portatune::autotuner::PjrtEvaluator;
-use portatune::autotuner::{self, MultiDeviceEvaluator, SimEvaluator, Strategy};
+use portatune::autotuner::{
+    Budget, EvalRecord, MultiDeviceEvaluator, Observer, SessionOutcome, SimEvaluator, Strategy,
+    TuningSession,
+};
 use portatune::cache::TuningCache;
+use portatune::config::Config;
 use portatune::codegen::hlo;
 use portatune::config::spaces;
 use portatune::experiments;
@@ -44,11 +48,55 @@ USAGE:
                   [--fleet P1,P2,...]  (measure every config on every listed
                                         platform; per-platform winners +
                                         portability table; sim platforms only)
+                  [--max-evals N | --wall-secs S]  (session budget: cap ANY
+                                        strategy, exhaustive included)
+                  [--progress]    (stream evaluations/new bests as they happen)
   portatune serve [--requests N] [--seed N] [--no-tuning]
   portatune analyze kernels
   portatune analyze hlo <path>
   portatune cache <show|clear> [--file F]
 ";
+
+/// `--progress`: an [`Observer`] streaming tuning events to stderr (so
+/// piped stdout still carries only the report tables).
+#[derive(Default)]
+struct Progress {
+    evals: usize,
+}
+
+impl Observer for Progress {
+    fn on_eval(&mut self, _record: &EvalRecord) {
+        self.evals += 1;
+    }
+
+    fn on_new_best(&mut self, config: &Config, latency_us: f64) {
+        eprintln!("  [eval {:>5}] new best {config} @ {latency_us:.2} us", self.evals);
+    }
+
+    fn on_rung(&mut self, fidelity: f64, pool: usize) {
+        eprintln!("  [eval {:>5}] sha rung: {pool} configs @ fidelity {fidelity:.3}", self.evals);
+    }
+
+    fn on_platform(&mut self, platform: &str) {
+        eprintln!("  [eval {:>5}] tuning platform {platform}", self.evals);
+    }
+}
+
+/// `--max-evals N` / `--wall-secs S` → the session [`Budget`].
+fn parse_budget(args: &Args) -> Result<Option<Budget>> {
+    match (args.flag("max-evals"), args.flag("wall-secs")) {
+        (Some(_), Some(_)) => {
+            Err(anyhow!("--max-evals and --wall-secs are mutually exclusive"))
+        }
+        (Some(n), None) => Ok(Some(Budget::Evals(
+            n.parse().map_err(|e| anyhow!("--max-evals: {e}"))?,
+        ))),
+        (None, Some(s)) => Ok(Some(Budget::WallSecs(
+            s.parse().map_err(|e| anyhow!("--wall-secs: {e}"))?,
+        ))),
+        (None, None) => Ok(None),
+    }
+}
 
 fn parse_strategy(name: &str, budget: usize) -> Result<Strategy> {
     Ok(match name {
@@ -162,7 +210,21 @@ fn cmd_tune_fleet(args: &Args, fleet_spec: &str) -> Result<()> {
         Some(p) => TuningCache::open(p)?,
         None => TuningCache::ephemeral(),
     };
-    let out = autotuner::tune_fleet_cached(&mut cache, &space, &w, &mut fleet, &strat, seed)
+    let mut progress = Progress::default();
+    let mut session = TuningSession::new(&space, &w)
+        .strategy(strat.clone())
+        .seed(seed)
+        .cache(&mut cache);
+    if let Some(b) = parse_budget(args)? {
+        session = session.budget(b);
+    }
+    if args.has("progress") {
+        session = session.observe(&mut progress);
+    }
+    let out = session
+        .fleet(&mut fleet)
+        .run()
+        .and_then(SessionOutcome::into_fleet)
         .ok_or_else(|| anyhow!("no valid configuration found on every platform"))?;
 
     println!("workload      : {}", w.key());
@@ -173,7 +235,7 @@ fn cmd_tune_fleet(args: &Args, fleet_spec: &str) -> Result<()> {
 
     let mut winners = Report::new(
         "fleet tuning — per-platform winners",
-        &["platform", "best config", "best_us", "evaluated", "invalid", "spread"],
+        &["platform", "best config", "best_us", "evaluated", "invalid", "spread", "cached"],
     );
     winners.note(format!(
         "{} distinct winner(s) across {} platform(s){}",
@@ -193,6 +255,7 @@ fn cmd_tune_fleet(args: &Args, fleet_spec: &str) -> Result<()> {
             o.evaluated.to_string(),
             o.invalid.to_string(),
             o.spread().map(|s| format!("{s:.1}x")).unwrap_or_else(|| "-".into()),
+            o.from_cache.to_string(),
         ]);
     }
     println!("{}", winners.to_markdown());
@@ -250,6 +313,30 @@ fn cmd_tune_fleet(args: &Args, fleet_spec: &str) -> Result<()> {
     Ok(())
 }
 
+/// One solo tuning run through the builder: cache always attached,
+/// budget and progress observer when the flags ask for them.
+#[allow(clippy::too_many_arguments)]
+fn run_session(
+    space: &portatune::config::ConfigSpace,
+    w: &Workload,
+    cache: &mut TuningCache,
+    strat: &Strategy,
+    seed: u64,
+    budget: Option<Budget>,
+    progress: Option<&mut Progress>,
+    eval: &mut dyn portatune::autotuner::Evaluator,
+) -> Option<portatune::autotuner::TuneOutcome> {
+    let mut session =
+        TuningSession::new(space, w).strategy(strat.clone()).seed(seed).cache(cache);
+    if let Some(b) = budget {
+        session = session.budget(b);
+    }
+    if let Some(p) = progress {
+        session = session.observe(p);
+    }
+    session.evaluator(eval).run().and_then(SessionOutcome::into_solo)
+}
+
 fn cmd_tune(args: &Args) -> Result<()> {
     if let Some(fleet_spec) = args.flag("fleet") {
         return cmd_tune_fleet(args, fleet_spec);
@@ -267,6 +354,9 @@ fn cmd_tune(args: &Args) -> Result<()> {
         Some(p) => TuningCache::open(p)?,
         None => TuningCache::ephemeral(),
     };
+    let budget = parse_budget(args)?;
+    let show_progress = args.has("progress");
+    let mut progress = Progress::default();
 
     // Filled by the multi-device path: one line per device.
     let mut device_report: Vec<String> = Vec::new();
@@ -283,7 +373,16 @@ fn cmd_tune(args: &Args) -> Result<()> {
             let engine = Engine::cpu()?;
             let manifest = Manifest::load_default()?;
             let mut eval = PjrtEvaluator::new(&engine, &manifest, w, 1, 5)?;
-            autotuner::tune_cached(&mut cache, &space, &w, &mut eval, &strat, seed)
+            run_session(
+                &space,
+                &w,
+                &mut cache,
+                &strat,
+                seed,
+                budget,
+                show_progress.then_some(&mut progress),
+                &mut eval,
+            )
         }
         #[cfg(not(feature = "pjrt"))]
         PlatformId::CpuPjrt => {
@@ -303,11 +402,21 @@ fn cmd_tune(args: &Args) -> Result<()> {
             if devices > 1 {
                 // Shard every evaluation batch across a fleet of
                 // simulated device replicas; results are bit-identical
-                // to a single device, only faster.
+                // to a single device, only faster.  (Built here rather
+                // than through `.devices(n)` so the utilization
+                // counters stay reachable after the run.)
                 let mut eval =
                     MultiDeviceEvaluator::replicate(&SimEvaluator::new(gpu, w, cg), devices);
-                let outcome =
-                    autotuner::tune_cached(&mut cache, &space, &w, &mut eval, &strat, seed);
+                let outcome = run_session(
+                    &space,
+                    &w,
+                    &mut cache,
+                    &strat,
+                    seed,
+                    budget,
+                    show_progress.then_some(&mut progress),
+                    &mut eval,
+                );
                 // Utilization is only meaningful when the devices
                 // actually ran (a cache hit performs zero evaluations).
                 if outcome.as_ref().map(|o| !o.from_cache).unwrap_or(false) {
@@ -331,7 +440,16 @@ fn cmd_tune(args: &Args) -> Result<()> {
                 outcome
             } else {
                 let mut eval = SimEvaluator::new(gpu, w, cg);
-                autotuner::tune_cached(&mut cache, &space, &w, &mut eval, &strat, seed)
+                run_session(
+                    &space,
+                    &w,
+                    &mut cache,
+                    &strat,
+                    seed,
+                    budget,
+                    show_progress.then_some(&mut progress),
+                    &mut eval,
+                )
             }
         }
     }
@@ -515,8 +633,11 @@ fn main() -> Result<()> {
             cmd_bench(&args)
         }
         "tune" => {
-            let args = Args::parse(rest, &[])?;
-            args.ensure_known(&["kernel", "platform", "batch", "seq", "strategy", "budget", "cache", "seed", "space", "devices", "fleet"])?;
+            let args = Args::parse(rest, &["progress"])?;
+            args.ensure_known(&[
+                "kernel", "platform", "batch", "seq", "strategy", "budget", "cache", "seed",
+                "space", "devices", "fleet", "max-evals", "wall-secs", "progress",
+            ])?;
             cmd_tune(&args)
         }
         "serve" => {

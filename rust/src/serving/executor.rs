@@ -16,6 +16,12 @@
 //! and memoized per shape, so the executor thread spends its idle
 //! slices measuring instead of filling buffers.  The PJRT work itself
 //! stays on this thread (PJRT handles are not `Send`).
+//!
+//! Measurement bookkeeping goes through the autotuner's own
+//! [`Recorder`] (one per bucket, fidelity 1.0): winner selection is
+//! `Recorder::best`, failed measurements are counted as invalid like
+//! any other platform-rejected config, and the stats snapshot reads the
+//! recorder instead of duplicating per-variant latency fields.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
@@ -23,8 +29,10 @@ use std::time::{Duration, Instant};
 
 use super::batcher::Batch;
 use super::Completion;
+use crate::autotuner::search::Recorder;
 use crate::cache::{entry_now, TuningCache};
 use crate::config::Config;
+use crate::platform::model::InvalidConfig;
 use crate::runtime::{Engine, Executable, Manifest, TensorF32};
 use crate::workload::{DType, Workload};
 use crate::Result;
@@ -52,12 +60,18 @@ pub enum ExecutorCommand {
     Shutdown,
 }
 
-/// One kernel-config variant of a compiled model shape.
+/// One kernel-config variant of a compiled model shape.  Measurement
+/// results are NOT stored here: each bucket's measurements live in its
+/// [`Recorder`] — the same fidelity-correct log every autotuner
+/// strategy records through — so winner selection, gain computation and
+/// the stats snapshot all read one source of truth instead of ad-hoc
+/// per-variant fields.
 struct Variant {
     artifact_id: String,
+    /// Kernel config parsed from the artifact id (the recorder key).
+    config: Config,
     path: std::path::PathBuf,
     exe: Option<Executable>,
-    measured_us: Option<f64>,
 }
 
 /// A record of the executor swapping a bucket's active variant.
@@ -101,6 +115,10 @@ struct ExecutorState {
     variants: HashMap<ShapeKey, Vec<Variant>>,
     active: HashMap<ShapeKey, usize>,
     tune_queue: Vec<(ShapeKey, usize)>,
+    /// Per-bucket measurement log (the autotuner's [`Recorder`], at
+    /// fidelity 1.0): `best()` picks the winner, failed measurements
+    /// count as invalid instead of silently blocking the bucket.
+    bucket_recs: HashMap<ShapeKey, Recorder<'static>>,
     /// Weights uploaded ONCE as device buffers: the request path only
     /// moves activations (§Perf L3 — this was the dominant cost before).
     weights: Vec<xla::PjRtBuffer>,
@@ -151,10 +169,7 @@ impl ExecutorState {
             let w = self.bucket_workload(key);
             let Some(hit) = cache.get(&w, &platform, Self::CACHE_SPACE) else { continue };
             let Some(cfg) = hit.config() else { continue };
-            if let Some(idx) = self.variants[&key]
-                .iter()
-                .position(|v| variant_config_matches(&v.artifact_id, &cfg))
-            {
+            if let Some(idx) = self.variants[&key].iter().position(|v| v.config == cfg) {
                 self.active.insert(key, idx);
                 warmed += 1;
             }
@@ -182,7 +197,7 @@ impl ExecutorState {
     /// Persist a freshly proven bucket winner (Q4.3).
     fn persist_winner(&mut self, key: ShapeKey, idx: usize, measured_us: f64, evaluated: usize) {
         let w = self.bucket_workload(key);
-        let cfg = variant_config(&self.variants[&key][idx].artifact_id);
+        let cfg = self.variants[&key][idx].config.clone();
         if let Some(cache) = &mut self.cache {
             cache.put(
                 &w,
@@ -217,9 +232,9 @@ impl ExecutorState {
             let (Some(batch), Some(seq)) = (a.workload.batch, a.workload.seq_len) else { continue };
             variants.entry((batch, seq)).or_default().push(Variant {
                 artifact_id: a.id.clone(),
+                config: variant_config(&a.id),
                 path: manifest.root.join(&a.path),
                 exe: None,
-                measured_us: None,
             });
         }
         let tune_queue: Vec<(ShapeKey, usize)> = variants
@@ -233,6 +248,7 @@ impl ExecutorState {
             variants,
             active,
             tune_queue,
+            bucket_recs: HashMap::new(),
             weights,
             stats: ExecutorStats::default(),
             tune_warmup: 1,
@@ -331,6 +347,60 @@ impl ExecutorState {
         }
     }
 
+    /// Fold one measurement result (success or failure) into the
+    /// bucket's recorder and activate the winner if the bucket is now
+    /// fully measured.  Recording failures as invalid — the same way
+    /// every autotuner strategy counts invalid configs — is what lets a
+    /// bucket with one broken variant still activate its best working
+    /// one (previously a single failed measurement blocked the bucket's
+    /// swap forever).
+    fn record_measurement(&mut self, key: ShapeKey, idx: usize, res: Result<f64>) {
+        let cfg = self.variants[&key][idx].config.clone();
+        let res = res.map_err(|e| InvalidConfig { reason: e.to_string() });
+        if res.is_ok() {
+            self.stats.variants_measured += 1;
+        }
+        self.bucket_recs.entry(key).or_default().record(&cfg, res, 1.0);
+        self.try_activate(key);
+    }
+
+    /// If every variant of `key`'s bucket has been measured (or failed),
+    /// activate the fastest valid variant, record the swap, and persist
+    /// the winner to the tuning cache (Q4.3).
+    fn try_activate(&mut self, key: ShapeKey) {
+        let vs = &self.variants[&key];
+        let Some(rec) = self.bucket_recs.get(&key) else { return };
+        if rec.len() < vs.len() {
+            return; // bucket not fully measured yet
+        }
+        let Some((best_cfg, best_us)) = rec.best() else {
+            return; // every variant failed to measure: nothing to swap
+        };
+        let latencies = rec.full_fidelity_latencies();
+        let Some(best) = vs.iter().position(|v| v.config == best_cfg) else { return };
+        let cur = self.active[&key];
+        if best != cur {
+            // Gain versus the incumbent; infinite headroom when the
+            // incumbent itself failed to measure.
+            let gain = latencies
+                .get(&vs[cur].config.fingerprint())
+                .map(|c| c / best_us)
+                .unwrap_or(f64::INFINITY);
+            self.stats.swaps.push(SwapEvent {
+                shape: key,
+                from: vs[cur].artifact_id.clone(),
+                to: vs[best].artifact_id.clone(),
+                gain,
+            });
+            self.active.insert(key, best);
+        }
+        let shape_name = format!("b{}s{}", key.0, key.1);
+        let (best_id, n) = (vs[best].artifact_id.clone(), vs.len());
+        self.stats.active.insert(shape_name.clone(), best_id);
+        self.stats.active_us.insert(shape_name, best_us);
+        self.persist_winner(key, best, best_us, n);
+    }
+
     /// Run ONE background tuning measurement. Returns false when the
     /// queue is exhausted.
     fn tune_step(&mut self) -> bool {
@@ -341,8 +411,11 @@ impl ExecutorState {
             self.tune_inputs.clear();
             return false;
         };
-        if self.ensure_compiled(key, idx).is_err() {
-            return true; // skip uncompilable variant, keep tuning
+        if let Err(e) = self.ensure_compiled(key, idx) {
+            // Uncompilable variant: count it as invalid so the bucket
+            // can still complete, keep tuning.
+            self.record_measurement(key, idx, Err(e));
+            return true;
         }
         let hidden = self.hidden;
         if !self.tune_inputs.contains_key(&key) {
@@ -350,47 +423,21 @@ impl ExecutorState {
             self.tune_inputs.insert(key, TensorF32::random(&[key.0, key.1, hidden], 0xEE));
         }
         let x = &self.tune_inputs[&key];
-        let Ok(x_buf) = self.engine.upload(x) else { return true };
+        let x_buf = match self.engine.upload(x) {
+            Ok(buf) => buf,
+            Err(e) => {
+                self.record_measurement(key, idx, Err(e));
+                return true;
+            }
+        };
         let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.weights.len());
         args.push(&x_buf);
         args.extend(self.weights.iter());
         let (warmup, iters) = (self.tune_warmup, self.tune_iters);
         let v = &self.variants[&key][idx];
         let exe = v.exe.as_ref().unwrap();
-        let measured = exe.time_us_buffers(&args, warmup, iters).ok();
-        let v = &mut self.variants.get_mut(&key).unwrap()[idx];
-        if let Some(us) = measured {
-            v.measured_us = Some(us);
-            self.stats.variants_measured += 1;
-        }
-        // If the whole bucket is measured, activate the fastest variant
-        // and persist the winner to the tuning cache (Q4.3).
-        let vs = &self.variants[&key];
-        if vs.iter().all(|v| v.measured_us.is_some()) {
-            let best = vs
-                .iter()
-                .enumerate()
-                .min_by(|a, b| a.1.measured_us.unwrap().total_cmp(&b.1.measured_us.unwrap()))
-                .map(|(i, _)| i)
-                .unwrap();
-            let cur = self.active[&key];
-            if best != cur {
-                let gain = vs[cur].measured_us.unwrap() / vs[best].measured_us.unwrap();
-                self.stats.swaps.push(SwapEvent {
-                    shape: key,
-                    from: vs[cur].artifact_id.clone(),
-                    to: vs[best].artifact_id.clone(),
-                    gain,
-                });
-                self.active.insert(key, best);
-            }
-            let shape_name = format!("b{}s{}", key.0, key.1);
-            let (best_id, best_us, n) =
-                (vs[best].artifact_id.clone(), vs[best].measured_us.unwrap(), vs.len());
-            self.stats.active.insert(shape_name.clone(), best_id);
-            self.stats.active_us.insert(shape_name, best_us);
-            self.persist_winner(key, best, best_us, n);
-        }
+        let measured = exe.time_us_buffers(&args, warmup, iters);
+        self.record_measurement(key, idx, measured);
         // Drop the memoized input once its shape has no queued
         // measurements left (the whole map is cleared on exhaustion).
         if !self.tune_queue.iter().any(|(k, _)| *k == key) {
@@ -405,7 +452,19 @@ impl ExecutorState {
             let idx = self.active[key];
             let name = format!("b{}s{}", key.0, key.1);
             s.active.insert(name.clone(), vs[idx].artifact_id.clone());
-            if let Some(us) = vs[idx].measured_us {
+            // Latest full-fidelity measurement of the active variant: a
+            // reverse scan of the bucket's (small) log, instead of
+            // materializing a whole fingerprint→latency map per bucket
+            // on every Stats command.
+            let fp = vs[idx].config.fingerprint();
+            let measured = self.bucket_recs.get(key).and_then(|r| {
+                r.evals
+                    .iter()
+                    .rev()
+                    .find(|e| e.fingerprint == fp && e.is_full_fidelity())
+                    .and_then(|e| e.latency_us)
+            });
+            if let Some(us) = measured {
                 s.active_us.insert(name, us);
             }
         }
@@ -429,10 +488,6 @@ fn variant_config(artifact_id: &str) -> Config {
         }
     }
     cfg
-}
-
-fn variant_config_matches(artifact_id: &str, cfg: &Config) -> bool {
-    &variant_config(artifact_id) == cfg
 }
 
 /// Handle to the executor thread.

@@ -1,23 +1,33 @@
-//! Parallel/sequential equivalence contract for the batched autotuner.
+//! Equivalence contracts for the batched autotuner.
 //!
-//! The tentpole guarantee of the parallel evaluation engine: every
-//! parallel path — per-batch scoped threads, the persistent worker
-//! pool, and the sharded multi-device fleet — must produce, for every
-//! strategy and seed, exactly the outcome the sequential evaluator
-//! produces: same best config, same invalid count, same evaluation log
-//! (fingerprints, latencies AND fidelities, bitwise).  Results are
-//! merged in submission order, so any divergence here is a real bug,
-//! not scheduling noise.
+//! Two families of guarantees are pinned here, both bit-exact (same
+//! best config, same invalid count, same evaluation log — fingerprints,
+//! latencies AND fidelities):
 //!
-//! The fleet ("measure everywhere") mode extends the contract across
-//! platforms: tuning a heterogeneous fleet must give each platform
-//! exactly the outcome of tuning that platform alone with a sequential
-//! evaluator — however many replicas the fleet has and however its
-//! batches were sharded.
+//! 1. **Engine equivalence** (PR 1–3): every parallel evaluation path —
+//!    per-batch scoped threads, the persistent worker pool, and the
+//!    sharded multi-device fleet — produces, for every strategy and
+//!    seed, exactly the outcome the sequential evaluator produces.
+//!    The fleet ("measure everywhere") mode extends this across
+//!    platforms: tuning a heterogeneous fleet gives each platform
+//!    exactly the outcome of tuning it alone.
+//!
+//! 2. **API equivalence** (the `TuningSession` redesign): every legacy
+//!    `tune*` entry point and its builder spelling produce identical
+//!    outcomes per strategy × seed — solo, guided, cached, fleet and
+//!    fleet-cached — so the deprecated wrappers really are thin
+//!    delegates.  The calls to the deprecated functions in this file
+//!    are the *sanctioned* exceptions to the `-D deprecated` CI check,
+//!    each under a scoped `#[allow(deprecated)]`.
+//!
+//! Plus the [`Budget`] contract: `Budget::Evals` runs are deterministic
+//! per seed and are exact prefixes of the uncapped history.
 
 use portatune::autotuner::{
-    self, Evaluator, MultiDeviceEvaluator, SimEvaluator, Strategy, TuneOutcome,
+    self, Budget, Evaluator, MultiDeviceEvaluator, SessionOutcome, SimEvaluator, Strategy,
+    TuneOutcome, TuningSession,
 };
+use portatune::autotuner::FleetOutcome;
 use portatune::cache::TuningCache;
 use portatune::config::spaces;
 use portatune::kernels::baselines::{HAND_TUNED, TRITON_NVIDIA};
@@ -34,6 +44,23 @@ enum Mode {
     MultiDevice,
 }
 
+/// Builder spelling of a plain solo tune.
+fn builder_solo(
+    space: &portatune::config::ConfigSpace,
+    w: &Workload,
+    eval: &mut dyn Evaluator,
+    strat: &Strategy,
+    seed: u64,
+) -> TuneOutcome {
+    TuningSession::new(space, w)
+        .strategy(strat.clone())
+        .seed(seed)
+        .evaluator(eval)
+        .run()
+        .and_then(SessionOutcome::into_solo)
+        .expect("space is non-empty")
+}
+
 fn run(mode: Mode, strat: &Strategy, seed: u64) -> TuneOutcome {
     let w = Workload::llama3_attention(8, 1024);
     let space = spaces::attention_sim_space();
@@ -44,7 +71,7 @@ fn run(mode: Mode, strat: &Strategy, seed: u64) -> TuneOutcome {
         Mode::Pool => Box::new(base),
         Mode::MultiDevice => Box::new(MultiDeviceEvaluator::replicate(&base, 3)),
     };
-    autotuner::tune(&space, &w, eval.as_mut(), strat, seed).expect("space is non-empty")
+    builder_solo(&space, &w, eval.as_mut(), strat, seed)
 }
 
 fn all_strategies() -> Vec<Strategy> {
@@ -85,6 +112,25 @@ fn assert_same_outcome(seq: &TuneOutcome, other: &TuneOutcome, label: &str) {
     }
 }
 
+/// Fleet-outcome equality: per-platform outcomes, winner count and the
+/// portable pick.
+fn assert_same_fleet(a: &FleetOutcome, b: &FleetOutcome, label: &str) {
+    assert_eq!(a.outcomes.len(), b.outcomes.len(), "{label}: platform count differs");
+    for ((p1, o1), (p2, o2)) in a.outcomes.iter().zip(&b.outcomes) {
+        assert_eq!(p1, p2, "{label}: platform order differs");
+        assert_same_outcome(o1, o2, &format!("{label} {p1}"));
+    }
+    assert_eq!(a.distinct_winners, b.distinct_winners, "{label}: winner count differs");
+    match (&a.portable, &b.portable) {
+        (Some(x), Some(y)) => {
+            assert_eq!(x.config, y.config, "{label}: portable pick differs");
+            assert_eq!(x.worst_slowdown.to_bits(), y.worst_slowdown.to_bits());
+        }
+        (None, None) => {}
+        _ => panic!("{label}: portable-best presence differs"),
+    }
+}
+
 #[test]
 fn same_seed_same_outcome_for_every_strategy_and_engine() {
     for strat in all_strategies() {
@@ -97,6 +143,254 @@ fn same_seed_same_outcome_for_every_strategy_and_engine() {
         }
     }
 }
+
+// ---------------------------------------------------------------------
+// API equivalence: legacy entry points vs their builder spellings.
+// The `#[allow(deprecated)]` markers below are the only sanctioned
+// uses of the legacy API in the tree (CI builds with `-D deprecated`).
+// ---------------------------------------------------------------------
+
+#[test]
+fn legacy_tune_matches_builder_for_every_strategy_and_seed() {
+    let w = Workload::llama3_attention(8, 1024);
+    let space = spaces::attention_sim_space();
+    for strat in all_strategies() {
+        for seed in [0u64, 7] {
+            let mut eval = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
+            #[allow(deprecated)]
+            let legacy = autotuner::tune(&space, &w, &mut eval, &strat, seed).unwrap();
+            let builder = builder_solo(&space, &w, &mut eval, &strat, seed);
+            assert_same_outcome(&legacy, &builder, &format!("legacy tune {strat:?} seed {seed}"));
+        }
+    }
+}
+
+#[test]
+fn legacy_tune_guided_matches_builder() {
+    let w = Workload::llama3_attention(8, 1024);
+    let space = spaces::attention_sim_space();
+    for top_k in [5usize, 25, 100] {
+        let mut prior = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
+        let mut target = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
+        #[allow(deprecated)]
+        let legacy = autotuner::tune_guided(&space, &w, &mut prior, &mut target, top_k).unwrap();
+        let builder = TuningSession::new(&space, &w)
+            .guided(&mut prior, top_k)
+            .evaluator(&mut target)
+            .run()
+            .and_then(SessionOutcome::into_solo)
+            .unwrap();
+        assert_same_outcome(&legacy, &builder, &format!("legacy tune_guided k={top_k}"));
+    }
+}
+
+#[test]
+fn legacy_tune_cached_matches_builder() {
+    let w = Workload::llama3_attention(8, 1024);
+    let space = spaces::attention_sim_space();
+    for strat in all_strategies() {
+        let seed = 7;
+        let mut eval = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
+        let mut legacy_cache = TuningCache::ephemeral();
+        let mut builder_cache = TuningCache::ephemeral();
+        #[allow(deprecated)]
+        let legacy =
+            autotuner::tune_cached(&mut legacy_cache, &space, &w, &mut eval, &strat, seed)
+                .unwrap();
+        let builder = TuningSession::new(&space, &w)
+            .strategy(strat.clone())
+            .seed(seed)
+            .cache(&mut builder_cache)
+            .evaluator(&mut eval)
+            .run()
+            .and_then(SessionOutcome::into_solo)
+            .unwrap();
+        assert_same_outcome(&legacy, &builder, &format!("legacy tune_cached {strat:?} (cold)"));
+        assert_eq!(legacy_cache.len(), builder_cache.len(), "{strat:?}: cache sizes differ");
+        // Both spellings hit their own cache identically.
+        #[allow(deprecated)]
+        let legacy_hit =
+            autotuner::tune_cached(&mut legacy_cache, &space, &w, &mut eval, &strat, seed)
+                .unwrap();
+        let builder_hit = TuningSession::new(&space, &w)
+            .strategy(strat.clone())
+            .seed(seed)
+            .cache(&mut builder_cache)
+            .evaluator(&mut eval)
+            .run()
+            .and_then(SessionOutcome::into_solo)
+            .unwrap();
+        assert!(legacy_hit.from_cache && builder_hit.from_cache);
+        assert_eq!(legacy_hit.best, builder_hit.best, "{strat:?}: cache hits differ");
+    }
+}
+
+/// A heterogeneous fleet for the measure-everywhere tests: two a100
+/// replicas + one mi250, each with its vendor's codegen model.
+fn het_fleet(w: Workload) -> MultiDeviceEvaluator {
+    let a100 = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
+    let mi250 = SimEvaluator::new(SimGpu::mi250(), w, portatune::kernels::baselines::TRITON_AMD);
+    MultiDeviceEvaluator::new(vec![a100.clone(), mi250, a100])
+}
+
+/// Builder spelling of a plain fleet tune.
+fn builder_fleet(
+    space: &portatune::config::ConfigSpace,
+    w: &Workload,
+    fleet: &mut MultiDeviceEvaluator,
+    strat: &Strategy,
+    seed: u64,
+) -> FleetOutcome {
+    TuningSession::new(space, w)
+        .strategy(strat.clone())
+        .seed(seed)
+        .fleet(fleet)
+        .run()
+        .and_then(SessionOutcome::into_fleet)
+        .expect("fleet tune must succeed")
+}
+
+#[test]
+fn legacy_tune_fleet_matches_builder_for_every_strategy_and_seed() {
+    let w = Workload::llama3_attention(8, 1024);
+    let space = spaces::attention_sim_space();
+    for strat in all_strategies() {
+        for seed in [0u64, 7] {
+            let mut fleet = het_fleet(w);
+            #[allow(deprecated)]
+            let legacy = autotuner::tune_fleet(&space, &w, &mut fleet, &strat, seed).unwrap();
+            let mut fleet = het_fleet(w);
+            let builder = builder_fleet(&space, &w, &mut fleet, &strat, seed);
+            assert_same_fleet(&legacy, &builder, &format!("legacy tune_fleet {strat:?} {seed}"));
+        }
+    }
+}
+
+#[test]
+fn legacy_tune_fleet_cached_matches_builder() {
+    let w = Workload::llama3_attention(8, 1024);
+    let space = spaces::attention_sim_space();
+    for strat in [Strategy::Exhaustive, Strategy::SuccessiveHalving { initial: 32, eta: 2 }] {
+        let seed = 3;
+        let mut legacy_cache = TuningCache::ephemeral();
+        let mut builder_cache = TuningCache::ephemeral();
+        let mut fleet = het_fleet(w);
+        #[allow(deprecated)]
+        let legacy = autotuner::tune_fleet_cached(
+            &mut legacy_cache,
+            &space,
+            &w,
+            &mut fleet,
+            &strat,
+            seed,
+        )
+        .unwrap();
+        let mut fleet = het_fleet(w);
+        let builder = TuningSession::new(&space, &w)
+            .strategy(strat.clone())
+            .seed(seed)
+            .cache(&mut builder_cache)
+            .fleet(&mut fleet)
+            .run()
+            .and_then(SessionOutcome::into_fleet)
+            .unwrap();
+        assert_same_fleet(&legacy, &builder, &format!("legacy tune_fleet_cached {strat:?} cold"));
+        assert_eq!(legacy_cache.len(), builder_cache.len());
+        // Warm: both spellings serve the whole fleet from cache.
+        let mut fleet = het_fleet(w);
+        #[allow(deprecated)]
+        let legacy_hit = autotuner::tune_fleet_cached(
+            &mut legacy_cache,
+            &space,
+            &w,
+            &mut fleet,
+            &strat,
+            seed,
+        )
+        .unwrap();
+        let mut fleet = het_fleet(w);
+        let builder_hit = TuningSession::new(&space, &w)
+            .strategy(strat.clone())
+            .seed(seed)
+            .cache(&mut builder_cache)
+            .fleet(&mut fleet)
+            .run()
+            .and_then(SessionOutcome::into_fleet)
+            .unwrap();
+        assert!(legacy_hit.from_cache && builder_hit.from_cache, "{strat:?}: warm run must hit");
+        assert_eq!(legacy_hit.distinct_winners, builder_hit.distinct_winners);
+        for ((p1, o1), (p2, o2)) in legacy_hit.outcomes.iter().zip(&builder_hit.outcomes) {
+            assert_eq!(p1, p2);
+            assert_eq!(o1.best, o2.best, "{strat:?} {p1}: cached winners differ");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Budget contract.
+// ---------------------------------------------------------------------
+
+#[test]
+fn budget_evals_is_deterministic_per_seed() {
+    let w = Workload::llama3_attention(8, 1024);
+    let space = spaces::attention_sim_space();
+    for strat in all_strategies() {
+        let capped = |seed: u64| {
+            let mut eval = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
+            TuningSession::new(&space, &w)
+                .strategy(strat.clone())
+                .seed(seed)
+                .budget(Budget::Evals(40))
+                .evaluator(&mut eval)
+                .run()
+                .and_then(SessionOutcome::into_solo)
+        };
+        match (capped(7), capped(7)) {
+            (Some(a), Some(b)) => {
+                assert_same_outcome(&a, &b, &format!("budgeted {strat:?} reruns"));
+                assert!(a.evaluated <= 40, "{strat:?}: budget exceeded ({})", a.evaluated);
+                // And the capped history is an exact prefix of the
+                // uncapped one for the batch-submitting strategies (the
+                // adaptive strategies stop early, which can change
+                // their *later* trajectory, but exhaustive/random order
+                // is budget-independent).
+                if matches!(strat, Strategy::Exhaustive | Strategy::Random { .. }) {
+                    let uncapped = run(Mode::Pool, &strat, 7);
+                    assert_eq!(
+                        a.history[..],
+                        uncapped.history[..a.evaluated],
+                        "{strat:?}: not a prefix"
+                    );
+                }
+            }
+            // A cap can legitimately leave no confirmed full-fidelity
+            // best (e.g. SHA truncated before its confirmation) — but
+            // it must do so deterministically.
+            (None, None) => {}
+            _ => panic!("{strat:?}: budgeted reruns disagree about finding a best"),
+        }
+    }
+}
+
+#[test]
+fn budget_applies_per_platform_on_fleets() {
+    let w = Workload::llama3_attention(8, 1024);
+    let space = spaces::attention_sim_space();
+    let mut fleet = het_fleet(w);
+    let out = TuningSession::new(&space, &w)
+        .budget(Budget::Evals(200))
+        .fleet(&mut fleet)
+        .run()
+        .and_then(SessionOutcome::into_fleet)
+        .expect("200 evals find a valid config on both platforms");
+    for (platform, o) in &out.outcomes {
+        assert_eq!(o.evaluated, 200, "{platform}: the per-platform cap is the whole budget");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Engine equivalence (pool / scoped / fleet), unchanged contracts.
+// ---------------------------------------------------------------------
 
 #[test]
 fn pool_reuse_across_batches_matches_scoped_threads() {
@@ -134,7 +428,7 @@ fn multi_device_fleet_spreads_work_without_changing_results() {
     let space = spaces::attention_sim_space();
     let base = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
     let mut fleet = MultiDeviceEvaluator::replicate(&base, 4);
-    let out = autotuner::tune(&space, &w, &mut fleet, &Strategy::Exhaustive, 0).unwrap();
+    let out = builder_solo(&space, &w, &mut fleet, &Strategy::Exhaustive, 0);
     // `evaluated` counts valid + invalid submissions, exactly what the
     // per-device counters see.
     let counted: usize = fleet.utilization().iter().map(|u| u.evaluated).sum();
@@ -145,14 +439,6 @@ fn multi_device_fleet_spreads_work_without_changing_results() {
         assert!(u.shards > 0, "device {i} processed no shards");
     }
     assert!(fleet.wall_us() > 0.0);
-}
-
-/// A heterogeneous fleet for the measure-everywhere tests: two a100
-/// replicas + one mi250, each with its vendor's codegen model.
-fn het_fleet(w: Workload) -> MultiDeviceEvaluator {
-    let a100 = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
-    let mi250 = SimEvaluator::new(SimGpu::mi250(), w, portatune::kernels::baselines::TRITON_AMD);
-    MultiDeviceEvaluator::new(vec![a100.clone(), mi250, a100])
 }
 
 /// Solo tuning of one fleet platform with a freshly built *sequential*
@@ -170,7 +456,7 @@ fn solo_outcome(platform: &str, strat: &Strategy, seed: u64) -> TuneOutcome {
         assert_eq!(mi250.name(), platform, "unknown fleet platform {platform}");
         mi250
     };
-    autotuner::tune(&space, &w, &mut eval, strat, seed).expect("space is non-empty")
+    builder_solo(&space, &w, &mut eval, strat, seed)
 }
 
 #[test]
@@ -187,8 +473,7 @@ fn fleet_measure_everywhere_is_bit_identical_to_solo_tuning_per_platform() {
     for strat in all_strategies() {
         for seed in [0u64, 7] {
             let mut fleet = het_fleet(w);
-            let out = autotuner::tune_fleet(&space, &w, &mut fleet, &strat, seed)
-                .expect("fleet tune must succeed");
+            let out = builder_fleet(&space, &w, &mut fleet, &strat, seed);
             assert_eq!(out.outcomes.len(), 2, "two distinct platforms");
             for (platform, got) in &out.outcomes {
                 let want = solo_outcome(platform, &strat, seed);
@@ -208,22 +493,9 @@ fn fleet_replicas_shard_platform_copies_without_changing_results() {
     let mi250 = SimEvaluator::new(SimGpu::mi250(), w, portatune::kernels::baselines::TRITON_AMD);
     let mut small = MultiDeviceEvaluator::new(vec![a100.clone(), mi250.clone()]);
     let mut wide = MultiDeviceEvaluator::new(vec![a100.clone(), mi250, a100]);
-    let a = autotuner::tune_fleet(&space, &w, &mut small, &Strategy::Exhaustive, 0).unwrap();
-    let b = autotuner::tune_fleet(&space, &w, &mut wide, &Strategy::Exhaustive, 0).unwrap();
-    assert_eq!(a.outcomes.len(), b.outcomes.len());
-    for ((p1, o1), (p2, o2)) in a.outcomes.iter().zip(&b.outcomes) {
-        assert_eq!(p1, p2);
-        assert_same_outcome(o1, o2, &format!("replica widths for {p1}"));
-    }
-    assert_eq!(a.distinct_winners, b.distinct_winners);
-    match (&a.portable, &b.portable) {
-        (Some(x), Some(y)) => {
-            assert_eq!(x.config, y.config, "portable pick must not depend on replica count");
-            assert_eq!(x.worst_slowdown.to_bits(), y.worst_slowdown.to_bits());
-        }
-        (None, None) => {}
-        _ => panic!("portable-best presence differs with replica count"),
-    }
+    let a = builder_fleet(&space, &w, &mut small, &Strategy::Exhaustive, 0);
+    let b = builder_fleet(&space, &w, &mut wide, &Strategy::Exhaustive, 0);
+    assert_same_fleet(&a, &b, "replica widths");
 }
 
 #[test]
@@ -237,7 +509,12 @@ fn guided_tuning_parallel_prior_matches_sequential() {
             prior = prior.sequential();
             target = target.sequential();
         }
-        autotuner::tune_guided(&space, &w, &mut prior, &mut target, 25).unwrap()
+        TuningSession::new(&space, &w)
+            .guided(&mut prior, 25)
+            .evaluator(&mut target)
+            .run()
+            .and_then(SessionOutcome::into_solo)
+            .unwrap()
     };
     let seq = outcome(false);
     let par = outcome(true);
@@ -268,9 +545,10 @@ fn raw_batch_api_is_order_preserving() {
 
 #[test]
 fn tuning_cache_roundtrip_under_fingerprint_keys() {
-    // tune_cached keys entries by the space-definition fingerprint; a
-    // restart (fresh TuningCache from the same file, fresh space
-    // instance) must hit, and the hit must reproduce the tuned best.
+    // The session keys cache entries by the space-definition
+    // fingerprint; a restart (fresh TuningCache from the same file,
+    // fresh space instance) must hit, and the hit must reproduce the
+    // tuned best.
     let w = Workload::llama3_attention(8, 1024);
     let dir = TempDir::new("equiv-cache").unwrap();
     let path = dir.join("tune_cache.json");
@@ -279,7 +557,11 @@ fn tuning_cache_roundtrip_under_fingerprint_keys() {
         let mut cache = TuningCache::open(&path).unwrap();
         let space = spaces::attention_sim_space();
         let mut eval = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
-        first = autotuner::tune_cached(&mut cache, &space, &w, &mut eval, &Strategy::Exhaustive, 0)
+        first = TuningSession::new(&space, &w)
+            .cache(&mut cache)
+            .evaluator(&mut eval)
+            .run()
+            .and_then(SessionOutcome::into_solo)
             .unwrap();
         assert!(!first.from_cache);
         cache.save().unwrap();
@@ -290,9 +572,12 @@ fn tuning_cache_roundtrip_under_fingerprint_keys() {
         // A fresh space instance fingerprints identically.
         let space = spaces::attention_sim_space();
         let mut eval = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
-        let second =
-            autotuner::tune_cached(&mut cache, &space, &w, &mut eval, &Strategy::Exhaustive, 0)
-                .unwrap();
+        let second = TuningSession::new(&space, &w)
+            .cache(&mut cache)
+            .evaluator(&mut eval)
+            .run()
+            .and_then(SessionOutcome::into_solo)
+            .unwrap();
         assert!(second.from_cache, "restart must hit the fingerprint key");
         assert_eq!(second.best, first.best);
         assert_eq!(second.evaluated, 0);

@@ -4,7 +4,7 @@
 
 #[cfg(feature = "pjrt")]
 use portatune::autotuner::PjrtEvaluator;
-use portatune::autotuner::{self, SimEvaluator, Strategy};
+use portatune::autotuner::{SessionOutcome, SimEvaluator, TuningSession};
 #[cfg(feature = "pjrt")]
 use portatune::cache::TuningCache;
 use portatune::config::spaces;
@@ -36,7 +36,11 @@ fn real_pjrt_autotune_vecadd() {
     let w = manifest.workload_buckets("vector_add")[0];
     let space = spaces::aot_space_for(&w);
     let mut eval = PjrtEvaluator::new(&engine, &manifest, w, 1, 3).unwrap();
-    let out = autotuner::tune(&space, &w, &mut eval, &Strategy::Exhaustive, 0).unwrap();
+    let out = TuningSession::new(&space, &w)
+        .evaluator(&mut eval)
+        .run()
+        .and_then(SessionOutcome::into_solo)
+        .unwrap();
     assert!(out.best_latency_us > 0.0);
     assert_eq!(out.evaluated, space.enumerate(&w).count());
     assert!(space.contains(&out.best, &w));
@@ -60,7 +64,12 @@ fn real_pjrt_autotune_rms_with_persistent_cache() {
     {
         let mut cache = TuningCache::open(&cache_path).unwrap();
         let mut eval = PjrtEvaluator::new(&engine, &manifest, w, 1, 3).unwrap();
-        let out = autotuner::tune_cached(&mut cache, &space, &w, &mut eval, &Strategy::Exhaustive, 0).unwrap();
+        let out = TuningSession::new(&space, &w)
+            .cache(&mut cache)
+            .evaluator(&mut eval)
+            .run()
+            .and_then(SessionOutcome::into_solo)
+            .unwrap();
         assert!(!out.from_cache);
         best_first = out.best.clone();
         cache.save().unwrap();
@@ -70,7 +79,12 @@ fn real_pjrt_autotune_rms_with_persistent_cache() {
         let mut cache = TuningCache::open(&cache_path).unwrap();
         assert_eq!(cache.len(), 1);
         let mut eval = PjrtEvaluator::new(&engine, &manifest, w, 1, 3).unwrap();
-        let out = autotuner::tune_cached(&mut cache, &space, &w, &mut eval, &Strategy::Exhaustive, 0).unwrap();
+        let out = TuningSession::new(&space, &w)
+            .cache(&mut cache)
+            .evaluator(&mut eval)
+            .run()
+            .and_then(SessionOutcome::into_solo)
+            .unwrap();
         assert!(out.from_cache);
         assert_eq!(out.best, best_first);
         assert_eq!(out.evaluated, 0);
@@ -86,9 +100,17 @@ fn cross_platform_tune_then_transplant_pipeline() {
     let mi250 = SimGpu::mi250();
 
     let mut ea = SimEvaluator::new(a100.clone(), w, triton_codegen(a100.spec.vendor));
-    let oa = autotuner::tune(&space, &w, &mut ea, &Strategy::Exhaustive, 0).unwrap();
+    let oa = TuningSession::new(&space, &w)
+        .evaluator(&mut ea)
+        .run()
+        .and_then(SessionOutcome::into_solo)
+        .unwrap();
     let mut em = SimEvaluator::new(mi250.clone(), w, triton_codegen(mi250.spec.vendor));
-    let om = autotuner::tune(&space, &w, &mut em, &Strategy::Exhaustive, 0).unwrap();
+    let om = TuningSession::new(&space, &w)
+        .evaluator(&mut em)
+        .run()
+        .and_then(SessionOutcome::into_solo)
+        .unwrap();
 
     // Native optima differ and transplants lose (or are invalid).
     assert_ne!(oa.best, om.best);
