@@ -41,7 +41,7 @@ fn main() -> portatune::Result<()> {
         cache_path: Some("serving_cache.json".into()),
         ..Default::default()
     };
-    let router = Router::new(manifest, &cfg)?;
+    let router = Router::pjrt(manifest, &cfg)?;
     let boot = router.executor().stats()?;
     if boot.warm_started > 0 {
         println!(

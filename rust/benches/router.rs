@@ -1,8 +1,12 @@
 //! Bench: L3 router hot path — bucketing and dynamic batching throughput
-//! (no PJRT; isolates the coordinator from the executor).
+//! — plus end-to-end serving throughput on the default-features
+//! [`SimBackend`] (cold vs tuned requests/sec), printed as a markdown
+//! table so CI can lift it into the step summary.
 
+use portatune::platform::SimGpu;
 use portatune::serving::batcher::{BucketPolicy, DynamicBatcher};
 use portatune::serving::router::synth_trace;
+use portatune::serving::{Router, ServerConfig, SimBackend};
 use portatune::util::bench::Bench;
 use std::time::Instant;
 
@@ -40,5 +44,46 @@ fn main() {
     });
 
     b.run("router/synth_trace_1k", || synth_trace(1_000, 256, 7));
+
+    // ------------------------------------------------------------------
+    // Serving throughput (default features): one seeded trace replayed
+    // cold and then tuned per sim platform — the requests/sec rows the
+    // ROADMAP tracks for the serve path.  Wall-clock throughput is
+    // router+executor overhead (model latencies are virtual); the exec
+    // p50 columns are the modeled device time tuning actually improves.
+    // ------------------------------------------------------------------
+    let fast = std::env::var("PORTATUNE_BENCH_FAST").is_ok();
+    let n = if fast { 128 } else { 512 };
+    println!("\n## serving throughput — SimBackend, default features ({n} requests)\n");
+    println!("| platform | cold req/s | tuned req/s | cold exec p50 (us) | tuned exec p50 (us) | exec p50 gain |");
+    println!("|---|---|---|---|---|---|");
+    for (name, gpu) in [("sim-a100", SimGpu::a100()), ("sim-mi250", SimGpu::mi250())] {
+        // A huge flush deadline makes batching a pure function of the
+        // request order, so the cold and tuned replays see identical
+        // batch shapes and the tuned-≤-cold exec assertion is exact.
+        let cfg = ServerConfig { max_wait_us: 10_000_000, idle_tuning: true, cache_path: None };
+        let router = Router::sim(SimBackend::new(gpu, 1), &cfg).expect("sim router");
+        let max_tokens = router.policy().seq_buckets.last().copied().unwrap_or(128);
+        let trace = synth_trace(n, max_tokens, 7);
+        let cold = router.serve_trace(trace.clone()).expect("cold serve");
+        router.finish_tuning().expect("tuning drains");
+        let tuned = router.serve_trace(trace).expect("tuned serve");
+        println!(
+            "| {name} | {:.0} | {:.0} | {:.1} | {:.1} | {:.2}x |",
+            cold.throughput_rps,
+            tuned.throughput_rps,
+            cold.exec_p50_us,
+            tuned.exec_p50_us,
+            cold.exec_p50_us / tuned.exec_p50_us.max(1e-9),
+        );
+        assert_eq!(cold.requests, n, "{name}: cold serve dropped requests");
+        assert_eq!(tuned.requests, n, "{name}: tuned serve dropped requests");
+        assert!(
+            tuned.exec_mean_us <= cold.exec_mean_us,
+            "{name}: tuning regressed mean exec latency"
+        );
+    }
+    println!();
+
     b.finish("router");
 }

@@ -13,15 +13,18 @@
 //! model-guided pruning ([`TuningSession::guided`]), device sharding
 //! ([`TuningSession::devices`]), heterogeneous fleets
 //! ([`TuningSession::fleet`]), session budgets ([`Budget`]) and live
-//! progress observers ([`Observer`]).  The legacy entry points
-//! ([`tune`], [`tune_guided`], [`tune_cached`], [`tune_fleet`],
-//! [`tune_fleet_cached`]) remain as deprecated wrappers that delegate
-//! to the builder; `tests/parallel_equiv.rs` pins their outputs
-//! bit-identical to the equivalent builder spelling.
+//! progress observers ([`Observer`]).  The five legacy free functions
+//! (`tune`, `tune_guided`, `tune_cached`, `tune_fleet`,
+//! `tune_fleet_cached`) spent one release as `#[deprecated]` wrappers
+//! and have been **removed**; their builder spellings are documented in
+//! `docs/ARCHITECTURE.md` §2b, and `tests/parallel_equiv.rs` pins the
+//! builder's own spellings (defaults, option order, cached-vs-plain)
+//! bit-identical to each other per strategy × seed.
 //!
 //! Unlike the Triton built-in autotuner the paper critiques (§Q3), tuning
 //! here is (a) cached persistently via [`crate::cache`], (b) composable
-//! with background execution (`serving::executor`, feature `pjrt`), and
+//! with background execution ([`crate::serving::executor`], on any
+//! serving backend), and
 //! (c) explicit about invalid configurations (they are counted, not
 //! hidden).
 //!
@@ -55,10 +58,8 @@ pub use evaluators::{BatchMode, MultiDeviceEvaluator, SimEvaluator};
 pub use search::{EvalRecord, Observer, Strategy};
 pub use session::{Budget, SessionOutcome, TuningSession};
 
-use crate::cache::TuningCache;
-use crate::config::{Config, ConfigSpace};
+use crate::config::Config;
 use crate::platform::model::InvalidConfig;
-use crate::workload::Workload;
 
 /// Anything that can attach a latency to a configuration.
 ///
@@ -204,125 +205,14 @@ pub struct PortableBest {
     pub worst_slowdown: f64,
 }
 
-// ---------------------------------------------------------------------
-// Legacy entry points — thin wrappers over `TuningSession`, kept for
-// source compatibility.  Their outputs are pinned bit-identical to the
-// builder spelling by `tests/parallel_equiv.rs`; no internal code calls
-// them (enforced by the `-D deprecated` CI check).
-// ---------------------------------------------------------------------
-
-/// Run `strategy` over `space` for `workload` using `eval`.
-#[deprecated(
-    note = "use TuningSession::new(space, workload).strategy(..).seed(..).evaluator(eval).run()"
-)]
-pub fn tune(
-    space: &ConfigSpace,
-    workload: &Workload,
-    eval: &mut dyn Evaluator,
-    strategy: &Strategy,
-    seed: u64,
-) -> Option<TuneOutcome> {
-    TuningSession::new(space, workload)
-        .strategy(strategy.clone())
-        .seed(seed)
-        .evaluator(eval)
-        .run()
-        .and_then(SessionOutcome::into_solo)
-}
-
-/// Model-guided (transfer) tuning: rank the whole space with a cheap
-/// *prior* evaluator, then measure only the `top_k` most promising
-/// configurations on the expensive *target* evaluator.
-#[deprecated(
-    note = "use TuningSession::new(space, workload).guided(prior, top_k).evaluator(target).run()"
-)]
-pub fn tune_guided(
-    space: &ConfigSpace,
-    workload: &Workload,
-    prior: &mut dyn Evaluator,
-    target: &mut dyn Evaluator,
-    top_k: usize,
-) -> Option<TuneOutcome> {
-    TuningSession::new(space, workload)
-        .guided(prior, top_k)
-        .evaluator(target)
-        .run()
-        .and_then(SessionOutcome::into_solo)
-}
-
-/// Cache-aware tuning (Q4.3): return a reusable cached result when the
-/// platform/space fingerprints match, otherwise tune and persist.
-#[deprecated(
-    note = "use TuningSession::new(space, workload).strategy(..).seed(..).cache(cache).evaluator(eval).run()"
-)]
-pub fn tune_cached(
-    cache: &mut TuningCache,
-    space: &ConfigSpace,
-    workload: &Workload,
-    eval: &mut dyn Evaluator,
-    strategy: &Strategy,
-    seed: u64,
-) -> Option<TuneOutcome> {
-    TuningSession::new(space, workload)
-        .strategy(strategy.clone())
-        .seed(seed)
-        .cache(cache)
-        .evaluator(eval)
-        .run()
-        .and_then(SessionOutcome::into_solo)
-}
-
-/// Tune the shared `space` for every distinct platform of `fleet` at
-/// once (measure everywhere, per-platform argmin + portability report).
-#[deprecated(
-    note = "use TuningSession::new(space, workload).strategy(..).seed(..).fleet(fleet).run()"
-)]
-pub fn tune_fleet(
-    space: &ConfigSpace,
-    workload: &Workload,
-    fleet: &mut MultiDeviceEvaluator,
-    strategy: &Strategy,
-    seed: u64,
-) -> Option<FleetOutcome> {
-    TuningSession::new(space, workload)
-        .strategy(strategy.clone())
-        .seed(seed)
-        .fleet(fleet)
-        .run()
-        .and_then(SessionOutcome::into_fleet)
-}
-
-/// Cache-aware [`tune_fleet`]: every platform's winner is persisted
-/// under **that platform's own cache key**; served from cache when every
-/// platform hits, with partial per-platform reuse for the adaptive
-/// strategies (see [`TuningSession::fleet`]).
-#[deprecated(
-    note = "use TuningSession::new(space, workload).strategy(..).seed(..).cache(cache).fleet(fleet).run()"
-)]
-pub fn tune_fleet_cached(
-    cache: &mut TuningCache,
-    space: &ConfigSpace,
-    workload: &Workload,
-    fleet: &mut MultiDeviceEvaluator,
-    strategy: &Strategy,
-    seed: u64,
-) -> Option<FleetOutcome> {
-    TuningSession::new(space, workload)
-        .strategy(strategy.clone())
-        .seed(seed)
-        .cache(cache)
-        .fleet(fleet)
-        .run()
-        .and_then(SessionOutcome::into_fleet)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cache::entry_now;
-    use crate::config::spaces;
+    use crate::cache::{entry_now, TuningCache};
+    use crate::config::{spaces, ConfigSpace};
     use crate::kernels::baselines::HAND_TUNED;
     use crate::platform::SimGpu;
+    use crate::workload::Workload;
 
     /// Builder shorthand for the plain solo tune used throughout.
     fn tune_b(
@@ -757,17 +647,4 @@ mod tests {
         }
     }
 
-    /// The wrappers really delegate: legacy spelling == builder
-    /// spelling, bit for bit (the full per-strategy matrix lives in
-    /// tests/parallel_equiv.rs; this is the in-crate smoke check).
-    #[test]
-    #[allow(deprecated)]
-    fn legacy_wrappers_delegate_to_the_builder() {
-        let (space, w, mut eval) = setup();
-        let legacy = tune(&space, &w, &mut eval, &Strategy::Random { budget: 40 }, 5).unwrap();
-        let builder = tune_b(&space, &w, &mut eval, &Strategy::Random { budget: 40 }, 5).unwrap();
-        assert_eq!(legacy.best, builder.best);
-        assert_eq!(legacy.best_latency_us.to_bits(), builder.best_latency_us.to_bits());
-        assert_eq!(legacy.history, builder.history);
-    }
 }

@@ -33,9 +33,11 @@
 //! panics rather than silently running an unguided fleet pass),
 //! `.fleet(&mut f)` tunes every distinct platform at once,
 //! `.budget(Budget::Evals(n))` caps any of them, and `.observe(&mut o)`
-//! streams progress from all of them.  The legacy free functions remain
-//! as thin `#[deprecated]` wrappers whose outputs are pinned
-//! bit-identical to the builder by `tests/parallel_equiv.rs`.
+//! streams progress from all of them.  The legacy free functions spent
+//! one release as thin `#[deprecated]` wrappers and have since been
+//! removed; `tests/parallel_equiv.rs` now pins the builder's own
+//! spellings (defaults, option order, cached-vs-plain) against each
+//! other instead.
 
 use std::collections::HashMap;
 use std::time::{Duration, Instant};

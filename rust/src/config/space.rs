@@ -63,11 +63,18 @@ impl Config {
     }
 
     /// Parse the canonical `key()` form back into a config.
+    ///
+    /// Duplicate parameter keys are **rejected** (`None`), not
+    /// last-one-wins: parsed strings flow into cache keys and CLI
+    /// `--config` inputs, where silently dropping an assignment would
+    /// make two different inputs alias one config.
     pub fn parse(s: &str) -> Option<Self> {
         let mut map = BTreeMap::new();
         for part in s.split(',').filter(|p| !p.is_empty()) {
             let (k, v) = part.split_once('=')?;
-            map.insert(k.trim().to_string(), v.trim().parse().ok()?);
+            if map.insert(k.trim().to_string(), v.trim().parse().ok()?).is_some() {
+                return None; // duplicate key: ambiguous assignment
+            }
         }
         Some(Config(map))
     }
@@ -495,6 +502,25 @@ mod tests {
     #[test]
     fn config_key_roundtrip() {
         let c = Config::new(&[("BLOCK_M", 64), ("num_warps", 4)]);
+        assert_eq!(Config::parse(&c.key()), Some(c));
+    }
+
+    #[test]
+    fn config_parse_rejects_duplicate_keys() {
+        // Last-one-wins would let two different inputs alias one
+        // config on the cache-key path; duplicates must be errors —
+        // even when the values agree (the input is still malformed).
+        assert_eq!(Config::parse("a=1,a=2"), None);
+        assert_eq!(Config::parse("a=1,a=1"), None);
+        assert_eq!(Config::parse("a=1, a=2"), None, "whitespace must not hide a duplicate");
+        // Unrelated keys still parse.
+        assert_eq!(
+            Config::parse("a=1,b=2"),
+            Some(Config::new(&[("a", 1), ("b", 2)]))
+        );
+        // And every canonical key() form (no duplicates by
+        // construction) still round-trips.
+        let c = Config::new(&[("x", 7), ("y", -3)]);
         assert_eq!(Config::parse(&c.key()), Some(c));
     }
 

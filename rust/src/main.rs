@@ -6,6 +6,7 @@
 //!                 [--strategy S] [--budget N] [--cache F] [--seed N]
 //!                 [--devices N]
 //! portatune serve [--requests N] [--seed N] [--no-tuning]
+//!                 [--platform a100|mi250|h100|cpu-pjrt[,P2,...]]
 //! portatune analyze <kernels|hlo> [path]
 //! portatune cache <show|clear> [--file F]
 //! ```
@@ -29,8 +30,7 @@ use portatune::report::Report;
 #[cfg(feature = "pjrt")]
 use portatune::runtime::Engine;
 use portatune::runtime::Manifest;
-#[cfg(feature = "pjrt")]
-use portatune::serving::{router::synth_trace, Router, ServerConfig};
+use portatune::serving::{router::synth_trace, Router, ServeReport, ServerConfig, SimBackend};
 use portatune::util::cli::Args;
 use portatune::workload::{DType, Workload};
 
@@ -52,6 +52,11 @@ USAGE:
                                         strategy, exhaustive included)
                   [--progress]    (stream evaluations/new bests as they happen)
   portatune serve [--requests N] [--seed N] [--no-tuning]
+                  [--platform a100|mi250|h100|cpu-pjrt[,P2,...]]
+                                  (sim platforms serve in default builds;
+                                   a comma list replays the same trace on
+                                   each platform and prints a comparison;
+                                   cpu-pjrt needs --features pjrt)
   portatune analyze kernels
   portatune analyze hlo <path>
   portatune cache <show|clear> [--file F]
@@ -479,48 +484,102 @@ fn cmd_tune(args: &Args) -> Result<()> {
     Ok(())
 }
 
-#[cfg(not(feature = "pjrt"))]
-fn cmd_serve(_args: &Args) -> Result<()> {
-    Err(anyhow!(
-        "`portatune serve` requires a build with `--features pjrt` (the PJRT executor)"
-    ))
+/// Build the router for one serve platform: sim platforms go straight
+/// to the always-available [`SimBackend`]; `cpu-pjrt` needs the real
+/// PJRT executor behind the feature flag.
+fn serve_router(pid: PlatformId, seed: u64, cfg: &ServerConfig) -> Result<Router> {
+    match pid.sim() {
+        Some(gpu) => Router::sim(SimBackend::new(gpu, seed), cfg),
+        None => pjrt_serve_router(cfg),
+    }
 }
 
 #[cfg(feature = "pjrt")]
+fn pjrt_serve_router(cfg: &ServerConfig) -> Result<Router> {
+    let manifest = Manifest::load_default()?;
+    println!("starting PJRT router over {} model shapes ...", manifest.model_artifacts().len());
+    Router::pjrt(manifest, cfg)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_serve_router(_cfg: &ServerConfig) -> Result<Router> {
+    Err(anyhow!(
+        "platform cpu-pjrt requires a build with `--features pjrt`; \
+         the sim platforms (a100|mi250|h100) serve in default builds"
+    ))
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let requests = args.flag_parse("requests", 64usize)?;
     let seed = args.flag_parse("seed", 42u64)?;
     let no_tuning = args.has("no-tuning");
-    let manifest = Manifest::load_default()?;
     let cfg = ServerConfig { idle_tuning: !no_tuning, ..Default::default() };
-    println!("starting router over {} model shapes ...", manifest.model_artifacts().len());
-    let router = Router::new(manifest, &cfg)?;
-    let max_tokens = router.policy().seq_buckets.last().copied().unwrap_or(128);
-    let trace = synth_trace(requests, max_tokens, seed);
+    let platforms: Vec<PlatformId> = args
+        .flag_or("platform", "a100")
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|name| name.parse().map_err(|e| anyhow!("--platform: {e}")))
+        .collect::<Result<_>>()?;
+    if platforms.is_empty() {
+        return Err(anyhow!("--platform needs at least one platform, e.g. --platform a100,mi250"));
+    }
 
-    println!("\n== phase 1: cold serve ({} requests) ==", trace.len());
-    let before = router.serve_trace(trace.clone())?;
-    print_serve("cold", &before);
+    // One row per platform for the cross-platform summary: the same
+    // seeded trace replayed cold (and tuned) on each.
+    let mut rows: Vec<(String, ServeReport, Option<ServeReport>)> = Vec::new();
+    for pid in platforms {
+        println!("\n=== serving on {} ===", pid.name());
+        let router = serve_router(pid, seed, &cfg)?;
+        let max_tokens = router.policy().seq_buckets.last().copied().unwrap_or(128);
+        let trace = synth_trace(requests, max_tokens, seed);
 
-    if !no_tuning {
-        println!("\n== background tuning (idle-time, Q4.4) ==");
-        router.finish_tuning()?;
-        let stats = router.executor().stats()?;
-        println!("variants measured: {}", stats.variants_measured);
-        for s in &stats.swaps {
-            println!("  swap b{}s{}: {} -> {} ({:.2}x)", s.shape.0, s.shape.1, s.from, s.to, s.gain);
+        println!("== phase 1: cold serve ({} requests) ==", trace.len());
+        let before = router.serve_trace(trace.clone())?;
+        print_serve("cold", &before);
+
+        let mut after = None;
+        if !no_tuning {
+            println!("\n== background tuning (idle-time, Q4.4) ==");
+            router.finish_tuning()?;
+            let stats = router.executor().stats()?;
+            println!("variants measured: {}", stats.variants_measured);
+            for s in &stats.swaps {
+                println!("  swap b{}s{}: {} -> {} ({:.2}x)", s.shape.0, s.shape.1, s.from, s.to, s.gain);
+            }
+
+            println!("\n== phase 2: tuned serve ==");
+            let tuned = router.serve_trace(trace)?;
+            print_serve("tuned", &tuned);
+            println!("\nexec p50 improvement: {:.2}x", before.exec_p50_us / tuned.exec_p50_us);
+            after = Some(tuned);
         }
+        rows.push((pid.name().to_string(), before, after));
+    }
 
-        println!("\n== phase 2: tuned serve ==");
-        let after = router.serve_trace(trace)?;
-        print_serve("tuned", &after);
-        println!("\nexec p50 improvement: {:.2}x", before.exec_p50_us / after.exec_p50_us);
+    if rows.len() > 1 {
+        let mut rep = Report::new(
+            "multi-platform serve — same trace, cold vs tuned",
+            &["platform", "cold req/s", "tuned req/s", "cold exec p50 (us)", "tuned exec p50 (us)", "exec p50 gain"],
+        );
+        for (platform, before, after) in &rows {
+            let opt = |f: &dyn Fn(&ServeReport) -> String| {
+                after.as_ref().map(|a| f(a)).unwrap_or_else(|| "-".into())
+            };
+            rep.row(vec![
+                platform.clone(),
+                format!("{:.1}", before.throughput_rps),
+                opt(&|a| format!("{:.1}", a.throughput_rps)),
+                format!("{:.1}", before.exec_p50_us),
+                opt(&|a| format!("{:.1}", a.exec_p50_us)),
+                opt(&|a| format!("{:.2}x", before.exec_p50_us / a.exec_p50_us)),
+            ]);
+        }
+        println!("\n{}", rep.to_markdown());
     }
     Ok(())
 }
 
-#[cfg(feature = "pjrt")]
-fn print_serve(tag: &str, r: &portatune::serving::ServeReport) {
+fn print_serve(tag: &str, r: &ServeReport) {
     println!(
         "[{tag}] served {} req ({} rejected) in {:.2}s  | {:.1} req/s  {:.0} tok/s",
         r.requests, r.rejected, r.wall_seconds, r.throughput_rps, r.tokens_per_second
@@ -642,7 +701,7 @@ fn main() -> Result<()> {
         }
         "serve" => {
             let args = Args::parse(rest, &["no-tuning"])?;
-            args.ensure_known(&["requests", "seed", "no-tuning"])?;
+            args.ensure_known(&["requests", "seed", "no-tuning", "platform"])?;
             cmd_serve(&args)
         }
         "analyze" => cmd_analyze(&Args::parse(rest, &[])?),

@@ -1,44 +1,49 @@
-//! The executor thread: sole owner of the PJRT client.
+//! The executor thread: sole owner of the execution backend.
 //!
-//! PJRT objects are not `Send`, so every compile/execute happens here.
+//! The executor is generic over [`ExecBackend`]: the same thread loop
+//! serves the analytical [`SimBackend`](super::backend::SimBackend)
+//! (default builds — deterministic model latencies, no toolchain) and
+//! the PJRT backend (feature `pjrt` — real artifact execution).  The
+//! backend is **constructed inside the executor thread** via the
+//! factory passed to [`ExecutorHandle::spawn`], which is what lets the
+//! non-`Send` PJRT client live here without infecting the rest of the
+//! serving plane.
+//!
 //! The thread serves [`ExecutorCommand`]s; **when idle it advances the
 //! background tuning queue** — draining up to [`IDLE_TUNE_BATCH`]
 //! pending variant measurements per idle slice, yielding immediately
 //! when a request arrives — and hot-swaps a bucket's active kernel
 //! variant when a faster one has been proven.  This is the paper's Q4.4
 //! ("move autotuning off the critical path ... using idle GPU times")
-//! made concrete.
+//! made concrete, and since the backend split it runs (and is tested)
+//! in every default build.
 //!
-//! The drain is fed by the shared worker pool
-//! ([`crate::util::pool`]): measurement *inputs* (synthetic activation
-//! tensors, one per bucket shape — potentially tens of MB each) are
-//! generated on pool workers ahead of the measurements that need them
-//! and memoized per shape, so the executor thread spends its idle
-//! slices measuring instead of filling buffers.  The PJRT work itself
-//! stays on this thread (PJRT handles are not `Send`).
+//! Measurement inputs are the backend's business: before each idle
+//! measurement the executor hints the next few queued shapes through
+//! [`ExecBackend::prefetch`] (the PJRT backend pre-generates activation
+//! tensors on the shared worker pool; the sim backend needs nothing)
+//! and releases a shape's inputs once its queue entries are exhausted.
 //!
 //! Measurement bookkeeping goes through the autotuner's own
-//! [`Recorder`] (one per bucket, fidelity 1.0): winner selection is
-//! `Recorder::best`, failed measurements are counted as invalid like
-//! any other platform-rejected config, and the stats snapshot reads the
-//! recorder instead of duplicating per-variant latency fields.
+//! [`Recorder`] (one per bucket, fidelity 1.0), driven by the backend's
+//! [`ExecBackend::measure`] call: winner selection is `Recorder::best`,
+//! failed measurements are counted as invalid like any other
+//! platform-rejected config, and the stats snapshot reads the recorder
+//! instead of duplicating per-variant latency fields.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::time::{Duration, Instant};
 
+use super::backend::{ExecBackend, ExecHandle, VariantDesc};
 use super::batcher::Batch;
 use super::Completion;
 use crate::autotuner::search::Recorder;
 use crate::cache::{entry_now, TuningCache};
-use crate::config::Config;
 use crate::platform::model::InvalidConfig;
-use crate::runtime::{Engine, Executable, Manifest, TensorF32};
-use crate::workload::{DType, Workload};
 use crate::Result;
 
-/// Key of a compiled model shape: (batch, seq).
-pub type ShapeKey = (usize, usize);
+pub use super::backend::ShapeKey;
 
 /// How many pending tuning measurements one idle slice may drain.
 /// Batching amortizes the idle-detection timeout across several
@@ -67,11 +72,9 @@ pub enum ExecutorCommand {
 /// the stats snapshot all read one source of truth instead of ad-hoc
 /// per-variant fields.
 struct Variant {
-    artifact_id: String,
-    /// Kernel config parsed from the artifact id (the recorder key).
-    config: Config,
-    path: std::path::PathBuf,
-    exe: Option<Executable>,
+    desc: VariantDesc,
+    /// Backend-issued executable handle, compiled lazily.
+    handle: Option<ExecHandle>,
 }
 
 /// A record of the executor swapping a bucket's active variant.
@@ -99,7 +102,7 @@ pub struct ExecutorStats {
     pub requests_served: usize,
     /// Background tuning measurements performed.
     pub variants_measured: usize,
-    /// Artifact compiles (request path + tuning).
+    /// Variant compiles (request path + tuning).
     pub compiles: usize,
     /// Every variant hot-swap, in order.
     pub swaps: Vec<SwapEvent>,
@@ -109,9 +112,8 @@ pub struct ExecutorStats {
     pub active_us: HashMap<String, f64>,
 }
 
-struct ExecutorState {
-    engine: Engine,
-    hidden: usize,
+struct ExecutorState<B: ExecBackend> {
+    backend: B,
     variants: HashMap<ShapeKey, Vec<Variant>>,
     active: HashMap<ShapeKey, usize>,
     tune_queue: Vec<(ShapeKey, usize)>,
@@ -119,123 +121,26 @@ struct ExecutorState {
     /// fidelity 1.0): `best()` picks the winner, failed measurements
     /// count as invalid instead of silently blocking the bucket.
     bucket_recs: HashMap<ShapeKey, Recorder<'static>>,
-    /// Weights uploaded ONCE as device buffers: the request path only
-    /// moves activations (§Perf L3 — this was the dominant cost before).
-    weights: Vec<xla::PjRtBuffer>,
     stats: ExecutorStats,
     /// Measurement effort for background tuning.
     tune_warmup: usize,
     tune_iters: usize,
     /// Persistent tuning cache (Q4.3): bucket winners survive restarts,
-    /// so a re-deployed server starts warm instead of re-tuning.
+    /// so a re-deployed server starts warm.
     cache: Option<TuningCache>,
-    /// Synthetic measurement inputs, memoized per bucket shape and
-    /// generated ahead of need on the shared worker pool (the tensors
-    /// are deterministic per shape, so caching changes nothing but
-    /// wall-clock).
-    tune_inputs: HashMap<ShapeKey, TensorF32>,
-    model_geom: (usize, usize, usize), // (q_heads, kv_heads, head_dim)
 }
 
-impl ExecutorState {
-    /// Synthetic workload key for a serving bucket: the attention
-    /// geometry of the served model at this (batch, seq) shape.
-    fn bucket_workload(&self, key: ShapeKey) -> Workload {
-        let (q, kv, d) = self.model_geom;
-        Workload::Attention {
-            batch: key.0,
-            q_heads: q,
-            kv_heads: kv,
-            seq_len: key.1,
-            head_dim: d,
-            dtype: DType::F32,
-            causal: true,
-        }
-    }
-
+impl<B: ExecBackend> ExecutorState<B> {
     const CACHE_SPACE: &'static str = "serving_model_variants";
 
-    fn cache_platform() -> String {
-        crate::platform::PlatformId::CpuPjrt.fingerprint()
-    }
-
-    /// Warm start: adopt cached per-bucket winners before any tuning.
-    fn warm_start_from_cache(&mut self) {
-        let Some(cache) = &self.cache else { return };
-        let platform = Self::cache_platform();
-        let keys: Vec<ShapeKey> = self.variants.keys().copied().collect();
-        let mut warmed = 0;
-        for key in keys {
-            let w = self.bucket_workload(key);
-            let Some(hit) = cache.get(&w, &platform, Self::CACHE_SPACE) else { continue };
-            let Some(cfg) = hit.config() else { continue };
-            if let Some(idx) = self.variants[&key].iter().position(|v| v.config == cfg) {
-                self.active.insert(key, idx);
-                warmed += 1;
-            }
-        }
-        if warmed > 0 {
-            self.stats.warm_started = warmed;
-            // Nothing left to prove for warmed buckets this session.
-            let platform = Self::cache_platform();
-            let cached_keys: std::collections::HashSet<ShapeKey> = self
-                .variants
-                .keys()
-                .copied()
-                .filter(|k| {
-                    let w = self.bucket_workload(*k);
-                    self.cache
-                        .as_ref()
-                        .map(|c| c.get(&w, &platform, Self::CACHE_SPACE).is_some())
-                        .unwrap_or(false)
-                })
-                .collect();
-            self.tune_queue.retain(|(k, _)| !cached_keys.contains(k));
-        }
-    }
-
-    /// Persist a freshly proven bucket winner (Q4.3).
-    fn persist_winner(&mut self, key: ShapeKey, idx: usize, measured_us: f64, evaluated: usize) {
-        let w = self.bucket_workload(key);
-        let cfg = self.variants[&key][idx].config.clone();
-        if let Some(cache) = &mut self.cache {
-            cache.put(
-                &w,
-                entry_now(&cfg, measured_us, evaluated, 0, &Self::cache_platform(), Self::CACHE_SPACE, 0.0),
-            );
-            let _ = cache.save();
-        }
-    }
-
-    fn new(manifest: &Manifest, cache: Option<TuningCache>) -> Result<Self> {
-        let engine = Engine::cpu()?;
-        let model = &manifest.model;
-        // Deterministic synthetic weights, uploaded once to the device.
-        let weights = model
-            .param_order
-            .iter()
-            .enumerate()
-            .map(|(i, name)| {
-                let shape = &model.param_shapes[name];
-                // Small magnitudes keep block outputs numerically tame.
-                let mut t = TensorF32::random(shape, 0x5EED + i as u64);
-                let scale = 1.0 / (model.hidden as f32).sqrt();
-                for v in &mut t.data {
-                    *v *= scale;
-                }
-                engine.upload(&t)
-            })
-            .collect::<Result<Vec<_>>>()?;
-
+    fn new(mut backend: B, cache: Option<TuningCache>) -> Result<Self> {
+        let universe = backend.discover()?;
         let mut variants: HashMap<ShapeKey, Vec<Variant>> = HashMap::new();
-        for a in manifest.model_artifacts() {
-            let (Some(batch), Some(seq)) = (a.workload.batch, a.workload.seq_len) else { continue };
-            variants.entry((batch, seq)).or_default().push(Variant {
-                artifact_id: a.id.clone(),
-                config: variant_config(&a.id),
-                path: manifest.root.join(&a.path),
-                exe: None,
-            });
+        for (shape, descs) in universe {
+            variants
+                .entry(shape)
+                .or_default()
+                .extend(descs.into_iter().map(|desc| Variant { desc, handle: None }));
         }
         let tune_queue: Vec<(ShapeKey, usize)> = variants
             .iter()
@@ -243,22 +148,59 @@ impl ExecutorState {
             .collect();
         let active = variants.keys().map(|k| (*k, 0)).collect();
         let mut state = ExecutorState {
-            engine,
-            hidden: model.hidden,
+            backend,
             variants,
             active,
             tune_queue,
             bucket_recs: HashMap::new(),
-            weights,
             stats: ExecutorStats::default(),
             tune_warmup: 1,
             tune_iters: 3,
             cache,
-            tune_inputs: HashMap::new(),
-            model_geom: (model.n_q_heads, model.n_kv_heads, model.head_dim),
         };
         state.warm_start_from_cache();
         Ok(state)
+    }
+
+    /// Warm start: adopt cached per-bucket winners before any tuning.
+    fn warm_start_from_cache(&mut self) {
+        let Some(cache) = &self.cache else { return };
+        let platform = self.backend.platform();
+        let keys: Vec<ShapeKey> = self.variants.keys().copied().collect();
+        // Only buckets whose cached winner was actually *adopted* skip
+        // tuning: a cache entry whose config is absent from this
+        // session's variant universe (regenerated manifest, different
+        // sim seed) must still be tuned — and its stale entry
+        // overwritten — or the bucket would serve the default forever.
+        let mut warmed: std::collections::HashSet<ShapeKey> = std::collections::HashSet::new();
+        for key in keys {
+            let w = self.backend.bucket_workload(key);
+            let Some(hit) = cache.get(&w, &platform, Self::CACHE_SPACE) else { continue };
+            let Some(cfg) = hit.config() else { continue };
+            if let Some(idx) = self.variants[&key].iter().position(|v| v.desc.config == cfg) {
+                self.active.insert(key, idx);
+                warmed.insert(key);
+            }
+        }
+        if !warmed.is_empty() {
+            self.stats.warm_started = warmed.len();
+            // Nothing left to prove for adopted buckets this session.
+            self.tune_queue.retain(|(k, _)| !warmed.contains(k));
+        }
+    }
+
+    /// Persist a freshly proven bucket winner (Q4.3).
+    fn persist_winner(&mut self, key: ShapeKey, idx: usize, measured_us: f64, evaluated: usize) {
+        let w = self.backend.bucket_workload(key);
+        let platform = self.backend.platform();
+        let cfg = self.variants[&key][idx].desc.config.clone();
+        if let Some(cache) = &mut self.cache {
+            cache.put(
+                &w,
+                entry_now(&cfg, measured_us, evaluated, 0, &platform, Self::CACHE_SPACE, 0.0),
+            );
+            let _ = cache.save();
+        }
     }
 
     fn shapes(&self) -> Vec<ShapeKey> {
@@ -267,36 +209,29 @@ impl ExecutorState {
         v
     }
 
-    fn ensure_compiled(&mut self, key: ShapeKey, idx: usize) -> Result<()> {
-        let v = &mut self.variants.get_mut(&key).unwrap()[idx];
-        if v.exe.is_none() {
-            v.exe = Some(self.engine.load_hlo_text(&v.path)?);
-            self.stats.compiles += 1;
+    /// Lazily compile one variant through the backend, memoizing the
+    /// handle (the backend is guaranteed at most one compile per
+    /// (shape, variant)).
+    fn ensure_compiled(&mut self, key: ShapeKey, idx: usize) -> Result<ExecHandle> {
+        if let Some(h) = self.variants[&key][idx].handle {
+            return Ok(h);
         }
-        Ok(())
+        let desc = self.variants[&key][idx].desc.clone();
+        let h = self.backend.compile(key, &desc)?;
+        self.variants.get_mut(&key).unwrap()[idx].handle = Some(h);
+        self.stats.compiles += 1;
+        Ok(h)
     }
 
     fn execute(&mut self, batch: &Batch, enqueued_at: Instant) -> Result<Vec<Completion>> {
         let key = (batch.batch_shape, batch.seq_len);
-        let idx = *self.active.get(&key).ok_or_else(|| anyhow::anyhow!("no artifact shape {key:?}"))?;
-        self.ensure_compiled(key, idx)?;
-        let hidden = self.hidden;
-        // Synthetic embedded prompt activations for the batch; weights
-        // are already device-resident.
-        let x = TensorF32::random(&[batch.batch_shape, batch.seq_len, hidden], 0xAB + batch.bucket as u64);
-        let x_buf = self.engine.upload(&x)?;
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.weights.len());
-        args.push(&x_buf);
-        args.extend(self.weights.iter());
-        let v = &self.variants[&key][idx];
-        let exe = v.exe.as_ref().unwrap();
-        let t0 = Instant::now();
-        let out = exe.run_buffers(&args)?;
-        let exec_us = t0.elapsed().as_secs_f64() * 1e6;
-        debug_assert_eq!(out.len(), batch.batch_shape * batch.seq_len * hidden);
+        let idx = *self.active.get(&key).ok_or_else(|| anyhow::anyhow!("no variant for shape {key:?}"))?;
+        let handle = self.ensure_compiled(key, idx)?;
+        let exec_us = self.backend.execute(handle, key)?;
         let latency_us = enqueued_at.elapsed().as_secs_f64() * 1e6;
         self.stats.batches_executed += 1;
         self.stats.requests_served += batch.requests.len();
+        let v = &self.variants[&key][idx];
         Ok(batch
             .requests
             .iter()
@@ -307,44 +242,9 @@ impl ExecutorState {
                 batch_size: batch.batch_shape,
                 latency_us,
                 exec_us,
-                variant: v.artifact_id.clone(),
+                variant: v.desc.artifact_id.clone(),
             })
             .collect())
-    }
-
-    /// Generate (on the shared worker pool, in parallel) the synthetic
-    /// input tensors for the next up-to-[`IDLE_TUNE_BATCH`] queued
-    /// measurements that don't have one memoized yet.  The tensors are
-    /// deterministic per shape, so this is purely a wall-clock
-    /// optimization: the executor thread measures while the pool fills
-    /// buffers for upcoming shapes.
-    fn prefetch_tune_inputs(&mut self) {
-        let hidden = self.hidden;
-        let mut todo: Vec<ShapeKey> = Vec::new();
-        // `tune_queue.pop()` takes from the back, so the *next* items
-        // are the tail.
-        for (key, _) in self.tune_queue.iter().rev().take(IDLE_TUNE_BATCH) {
-            if !self.tune_inputs.contains_key(key) && !todo.contains(key) {
-                todo.push(*key);
-            }
-        }
-        if todo.is_empty() {
-            return;
-        }
-        let mut made: Vec<Option<TensorF32>> = vec![None; todo.len()];
-        crate::util::pool::global().scope(|s| {
-            for (key, slot) in todo.iter().zip(made.iter_mut()) {
-                let key = *key;
-                s.spawn(move || {
-                    *slot = Some(TensorF32::random(&[key.0, key.1, hidden], 0xEE));
-                });
-            }
-        });
-        for (key, tensor) in todo.into_iter().zip(made) {
-            if let Some(t) = tensor {
-                self.tune_inputs.insert(key, t);
-            }
-        }
     }
 
     /// Fold one measurement result (success or failure) into the
@@ -355,7 +255,7 @@ impl ExecutorState {
     /// one (previously a single failed measurement blocked the bucket's
     /// swap forever).
     fn record_measurement(&mut self, key: ShapeKey, idx: usize, res: Result<f64>) {
-        let cfg = self.variants[&key][idx].config.clone();
+        let cfg = self.variants[&key][idx].desc.config.clone();
         let res = res.map_err(|e| InvalidConfig { reason: e.to_string() });
         if res.is_ok() {
             self.stats.variants_measured += 1;
@@ -377,25 +277,25 @@ impl ExecutorState {
             return; // every variant failed to measure: nothing to swap
         };
         let latencies = rec.full_fidelity_latencies();
-        let Some(best) = vs.iter().position(|v| v.config == best_cfg) else { return };
+        let Some(best) = vs.iter().position(|v| v.desc.config == best_cfg) else { return };
         let cur = self.active[&key];
         if best != cur {
             // Gain versus the incumbent; infinite headroom when the
             // incumbent itself failed to measure.
             let gain = latencies
-                .get(&vs[cur].config.fingerprint())
+                .get(&vs[cur].desc.config.fingerprint())
                 .map(|c| c / best_us)
                 .unwrap_or(f64::INFINITY);
             self.stats.swaps.push(SwapEvent {
                 shape: key,
-                from: vs[cur].artifact_id.clone(),
-                to: vs[best].artifact_id.clone(),
+                from: vs[cur].desc.artifact_id.clone(),
+                to: vs[best].desc.artifact_id.clone(),
                 gain,
             });
             self.active.insert(key, best);
         }
         let shape_name = format!("b{}s{}", key.0, key.1);
-        let (best_id, n) = (vs[best].artifact_id.clone(), vs.len());
+        let (best_id, n) = (vs[best].desc.artifact_id.clone(), vs.len());
         self.stats.active.insert(shape_name.clone(), best_id);
         self.stats.active_us.insert(shape_name, best_us);
         self.persist_winner(key, best, best_us, n);
@@ -404,44 +304,42 @@ impl ExecutorState {
     /// Run ONE background tuning measurement. Returns false when the
     /// queue is exhausted.
     fn tune_step(&mut self) -> bool {
-        self.prefetch_tune_inputs();
+        // Hint the backend about the next few queued shapes so it can
+        // prepare measurement inputs off the critical path
+        // (`tune_queue.pop()` takes from the back, so the *next* items
+        // are the tail).
+        let mut upcoming: Vec<ShapeKey> = Vec::new();
+        for (key, _) in self.tune_queue.iter().rev().take(IDLE_TUNE_BATCH) {
+            if !upcoming.contains(key) {
+                upcoming.push(*key);
+            }
+        }
+        if !upcoming.is_empty() {
+            self.backend.prefetch(&upcoming);
+        }
         let Some((key, idx)) = self.tune_queue.pop() else {
-            // Queue drained: the memoized inputs (tens of MB per shape)
-            // have nothing left to serve.
-            self.tune_inputs.clear();
+            // Queue drained: memoized measurement inputs have nothing
+            // left to serve.
+            self.backend.release_all();
             return false;
         };
-        if let Err(e) = self.ensure_compiled(key, idx) {
-            // Uncompilable variant: count it as invalid so the bucket
-            // can still complete, keep tuning.
-            self.record_measurement(key, idx, Err(e));
-            return true;
-        }
-        let hidden = self.hidden;
-        if !self.tune_inputs.contains_key(&key) {
-            // Prefetch miss (e.g. shape beyond the lookahead window).
-            self.tune_inputs.insert(key, TensorF32::random(&[key.0, key.1, hidden], 0xEE));
-        }
-        let x = &self.tune_inputs[&key];
-        let x_buf = match self.engine.upload(x) {
-            Ok(buf) => buf,
+        let handle = match self.ensure_compiled(key, idx) {
+            Ok(h) => h,
             Err(e) => {
+                // Uncompilable variant: count it as invalid so the
+                // bucket can still complete, keep tuning.
                 self.record_measurement(key, idx, Err(e));
                 return true;
             }
         };
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.weights.len());
-        args.push(&x_buf);
-        args.extend(self.weights.iter());
         let (warmup, iters) = (self.tune_warmup, self.tune_iters);
-        let v = &self.variants[&key][idx];
-        let exe = v.exe.as_ref().unwrap();
-        let measured = exe.time_us_buffers(&args, warmup, iters);
+        let measured = self.backend.measure(handle, key, warmup, iters);
         self.record_measurement(key, idx, measured);
-        // Drop the memoized input once its shape has no queued
-        // measurements left (the whole map is cleared on exhaustion).
+        // Drop the shape's memoized inputs once it has no queued
+        // measurements left (the backend clears everything on
+        // exhaustion).
         if !self.tune_queue.iter().any(|(k, _)| *k == key) {
-            self.tune_inputs.remove(&key);
+            self.backend.release(key);
         }
         true
     }
@@ -451,12 +349,12 @@ impl ExecutorState {
         for (key, vs) in &self.variants {
             let idx = self.active[key];
             let name = format!("b{}s{}", key.0, key.1);
-            s.active.insert(name.clone(), vs[idx].artifact_id.clone());
+            s.active.insert(name.clone(), vs[idx].desc.artifact_id.clone());
             // Latest full-fidelity measurement of the active variant: a
             // reverse scan of the bucket's (small) log, instead of
             // materializing a whole fingerprint→latency map per bucket
             // on every Stats command.
-            let fp = vs[idx].config.fingerprint();
+            let fp = vs[idx].desc.config.fingerprint();
             let measured = self.bucket_recs.get(key).and_then(|r| {
                 r.evals
                     .iter()
@@ -472,24 +370,6 @@ impl ExecutorState {
     }
 }
 
-/// Parse the kernel config out of a model artifact id
-/// (`model/b1_s128/bq32_bk64_u2` -> block_q=32,block_k=64,unroll=2).
-fn variant_config(artifact_id: &str) -> Config {
-    let mut cfg = Config::default();
-    if let Some(last) = artifact_id.rsplit('/').next() {
-        for part in last.split('_') {
-            if let Some(v) = part.strip_prefix("bq").and_then(|s| s.parse().ok()) {
-                cfg.set("block_q", v);
-            } else if let Some(v) = part.strip_prefix("bk").and_then(|s| s.parse().ok()) {
-                cfg.set("block_k", v);
-            } else if let Some(v) = part.strip_prefix('u').and_then(|s| s.parse().ok()) {
-                cfg.set("unroll", v);
-            }
-        }
-    }
-    cfg
-}
-
 /// Handle to the executor thread.
 pub struct ExecutorHandle {
     /// Command channel into the executor thread.
@@ -500,15 +380,23 @@ pub struct ExecutorHandle {
 }
 
 impl ExecutorHandle {
-    /// Spawn the executor thread over the manifest's model artifacts.
-    /// `idle_tuning` enables Q4.4 background measurements; `cache` makes
-    /// bucket winners persistent across server restarts (Q4.3).
-    pub fn spawn(manifest: Manifest, idle_tuning: bool, cache: Option<TuningCache>) -> Result<Self> {
+    /// Spawn the executor thread over a backend built by `make`.
+    ///
+    /// The factory runs *inside* the new thread, so backends never need
+    /// to be `Send` (PJRT handles are not); only the factory itself
+    /// crosses the thread boundary.  `idle_tuning` enables Q4.4
+    /// background measurements; `cache` makes bucket winners persistent
+    /// across server restarts (Q4.3).
+    pub fn spawn<B, F>(make: F, idle_tuning: bool, cache: Option<TuningCache>) -> Result<Self>
+    where
+        B: ExecBackend + 'static,
+        F: FnOnce() -> Result<B> + Send + 'static,
+    {
         let (tx, rx) = std::sync::mpsc::channel::<ExecutorCommand>();
         let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<Vec<ShapeKey>>>();
         let join = std::thread::Builder::new()
             .name("portatune-executor".into())
-            .spawn(move || executor_loop(manifest, idle_tuning, cache, rx, ready_tx))?;
+            .spawn(move || executor_loop(make, idle_tuning, cache, rx, ready_tx))?;
         let shapes = ready_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("executor thread died during init"))??;
@@ -544,14 +432,24 @@ impl Drop for ExecutorHandle {
     }
 }
 
-fn executor_loop(
-    manifest: Manifest,
+fn executor_loop<B, F>(
+    make: F,
     idle_tuning: bool,
     cache: Option<TuningCache>,
     rx: Receiver<ExecutorCommand>,
     ready: Sender<Result<Vec<ShapeKey>>>,
-) {
-    let mut state = match ExecutorState::new(&manifest, cache) {
+) where
+    B: ExecBackend,
+    F: FnOnce() -> Result<B>,
+{
+    let backend = match make() {
+        Ok(b) => b,
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let mut state = match ExecutorState::new(backend, cache) {
         Ok(s) => {
             let _ = ready.send(Ok(s.shapes()));
             s
@@ -613,5 +511,55 @@ fn executor_loop(
             }
             Some(ExecutorCommand::Shutdown) | None => return,
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::SimGpu;
+    use crate::serving::backend::SimBackend;
+
+    #[test]
+    fn executor_tunes_and_activates_on_the_sim_backend() {
+        let handle =
+            ExecutorHandle::spawn(move || Ok(SimBackend::new(SimGpu::a100(), 7)), true, None)
+                .unwrap();
+        assert!(!handle.shapes.is_empty(), "sim backend must discover a shape grid");
+        handle.finish_tuning().unwrap();
+        let stats = handle.stats().unwrap();
+        assert!(stats.variants_measured > 0, "idle tuning must measure variants");
+        assert_eq!(
+            stats.active.len(),
+            handle.shapes.len(),
+            "every bucket activates a winner (variant 0 is always valid)"
+        );
+        assert!(!stats.active_us.is_empty());
+        for s in &stats.swaps {
+            assert!(s.gain > 1.0, "swap {:?} without improvement", s.shape);
+        }
+    }
+
+    #[test]
+    fn executor_init_failure_surfaces_through_spawn() {
+        let err = ExecutorHandle::spawn::<SimBackend, _>(
+            move || Err(anyhow::anyhow!("no such device")),
+            false,
+            None,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("no such device"), "{err}");
+    }
+
+    #[test]
+    fn finish_tuning_is_idempotent() {
+        let handle =
+            ExecutorHandle::spawn(move || Ok(SimBackend::new(SimGpu::mi250(), 3)), false, None)
+                .unwrap();
+        handle.finish_tuning().unwrap();
+        let first = handle.stats().unwrap().variants_measured;
+        assert!(first > 0);
+        handle.finish_tuning().unwrap();
+        assert_eq!(handle.stats().unwrap().variants_measured, first, "queue drains exactly once");
     }
 }

@@ -1,5 +1,7 @@
 //! vLLM-style serving layer: request router, seq-length bucketing,
-//! dynamic batching, and **off-critical-path autotuning** (paper Q4.4).
+//! dynamic batching, and **off-critical-path autotuning** (paper Q4.4)
+//! — on a pluggable execution backend, so the whole path runs in
+//! default builds.
 //!
 //! Architecture (single-process, mirroring a vLLM engine worker):
 //!
@@ -7,32 +9,44 @@
 //!  clients ──► Router ──► BucketQueue(seq≤128) ──┐
 //!                    └──► BucketQueue(seq≤256) ──┤   commands
 //!                                                ▼
-//!                                        ExecutorThread (owns PJRT)
+//!                                        ExecutorThread (owns the
+//!                                          │       ExecBackend)
 //!                                          │  idle? → run one tuning
 //!                                          │          measurement and
 //!                                          │          maybe swap the
 //!                                          ▼          active variant
 //!                                       replies
+//!                                          │
+//!                        ┌─────────────────┴─────────────────┐
+//!                        ▼                                   ▼
+//!                   SimBackend                          PjrtBackend
+//!             (always available: the              (feature `pjrt`: real
+//!              analytical platform models,         AOT HLO artifacts on
+//!              deterministic virtual-clock         the XLA PJRT CPU
+//!              latencies — a100/mi250/h100)        client)
 //! ```
 //!
-//! PJRT objects are not `Send`, so **all** XLA work lives on one executor
-//! thread; the router talks to it through channels.  Q4.4's *"perform
-//! autotuning based on workload metrics using idle GPU times"* falls out
-//! naturally: the executor runs one background tuning measurement
-//! whenever its request queue is empty, and hot-swaps the per-bucket
-//! active kernel variant when tuning finds a faster one.
+//! The executor owns all backend state on one thread — PJRT objects are
+//! not `Send`, so the backend is *constructed inside* that thread and
+//! the router talks to it through channels; the same shape works for
+//! the trivially-`Send` sim backend.  Q4.4's *"perform autotuning based
+//! on workload metrics using idle GPU times"* falls out naturally: the
+//! executor runs one background tuning measurement (through
+//! [`backend::ExecBackend::measure`]) whenever its request queue is
+//! empty, and hot-swaps the per-bucket active kernel variant when
+//! tuning finds a faster one.
 
+pub mod backend;
 pub mod batcher;
-#[cfg(feature = "pjrt")]
 pub mod executor;
 pub mod router;
 
+#[cfg(feature = "pjrt")]
+pub use backend::PjrtBackend;
+pub use backend::{ExecBackend, SimBackend};
 pub use batcher::{Batch, BucketPolicy, DynamicBatcher};
-#[cfg(feature = "pjrt")]
 pub use executor::{ExecutorCommand, ExecutorHandle, ExecutorStats};
-#[cfg(feature = "pjrt")]
-pub use router::{Router, ServeReport};
-pub use router::ServerConfig;
+pub use router::{Router, ServeReport, ServerConfig};
 
 /// One inference request: a prompt of `tokens` tokens.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -56,7 +70,8 @@ pub struct Completion {
     pub batch_size: usize,
     /// End-to-end latency (enqueue -> reply), µs.
     pub latency_us: f64,
-    /// Pure execution latency of the batch it rode in, µs.
+    /// Pure execution latency of the batch it rode in, µs (wall-clock
+    /// on PJRT, model-derived on the sim backend).
     pub exec_us: f64,
     /// Which kernel-config variant served it (artifact id).
     pub variant: String,

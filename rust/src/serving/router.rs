@@ -1,27 +1,23 @@
 //! The request router: trace replay, dynamic batching, reporting.
 //!
-//! `Router::serve_trace` (feature `pjrt`) replays a (deterministic,
-//! seeded) arrival trace through the
-//! [`DynamicBatcher`](super::batcher::DynamicBatcher) into the executor
-//! thread and aggregates a `ServeReport` — the end-to-end driver behind
-//! `examples/serve_attention.rs` and `portatune serve`.
+//! `Router::serve_trace` replays a (deterministic, seeded) arrival
+//! trace through the [`DynamicBatcher`](super::batcher::DynamicBatcher)
+//! into the executor thread and aggregates a [`ServeReport`] — the
+//! end-to-end driver behind `portatune serve` and
+//! `examples/serve_attention.rs`.  The router is backend-agnostic: it
+//! serves the always-available [`SimBackend`] ([`Router::sim`]) in
+//! default builds and real PJRT artifacts (`Router::pjrt`, feature
+//! `pjrt` — the link target only exists in pjrt builds) when the
+//! toolchain exists.
 
-#[cfg(feature = "pjrt")]
 use std::time::Instant;
 
-#[cfg(feature = "pjrt")]
+use super::backend::{ExecBackend, SimBackend};
 use super::batcher::{BucketPolicy, DynamicBatcher};
-#[cfg(feature = "pjrt")]
 use super::executor::{ExecutorCommand, ExecutorHandle, ExecutorStats};
-#[cfg(feature = "pjrt")]
-use super::Completion;
-use super::Request;
-#[cfg(feature = "pjrt")]
+use super::{Completion, Request};
 use crate::metrics::Summary;
-#[cfg(feature = "pjrt")]
-use crate::runtime::Manifest;
 use crate::util::rng::Rng;
-#[cfg(feature = "pjrt")]
 use crate::Result;
 
 /// Server configuration.
@@ -43,14 +39,14 @@ impl Default for ServerConfig {
 }
 
 /// Aggregated serving statistics.
-#[cfg(feature = "pjrt")]
 #[derive(Debug, Clone)]
 pub struct ServeReport {
     /// Requests completed.
     pub requests: usize,
     /// Requests rejected (no bucket fits them).
     pub rejected: usize,
-    /// Distinct batches executed.
+    /// Batches executed (every batch sent to the executor; identical
+    /// batch shapes are NOT collapsed).
     pub batches: usize,
     /// Wall-clock duration of the replay, seconds.
     pub wall_seconds: f64,
@@ -66,6 +62,11 @@ pub struct ServeReport {
     pub latency_p99_us: f64,
     /// Pure execution latency median, µs.
     pub exec_p50_us: f64,
+    /// Pure execution latency mean, µs — the cold-vs-tuned acceptance
+    /// metric (on the deterministic sim backend, tuned ≤ cold holds
+    /// exactly: the tuned variant is the per-bucket argmin of the same
+    /// model).
+    pub exec_mean_us: f64,
     /// Mean fraction of each compiled batch doing useful work.
     pub mean_batch_occupancy: f64,
     /// Executor-side counters (tuning, swaps, compiles).
@@ -73,27 +74,46 @@ pub struct ServeReport {
 }
 
 /// The serving front end.
-#[cfg(feature = "pjrt")]
 pub struct Router {
     executor: ExecutorHandle,
     policy: BucketPolicy,
 }
 
-#[cfg(feature = "pjrt")]
 impl Router {
-    /// Build a router over the manifest's compiled model shapes.
-    pub fn new(manifest: Manifest, cfg: &ServerConfig) -> Result<Self> {
+    /// Build a router over any execution backend.  The factory runs
+    /// inside the executor thread (backends need not be `Send` — the
+    /// constraint the non-`Send` PJRT client imposes), and the bucket
+    /// grid comes from whatever shapes the backend discovers.
+    pub fn with_backend<B, F>(make: F, cfg: &ServerConfig) -> Result<Self>
+    where
+        B: ExecBackend + 'static,
+        F: FnOnce() -> Result<B> + Send + 'static,
+    {
         let cache = match &cfg.cache_path {
             Some(p) => Some(crate::cache::TuningCache::open(p)?),
             None => None,
         };
-        let executor = ExecutorHandle::spawn(manifest, cfg.idle_tuning, cache)?;
+        let executor = ExecutorHandle::spawn(make, cfg.idle_tuning, cache)?;
         let pairs: Vec<(usize, usize)> = executor.shapes.iter().map(|&(b, s)| (s, b)).collect();
         if pairs.is_empty() {
-            anyhow::bail!("manifest has no transformer_block artifacts — rerun `make artifacts`");
+            anyhow::bail!("backend discovered no compiled model shapes to serve");
         }
         let policy = BucketPolicy::new(pairs, cfg.max_wait_us);
         Ok(Router { executor, policy })
+    }
+
+    /// Serve on the analytical sim backend — the default-build path
+    /// (`portatune serve --platform a100|mi250|h100`): deterministic
+    /// model latencies, no GPU/XLA toolchain.
+    pub fn sim(backend: SimBackend, cfg: &ServerConfig) -> Result<Self> {
+        Self::with_backend(move || Ok(backend), cfg)
+    }
+
+    /// Serve the manifest's real AOT artifacts through the PJRT CPU
+    /// client (`--platform cpu-pjrt`, feature `pjrt`).
+    #[cfg(feature = "pjrt")]
+    pub fn pjrt(manifest: crate::runtime::Manifest, cfg: &ServerConfig) -> Result<Self> {
+        Self::with_backend(move || super::backend::PjrtBackend::new(manifest), cfg)
     }
 
     /// The bucket policy the router batches under.
@@ -118,6 +138,7 @@ impl Router {
         let mut batcher = DynamicBatcher::new(self.policy.clone());
         let total = requests.len();
         let mut completions: Vec<Completion> = Vec::with_capacity(total);
+        let mut batches = 0usize;
 
         let mut pending = std::collections::VecDeque::from(requests);
         let enqueued_at = Instant::now();
@@ -137,6 +158,7 @@ impl Router {
                     .tx
                     .send(ExecutorCommand::Execute { batch, enqueued_at, reply: tx })
                     .map_err(|_| anyhow::anyhow!("executor gone"))?;
+                batches += 1;
                 completions.extend(rx.recv()?);
             }
         }
@@ -146,19 +168,17 @@ impl Router {
         let mut exec = Summary::new();
         let mut occupancy = Summary::new();
         let mut tokens = 0usize;
-        let mut batches_seen = std::collections::HashSet::new();
         for c in &completions {
             lat.record(c.latency_us);
             exec.record(c.exec_us);
             tokens += c.tokens;
-            batches_seen.insert((c.variant.clone(), c.exec_us.to_bits()));
             occupancy.record(1.0 / c.batch_size as f64);
         }
         let executor = self.executor.stats()?;
         Ok(ServeReport {
             requests: completions.len(),
             rejected: batcher.rejected.len(),
-            batches: batches_seen.len(),
+            batches,
             wall_seconds: wall,
             throughput_rps: completions.len() as f64 / wall.max(1e-9),
             tokens_per_second: tokens as f64 / wall.max(1e-9),
@@ -166,6 +186,7 @@ impl Router {
             latency_p95_us: lat.p95(),
             latency_p99_us: lat.p99(),
             exec_p50_us: exec.p50(),
+            exec_mean_us: exec.mean(),
             mean_batch_occupancy: occupancy.mean(),
             executor,
         })
@@ -190,6 +211,7 @@ pub fn synth_trace(n: usize, max_tokens: usize, seed: u64) -> Vec<Request> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::platform::SimGpu;
 
     #[test]
     fn trace_is_deterministic_and_clamped() {
@@ -211,5 +233,31 @@ mod tests {
             v[v.len() / 2] as f64
         };
         assert!(mean > median, "log-normal: mean {mean} > median {median}");
+    }
+
+    #[test]
+    fn sim_router_serves_a_trace_end_to_end() {
+        let cfg = ServerConfig { max_wait_us: 500, idle_tuning: false, cache_path: None };
+        let router = Router::sim(SimBackend::new(SimGpu::a100(), 5), &cfg).unwrap();
+        let max_tokens = router.policy().seq_buckets.last().copied().unwrap();
+        let report = router.serve_trace(synth_trace(12, max_tokens, 9)).unwrap();
+        assert_eq!(report.requests, 12);
+        assert_eq!(report.rejected, 0);
+        assert!(report.batches >= 1);
+        assert!(report.throughput_rps > 0.0);
+        assert!(report.exec_p50_us > 0.0);
+        assert!(report.exec_mean_us > 0.0);
+        assert!(report.latency_p99_us >= report.latency_p50_us);
+        assert_eq!(report.executor.requests_served, 12);
+    }
+
+    #[test]
+    fn sim_router_bucket_grid_matches_backend_shapes() {
+        let cfg = ServerConfig { max_wait_us: 500, idle_tuning: false, cache_path: None };
+        let backend = SimBackend::new(SimGpu::h100(), 0).with_shapes(&[(1, 128), (2, 128), (1, 256)]);
+        let router = Router::sim(backend, &cfg).unwrap();
+        assert_eq!(router.policy().seq_buckets, vec![128, 256]);
+        assert_eq!(router.policy().max_batch(0), 2);
+        assert_eq!(router.policy().max_batch(1), 1);
     }
 }

@@ -12,22 +12,22 @@
 //!    platforms: tuning a heterogeneous fleet gives each platform
 //!    exactly the outcome of tuning it alone.
 //!
-//! 2. **API equivalence** (the `TuningSession` redesign): every legacy
-//!    `tune*` entry point and its builder spelling produce identical
-//!    outcomes per strategy × seed — solo, guided, cached, fleet and
-//!    fleet-cached — so the deprecated wrappers really are thin
-//!    delegates.  The calls to the deprecated functions in this file
-//!    are the *sanctioned* exceptions to the `-D deprecated` CI check,
-//!    each under a scoped `#[allow(deprecated)]`.
+//! 2. **API equivalence** (the `TuningSession` surface): the builder's
+//!    spellings coincide wherever the API promises they do — implicit
+//!    defaults equal their explicit spelling, builder-option order is
+//!    irrelevant, a cold cached run is bit-identical to an uncached
+//!    one, and two independently-built caches behave identically cold
+//!    and warm.  (These tests replaced the legacy-wrapper-vs-builder
+//!    matrix when the five `#[deprecated]` `tune*` free functions were
+//!    deleted after their one-release migration window.)
 //!
 //! Plus the [`Budget`] contract: `Budget::Evals` runs are deterministic
 //! per seed and are exact prefixes of the uncapped history.
 
 use portatune::autotuner::{
-    self, Budget, Evaluator, MultiDeviceEvaluator, SessionOutcome, SimEvaluator, Strategy,
-    TuneOutcome, TuningSession,
+    Budget, Evaluator, FleetOutcome, MultiDeviceEvaluator, SessionOutcome, SimEvaluator,
+    Strategy, TuneOutcome, TuningSession,
 };
-use portatune::autotuner::FleetOutcome;
 use portatune::cache::TuningCache;
 use portatune::config::spaces;
 use portatune::kernels::baselines::{HAND_TUNED, TRITON_NVIDIA};
@@ -44,7 +44,7 @@ enum Mode {
     MultiDevice,
 }
 
-/// Builder spelling of a plain solo tune.
+/// The canonical builder spelling of a plain solo tune.
 fn builder_solo(
     space: &portatune::config::ConfigSpace,
     w: &Workload,
@@ -145,83 +145,111 @@ fn same_seed_same_outcome_for_every_strategy_and_engine() {
 }
 
 // ---------------------------------------------------------------------
-// API equivalence: legacy entry points vs their builder spellings.
-// The `#[allow(deprecated)]` markers below are the only sanctioned
-// uses of the legacy API in the tree (CI builds with `-D deprecated`).
+// API equivalence: TuningSession spellings pinned against each other.
 // ---------------------------------------------------------------------
 
 #[test]
-fn legacy_tune_matches_builder_for_every_strategy_and_seed() {
+fn implicit_defaults_match_their_explicit_spelling() {
+    // `TuningSession::new(..)` defaults to exhaustive search with seed
+    // 0 — spelling the defaults out must change nothing, bit for bit.
+    let w = Workload::llama3_attention(8, 1024);
+    let space = spaces::attention_sim_space();
+    let mut eval = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
+    let implicit = TuningSession::new(&space, &w)
+        .evaluator(&mut eval)
+        .run()
+        .and_then(SessionOutcome::into_solo)
+        .unwrap();
+    let explicit = builder_solo(&space, &w, &mut eval, &Strategy::Exhaustive, 0);
+    assert_same_outcome(&implicit, &explicit, "implicit vs explicit defaults");
+}
+
+#[test]
+fn builder_option_order_is_irrelevant_for_every_strategy_and_seed() {
+    // `.strategy().seed()` and `.seed().strategy()` are the same
+    // session; the builder carries no order-dependent state.
     let w = Workload::llama3_attention(8, 1024);
     let space = spaces::attention_sim_space();
     for strat in all_strategies() {
         for seed in [0u64, 7] {
             let mut eval = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
-            #[allow(deprecated)]
-            let legacy = autotuner::tune(&space, &w, &mut eval, &strat, seed).unwrap();
-            let builder = builder_solo(&space, &w, &mut eval, &strat, seed);
-            assert_same_outcome(&legacy, &builder, &format!("legacy tune {strat:?} seed {seed}"));
+            let a = builder_solo(&space, &w, &mut eval, &strat, seed);
+            let b = TuningSession::new(&space, &w)
+                .seed(seed)
+                .strategy(strat.clone())
+                .evaluator(&mut eval)
+                .run()
+                .and_then(SessionOutcome::into_solo)
+                .unwrap();
+            assert_same_outcome(&a, &b, &format!("option order {strat:?} seed {seed}"));
         }
     }
 }
 
 #[test]
-fn legacy_tune_guided_matches_builder() {
-    let w = Workload::llama3_attention(8, 1024);
-    let space = spaces::attention_sim_space();
-    for top_k in [5usize, 25, 100] {
-        let mut prior = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
-        let mut target = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
-        #[allow(deprecated)]
-        let legacy = autotuner::tune_guided(&space, &w, &mut prior, &mut target, top_k).unwrap();
-        let builder = TuningSession::new(&space, &w)
-            .guided(&mut prior, top_k)
-            .evaluator(&mut target)
-            .run()
-            .and_then(SessionOutcome::into_solo)
-            .unwrap();
-        assert_same_outcome(&legacy, &builder, &format!("legacy tune_guided k={top_k}"));
-    }
-}
-
-#[test]
-fn legacy_tune_cached_matches_builder() {
+fn cached_cold_run_is_bit_identical_to_an_uncached_run() {
+    // Attaching a cold cache must not perturb the search; and two
+    // independently-built caches must behave identically cold and warm.
     let w = Workload::llama3_attention(8, 1024);
     let space = spaces::attention_sim_space();
     for strat in all_strategies() {
         let seed = 7;
         let mut eval = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
-        let mut legacy_cache = TuningCache::ephemeral();
-        let mut builder_cache = TuningCache::ephemeral();
-        #[allow(deprecated)]
-        let legacy =
-            autotuner::tune_cached(&mut legacy_cache, &space, &w, &mut eval, &strat, seed)
-                .unwrap();
-        let builder = TuningSession::new(&space, &w)
-            .strategy(strat.clone())
-            .seed(seed)
-            .cache(&mut builder_cache)
-            .evaluator(&mut eval)
+        let plain = builder_solo(&space, &w, &mut eval, &strat, seed);
+        let mut cache_a = TuningCache::ephemeral();
+        let mut cache_b = TuningCache::ephemeral();
+        let cached = |cache: &mut TuningCache, eval: &mut dyn Evaluator| {
+            TuningSession::new(&space, &w)
+                .strategy(strat.clone())
+                .seed(seed)
+                .cache(cache)
+                .evaluator(eval)
+                .run()
+                .and_then(SessionOutcome::into_solo)
+                .unwrap()
+        };
+        let cold_a = cached(&mut cache_a, &mut eval);
+        let cold_b = cached(&mut cache_b, &mut eval);
+        assert!(!cold_a.from_cache && !cold_b.from_cache);
+        assert_same_outcome(&plain, &cold_a, &format!("{strat:?}: cached cold vs plain"));
+        assert_same_outcome(&cold_a, &cold_b, &format!("{strat:?}: two cold caches"));
+        assert_eq!(cache_a.len(), cache_b.len(), "{strat:?}: cache sizes differ");
+        // Warm: both caches hit, serving the same winner with zero
+        // evaluations.
+        let warm_a = cached(&mut cache_a, &mut eval);
+        let warm_b = cached(&mut cache_b, &mut eval);
+        assert!(warm_a.from_cache && warm_b.from_cache, "{strat:?}: warm run must hit");
+        assert_eq!(warm_a.best, cold_a.best, "{strat:?}: cache hit serves the tuned winner");
+        assert_eq!(warm_a.best, warm_b.best, "{strat:?}: cache hits differ");
+        assert_eq!(warm_a.evaluated, 0);
+    }
+}
+
+#[test]
+fn guided_spelling_order_is_irrelevant_and_prunes() {
+    // `.guided(prior, k).evaluator(t)` == `.evaluator(t).guided(prior, k)`,
+    // and the measured set really is capped at k.
+    let w = Workload::llama3_attention(8, 1024);
+    let space = spaces::attention_sim_space();
+    for top_k in [5usize, 25, 100] {
+        let mut prior = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
+        let mut target = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
+        let a = TuningSession::new(&space, &w)
+            .guided(&mut prior, top_k)
+            .evaluator(&mut target)
             .run()
             .and_then(SessionOutcome::into_solo)
             .unwrap();
-        assert_same_outcome(&legacy, &builder, &format!("legacy tune_cached {strat:?} (cold)"));
-        assert_eq!(legacy_cache.len(), builder_cache.len(), "{strat:?}: cache sizes differ");
-        // Both spellings hit their own cache identically.
-        #[allow(deprecated)]
-        let legacy_hit =
-            autotuner::tune_cached(&mut legacy_cache, &space, &w, &mut eval, &strat, seed)
-                .unwrap();
-        let builder_hit = TuningSession::new(&space, &w)
-            .strategy(strat.clone())
-            .seed(seed)
-            .cache(&mut builder_cache)
-            .evaluator(&mut eval)
+        let mut prior2 = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED);
+        let mut target2 = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
+        let b = TuningSession::new(&space, &w)
+            .evaluator(&mut target2)
+            .guided(&mut prior2, top_k)
             .run()
             .and_then(SessionOutcome::into_solo)
             .unwrap();
-        assert!(legacy_hit.from_cache && builder_hit.from_cache);
-        assert_eq!(legacy_hit.best, builder_hit.best, "{strat:?}: cache hits differ");
+        assert_same_outcome(&a, &b, &format!("guided spelling order k={top_k}"));
+        assert!(a.evaluated <= top_k, "guided must measure at most k configs");
     }
 }
 
@@ -233,7 +261,7 @@ fn het_fleet(w: Workload) -> MultiDeviceEvaluator {
     MultiDeviceEvaluator::new(vec![a100.clone(), mi250, a100])
 }
 
-/// Builder spelling of a plain fleet tune.
+/// The canonical builder spelling of a plain fleet tune.
 fn builder_fleet(
     space: &portatune::config::ConfigSpace,
     w: &Workload,
@@ -251,77 +279,62 @@ fn builder_fleet(
 }
 
 #[test]
-fn legacy_tune_fleet_matches_builder_for_every_strategy_and_seed() {
+fn fleet_option_order_is_irrelevant_for_every_strategy_and_seed() {
     let w = Workload::llama3_attention(8, 1024);
     let space = spaces::attention_sim_space();
     for strat in all_strategies() {
         for seed in [0u64, 7] {
             let mut fleet = het_fleet(w);
-            #[allow(deprecated)]
-            let legacy = autotuner::tune_fleet(&space, &w, &mut fleet, &strat, seed).unwrap();
+            let a = builder_fleet(&space, &w, &mut fleet, &strat, seed);
             let mut fleet = het_fleet(w);
-            let builder = builder_fleet(&space, &w, &mut fleet, &strat, seed);
-            assert_same_fleet(&legacy, &builder, &format!("legacy tune_fleet {strat:?} {seed}"));
+            let b = TuningSession::new(&space, &w)
+                .seed(seed)
+                .fleet(&mut fleet)
+                .strategy(strat.clone())
+                .run()
+                .and_then(SessionOutcome::into_fleet)
+                .unwrap();
+            assert_same_fleet(&a, &b, &format!("fleet option order {strat:?} {seed}"));
         }
     }
 }
 
 #[test]
-fn legacy_tune_fleet_cached_matches_builder() {
+fn fleet_cached_cold_run_matches_uncached_and_hits_warm() {
     let w = Workload::llama3_attention(8, 1024);
     let space = spaces::attention_sim_space();
     for strat in [Strategy::Exhaustive, Strategy::SuccessiveHalving { initial: 32, eta: 2 }] {
         let seed = 3;
-        let mut legacy_cache = TuningCache::ephemeral();
-        let mut builder_cache = TuningCache::ephemeral();
         let mut fleet = het_fleet(w);
-        #[allow(deprecated)]
-        let legacy = autotuner::tune_fleet_cached(
-            &mut legacy_cache,
-            &space,
-            &w,
-            &mut fleet,
-            &strat,
-            seed,
-        )
-        .unwrap();
+        let plain = builder_fleet(&space, &w, &mut fleet, &strat, seed);
+        let mut cache = TuningCache::ephemeral();
         let mut fleet = het_fleet(w);
-        let builder = TuningSession::new(&space, &w)
+        let cold = TuningSession::new(&space, &w)
             .strategy(strat.clone())
             .seed(seed)
-            .cache(&mut builder_cache)
+            .cache(&mut cache)
             .fleet(&mut fleet)
             .run()
             .and_then(SessionOutcome::into_fleet)
             .unwrap();
-        assert_same_fleet(&legacy, &builder, &format!("legacy tune_fleet_cached {strat:?} cold"));
-        assert_eq!(legacy_cache.len(), builder_cache.len());
-        // Warm: both spellings serve the whole fleet from cache.
+        assert_same_fleet(&plain, &cold, &format!("fleet cached cold {strat:?}"));
+        assert_eq!(cache.len(), cold.outcomes.len(), "one entry per platform");
+        // Warm: the whole fleet is served from cache.
         let mut fleet = het_fleet(w);
-        #[allow(deprecated)]
-        let legacy_hit = autotuner::tune_fleet_cached(
-            &mut legacy_cache,
-            &space,
-            &w,
-            &mut fleet,
-            &strat,
-            seed,
-        )
-        .unwrap();
-        let mut fleet = het_fleet(w);
-        let builder_hit = TuningSession::new(&space, &w)
+        let warm = TuningSession::new(&space, &w)
             .strategy(strat.clone())
             .seed(seed)
-            .cache(&mut builder_cache)
+            .cache(&mut cache)
             .fleet(&mut fleet)
             .run()
             .and_then(SessionOutcome::into_fleet)
             .unwrap();
-        assert!(legacy_hit.from_cache && builder_hit.from_cache, "{strat:?}: warm run must hit");
-        assert_eq!(legacy_hit.distinct_winners, builder_hit.distinct_winners);
-        for ((p1, o1), (p2, o2)) in legacy_hit.outcomes.iter().zip(&builder_hit.outcomes) {
+        assert!(warm.from_cache, "{strat:?}: warm fleet run must hit");
+        assert_eq!(warm.distinct_winners, cold.distinct_winners);
+        for ((p1, o1), (p2, o2)) in cold.outcomes.iter().zip(&warm.outcomes) {
             assert_eq!(p1, p2);
             assert_eq!(o1.best, o2.best, "{strat:?} {p1}: cached winners differ");
+            assert_eq!(o2.evaluated, 0);
         }
     }
 }

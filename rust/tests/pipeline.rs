@@ -13,10 +13,12 @@ use portatune::kernels::baselines::{triton_codegen, TemplateLibrary};
 use portatune::platform::{PlatformId, SimGpu};
 #[cfg(feature = "pjrt")]
 use portatune::runtime::{Engine, Manifest};
-#[cfg(feature = "pjrt")]
-use portatune::serving::{router::synth_trace, Router, ServerConfig};
+use portatune::serving::{
+    router::synth_trace, BucketPolicy, DynamicBatcher, Request, Router, ServerConfig, SimBackend,
+};
 use portatune::util::tmp::TempDir;
 use portatune::workload::Workload;
+use std::time::{Duration, Instant};
 
 #[cfg(feature = "pjrt")]
 fn artifacts_present() -> bool {
@@ -124,6 +126,161 @@ fn cross_platform_tune_then_transplant_pipeline() {
     assert!(back > oa.best_latency_us, "transplant cannot beat native tuning");
 }
 
+// ---------------------------------------------------------------------
+// Serving core, default features: the backend-agnostic executor/router
+// driven end to end by the SimBackend — no artifacts, no toolchain.
+// ---------------------------------------------------------------------
+
+#[test]
+fn sim_serve_smoke_cold_then_tuned_is_no_slower() {
+    // The acceptance contract of the backend split: a seeded trace
+    // replayed cold and then tuned on the deterministic sim backend
+    // completes every request, and tuning can only help (the tuned
+    // variant is the per-bucket argmin over the same analytical model).
+    // A huge flush deadline makes batching a pure function of the
+    // request order, so both replays see identical batch shapes.
+    let cfg = ServerConfig { max_wait_us: 10_000_000, idle_tuning: true, cache_path: None };
+    let router = Router::sim(SimBackend::new(portatune::platform::SimGpu::a100(), 11), &cfg).unwrap();
+    let max_tokens = router.policy().seq_buckets.last().copied().unwrap();
+    let trace = synth_trace(64, max_tokens, 42);
+
+    let cold = router.serve_trace(trace.clone()).unwrap();
+    assert_eq!(cold.requests, 64, "every request must complete");
+    assert_eq!(cold.rejected, 0);
+    assert!(cold.exec_mean_us > 0.0);
+
+    router.finish_tuning().unwrap();
+    let stats = router.executor().stats().unwrap();
+    assert!(stats.variants_measured > 0, "idle tuning must have measured variants");
+    assert!(!stats.active_us.is_empty(), "every tuned bucket reports its winner's latency");
+    for s in &stats.swaps {
+        assert!(s.gain > 1.0, "swap without improvement: {s:?}");
+    }
+
+    let tuned = router.serve_trace(trace).unwrap();
+    assert_eq!(tuned.requests, 64);
+    assert!(
+        tuned.exec_mean_us <= cold.exec_mean_us,
+        "tuned mean exec {} us must not exceed cold {} us",
+        tuned.exec_mean_us,
+        cold.exec_mean_us
+    );
+}
+
+#[test]
+fn sim_serving_winners_survive_restart_via_cache() {
+    // Q4.3 x Q4.4 on the default build: tune once, persist, restart
+    // the server -> warm start with zero re-tuning.
+    let dir = TempDir::new("sim-serve-cache").unwrap();
+    let cfg = ServerConfig {
+        max_wait_us: 500,
+        idle_tuning: true,
+        cache_path: Some(dir.join("serving_cache.json")),
+    };
+    let backend = || SimBackend::new(portatune::platform::SimGpu::mi250(), 3);
+    let (actives, measured);
+    {
+        let router = Router::sim(backend(), &cfg).unwrap();
+        router.finish_tuning().unwrap();
+        let stats = router.executor().stats().unwrap();
+        assert_eq!(stats.warm_started, 0, "first boot is cold");
+        measured = stats.variants_measured;
+        assert!(measured > 0);
+        actives = stats.active.clone();
+    }
+    {
+        let router = Router::sim(backend(), &cfg).unwrap();
+        let stats = router.executor().stats().unwrap();
+        assert_eq!(stats.warm_started, actives.len(), "all buckets warm-started");
+        assert_eq!(stats.variants_measured, 0, "no re-tuning on restart");
+        assert_eq!(stats.active, actives, "cached winners adopted");
+        // finish_tuning is now a no-op (queue emptied by warm start).
+        router.finish_tuning().unwrap();
+        assert_eq!(router.executor().stats().unwrap().variants_measured, 0);
+    }
+}
+
+#[test]
+fn sim_serve_platforms_have_disjoint_cache_namespaces() {
+    // An a100 server and an mi250 server sharing one cache file must
+    // never adopt each other's winners (the platform fingerprint is
+    // part of the key).
+    let dir = TempDir::new("sim-serve-cross").unwrap();
+    let cfg = ServerConfig {
+        max_wait_us: 500,
+        idle_tuning: true,
+        cache_path: Some(dir.join("shared_cache.json")),
+    };
+    {
+        let router = Router::sim(SimBackend::new(portatune::platform::SimGpu::a100(), 5), &cfg).unwrap();
+        router.finish_tuning().unwrap();
+        assert!(router.executor().stats().unwrap().variants_measured > 0);
+    }
+    {
+        // Different platform, same cache file: must boot cold.
+        let router = Router::sim(SimBackend::new(portatune::platform::SimGpu::mi250(), 5), &cfg).unwrap();
+        let stats = router.executor().stats().unwrap();
+        assert_eq!(stats.warm_started, 0, "mi250 must not adopt a100 winners");
+        router.finish_tuning().unwrap();
+        assert!(router.executor().stats().unwrap().variants_measured > 0);
+    }
+}
+
+#[test]
+fn bucket_policy_edge_cases() {
+    // Empty grid: nothing fits, nothing panics.
+    let empty = BucketPolicy::new(vec![], 1_000);
+    assert!(empty.seq_buckets.is_empty());
+    assert_eq!(empty.bucket_for(1), None);
+    assert_eq!(empty.bucket_for(usize::MAX), None);
+    let mut b = DynamicBatcher::new(empty);
+    let now = Instant::now();
+    assert!(b.push(Request { id: 1, tokens: 8 }, now).is_none());
+    assert_eq!(b.rejected.len(), 1);
+    assert!(b.next_batch(now, true).is_none());
+
+    // Exact fit routes to the boundary bucket; one past it spills to
+    // the next; past the largest is rejected.
+    let p = BucketPolicy::new(vec![(128, 2), (256, 4)], 1_000);
+    assert_eq!(p.bucket_for(128), Some(0), "exact fit stays in the small bucket");
+    assert_eq!(p.bucket_for(129), Some(1));
+    assert_eq!(p.bucket_for(256), Some(1), "exact fit in the largest bucket");
+    assert_eq!(p.bucket_for(257), None, "oversize requests have no bucket");
+    assert_eq!(p.max_batch(0), 2);
+    assert_eq!(p.max_batch(1), 4);
+    assert_eq!(p.batch_shape_for(1, 3), 4, "partial batches pad up to a compiled size");
+    assert_eq!(p.batch_shape_for(1, 5), 4, "over-full requests clamp to the largest batch");
+}
+
+#[test]
+fn batcher_bucket_overflow_splits_into_full_batches() {
+    // 10 requests into a bucket compiled for at most 4: two full
+    // batches flush immediately, the remainder waits for the deadline.
+    let p = BucketPolicy::new(vec![(128, 4)], 10_000);
+    let mut b = DynamicBatcher::new(p);
+    let t0 = Instant::now();
+    for i in 0..10 {
+        b.push(Request { id: i, tokens: 100 }, t0);
+    }
+    let first = b.next_batch(t0, false).expect("full batch ready");
+    assert_eq!(first.requests.len(), 4);
+    assert_eq!(first.batch_shape, 4);
+    let second = b.next_batch(t0, false).expect("second full batch ready");
+    assert_eq!(second.requests.len(), 4);
+    assert!(b.next_batch(t0, false).is_none(), "2 leftovers must wait for the deadline");
+    assert_eq!(b.pending(), 2);
+    // Deadline flush: once the oldest leftover has waited max_wait_us,
+    // the partial batch goes out padded to a compiled shape.
+    let later = t0 + Duration::from_micros(10_001);
+    let tail = b.next_batch(later, false).expect("deadline flush");
+    assert_eq!(tail.requests.len(), 2);
+    assert_eq!(tail.batch_shape, 4, "partial flush pads up to a compiled size");
+    assert_eq!(b.pending(), 0);
+    // FIFO preserved across the splits.
+    let ids: Vec<u64> = first.requests.iter().chain(&second.requests).chain(&tail.requests).map(|r| r.id).collect();
+    assert_eq!(ids, (0..10).collect::<Vec<u64>>());
+}
+
 #[cfg(feature = "pjrt")]
 #[test]
 fn serving_router_end_to_end_smoke() {
@@ -131,7 +288,7 @@ fn serving_router_end_to_end_smoke() {
         return;
     }
     let manifest = Manifest::load_default().unwrap();
-    let router = Router::new(
+    let router = Router::pjrt(
         manifest,
         &ServerConfig { max_wait_us: 500, idle_tuning: false, cache_path: None },
     )
@@ -152,7 +309,7 @@ fn serving_background_tuning_improves_or_keeps_active_variants() {
         return;
     }
     let manifest = Manifest::load_default().unwrap();
-    let router = Router::new(
+    let router = Router::pjrt(
         manifest,
         &ServerConfig { max_wait_us: 500, idle_tuning: true, cache_path: None },
     )
@@ -185,7 +342,7 @@ fn serving_winners_survive_restart_via_cache() {
     };
     let (actives, measured);
     {
-        let router = Router::new(Manifest::load_default().unwrap(), &cfg).unwrap();
+        let router = Router::pjrt(Manifest::load_default().unwrap(), &cfg).unwrap();
         router.finish_tuning().unwrap();
         let stats = router.executor().stats().unwrap();
         assert_eq!(stats.warm_started, 0, "first boot is cold");
@@ -195,7 +352,7 @@ fn serving_winners_survive_restart_via_cache() {
     }
     assert!(cache_path.exists(), "winners persisted");
     {
-        let router = Router::new(Manifest::load_default().unwrap(), &cfg).unwrap();
+        let router = Router::pjrt(Manifest::load_default().unwrap(), &cfg).unwrap();
         let stats = router.executor().stats().unwrap();
         assert_eq!(stats.warm_started, actives.len(), "all buckets warm-started");
         assert_eq!(stats.variants_measured, 0, "no re-tuning on restart");
