@@ -61,7 +61,7 @@ fn main() {
         // A huge flush deadline makes batching a pure function of the
         // request order, so the cold and tuned replays see identical
         // batch shapes and the tuned-≤-cold exec assertion is exact.
-        let cfg = ServerConfig { max_wait_us: 10_000_000, idle_tuning: true, cache_path: None };
+        let cfg = ServerConfig { max_wait_us: 10_000_000, idle_tuning: true, ..Default::default() };
         let router = Router::sim(SimBackend::new(gpu, 1), &cfg).expect("sim router");
         let max_tokens = router.policy().seq_buckets.last().copied().unwrap_or(128);
         let trace = synth_trace(n, max_tokens, 7);

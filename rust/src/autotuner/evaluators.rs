@@ -27,6 +27,7 @@ use crate::autotuner::Evaluator;
 use crate::config::Config;
 use crate::metrics::DeviceUtil;
 use crate::platform::model::{Codegen, InvalidConfig, SimGpu};
+use crate::serving::chaos::FaultPlan;
 use crate::util::pool;
 use crate::workload::Workload;
 
@@ -599,10 +600,120 @@ mod pjrt {
     }
 }
 
+/// Fault-injecting decorator over any [`Evaluator`] — the tuning-side
+/// sibling of [`crate::serving::ChaosBackend`], sharing its
+/// [`FaultPlan`] so `TuningSession` runs can be stressed the same way
+/// the serving plane is.
+///
+/// Per evaluation, a single seeded draw (a pure function of the plan
+/// seed, the config fingerprint, and a per-config attempt ordinal)
+/// decides the fate: a transient fault surfaces as an
+/// [`InvalidConfig`] (exactly how strategies already treat
+/// platform-rejected configs, so every search survives it by
+/// construction), and a latency outlier spikes one of three virtual
+/// samples and is absorbed bit-for-bit by the
+/// [`crate::metrics::median`] aggregate.  Clean evaluations pass the
+/// inner latency through untouched, so chaos runs stay bit-reproducible
+/// per seed.
+pub struct ChaosEvaluator<E: Evaluator> {
+    inner: E,
+    plan: FaultPlan,
+    /// Per-config attempt ordinals (the re-roll axis).
+    attempts: std::collections::HashMap<u64, u64>,
+    injected: usize,
+}
+
+impl<E: Evaluator> ChaosEvaluator<E> {
+    /// Wrap `inner` with the fault schedule `plan` (only the
+    /// `transient.measure`, `outlier_rate`/`outlier_mult` and
+    /// `max_injected` fields apply — an evaluator has one verb).
+    pub fn new(inner: E, plan: FaultPlan) -> Self {
+        ChaosEvaluator { inner, plan, attempts: std::collections::HashMap::new(), injected: 0 }
+    }
+
+    /// Faults injected so far.
+    pub fn injected(&self) -> usize {
+        self.injected
+    }
+
+    /// The wrapped evaluator.
+    pub fn inner(&self) -> &E {
+        &self.inner
+    }
+}
+
+impl<E: Evaluator> Evaluator for ChaosEvaluator<E> {
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn evaluate_fidelity(&mut self, cfg: &Config, fidelity: f64) -> Result<f64, InvalidConfig> {
+        let fp = cfg.fingerprint();
+        let attempt = {
+            let a = self.attempts.entry(fp).or_insert(0);
+            let v = *a;
+            *a += 1;
+            v
+        };
+        let healed = matches!(self.plan.max_injected, Some(max) if self.injected >= max);
+        if !healed {
+            let r = crate::util::rng::Rng::seed_from(
+                self.plan.seed ^ fp.rotate_left(7) ^ attempt.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            )
+            .f64();
+            if r < self.plan.transient.measure {
+                self.injected += 1;
+                return Err(InvalidConfig {
+                    reason: format!("injected transient fault (chaos, attempt {attempt})"),
+                });
+            }
+            if r < self.plan.transient.measure + self.plan.outlier_rate {
+                self.injected += 1;
+                let base = self.inner.evaluate_fidelity(cfg, fidelity)?;
+                let mult = self.plan.outlier_mult;
+                return Ok(crate::metrics::median(&[base * mult, base, base]));
+            }
+        }
+        self.inner.evaluate_fidelity(cfg, fidelity)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::kernels::baselines::HAND_TUNED;
+
+    #[test]
+    fn chaos_evaluator_sessions_complete_and_are_deterministic() {
+        use crate::autotuner::{SessionOutcome, Strategy, TuningSession};
+        use crate::serving::VerbRates;
+        let w = Workload::llama3_attention(8, 1024);
+        let space = crate::config::spaces::attention_sim_space();
+        let run = || {
+            let mut eval = ChaosEvaluator::new(
+                SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED).sequential(),
+                FaultPlan {
+                    seed: 3,
+                    transient: VerbRates { measure: 0.3, ..VerbRates::default() },
+                    ..FaultPlan::default()
+                },
+            );
+            let out = TuningSession::new(&space, &w)
+                .strategy(Strategy::Random { budget: 40 })
+                .seed(3)
+                .evaluator(&mut eval)
+                .run()
+                .and_then(SessionOutcome::into_solo)
+                .expect("a 0.3 transient rate cannot sink all 40 evaluations");
+            (out.best.fingerprint(), out.best_latency_us.to_bits(), eval.injected())
+        };
+        let (fp1, lat1, inj1) = run();
+        let (fp2, lat2, inj2) = run();
+        assert!(inj1 > 0, "rate 0.3 over a 40-eval session must inject faults");
+        assert_eq!(fp1, fp2, "chaos tuning must be reproducible per seed");
+        assert_eq!(lat1, lat2, "best latency must be bit-identical across reruns");
+        assert_eq!(inj1, inj2, "fault schedule must be bit-reproducible");
+    }
 
     #[test]
     fn sim_evaluator_counts_calls() {

@@ -54,7 +54,7 @@ pub mod session;
 
 #[cfg(feature = "pjrt")]
 pub use evaluators::PjrtEvaluator;
-pub use evaluators::{BatchMode, MultiDeviceEvaluator, SimEvaluator};
+pub use evaluators::{BatchMode, ChaosEvaluator, MultiDeviceEvaluator, SimEvaluator};
 pub use search::{EvalRecord, Observer, Strategy};
 pub use session::{Budget, SessionOutcome, TuningSession};
 

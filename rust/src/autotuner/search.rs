@@ -183,6 +183,16 @@ pub trait Observer {
     fn on_platform(&mut self, platform: &str) {
         let _ = platform;
     }
+
+    /// An evaluation failed: the config is invalid on this platform, or
+    /// the measurement faulted (e.g. an injected
+    /// [`crate::serving::ChaosBackend`]/`ChaosEvaluator` fault).  Fired
+    /// in addition to [`Observer::on_eval`] for the same record, with
+    /// the failure reason.  Like every observer hook this is
+    /// watch-only: it cannot influence the search.
+    fn on_fault(&mut self, fingerprint: u64, reason: &str) {
+        let _ = (fingerprint, reason);
+    }
 }
 
 /// Records every evaluation a strategy performs.
@@ -325,6 +335,7 @@ impl<'o> Recorder<'o> {
         res: Result<f64, crate::platform::model::InvalidConfig>,
         fidelity: f64,
     ) -> Option<f64> {
+        let mut fault_reason: Option<String> = None;
         let entry = match res {
             Ok(us) => {
                 // Capture only valid configs: invalid ones can never be
@@ -335,8 +346,9 @@ impl<'o> Recorder<'o> {
                 }
                 EvalRecord { fingerprint: cfg.fingerprint(), latency_us: Some(us), fidelity }
             }
-            Err(_) => {
+            Err(e) => {
                 self.invalid += 1;
+                fault_reason = Some(e.reason);
                 EvalRecord { fingerprint: cfg.fingerprint(), latency_us: None, fidelity }
             }
         };
@@ -349,6 +361,9 @@ impl<'o> Recorder<'o> {
         self.evals.push(entry);
         for obs in self.observers.iter_mut() {
             obs.on_eval(&entry);
+            if let Some(reason) = &fault_reason {
+                obs.on_fault(entry.fingerprint, reason);
+            }
             if new_best {
                 obs.on_new_best(cfg, entry.latency_us.unwrap());
             }
@@ -907,6 +922,41 @@ mod tests {
 
     fn w() -> Workload {
         Workload::VectorAdd { n: 64, dtype: crate::workload::DType::F32 }
+    }
+
+    #[test]
+    fn observer_sees_faults_with_their_reasons() {
+        #[derive(Default)]
+        struct FaultWatcher {
+            faults: Vec<(u64, String)>,
+            evals: usize,
+        }
+        impl Observer for FaultWatcher {
+            fn on_eval(&mut self, _r: &EvalRecord) {
+                self.evals += 1;
+            }
+            fn on_fault(&mut self, fingerprint: u64, reason: &str) {
+                self.faults.push((fingerprint, reason.to_string()));
+            }
+        }
+        let mut watcher = FaultWatcher::default();
+        {
+            let mut rec = Recorder::default();
+            rec.observe(&mut watcher);
+            let good = Config::new(&[("a", 4), ("b", 20)]);
+            let bad = Config::new(&[("a", 8), ("b", 20)]);
+            rec.eval(&mut Quadratic, &good, 1.0);
+            rec.eval(&mut Quadratic, &bad, 1.0);
+            rec.record(
+                &good,
+                Err(InvalidConfig { reason: "injected transient fault".into() }),
+                1.0,
+            );
+        }
+        assert_eq!(watcher.evals, 3, "on_eval fires for every record, valid or not");
+        assert_eq!(watcher.faults.len(), 2, "on_fault fires only for failures");
+        assert_eq!(watcher.faults[0].1, "a=8 unsupported");
+        assert_eq!(watcher.faults[1].1, "injected transient fault");
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //!                 [--devices N]
 //! portatune serve [--requests N] [--seed N] [--no-tuning]
 //!                 [--platform a100|mi250|h100|cpu-pjrt[,P2,...]]
+//!                 [--chaos SEED [--fault-rate P]]
 //! portatune analyze <kernels|hlo> [path]
 //! portatune cache <show|clear> [--file F]
 //! ```
@@ -30,7 +31,9 @@ use portatune::report::Report;
 #[cfg(feature = "pjrt")]
 use portatune::runtime::Engine;
 use portatune::runtime::Manifest;
-use portatune::serving::{router::synth_trace, Router, ServeReport, ServerConfig, SimBackend};
+use portatune::serving::{
+    router::synth_trace, ChaosBackend, FaultPlan, Router, ServeReport, ServerConfig, SimBackend,
+};
 use portatune::util::cli::Args;
 use portatune::workload::{DType, Workload};
 
@@ -57,6 +60,11 @@ USAGE:
                                    a comma list replays the same trace on
                                    each platform and prints a comparison;
                                    cpu-pjrt needs --features pjrt)
+                  [--chaos SEED]  (deterministic fault injection: wrap the
+                                   backend in ChaosBackend seeded with SEED;
+                                   sim platforms only)
+                  [--fault-rate P] (uniform per-verb fault rate for --chaos;
+                                   default 0.1)
   portatune analyze kernels
   portatune analyze hlo <path>
   portatune cache <show|clear> [--file F]
@@ -487,10 +495,22 @@ fn cmd_tune(args: &Args) -> Result<()> {
 /// Build the router for one serve platform: sim platforms go straight
 /// to the always-available [`SimBackend`]; `cpu-pjrt` needs the real
 /// PJRT executor behind the feature flag.
-fn serve_router(pid: PlatformId, seed: u64, cfg: &ServerConfig) -> Result<Router> {
-    match pid.sim() {
-        Some(gpu) => Router::sim(SimBackend::new(gpu, seed), cfg),
-        None => pjrt_serve_router(cfg),
+fn serve_router(
+    pid: PlatformId,
+    seed: u64,
+    cfg: &ServerConfig,
+    chaos: Option<FaultPlan>,
+) -> Result<Router> {
+    match (pid.sim(), chaos) {
+        (Some(gpu), Some(plan)) => {
+            let backend = SimBackend::new(gpu, seed);
+            Router::with_backend(move || Ok(ChaosBackend::new(backend, plan)), cfg)
+        }
+        (Some(gpu), None) => Router::sim(SimBackend::new(gpu, seed), cfg),
+        (None, Some(_)) => Err(anyhow!(
+            "--chaos is supported on the sim platforms (a100|mi250|h100) only"
+        )),
+        (None, None) => pjrt_serve_router(cfg),
     }
 }
 
@@ -513,6 +533,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let requests = args.flag_parse("requests", 64usize)?;
     let seed = args.flag_parse("seed", 42u64)?;
     let no_tuning = args.has("no-tuning");
+    let chaos_seed = args
+        .flag("chaos")
+        .map(|s| s.parse::<u64>().map_err(|e| anyhow!("--chaos {s:?}: {e}")))
+        .transpose()?;
+    let fault_rate = args.flag_parse("fault-rate", 0.1f64)?;
+    if args.flag("fault-rate").is_some() && chaos_seed.is_none() {
+        return Err(anyhow!("--fault-rate needs --chaos SEED to enable fault injection"));
+    }
+    if !(0.0..=1.0).contains(&fault_rate) {
+        return Err(anyhow!("--fault-rate must be a probability in [0, 1] (got {fault_rate})"));
+    }
+    let chaos = chaos_seed.map(|s| FaultPlan::uniform(s, fault_rate));
     let cfg = ServerConfig { idle_tuning: !no_tuning, ..Default::default() };
     let platforms: Vec<PlatformId> = args
         .flag_or("platform", "a100")
@@ -529,7 +561,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut rows: Vec<(String, ServeReport, Option<ServeReport>)> = Vec::new();
     for pid in platforms {
         println!("\n=== serving on {} ===", pid.name());
-        let router = serve_router(pid, seed, &cfg)?;
+        if let Some(plan) = &chaos {
+            println!(
+                "(chaos: seed {} fault-rate {:.3} — deterministic fault injection active)",
+                plan.seed, fault_rate
+            );
+        }
+        let router = serve_router(pid, seed, &cfg, chaos.clone())?;
         let max_tokens = router.policy().seq_buckets.last().copied().unwrap_or(128);
         let trace = synth_trace(requests, max_tokens, seed);
 
@@ -552,6 +590,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
             print_serve("tuned", &tuned);
             println!("\nexec p50 improvement: {:.2}x", before.exec_p50_us / tuned.exec_p50_us);
             after = Some(tuned);
+        }
+        if chaos.is_some() {
+            // One grep-able row per counter — CI's chaos smoke step
+            // asserts `| injected | N |` has N > 0.
+            let last = after.as_ref().unwrap_or(&before);
+            let mut rep = Report::new(
+                &format!("chaos fault-tolerance counters — {}", pid.name()),
+                &["counter", "value"],
+            );
+            for (label, value) in last.faults.rows() {
+                rep.row(vec![label.to_string(), value.to_string()]);
+            }
+            println!("\n{}", rep.to_markdown());
         }
         rows.push((pid.name().to_string(), before, after));
     }
@@ -592,6 +643,18 @@ fn print_serve(tag: &str, r: &ServeReport) {
         r.exec_p50_us / 1e3,
         r.mean_batch_occupancy
     );
+    if r.faults.any() {
+        println!(
+            "[{tag}] faults: {} injected, {} failures, {} retries ({} recovered), \
+             {} fallbacks, {} shed",
+            r.faults.injected,
+            r.faults.failures,
+            r.faults.retries,
+            r.faults.recovered,
+            r.faults.fallbacks,
+            r.shed
+        );
+    }
 }
 
 fn cmd_analyze(args: &Args) -> Result<()> {
@@ -701,7 +764,7 @@ fn main() -> Result<()> {
         }
         "serve" => {
             let args = Args::parse(rest, &["no-tuning"])?;
-            args.ensure_known(&["requests", "seed", "no-tuning", "platform"])?;
+            args.ensure_known(&["requests", "seed", "no-tuning", "platform", "chaos", "fault-rate"])?;
             cmd_serve(&args)
         }
         "analyze" => cmd_analyze(&Args::parse(rest, &[])?),

@@ -197,6 +197,83 @@ pub fn geomean(values: &[f64]) -> f64 {
     (values.iter().map(|v| v.ln()).sum::<f64>() / values.len() as f64).exp()
 }
 
+/// Median of `xs` (NaN when empty) — the outlier-robust aggregate
+/// measurement paths use over per-iteration latency samples.  Unlike
+/// the mean, a minority of spiked samples cannot move it at all: with
+/// an odd sample count and fewer than half the samples spiked, the
+/// median equals the clean value *bit-for-bit*, which is what lets a
+/// single injected latency outlier never crown a wrong tuning variant.
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    let mid = sorted.len() / 2;
+    if sorted.len() % 2 == 1 {
+        sorted[mid]
+    } else {
+        (sorted[mid - 1] + sorted[mid]) / 2.0
+    }
+}
+
+/// Fault-tolerance counters shared by the serving executor
+/// ([`crate::serving::ExecutorStats`]), the router report
+/// ([`crate::serving::ServeReport`]) and the chaos tests: how many
+/// faults were injected, observed, retried away, quarantined, or shed.
+///
+/// All counts are cumulative over the owning component's lifetime.
+/// `PartialEq` + `Debug` make the struct directly usable in the
+/// bit-reproducibility assertions of the chaos test suite.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// Faults injected by a fault-injection decorator
+    /// ([`crate::serving::ChaosBackend`]); 0 on undecorated backends.
+    pub injected: usize,
+    /// Backend-call failures observed (every `Err`, including ones a
+    /// retry later cleared).
+    pub failures: usize,
+    /// Retry attempts issued after a failure.
+    pub retries: usize,
+    /// Operations that succeeded after at least one retry.
+    pub recovered: usize,
+    /// Variant quarantine events (circuit breaker opened after K
+    /// consecutive hard failures).
+    pub quarantined: usize,
+    /// Quarantined variants given their post-cooldown re-probe.
+    pub reprobed: usize,
+    /// Variants written off permanently (re-probe failed too).
+    pub gave_up: usize,
+    /// Request batches served by a fallback variant after the active
+    /// variant failed to execute.
+    pub fallbacks: usize,
+    /// Requests shed with a typed error (no healthy variant, or queue
+    /// saturation at the router).
+    pub shed: usize,
+}
+
+impl FaultCounters {
+    /// True when any counter is nonzero.
+    pub fn any(&self) -> bool {
+        *self != FaultCounters::default()
+    }
+
+    /// (label, value) rows for rendering counter tables.
+    pub fn rows(&self) -> Vec<(&'static str, usize)> {
+        vec![
+            ("injected", self.injected),
+            ("failures", self.failures),
+            ("retries", self.retries),
+            ("recovered", self.recovered),
+            ("quarantined", self.quarantined),
+            ("reprobed", self.reprobed),
+            ("gave_up", self.gave_up),
+            ("fallbacks", self.fallbacks),
+            ("shed", self.shed),
+        ]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -243,6 +320,35 @@ mod tests {
     fn geomean_of_ratios() {
         assert!((geomean(&[2.0, 0.5]) - 1.0).abs() < 1e-12);
         assert!((geomean(&[4.0]) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_is_outlier_robust_and_bitwise_exact_when_odd() {
+        // Odd count: the median IS one of the samples, bit for bit —
+        // a minority of spiked samples cannot move it at all.
+        let clean = 37.25f64;
+        let spiked = [clean * 25.0, clean, clean];
+        assert_eq!(median(&spiked).to_bits(), clean.to_bits());
+        assert_eq!(median(&[5.0, 1.0, 3.0]), 3.0);
+        // Even count: mean of the two middle samples.
+        assert_eq!(median(&[1.0, 2.0, 3.0, 4.0]), 2.5);
+        assert_eq!(median(&[2.0]), 2.0);
+        assert!(median(&[]).is_nan());
+        // The mean, for contrast, is dragged by the same spike.
+        let mean = spiked.iter().sum::<f64>() / 3.0;
+        assert!(mean > clean * 5.0);
+    }
+
+    #[test]
+    fn fault_counters_any_and_rows() {
+        let mut f = FaultCounters::default();
+        assert!(!f.any());
+        f.retries = 2;
+        assert!(f.any());
+        let rows = f.rows();
+        assert_eq!(rows.len(), 9);
+        assert!(rows.contains(&("retries", 2)));
+        assert!(rows.contains(&("injected", 0)));
     }
 
     #[test]

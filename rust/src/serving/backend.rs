@@ -103,6 +103,12 @@ pub trait ExecBackend {
     /// runs, then the representative latency of `iters` measured runs),
     /// in µs.  This is the call the executor's idle-time tuning drives
     /// its per-bucket [`crate::autotuner::search::Recorder`]s through.
+    ///
+    /// Implementations must aggregate the `iters` samples
+    /// outlier-robustly — median ([`crate::metrics::median`]) rather
+    /// than mean — so a single latency spike (scheduler hiccup, or an
+    /// injected [`crate::serving::ChaosBackend`] outlier) cannot crown
+    /// a wrong tuning variant.
     fn measure(&mut self, handle: ExecHandle, shape: ShapeKey, warmup: usize, iters: usize) -> Result<f64>;
 
     /// Hint that measurements for `upcoming` shapes are imminent, so
@@ -121,6 +127,22 @@ pub trait ExecBackend {
 
     /// The tuning queue is fully drained: drop every memoized input.
     fn release_all(&mut self) {}
+
+    /// Wait out a retry backoff of `us` microseconds.  The default
+    /// sleeps wall-clock (right for real devices); virtual-clock
+    /// backends override this to advance their modeled clock instead,
+    /// which is what keeps fault-injection tests instant.
+    fn backoff(&mut self, us: f64) {
+        std::thread::sleep(std::time::Duration::from_micros(us as u64));
+    }
+
+    /// Faults injected into this backend so far — nonzero only on
+    /// fault-injecting decorators ([`crate::serving::ChaosBackend`]);
+    /// surfaced through executor stats so reports can prove a chaos
+    /// run actually exercised the recovery machinery.
+    fn injected_faults(&self) -> usize {
+        0
+    }
 }
 
 /// The conservative default variant: small tiles, one stage — valid on
@@ -273,8 +295,11 @@ impl SimBackend {
         self.clock_us
     }
 
-    fn config_of(&self, handle: ExecHandle) -> Config {
-        self.compiled[handle].clone()
+    fn config_of(&self, handle: ExecHandle) -> Result<Config> {
+        self.compiled
+            .get(handle)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("unknown exec handle {handle}"))
     }
 
     /// Model latency of `cfg` for `shape`'s bucket workload.
@@ -347,19 +372,25 @@ impl ExecBackend for SimBackend {
     }
 
     fn execute(&mut self, handle: ExecHandle, shape: ShapeKey) -> Result<f64> {
-        let cfg = self.config_of(handle);
+        let cfg = self.config_of(handle)?;
         let us = self.model_us(&cfg, shape)?;
         self.clock_us += us;
         Ok(us)
     }
 
     fn measure(&mut self, handle: ExecHandle, shape: ShapeKey, warmup: usize, iters: usize) -> Result<f64> {
-        let cfg = self.config_of(handle);
+        let cfg = self.config_of(handle)?;
         let us = self.model_us(&cfg, shape)?;
-        // The model is noise-free, so warmup+iters only advance the
-        // virtual clock; the reported latency is the model's.
+        // The model is noise-free (every sample equals the model, so
+        // the median aggregate IS the model value); warmup+iters only
+        // advance the virtual clock.
         self.clock_us += us * (warmup + iters.max(1)) as f64;
         Ok(us)
+    }
+
+    fn backoff(&mut self, us: f64) {
+        // Virtual clock: retries cost modeled time, never wall-clock.
+        self.clock_us += us;
     }
 }
 

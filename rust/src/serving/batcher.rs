@@ -145,10 +145,9 @@ impl DynamicBatcher {
         // Full batches first (throughput), oldest bucket first.
         let mut best: Option<(usize, Instant)> = None;
         for (i, q) in self.queues.iter().enumerate() {
-            if q.items.is_empty() {
+            let Some(&(_, oldest)) = q.items.front() else {
                 continue;
-            }
-            let oldest = q.items.front().unwrap().1;
+            };
             let full = q.items.len() >= self.policy.max_batch(i);
             let expired = now.duration_since(oldest).as_micros() as u64 >= self.policy.max_wait_us;
             if full || expired || drain {

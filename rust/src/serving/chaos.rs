@@ -1,0 +1,543 @@
+//! Deterministic fault injection for the serving plane.
+//!
+//! [`ChaosBackend`] decorates any [`ExecBackend`] and injects faults
+//! into `discover`/`compile`/`execute`/`measure` according to a seeded
+//! [`FaultPlan`]: transient errors, persistent compile failures,
+//! latency outliers, and stalls (modeled as timeout errors, so a
+//! "hung" measure is bounded by the plan's stall budget instead of
+//! blocking the executor thread).
+//!
+//! **Determinism.**  The fate of every injected call is a pure function
+//! of `(plan.seed, verb, shape, variant fingerprint, attempt ordinal)`
+//! — each call seeds a fresh [`Rng`] from that tuple and takes a single
+//! draw.  Fates therefore do not depend on call interleaving across
+//! buckets, and two runs with the same plan seed inject *exactly* the
+//! same faults at the same points: chaos runs can be pinned
+//! bit-for-bit in tests.  The attempt ordinal is per
+//! `(verb, shape, variant)`, so a retry of a failed call re-rolls its
+//! fate (transient faults clear under retry) while a *persistent*
+//! compile failure deliberately ignores the ordinal (it never clears).
+//!
+//! **Clean calls pass values through untouched.**  When a call's fate
+//! is clean, the inner backend's result is returned bit-for-bit — a
+//! chaos run that converges to a winner converges to the *same* winner
+//! as the fault-free run, which is what the convergence tests pin.
+//! Injected latency outliers spike exactly one of the `iters`
+//! measurement samples and aggregate with [`median`], so with
+//! `iters >= 3` a single spike cannot move the reported latency at all
+//! (see `ISSUE 6`'s outlier-robustness satellite).
+
+use std::collections::HashMap;
+
+use anyhow::anyhow;
+
+use super::backend::{ExecBackend, ExecHandle, ShapeKey, VariantDesc};
+use crate::metrics::median;
+use crate::util::rng::Rng;
+use crate::workload::Workload;
+use crate::Result;
+
+/// Per-verb transient-fault probabilities (each in [0, 1]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct VerbRates {
+    /// P(transient fault) per `discover` call.
+    pub discover: f64,
+    /// P(transient fault) per `compile` call.
+    pub compile: f64,
+    /// P(transient fault) per `execute` call.
+    pub execute: f64,
+    /// P(transient fault) per `measure` call.
+    pub measure: f64,
+}
+
+impl VerbRates {
+    /// The same rate for every verb.
+    pub fn uniform(rate: f64) -> Self {
+        VerbRates { discover: rate, compile: rate, execute: rate, measure: rate }
+    }
+
+    fn of(&self, verb: Verb) -> f64 {
+        match verb {
+            Verb::Discover => self.discover,
+            Verb::Compile => self.compile,
+            Verb::Execute => self.execute,
+            Verb::Measure => self.measure,
+        }
+    }
+}
+
+/// A seeded fault schedule: what [`ChaosBackend`] injects, and how
+/// often.  All rates are probabilities per call; the default plan is
+/// fully disabled (every rate 0).
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// Seed of the fault schedule.  Same seed ⇒ bit-identical faults.
+    pub seed: u64,
+    /// Transient-error rates per verb.  Transient faults re-roll on
+    /// retry, so retry-with-backoff clears them.
+    pub transient: VerbRates,
+    /// P(persistent compile failure) per (shape, variant).  Persistent
+    /// failures do NOT re-roll on retry — the variant never compiles,
+    /// modeling a toolchain bug or a missing artifact.
+    pub compile_fail_rate: f64,
+    /// P(latency outlier) per `measure` call.  An outlier spikes one of
+    /// the call's measurement samples by [`FaultPlan::outlier_mult`].
+    pub outlier_rate: f64,
+    /// Multiplier applied to the spiked sample of an outlier fault.
+    pub outlier_mult: f64,
+    /// P(stall) per `execute`/`measure` call.  A stall is surfaced as a
+    /// timeout error after [`FaultPlan::stall_us`] modeled µs — the
+    /// call is bounded, never hung.
+    pub stall_rate: f64,
+    /// Modeled duration of a stall before its timeout fires, µs.
+    pub stall_us: f64,
+    /// Stop injecting after this many faults (a "brown-out" that
+    /// heals), letting tests drive the quarantine → cooldown → re-probe
+    /// → recovery lifecycle deterministically.  `None` = never heals.
+    pub max_injected: Option<usize>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0,
+            transient: VerbRates::default(),
+            compile_fail_rate: 0.0,
+            outlier_rate: 0.0,
+            outlier_mult: 25.0,
+            stall_rate: 0.0,
+            stall_us: 50_000.0,
+            max_injected: None,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// A plan that injects nothing (all rates zero).
+    pub fn disabled() -> Self {
+        FaultPlan::default()
+    }
+
+    /// The CLI's `--chaos <seed> --fault-rate <p>` plan: transient
+    /// faults on every verb at `rate`, latency outliers at `rate`, and
+    /// persistent compile failures + stalls at `rate / 4`.
+    pub fn uniform(seed: u64, rate: f64) -> Self {
+        FaultPlan {
+            seed,
+            transient: VerbRates::uniform(rate),
+            compile_fail_rate: rate / 4.0,
+            outlier_rate: rate,
+            stall_rate: rate / 4.0,
+            ..FaultPlan::default()
+        }
+    }
+
+    /// Does this plan inject anything at all?
+    pub fn is_active(&self) -> bool {
+        let t = self.transient;
+        t.discover > 0.0
+            || t.compile > 0.0
+            || t.execute > 0.0
+            || t.measure > 0.0
+            || self.compile_fail_rate > 0.0
+            || self.outlier_rate > 0.0
+            || self.stall_rate > 0.0
+    }
+}
+
+/// What [`ChaosBackend`] has injected so far, by kind.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ChaosCounters {
+    /// Transient errors injected.
+    pub transient: usize,
+    /// Persistent compile failures injected (one per failing attempt).
+    pub compile_persistent: usize,
+    /// Latency outliers injected into `measure` samples.
+    pub outliers: usize,
+    /// Stalls injected (surfaced as timeout errors).
+    pub stalls: usize,
+}
+
+impl ChaosCounters {
+    /// Total faults injected.
+    pub fn total(&self) -> usize {
+        self.transient + self.compile_persistent + self.outliers + self.stalls
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Verb {
+    Discover,
+    Compile,
+    Execute,
+    Measure,
+}
+
+impl Verb {
+    fn tag(self) -> u64 {
+        match self {
+            Verb::Discover => 1,
+            Verb::Compile => 2,
+            Verb::Execute => 3,
+            Verb::Measure => 4,
+        }
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            Verb::Discover => "discover",
+            Verb::Compile => "compile",
+            Verb::Execute => "execute",
+            Verb::Measure => "measure",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Fate {
+    Clean,
+    Transient,
+    Stall,
+    Outlier,
+}
+
+/// Mix a call's identity into a seed: order-independent, so a call's
+/// fate does not depend on what other buckets did before it.
+fn mix(verb: u64, shape: ShapeKey, fp: u64, attempt: u64) -> u64 {
+    let shape64 = ((shape.0 as u64) << 32) | shape.1 as u64;
+    shape64
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ fp.rotate_left(17)
+        ^ verb.wrapping_mul(0xBF58_476D_1CE4_E5B9)
+        ^ attempt.wrapping_mul(0x94D0_49BB_1331_11EB)
+}
+
+/// Fault-injecting decorator over any [`ExecBackend`].
+///
+/// Wrap a backend and pass the result to the router/executor exactly
+/// like the inner backend — the executor's retry, circuit-breaker and
+/// fallback machinery then has something real to push against.  See the
+/// module docs for the determinism argument.
+pub struct ChaosBackend<B: ExecBackend> {
+    inner: B,
+    plan: FaultPlan,
+    /// Attempt ordinals per (verb, shape, variant fingerprint): the
+    /// re-roll axis that lets retries clear transient faults.
+    attempts: HashMap<(u64, ShapeKey, u64), u64>,
+    /// Variant fingerprint per issued handle, so execute/measure fates
+    /// key on the variant identity rather than the opaque handle.
+    handle_fp: HashMap<ExecHandle, u64>,
+    counters: ChaosCounters,
+    /// Modeled µs spent inside injected stalls before their timeouts
+    /// fired (accounting only; nothing sleeps).
+    stall_clock_us: f64,
+}
+
+impl<B: ExecBackend> ChaosBackend<B> {
+    /// Wrap `inner` with the fault schedule `plan`.
+    pub fn new(inner: B, plan: FaultPlan) -> Self {
+        ChaosBackend {
+            inner,
+            plan,
+            attempts: HashMap::new(),
+            handle_fp: HashMap::new(),
+            counters: ChaosCounters::default(),
+            stall_clock_us: 0.0,
+        }
+    }
+
+    /// What has been injected so far.
+    pub fn counters(&self) -> &ChaosCounters {
+        &self.counters
+    }
+
+    /// Modeled µs spent inside injected stalls.
+    pub fn stall_clock_us(&self) -> f64 {
+        self.stall_clock_us
+    }
+
+    /// The inner backend.
+    pub fn inner(&self) -> &B {
+        &self.inner
+    }
+
+    /// Has the brown-out healed (injection budget exhausted)?
+    fn healed(&self) -> bool {
+        matches!(self.plan.max_injected, Some(max) if self.counters.total() >= max)
+    }
+
+    /// Roll this call's fate.  One draw per call, freshly seeded from
+    /// the call's identity tuple (see module docs).
+    fn fate(&mut self, verb: Verb, shape: ShapeKey, fp: u64) -> Fate {
+        if self.healed() {
+            return Fate::Clean;
+        }
+        let key = (verb.tag(), shape, fp);
+        let attempt = *self
+            .attempts
+            .entry(key)
+            .and_modify(|a| *a += 1)
+            .or_insert(0);
+        let r = Rng::seed_from(self.plan.seed ^ mix(verb.tag(), shape, fp, attempt)).f64();
+        let t = self.plan.transient.of(verb);
+        let s = if matches!(verb, Verb::Execute | Verb::Measure) { self.plan.stall_rate } else { 0.0 };
+        let o = if verb == Verb::Measure { self.plan.outlier_rate } else { 0.0 };
+        if r < t {
+            Fate::Transient
+        } else if r < t + s {
+            Fate::Stall
+        } else if r < t + s + o {
+            Fate::Outlier
+        } else {
+            Fate::Clean
+        }
+    }
+
+    /// Is (shape, variant) scheduled to *persistently* fail to compile?
+    /// Attempt-independent: the same variant fails on every retry.
+    fn compile_persistently_fails(&self, shape: ShapeKey, fp: u64) -> bool {
+        if self.plan.compile_fail_rate <= 0.0 || self.healed() {
+            return false;
+        }
+        // Distinct salt + fixed attempt keep this draw disjoint from
+        // the transient schedule.
+        let r = Rng::seed_from(
+            self.plan.seed ^ mix(Verb::Compile.tag(), shape, fp ^ 0xC0FF_EE00_D15E_A5ED, u64::MAX),
+        )
+        .f64();
+        r < self.plan.compile_fail_rate
+    }
+
+    fn transient_err(&mut self, verb: Verb, shape: ShapeKey) -> anyhow::Error {
+        self.counters.transient += 1;
+        anyhow!("injected transient fault: {} on b{}s{}", verb.name(), shape.0, shape.1)
+    }
+
+    fn stall_err(&mut self, verb: Verb, shape: ShapeKey) -> anyhow::Error {
+        self.counters.stalls += 1;
+        self.stall_clock_us += self.plan.stall_us;
+        anyhow!(
+            "injected stall: {} on b{}s{} timed out after {:.0}µs",
+            verb.name(),
+            shape.0,
+            shape.1,
+            self.plan.stall_us
+        )
+    }
+}
+
+impl<B: ExecBackend> ExecBackend for ChaosBackend<B> {
+    fn platform(&self) -> String {
+        self.inner.platform()
+    }
+
+    fn discover(&mut self) -> Result<Vec<(ShapeKey, Vec<VariantDesc>)>> {
+        match self.fate(Verb::Discover, (0, 0), 0) {
+            Fate::Clean => self.inner.discover(),
+            _ => Err(self.transient_err(Verb::Discover, (0, 0))),
+        }
+    }
+
+    fn bucket_workload(&self, shape: ShapeKey) -> Workload {
+        self.inner.bucket_workload(shape)
+    }
+
+    fn compile(&mut self, shape: ShapeKey, variant: &VariantDesc) -> Result<ExecHandle> {
+        let fp = variant.config.fingerprint();
+        if self.compile_persistently_fails(shape, fp) {
+            self.counters.compile_persistent += 1;
+            return Err(anyhow!(
+                "injected persistent compile failure: {} on b{}s{}",
+                variant.artifact_id,
+                shape.0,
+                shape.1
+            ));
+        }
+        match self.fate(Verb::Compile, shape, fp) {
+            Fate::Clean => {
+                let h = self.inner.compile(shape, variant)?;
+                self.handle_fp.insert(h, fp);
+                Ok(h)
+            }
+            _ => Err(self.transient_err(Verb::Compile, shape)),
+        }
+    }
+
+    fn execute(&mut self, handle: ExecHandle, shape: ShapeKey) -> Result<f64> {
+        let fp = self.handle_fp.get(&handle).copied().unwrap_or(handle as u64);
+        match self.fate(Verb::Execute, shape, fp) {
+            // Clean executes pass the inner latency through UNTOUCHED —
+            // serving latencies of a surviving chaos run are
+            // bit-identical to the fault-free run's.
+            Fate::Clean | Fate::Outlier => self.inner.execute(handle, shape),
+            Fate::Transient => Err(self.transient_err(Verb::Execute, shape)),
+            Fate::Stall => Err(self.stall_err(Verb::Execute, shape)),
+        }
+    }
+
+    fn measure(&mut self, handle: ExecHandle, shape: ShapeKey, warmup: usize, iters: usize) -> Result<f64> {
+        let fp = self.handle_fp.get(&handle).copied().unwrap_or(handle as u64);
+        match self.fate(Verb::Measure, shape, fp) {
+            Fate::Clean => self.inner.measure(handle, shape, warmup, iters),
+            Fate::Transient => Err(self.transient_err(Verb::Measure, shape)),
+            Fate::Stall => Err(self.stall_err(Verb::Measure, shape)),
+            Fate::Outlier => {
+                // Spike exactly one of the call's samples; the median
+                // aggregate absorbs it bit-for-bit when iters >= 3.
+                self.counters.outliers += 1;
+                let base = self.inner.measure(handle, shape, warmup, iters)?;
+                let mut samples = vec![base; iters.max(1)];
+                samples[0] = base * self.plan.outlier_mult;
+                Ok(median(&samples))
+            }
+        }
+    }
+
+    fn prefetch(&mut self, upcoming: &[ShapeKey]) {
+        self.inner.prefetch(upcoming);
+    }
+
+    fn release(&mut self, shape: ShapeKey) {
+        self.inner.release(shape);
+    }
+
+    fn release_all(&mut self) {
+        self.inner.release_all();
+    }
+
+    fn backoff(&mut self, us: f64) {
+        // Delegate so virtual-clock backends keep sim tests instant.
+        self.inner.backoff(us);
+    }
+
+    fn injected_faults(&self) -> usize {
+        self.counters.total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::model::SimGpu;
+    use crate::serving::SimBackend;
+
+    fn compiled_default(chaos: &mut ChaosBackend<SimBackend>, shape: ShapeKey) -> ExecHandle {
+        let universe = chaos.discover().unwrap();
+        let (_, vs) = universe.iter().find(|(k, _)| *k == shape).unwrap();
+        chaos.compile(shape, &vs[0]).unwrap()
+    }
+
+    #[test]
+    fn disabled_plan_is_bitwise_transparent() {
+        let shape = (4, 256);
+        let mut clean = SimBackend::new(SimGpu::a100(), 1);
+        let universe = clean.discover().unwrap();
+        let (_, vs) = universe.iter().find(|(k, _)| *k == shape).unwrap();
+        let hc = clean.compile(shape, &vs[0]).unwrap();
+        let want_m = clean.measure(hc, shape, 1, 3).unwrap();
+        let want_e = clean.execute(hc, shape).unwrap();
+
+        let mut chaos = ChaosBackend::new(SimBackend::new(SimGpu::a100(), 1), FaultPlan::disabled());
+        let h = compiled_default(&mut chaos, shape);
+        assert_eq!(chaos.measure(h, shape, 1, 3).unwrap().to_bits(), want_m.to_bits());
+        assert_eq!(chaos.execute(h, shape).unwrap().to_bits(), want_e.to_bits());
+        assert_eq!(chaos.injected_faults(), 0);
+    }
+
+    #[test]
+    fn a_single_injected_outlier_cannot_move_a_median_measurement() {
+        let shape = (4, 256);
+        let mut clean = SimBackend::new(SimGpu::a100(), 1);
+        let universe = clean.discover().unwrap();
+        let (_, vs) = universe.iter().find(|(k, _)| *k == shape).unwrap();
+        let hc = clean.compile(shape, &vs[0]).unwrap();
+        let want = clean.measure(hc, shape, 1, 3).unwrap();
+
+        let plan = FaultPlan { seed: 9, outlier_rate: 1.0, ..FaultPlan::default() };
+        let mut chaos = ChaosBackend::new(SimBackend::new(SimGpu::a100(), 1), plan);
+        let h = compiled_default(&mut chaos, shape);
+        let got = chaos.measure(h, shape, 1, 3).unwrap();
+        assert!(chaos.counters().outliers > 0, "outlier fault must fire at rate 1.0");
+        assert_eq!(got.to_bits(), want.to_bits(), "median absorbs a single spiked sample bitwise");
+    }
+
+    #[test]
+    fn fault_fates_are_bit_reproducible_per_seed() {
+        let run = |seed: u64| -> (Vec<String>, ChaosCounters) {
+            let plan = FaultPlan {
+                seed,
+                transient: VerbRates { measure: 0.5, execute: 0.3, ..VerbRates::default() },
+                stall_rate: 0.2,
+                ..FaultPlan::default()
+            };
+            let mut chaos = ChaosBackend::new(SimBackend::new(SimGpu::a100(), 1), plan);
+            let shape = (4, 256);
+            let h = compiled_default(&mut chaos, shape);
+            let mut trace = Vec::new();
+            for _ in 0..20 {
+                match chaos.measure(h, shape, 1, 3) {
+                    Ok(v) => trace.push(format!("ok:{:016x}", v.to_bits())),
+                    Err(e) => trace.push(format!("err:{e}")),
+                }
+                match chaos.execute(h, shape) {
+                    Ok(v) => trace.push(format!("ok:{:016x}", v.to_bits())),
+                    Err(e) => trace.push(format!("err:{e}")),
+                }
+            }
+            (trace, chaos.counters().clone())
+        };
+        let (t1, c1) = run(7);
+        let (t2, c2) = run(7);
+        assert_eq!(t1, t2, "same seed, same fault schedule");
+        assert_eq!(c1, c2);
+        assert!(c1.total() > 0, "rates this high must inject something in 40 calls");
+        let (t3, _) = run(8);
+        assert_ne!(t1, t3, "different seeds, different schedules");
+    }
+
+    #[test]
+    fn persistent_compile_failures_never_clear_but_transients_reroll() {
+        let shape = (1, 128);
+        let plan = FaultPlan { seed: 3, compile_fail_rate: 1.0, ..FaultPlan::default() };
+        let mut chaos = ChaosBackend::new(SimBackend::new(SimGpu::a100(), 1), plan);
+        let universe = chaos.discover().unwrap();
+        let (_, vs) = universe.iter().find(|(k, _)| *k == shape).unwrap();
+        for _ in 0..3 {
+            let err = chaos.compile(shape, &vs[0]).unwrap_err();
+            assert!(err.to_string().contains("persistent"), "{err}");
+        }
+        assert_eq!(chaos.counters().compile_persistent, 3);
+
+        // Transient faults at rate 1.0 always fail too, but each retry
+        // re-rolls (the attempt ordinal advances) — so at a rate < 1 a
+        // retry can clear it; the executor's retry loop leans on this.
+        let plan = FaultPlan {
+            seed: 3,
+            transient: VerbRates { measure: 1.0, ..VerbRates::default() },
+            ..FaultPlan::default()
+        };
+        let mut chaos = ChaosBackend::new(SimBackend::new(SimGpu::a100(), 1), plan);
+        let h = compiled_default(&mut chaos, shape);
+        for _ in 0..3 {
+            assert!(chaos.measure(h, shape, 1, 3).is_err());
+        }
+        assert_eq!(chaos.counters().transient, 3);
+    }
+
+    #[test]
+    fn brownout_heals_after_the_injection_budget() {
+        let shape = (1, 128);
+        let plan = FaultPlan {
+            seed: 5,
+            transient: VerbRates { measure: 1.0, ..VerbRates::default() },
+            max_injected: Some(2),
+            ..FaultPlan::default()
+        };
+        let mut chaos = ChaosBackend::new(SimBackend::new(SimGpu::a100(), 1), plan);
+        let h = compiled_default(&mut chaos, shape);
+        assert!(chaos.measure(h, shape, 1, 3).is_err());
+        assert!(chaos.measure(h, shape, 1, 3).is_err());
+        assert!(chaos.measure(h, shape, 1, 3).is_ok(), "budget exhausted: the fault clears");
+        assert_eq!(chaos.injected_faults(), 2);
+    }
+}

@@ -30,6 +30,20 @@
 //! failed measurements are counted as invalid like any other
 //! platform-rejected config, and the stats snapshot reads the recorder
 //! instead of duplicating per-variant latency fields.
+//!
+//! **Fault tolerance.**  Every backend verb the executor drives goes
+//! through [`retrying`] (exponential backoff on [`ExecBackend::backoff`],
+//! so virtual-clock backends pay modeled time instead of sleeping).  A
+//! per-(bucket, variant) circuit [`Breaker`] quarantines a variant after
+//! [`QUARANTINE_AFTER`] consecutive hard tuning failures, re-probes it
+//! once after [`QUARANTINE_COOLDOWN_TICKS`] tuning ticks, and writes it
+//! off as dead when the re-probe also fails — a flaky variant cannot
+//! poison idle tuning.  On the request path, an execute failure falls
+//! back to the last-known-good variant (then the conservative default)
+//! before the batch is shed with a typed [`ExecOutcome::Shed`] reply,
+//! so an injected fault can degrade service but never panic the thread
+//! or silently drop requests.  All of it is counted in
+//! [`ExecutorStats::faults`].
 
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
@@ -37,9 +51,10 @@ use std::time::{Duration, Instant};
 
 use super::backend::{ExecBackend, ExecHandle, VariantDesc};
 use super::batcher::Batch;
-use super::Completion;
+use super::{Completion, Request};
 use crate::autotuner::search::Recorder;
 use crate::cache::{entry_now, TuningCache};
+use crate::metrics::FaultCounters;
 use crate::platform::model::InvalidConfig;
 use crate::Result;
 
@@ -52,10 +67,42 @@ pub use super::backend::ShapeKey;
 /// latency never waits on more than one in-flight measurement.
 pub const IDLE_TUNE_BATCH: usize = 4;
 
+/// Retries after a failed backend call (so up to `MAX_RETRIES + 1`
+/// attempts total).  At a 12.5% per-attempt transient-fault rate the
+/// residual hard-failure probability is 0.125⁴ ≈ 2.4e-4 — low enough
+/// that chaos smoke runs at `--fault-rate 0.1` ride out their faults.
+pub const MAX_RETRIES: usize = 3;
+
+/// First retry backoff (µs); doubles per retry.  Paid through
+/// [`ExecBackend::backoff`], so sim runs charge the virtual clock.
+pub const BACKOFF_BASE_US: f64 = 200.0;
+
+/// Consecutive hard tuning failures before a variant is quarantined.
+pub const QUARANTINE_AFTER: u32 = 3;
+
+/// Tuning ticks a quarantined variant sits out before its one re-probe.
+pub const QUARANTINE_COOLDOWN_TICKS: u64 = 16;
+
+/// Reply to an [`ExecutorCommand::Execute`].
+pub enum ExecOutcome {
+    /// The batch executed; per-request completions.
+    Done(Vec<Completion>),
+    /// The batch could not be served even after retries and fallback:
+    /// the requests come back with a typed reason so the router sheds
+    /// them gracefully instead of blocking or silently dropping them.
+    Shed {
+        /// The unserved requests, handed back to the caller.
+        requests: Vec<Request>,
+        /// Why the batch could not be served.
+        reason: String,
+    },
+}
+
 /// Commands accepted by the executor thread.
 pub enum ExecutorCommand {
-    /// Run one batch; reply with per-request completions.
-    Execute { batch: Batch, enqueued_at: Instant, reply: Sender<Vec<Completion>> },
+    /// Run one batch; reply with per-request completions (or a typed
+    /// shed when the bucket has no healthy variant).
+    Execute { batch: Batch, enqueued_at: Instant, reply: Sender<ExecOutcome> },
     /// Snapshot statistics.
     Stats { reply: Sender<ExecutorStats> },
     /// Flush: measure every pending tuning item *now* (used by examples
@@ -110,6 +157,60 @@ pub struct ExecutorStats {
     pub active: HashMap<String, String>,
     /// shape -> measured latency of active variant (µs).
     pub active_us: HashMap<String, f64>,
+    /// Fault-tolerance counters: injected faults (when the backend is a
+    /// chaos decorator), failures, retries, quarantines, sheds.
+    pub faults: FaultCounters,
+}
+
+/// Run `op` with retry-and-exponential-backoff, folding the attempt
+/// outcomes into `faults`.  Backoff goes through
+/// [`ExecBackend::backoff`], so virtual-clock backends (sim) charge
+/// modeled µs and fault-injection tests stay instant.
+fn retrying<B: ExecBackend, T>(
+    backend: &mut B,
+    faults: &mut FaultCounters,
+    mut op: impl FnMut(&mut B) -> Result<T>,
+) -> Result<T> {
+    let mut attempt = 0usize;
+    loop {
+        match op(backend) {
+            Ok(v) => {
+                if attempt > 0 {
+                    faults.recovered += 1;
+                }
+                return Ok(v);
+            }
+            Err(e) => {
+                faults.failures += 1;
+                if attempt >= MAX_RETRIES {
+                    return Err(e);
+                }
+                backend.backoff(BACKOFF_BASE_US * (1u64 << attempt) as f64);
+                faults.retries += 1;
+                attempt += 1;
+            }
+        }
+    }
+}
+
+/// Circuit-breaker state of one (bucket, variant) tuning candidate.
+///
+/// Lifecycle: hard failures (a whole [`retrying`] loop exhausted) bump
+/// `streak`; at [`QUARANTINE_AFTER`] the variant is quarantined for
+/// [`QUARANTINE_COOLDOWN_TICKS`] tuning ticks, then re-probed exactly
+/// once; a failed re-probe marks it `dead` and records it invalid so
+/// the bucket can still activate its best healthy variant.  Any
+/// successful measurement clears the breaker entirely.
+#[derive(Debug, Clone, Copy, Default)]
+struct Breaker {
+    /// Consecutive hard tuning failures.
+    streak: u32,
+    /// Quarantined until this tuning tick (cooldown), if open.
+    quarantined_until: Option<u64>,
+    /// Has the post-cooldown re-probe been spent?
+    reprobed: bool,
+    /// Written off permanently (re-probe failed too).
+    dead: bool,
 }
 
 struct ExecutorState<B: ExecBackend> {
@@ -128,13 +229,25 @@ struct ExecutorState<B: ExecBackend> {
     /// Persistent tuning cache (Q4.3): bucket winners survive restarts,
     /// so a re-deployed server starts warm.
     cache: Option<TuningCache>,
+    /// Circuit breakers, one per (bucket, variant) that has hard-failed.
+    breaker: HashMap<(ShapeKey, usize), Breaker>,
+    /// Last variant that successfully executed per bucket — the
+    /// fallback target when the active variant fails on the request
+    /// path.
+    last_good: HashMap<ShapeKey, usize>,
+    /// Tuning tick counter (one per [`ExecutorState::tune_step`] call)
+    /// — the clock quarantine cooldowns are measured on.
+    tick: u64,
 }
 
 impl<B: ExecBackend> ExecutorState<B> {
     const CACHE_SPACE: &'static str = "serving_model_variants";
 
     fn new(mut backend: B, cache: Option<TuningCache>) -> Result<Self> {
-        let universe = backend.discover()?;
+        // Discovery is retried like every other backend verb: a
+        // transient fault at boot must not kill the server.
+        let mut faults = FaultCounters::default();
+        let universe = retrying(&mut backend, &mut faults, |b| b.discover())?;
         let mut variants: HashMap<ShapeKey, Vec<Variant>> = HashMap::new();
         for (shape, descs) in universe {
             variants
@@ -153,10 +266,13 @@ impl<B: ExecBackend> ExecutorState<B> {
             active,
             tune_queue,
             bucket_recs: HashMap::new(),
-            stats: ExecutorStats::default(),
+            stats: ExecutorStats { faults, ..ExecutorStats::default() },
             tune_warmup: 1,
             tune_iters: 3,
             cache,
+            breaker: HashMap::new(),
+            last_good: HashMap::new(),
+            tick: 0,
         };
         state.warm_start_from_cache();
         Ok(state)
@@ -193,7 +309,10 @@ impl<B: ExecBackend> ExecutorState<B> {
     fn persist_winner(&mut self, key: ShapeKey, idx: usize, measured_us: f64, evaluated: usize) {
         let w = self.backend.bucket_workload(key);
         let platform = self.backend.platform();
-        let cfg = self.variants[&key][idx].desc.config.clone();
+        let Some(cfg) = self.variants.get(&key).and_then(|vs| vs.get(idx)).map(|v| v.desc.config.clone())
+        else {
+            return;
+        };
         if let Some(cache) = &mut self.cache {
             cache.put(
                 &w,
@@ -209,29 +328,96 @@ impl<B: ExecBackend> ExecutorState<B> {
         v
     }
 
-    /// Lazily compile one variant through the backend, memoizing the
-    /// handle (the backend is guaranteed at most one compile per
-    /// (shape, variant)).
+    /// Lazily compile one variant through the backend (with retry for
+    /// transient compile faults), memoizing the handle (the backend is
+    /// guaranteed at most one *successful* compile per (shape, variant)).
     fn ensure_compiled(&mut self, key: ShapeKey, idx: usize) -> Result<ExecHandle> {
-        if let Some(h) = self.variants[&key][idx].handle {
+        let v = self
+            .variants
+            .get(&key)
+            .and_then(|vs| vs.get(idx))
+            .ok_or_else(|| anyhow::anyhow!("no variant {idx} for shape {key:?}"))?;
+        if let Some(h) = v.handle {
             return Ok(h);
         }
-        let desc = self.variants[&key][idx].desc.clone();
-        let h = self.backend.compile(key, &desc)?;
-        self.variants.get_mut(&key).unwrap()[idx].handle = Some(h);
+        let desc = v.desc.clone();
+        let h = retrying(&mut self.backend, &mut self.stats.faults, |b| b.compile(key, &desc))?;
+        if let Some(slot) = self.variants.get_mut(&key).and_then(|vs| vs.get_mut(idx)) {
+            slot.handle = Some(h);
+        }
         self.stats.compiles += 1;
         Ok(h)
+    }
+
+    /// Compile-if-needed and execute one variant with retries; a
+    /// success marks the variant last-known-good for its bucket.
+    fn try_execute_variant(&mut self, key: ShapeKey, idx: usize) -> Result<f64> {
+        let handle = self.ensure_compiled(key, idx)?;
+        let us = retrying(&mut self.backend, &mut self.stats.faults, |b| b.execute(handle, key))?;
+        self.last_good.insert(key, idx);
+        Ok(us)
+    }
+
+    /// The variant to fall back to when `failed` cannot execute:
+    /// last-known-good, else the conservative default (index 0), else
+    /// the first variant not written off by its circuit breaker.
+    fn fallback_variant(&self, key: ShapeKey, failed: usize) -> Option<usize> {
+        let n = self.variants.get(&key)?.len();
+        let healthy = |i: usize| {
+            i != failed && i < n && !self.breaker.get(&(key, i)).map_or(false, |b| b.dead)
+        };
+        if let Some(&lg) = self.last_good.get(&key) {
+            if healthy(lg) {
+                return Some(lg);
+            }
+        }
+        if healthy(0) {
+            return Some(0);
+        }
+        (0..n).find(|&i| healthy(i))
     }
 
     fn execute(&mut self, batch: &Batch, enqueued_at: Instant) -> Result<Vec<Completion>> {
         let key = (batch.batch_shape, batch.seq_len);
         let idx = *self.active.get(&key).ok_or_else(|| anyhow::anyhow!("no variant for shape {key:?}"))?;
-        let handle = self.ensure_compiled(key, idx)?;
-        let exec_us = self.backend.execute(handle, key)?;
+        let (exec_us, served) = match self.try_execute_variant(key, idx) {
+            Ok(us) => (us, idx),
+            Err(e) => {
+                // Graceful degradation: try the last-known-good variant
+                // before giving the batch up to the router as shed.
+                let Some(fb) = self.fallback_variant(key, idx) else {
+                    return Err(anyhow::anyhow!(
+                        "bucket b{}s{}: active variant failed ({e}); no healthy fallback variant",
+                        key.0,
+                        key.1
+                    ));
+                };
+                self.stats.faults.fallbacks += 1;
+                match self.try_execute_variant(key, fb) {
+                    Ok(us) => {
+                        // Demote: keep serving what works.
+                        self.active.insert(key, fb);
+                        (us, fb)
+                    }
+                    Err(e2) => {
+                        return Err(anyhow::anyhow!(
+                            "bucket b{}s{}: active variant failed ({e}); fallback failed too ({e2})",
+                            key.0,
+                            key.1
+                        ));
+                    }
+                }
+            }
+        };
         let latency_us = enqueued_at.elapsed().as_secs_f64() * 1e6;
         self.stats.batches_executed += 1;
         self.stats.requests_served += batch.requests.len();
-        let v = &self.variants[&key][idx];
+        let artifact_id = self
+            .variants
+            .get(&key)
+            .and_then(|vs| vs.get(served))
+            .map(|v| v.desc.artifact_id.clone())
+            .unwrap_or_default();
         Ok(batch
             .requests
             .iter()
@@ -242,7 +428,7 @@ impl<B: ExecBackend> ExecutorState<B> {
                 batch_size: batch.batch_shape,
                 latency_us,
                 exec_us,
-                variant: v.desc.artifact_id.clone(),
+                variant: artifact_id.clone(),
             })
             .collect())
     }
@@ -255,7 +441,10 @@ impl<B: ExecBackend> ExecutorState<B> {
     /// one (previously a single failed measurement blocked the bucket's
     /// swap forever).
     fn record_measurement(&mut self, key: ShapeKey, idx: usize, res: Result<f64>) {
-        let cfg = self.variants[&key][idx].desc.config.clone();
+        let Some(cfg) = self.variants.get(&key).and_then(|vs| vs.get(idx)).map(|v| v.desc.config.clone())
+        else {
+            return;
+        };
         let res = res.map_err(|e| InvalidConfig { reason: e.to_string() });
         if res.is_ok() {
             self.stats.variants_measured += 1;
@@ -268,7 +457,7 @@ impl<B: ExecBackend> ExecutorState<B> {
     /// activate the fastest valid variant, record the swap, and persist
     /// the winner to the tuning cache (Q4.3).
     fn try_activate(&mut self, key: ShapeKey) {
-        let vs = &self.variants[&key];
+        let Some(vs) = self.variants.get(&key) else { return };
         let Some(rec) = self.bucket_recs.get(&key) else { return };
         if rec.len() < vs.len() {
             return; // bucket not fully measured yet
@@ -278,17 +467,18 @@ impl<B: ExecBackend> ExecutorState<B> {
         };
         let latencies = rec.full_fidelity_latencies();
         let Some(best) = vs.iter().position(|v| v.desc.config == best_cfg) else { return };
-        let cur = self.active[&key];
+        let cur = self.active.get(&key).copied().unwrap_or(0);
         if best != cur {
             // Gain versus the incumbent; infinite headroom when the
             // incumbent itself failed to measure.
-            let gain = latencies
-                .get(&vs[cur].desc.config.fingerprint())
+            let gain = vs
+                .get(cur)
+                .and_then(|v| latencies.get(&v.desc.config.fingerprint()))
                 .map(|c| c / best_us)
                 .unwrap_or(f64::INFINITY);
             self.stats.swaps.push(SwapEvent {
                 shape: key,
-                from: vs[cur].desc.artifact_id.clone(),
+                from: vs.get(cur).map(|v| v.desc.artifact_id.clone()).unwrap_or_default(),
                 to: vs[best].desc.artifact_id.clone(),
                 gain,
             });
@@ -304,6 +494,9 @@ impl<B: ExecBackend> ExecutorState<B> {
     /// Run ONE background tuning measurement. Returns false when the
     /// queue is exhausted.
     fn tune_step(&mut self) -> bool {
+        // Quarantine cooldowns are measured on this tick clock, so they
+        // elapse the same way under idle tuning and `finish_tuning`.
+        self.tick += 1;
         // Hint the backend about the next few queued shapes so it can
         // prepare measurement inputs off the critical path
         // (`tune_queue.pop()` takes from the back, so the *next* items
@@ -323,18 +516,48 @@ impl<B: ExecBackend> ExecutorState<B> {
             self.backend.release_all();
             return false;
         };
-        let handle = match self.ensure_compiled(key, idx) {
-            Ok(h) => h,
-            Err(e) => {
-                // Uncompilable variant: count it as invalid so the
+        // Circuit breaker: a quarantined variant waits out its cooldown
+        // (deferred to the queue front), then gets exactly one re-probe.
+        if let Some(b) = self.breaker.get_mut(&(key, idx)) {
+            if let Some(until) = b.quarantined_until {
+                if self.tick < until {
+                    self.tune_queue.insert(0, (key, idx));
+                    return true;
+                }
+                b.quarantined_until = None;
+                b.reprobed = true;
+                self.stats.faults.reprobed += 1;
+            }
+        }
+        let attempt = match self.ensure_compiled(key, idx) {
+            Ok(handle) => {
+                let (warmup, iters) = (self.tune_warmup, self.tune_iters);
+                retrying(&mut self.backend, &mut self.stats.faults, |b| {
+                    b.measure(handle, key, warmup, iters)
+                })
+            }
+            Err(e) if self.breaker.get(&(key, idx)).map_or(true, |b| !b.reprobed) => {
+                // Uncompilable variant (platform rejection, or an
+                // injected persistent compile failure — transients were
+                // already retried): record it invalid right away so the
                 // bucket can still complete, keep tuning.
+                self.breaker.remove(&(key, idx));
                 self.record_measurement(key, idx, Err(e));
+                if !self.tune_queue.iter().any(|(k, _)| *k == key) {
+                    self.backend.release(key);
+                }
                 return true;
             }
+            Err(e) => Err(e),
         };
-        let (warmup, iters) = (self.tune_warmup, self.tune_iters);
-        let measured = self.backend.measure(handle, key, warmup, iters);
-        self.record_measurement(key, idx, measured);
+        match attempt {
+            Ok(us) => {
+                // Any success resets the breaker completely.
+                self.breaker.remove(&(key, idx));
+                self.record_measurement(key, idx, Ok(us));
+            }
+            Err(e) => self.note_tune_failure(key, idx, e),
+        }
         // Drop the shape's memoized inputs once it has no queued
         // measurements left (the backend clears everything on
         // exhaustion).
@@ -344,17 +567,51 @@ impl<B: ExecBackend> ExecutorState<B> {
         true
     }
 
+    /// A tuning measurement hard-failed (retries exhausted): advance
+    /// the variant's circuit breaker.  Below [`QUARANTINE_AFTER`] the
+    /// variant is simply re-queued; at the threshold it is quarantined
+    /// for a cooldown; a failed re-probe writes it off for good
+    /// (recorded invalid, so the bucket still activates its best
+    /// healthy variant).
+    fn note_tune_failure(&mut self, key: ShapeKey, idx: usize, err: anyhow::Error) {
+        let tick = self.tick;
+        let (dead, quarantined) = {
+            let b = self.breaker.entry((key, idx)).or_default();
+            b.streak += 1;
+            if b.reprobed {
+                b.dead = true;
+                (true, false)
+            } else if b.streak >= QUARANTINE_AFTER {
+                b.quarantined_until = Some(tick + QUARANTINE_COOLDOWN_TICKS);
+                (false, true)
+            } else {
+                (false, false)
+            }
+        };
+        if dead {
+            self.stats.faults.gave_up += 1;
+            self.record_measurement(key, idx, Err(err));
+        } else {
+            if quarantined {
+                self.stats.faults.quarantined += 1;
+            }
+            self.tune_queue.insert(0, (key, idx));
+        }
+    }
+
     fn snapshot(&self) -> ExecutorStats {
         let mut s = self.stats.clone();
+        s.faults.injected = self.backend.injected_faults();
         for (key, vs) in &self.variants {
-            let idx = self.active[key];
+            let Some(&idx) = self.active.get(key) else { continue };
+            let Some(v) = vs.get(idx) else { continue };
             let name = format!("b{}s{}", key.0, key.1);
-            s.active.insert(name.clone(), vs[idx].desc.artifact_id.clone());
+            s.active.insert(name.clone(), v.desc.artifact_id.clone());
             // Latest full-fidelity measurement of the active variant: a
             // reverse scan of the bucket's (small) log, instead of
             // materializing a whole fingerprint→latency map per bucket
             // on every Stats command.
-            let fp = vs[idx].desc.config.fingerprint();
+            let fp = v.desc.config.fingerprint();
             let measured = self.bucket_recs.get(key).and_then(|r| {
                 r.evals
                     .iter()
@@ -494,11 +751,16 @@ fn executor_loop<B, F>(
             Some(ExecutorCommand::Execute { batch, enqueued_at, reply }) => {
                 match state.execute(&batch, enqueued_at) {
                     Ok(completions) => {
-                        let _ = reply.send(completions);
+                        let _ = reply.send(ExecOutcome::Done(completions));
                     }
                     Err(e) => {
-                        eprintln!("portatune-executor: execute failed: {e}");
-                        let _ = reply.send(Vec::new());
+                        // Typed shed: the requests go back to the
+                        // router with the reason — never a silent drop.
+                        state.stats.faults.shed += batch.requests.len();
+                        let _ = reply.send(ExecOutcome::Shed {
+                            requests: batch.requests,
+                            reason: e.to_string(),
+                        });
                     }
                 }
             }
@@ -549,6 +811,44 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("no such device"), "{err}");
+    }
+
+    #[test]
+    fn retrying_recovers_with_exponential_backoff_on_the_virtual_clock() {
+        let mut b = SimBackend::new(SimGpu::a100(), 1);
+        let mut faults = FaultCounters::default();
+        let before = b.clock_us();
+        let mut fail_left = 2;
+        let v = retrying(&mut b, &mut faults, |_| {
+            if fail_left > 0 {
+                fail_left -= 1;
+                Err(anyhow::anyhow!("flaky"))
+            } else {
+                Ok(42.0)
+            }
+        })
+        .unwrap();
+        assert_eq!(v, 42.0);
+        assert_eq!(faults.failures, 2);
+        assert_eq!(faults.retries, 2);
+        assert_eq!(faults.recovered, 1);
+        // 200µs + 400µs of modeled backoff — charged to the virtual
+        // clock, zero wall-clock sleep.
+        assert_eq!(b.clock_us() - before, BACKOFF_BASE_US * 3.0);
+    }
+
+    #[test]
+    fn retrying_gives_up_after_max_retries() {
+        let mut b = SimBackend::new(SimGpu::a100(), 1);
+        let mut faults = FaultCounters::default();
+        let err = retrying(&mut b, &mut faults, |_| -> Result<f64> {
+            Err(anyhow::anyhow!("always down"))
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("always down"));
+        assert_eq!(faults.failures, MAX_RETRIES + 1);
+        assert_eq!(faults.retries, MAX_RETRIES);
+        assert_eq!(faults.recovered, 0);
     }
 
     #[test]

@@ -38,6 +38,7 @@
 
 pub mod backend;
 pub mod batcher;
+pub mod chaos;
 pub mod executor;
 pub mod router;
 
@@ -45,7 +46,8 @@ pub mod router;
 pub use backend::PjrtBackend;
 pub use backend::{ExecBackend, SimBackend};
 pub use batcher::{Batch, BucketPolicy, DynamicBatcher};
-pub use executor::{ExecutorCommand, ExecutorHandle, ExecutorStats};
+pub use chaos::{ChaosBackend, ChaosCounters, FaultPlan, VerbRates};
+pub use executor::{ExecOutcome, ExecutorCommand, ExecutorHandle, ExecutorStats};
 pub use router::{Router, ServeReport, ServerConfig};
 
 /// One inference request: a prompt of `tokens` tokens.

@@ -14,9 +14,9 @@ use std::time::Instant;
 
 use super::backend::{ExecBackend, SimBackend};
 use super::batcher::{BucketPolicy, DynamicBatcher};
-use super::executor::{ExecutorCommand, ExecutorHandle, ExecutorStats};
+use super::executor::{ExecOutcome, ExecutorCommand, ExecutorHandle, ExecutorStats};
 use super::{Completion, Request};
-use crate::metrics::Summary;
+use crate::metrics::{FaultCounters, Summary};
 use crate::util::rng::Rng;
 use crate::Result;
 
@@ -30,11 +30,15 @@ pub struct ServerConfig {
     /// Persistent tuning-cache file (Q4.3): bucket winners survive
     /// restarts, so re-deployed servers start warm.
     pub cache_path: Option<std::path::PathBuf>,
+    /// Admission-control bound: when this many requests are already
+    /// queued in the batcher, new arrivals are shed (graceful
+    /// degradation) instead of growing the queues without bound.
+    pub max_pending: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { max_wait_us: 2_000, idle_tuning: true, cache_path: None }
+        ServerConfig { max_wait_us: 2_000, idle_tuning: true, cache_path: None, max_pending: 1024 }
     }
 }
 
@@ -69,14 +73,73 @@ pub struct ServeReport {
     pub exec_mean_us: f64,
     /// Mean fraction of each compiled batch doing useful work.
     pub mean_batch_occupancy: f64,
+    /// Requests shed during THIS replay: executor-side typed sheds (no
+    /// healthy variant) plus router-side admission-control sheds
+    /// (batcher queues saturated past `max_pending`).
+    pub shed: usize,
+    /// Fault-tolerance counters: the executor's cumulative counters
+    /// (injected faults, failures, retries, quarantines, executor-side
+    /// sheds) plus this replay's router-side admission sheds.
+    pub faults: FaultCounters,
     /// Executor-side counters (tuning, swaps, compiles).
     pub executor: ExecutorStats,
+}
+
+impl ServeReport {
+    /// A digest of every *deterministic* field of the report — what the
+    /// chaos bit-reproducibility tests pin.
+    ///
+    /// Determinism argument: on the sim backend all served latencies
+    /// are model-derived and every injected fault is a pure function of
+    /// the `FaultPlan` seed (see [`crate::serving::chaos`]), so request
+    /// counts, batch counts, exec-latency aggregates, swap history,
+    /// active variants and fault counters are bit-identical across
+    /// replays.  Wall-clock-derived fields (`wall_seconds`, throughput,
+    /// end-to-end latency percentiles) are host timing no seed
+    /// controls, and are deliberately excluded.
+    pub fn replay_digest(&self) -> String {
+        use std::fmt::Write as _;
+        let mut d = String::new();
+        let _ = write!(
+            d,
+            "req={} rej={} shed={} batches={} exec_p50={:016x} exec_mean={:016x} occ={:016x}",
+            self.requests,
+            self.rejected,
+            self.shed,
+            self.batches,
+            self.exec_p50_us.to_bits(),
+            self.exec_mean_us.to_bits(),
+            self.mean_batch_occupancy.to_bits(),
+        );
+        let e = &self.executor;
+        let _ = write!(
+            d,
+            " warm={} bex={} served={} meas={} compiles={}",
+            e.warm_started, e.batches_executed, e.requests_served, e.variants_measured, e.compiles
+        );
+        for s in &e.swaps {
+            let _ = write!(d, " swap={:?}:{}->{}:{:016x}", s.shape, s.from, s.to, s.gain.to_bits());
+        }
+        let mut active: Vec<(&String, &String)> = e.active.iter().collect();
+        active.sort();
+        for (k, v) in active {
+            let _ = write!(d, " active[{k}]={v}");
+        }
+        let mut active_us: Vec<(&String, &f64)> = e.active_us.iter().collect();
+        active_us.sort_by(|a, b| a.0.cmp(b.0));
+        for (k, v) in active_us {
+            let _ = write!(d, " us[{k}]={:016x}", v.to_bits());
+        }
+        let _ = write!(d, " faults={:?}", self.faults);
+        d
+    }
 }
 
 /// The serving front end.
 pub struct Router {
     executor: ExecutorHandle,
     policy: BucketPolicy,
+    max_pending: usize,
 }
 
 impl Router {
@@ -99,7 +162,7 @@ impl Router {
             anyhow::bail!("backend discovered no compiled model shapes to serve");
         }
         let policy = BucketPolicy::new(pairs, cfg.max_wait_us);
-        Ok(Router { executor, policy })
+        Ok(Router { executor, policy, max_pending: cfg.max_pending.max(1) })
     }
 
     /// Serve on the analytical sim backend — the default-build path
@@ -141,11 +204,19 @@ impl Router {
         let mut batches = 0usize;
 
         let mut pending = std::collections::VecDeque::from(requests);
+        let mut sat_shed = 0usize; // admission-control sheds (router side)
+        let mut exec_shed = 0usize; // typed executor sheds, this replay
         let enqueued_at = Instant::now();
         while !pending.is_empty() || batcher.pending() > 0 {
             // Admit a burst of arrivals.
             for _ in 0..8 {
                 if let Some(r) = pending.pop_front() {
+                    if batcher.pending() >= self.max_pending {
+                        // Saturated: shed the arrival instead of
+                        // queueing without bound.
+                        sat_shed += 1;
+                        continue;
+                    }
                     batcher.push(r, Instant::now());
                 } else {
                     break;
@@ -159,7 +230,12 @@ impl Router {
                     .send(ExecutorCommand::Execute { batch, enqueued_at, reply: tx })
                     .map_err(|_| anyhow::anyhow!("executor gone"))?;
                 batches += 1;
-                completions.extend(rx.recv()?);
+                match rx.recv()? {
+                    ExecOutcome::Done(c) => completions.extend(c),
+                    // The executor handed the batch back: degrade
+                    // gracefully (count the shed), never panic or drop.
+                    ExecOutcome::Shed { requests, .. } => exec_shed += requests.len(),
+                }
             }
         }
         let wall = t0.elapsed().as_secs_f64();
@@ -175,10 +251,14 @@ impl Router {
             occupancy.record(1.0 / c.batch_size as f64);
         }
         let executor = self.executor.stats()?;
+        let mut faults = executor.faults.clone();
+        faults.shed += sat_shed;
         Ok(ServeReport {
             requests: completions.len(),
             rejected: batcher.rejected.len(),
             batches,
+            shed: exec_shed + sat_shed,
+            faults,
             wall_seconds: wall,
             throughput_rps: completions.len() as f64 / wall.max(1e-9),
             tokens_per_second: tokens as f64 / wall.max(1e-9),
@@ -237,7 +317,7 @@ mod tests {
 
     #[test]
     fn sim_router_serves_a_trace_end_to_end() {
-        let cfg = ServerConfig { max_wait_us: 500, idle_tuning: false, cache_path: None };
+        let cfg = ServerConfig { max_wait_us: 500, idle_tuning: false, ..Default::default() };
         let router = Router::sim(SimBackend::new(SimGpu::a100(), 5), &cfg).unwrap();
         let max_tokens = router.policy().seq_buckets.last().copied().unwrap();
         let report = router.serve_trace(synth_trace(12, max_tokens, 9)).unwrap();
@@ -253,7 +333,7 @@ mod tests {
 
     #[test]
     fn sim_router_bucket_grid_matches_backend_shapes() {
-        let cfg = ServerConfig { max_wait_us: 500, idle_tuning: false, cache_path: None };
+        let cfg = ServerConfig { max_wait_us: 500, idle_tuning: false, ..Default::default() };
         let backend = SimBackend::new(SimGpu::h100(), 0).with_shapes(&[(1, 128), (2, 128), (1, 256)]);
         let router = Router::sim(backend, &cfg).unwrap();
         assert_eq!(router.policy().seq_buckets, vec![128, 256]);

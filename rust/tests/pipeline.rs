@@ -14,7 +14,8 @@ use portatune::platform::{PlatformId, SimGpu};
 #[cfg(feature = "pjrt")]
 use portatune::runtime::{Engine, Manifest};
 use portatune::serving::{
-    router::synth_trace, BucketPolicy, DynamicBatcher, Request, Router, ServerConfig, SimBackend,
+    router::synth_trace, BucketPolicy, ChaosBackend, DynamicBatcher, FaultPlan, Request, Router,
+    ServerConfig, SimBackend, VerbRates,
 };
 use portatune::util::tmp::TempDir;
 use portatune::workload::Workload;
@@ -139,7 +140,7 @@ fn sim_serve_smoke_cold_then_tuned_is_no_slower() {
     // variant is the per-bucket argmin over the same analytical model).
     // A huge flush deadline makes batching a pure function of the
     // request order, so both replays see identical batch shapes.
-    let cfg = ServerConfig { max_wait_us: 10_000_000, idle_tuning: true, cache_path: None };
+    let cfg = ServerConfig { max_wait_us: 10_000_000, idle_tuning: true, ..Default::default() };
     let router = Router::sim(SimBackend::new(portatune::platform::SimGpu::a100(), 11), &cfg).unwrap();
     let max_tokens = router.policy().seq_buckets.last().copied().unwrap();
     let trace = synth_trace(64, max_tokens, 42);
@@ -176,6 +177,7 @@ fn sim_serving_winners_survive_restart_via_cache() {
         max_wait_us: 500,
         idle_tuning: true,
         cache_path: Some(dir.join("serving_cache.json")),
+        ..Default::default()
     };
     let backend = || SimBackend::new(portatune::platform::SimGpu::mi250(), 3);
     let (actives, measured);
@@ -210,6 +212,7 @@ fn sim_serve_platforms_have_disjoint_cache_namespaces() {
         max_wait_us: 500,
         idle_tuning: true,
         cache_path: Some(dir.join("shared_cache.json")),
+        ..Default::default()
     };
     {
         let router = Router::sim(SimBackend::new(portatune::platform::SimGpu::a100(), 5), &cfg).unwrap();
@@ -290,7 +293,7 @@ fn serving_router_end_to_end_smoke() {
     let manifest = Manifest::load_default().unwrap();
     let router = Router::pjrt(
         manifest,
-        &ServerConfig { max_wait_us: 500, idle_tuning: false, cache_path: None },
+        &ServerConfig { max_wait_us: 500, idle_tuning: false, ..Default::default() },
     )
     .unwrap();
     let trace = synth_trace(6, router.policy().seq_buckets.last().copied().unwrap(), 9);
@@ -311,7 +314,7 @@ fn serving_background_tuning_improves_or_keeps_active_variants() {
     let manifest = Manifest::load_default().unwrap();
     let router = Router::pjrt(
         manifest,
-        &ServerConfig { max_wait_us: 500, idle_tuning: true, cache_path: None },
+        &ServerConfig { max_wait_us: 500, idle_tuning: true, ..Default::default() },
     )
     .unwrap();
     router.finish_tuning().unwrap();
@@ -339,6 +342,7 @@ fn serving_winners_survive_restart_via_cache() {
         max_wait_us: 500,
         idle_tuning: true,
         cache_path: Some(cache_path.clone()),
+        ..Default::default()
     };
     let (actives, measured);
     {
@@ -361,6 +365,185 @@ fn serving_winners_survive_restart_via_cache() {
         router.finish_tuning().unwrap();
         assert_eq!(router.executor().stats().unwrap().variants_measured, 0);
     }
+}
+
+// ---------------------------------------------------------------------
+// Chaos: deterministic fault injection through the full serving stack.
+// Same seed => same faults => bit-identical reports; the executor's
+// retry / circuit-breaker / fallback machinery absorbs the rest.
+// ---------------------------------------------------------------------
+
+/// A huge flush deadline + no idle tuning makes the backend call
+/// sequence a pure function of the trace, so fault fates line up
+/// across runs.
+fn chaos_cfg() -> ServerConfig {
+    ServerConfig { max_wait_us: 10_000_000, idle_tuning: false, ..Default::default() }
+}
+
+#[test]
+fn chaos_serve_is_bit_reproducible_per_seed() {
+    let run = || {
+        let router = Router::with_backend(
+            move || {
+                Ok(ChaosBackend::new(SimBackend::new(SimGpu::a100(), 11), FaultPlan::uniform(7, 0.1)))
+            },
+            &chaos_cfg(),
+        )
+        .unwrap();
+        let max_tokens = router.policy().seq_buckets.last().copied().unwrap();
+        let trace = synth_trace(48, max_tokens, 42);
+        let cold = router.serve_trace(trace.clone()).unwrap();
+        router.finish_tuning().unwrap();
+        let tuned = router.serve_trace(trace).unwrap();
+        (cold.replay_digest(), tuned.replay_digest(), tuned.faults.injected)
+    };
+    let (cold1, tuned1, injected1) = run();
+    let (cold2, tuned2, injected2) = run();
+    assert!(injected1 > 0, "rate 0.1 over a 48-request serve + tuning must inject faults");
+    assert_eq!(cold1, cold2, "cold replay digest must be bit-identical across runs");
+    assert_eq!(tuned1, tuned2, "tuned replay digest must be bit-identical across runs");
+    assert_eq!(injected1, injected2);
+}
+
+#[test]
+fn chaos_transient_faults_converge_to_the_fault_free_winner() {
+    // Measure-only transients: retries re-draw the fate per attempt, so
+    // tuning eventually records the exact fault-free latencies and the
+    // per-bucket argmin lands on the same winners, bit for bit.
+    let cfg = chaos_cfg();
+    let plan = FaultPlan {
+        seed: 3,
+        transient: VerbRates { measure: 0.3, ..VerbRates::default() },
+        ..FaultPlan::default()
+    };
+    let chaos = Router::with_backend(
+        move || Ok(ChaosBackend::new(SimBackend::new(SimGpu::mi250(), 9), plan)),
+        &cfg,
+    )
+    .unwrap();
+    let clean = Router::sim(SimBackend::new(SimGpu::mi250(), 9), &cfg).unwrap();
+    chaos.finish_tuning().unwrap();
+    clean.finish_tuning().unwrap();
+    let cs = chaos.executor().stats().unwrap();
+    let ks = clean.executor().stats().unwrap();
+    assert!(cs.faults.injected > 0, "rate 0.3 across tuning measurements must inject");
+    assert_eq!(cs.active, ks.active, "chaos tuning must land on the fault-free winners");
+    assert_eq!(cs.active_us.len(), ks.active_us.len());
+    for (bucket, want) in &ks.active_us {
+        let got = cs.active_us.get(bucket).expect("bucket missing under chaos");
+        assert_eq!(got.to_bits(), want.to_bits(), "winner latency differs in bucket {bucket}");
+    }
+    // The tuned replay is equally untouched: faults only hit `measure`.
+    let max_tokens = clean.policy().seq_buckets.last().copied().unwrap();
+    let trace = synth_trace(32, max_tokens, 5);
+    let a = chaos.serve_trace(trace.clone()).unwrap();
+    let b = clean.serve_trace(trace).unwrap();
+    assert_eq!(a.requests, b.requests);
+    assert_eq!(a.exec_mean_us.to_bits(), b.exec_mean_us.to_bits());
+}
+
+#[test]
+fn quarantine_reprobe_lifecycle_writes_off_persistently_failing_variants() {
+    // Measure always faults: every variant climbs the full breaker
+    // ladder (K consecutive failures -> quarantine -> cooldown ->
+    // re-probe -> written off) while the serving path stays healthy.
+    let plan = FaultPlan {
+        seed: 5,
+        transient: VerbRates { measure: 1.0, ..VerbRates::default() },
+        ..FaultPlan::default()
+    };
+    let router = Router::with_backend(
+        move || {
+            Ok(ChaosBackend::new(
+                SimBackend::new(SimGpu::a100(), 5)
+                    .with_shapes(&[(1, 128)])
+                    .with_variants_per_bucket(3),
+                plan,
+            ))
+        },
+        &chaos_cfg(),
+    )
+    .unwrap();
+    router.finish_tuning().unwrap();
+    let stats = router.executor().stats().unwrap();
+    assert_eq!(stats.variants_measured, 0, "measure always faults: nothing can be measured");
+    assert_eq!(stats.faults.quarantined, 3, "each variant trips its breaker once");
+    assert_eq!(stats.faults.reprobed, 3, "each quarantined variant gets one re-probe");
+    assert_eq!(stats.faults.gave_up, 3, "failed re-probes write the variants off");
+    assert!(stats.swaps.is_empty(), "no measurements, no swaps");
+    // Execution is untouched (only measure faults): requests still serve.
+    let trace = synth_trace(8, 128, 1);
+    let report = router.serve_trace(trace).unwrap();
+    assert_eq!(report.requests, 8);
+    assert_eq!(report.shed, 0);
+}
+
+#[test]
+fn quarantined_variant_recovers_after_brownout_heals() {
+    // An injection budget models a brown-out: 3 hard-fail rounds of 4
+    // attempts exhaust the 12 injections while the variant sits
+    // quarantined; the post-cooldown re-probe then hits a healed
+    // backend and the variant returns to service.
+    let plan = FaultPlan {
+        seed: 5,
+        transient: VerbRates { measure: 1.0, ..VerbRates::default() },
+        max_injected: Some(12),
+        ..FaultPlan::default()
+    };
+    let router = Router::with_backend(
+        move || {
+            Ok(ChaosBackend::new(
+                SimBackend::new(SimGpu::a100(), 5)
+                    .with_shapes(&[(1, 128)])
+                    .with_variants_per_bucket(1),
+                plan,
+            ))
+        },
+        &chaos_cfg(),
+    )
+    .unwrap();
+    router.finish_tuning().unwrap();
+    let stats = router.executor().stats().unwrap();
+    assert_eq!(stats.faults.injected, 12, "the injection budget is exhausted exactly");
+    assert_eq!(stats.faults.failures, 12);
+    assert_eq!(stats.faults.retries, 9, "three retries per hard-fail round");
+    assert_eq!(stats.faults.quarantined, 1);
+    assert_eq!(stats.faults.reprobed, 1, "the post-cooldown re-probe hits the healed backend");
+    assert_eq!(stats.faults.gave_up, 0, "the healed variant is not written off");
+    assert_eq!(stats.variants_measured, 1, "the healed variant is finally measured");
+}
+
+#[test]
+fn chaos_serve_completes_and_tuned_still_improves_on_cold() {
+    // The PR's acceptance contract: a chaos serve at rate 0.1 panics
+    // nowhere, accounts for every request (served or shed with a typed
+    // error), reports its fault counters, and background tuning still
+    // helps.
+    let cfg = ServerConfig { max_wait_us: 10_000_000, idle_tuning: true, ..Default::default() };
+    let router = Router::with_backend(
+        move || {
+            Ok(ChaosBackend::new(SimBackend::new(SimGpu::a100(), 11), FaultPlan::uniform(7, 0.1)))
+        },
+        &cfg,
+    )
+    .unwrap();
+    let max_tokens = router.policy().seq_buckets.last().copied().unwrap();
+    let trace = synth_trace(64, max_tokens, 42);
+
+    let cold = router.serve_trace(trace.clone()).unwrap();
+    assert_eq!(cold.requests + cold.shed, 64, "every request is served or shed, never lost");
+    assert_eq!(cold.rejected, 0);
+
+    router.finish_tuning().unwrap();
+    let tuned = router.serve_trace(trace).unwrap();
+    assert_eq!(tuned.requests + tuned.shed, 64);
+    assert!(tuned.faults.injected > 0, "rate 0.1 must inject faults somewhere");
+    assert!(
+        tuned.exec_mean_us <= cold.exec_mean_us,
+        "tuned mean exec {} us must not exceed cold {} us even under chaos",
+        tuned.exec_mean_us,
+        cold.exec_mean_us
+    );
 }
 
 #[test]
