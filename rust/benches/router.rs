@@ -3,10 +3,11 @@
 //! [`SimBackend`] (cold vs tuned requests/sec), printed as a markdown
 //! table so CI can lift it into the step summary.
 
+use portatune::json::Value;
 use portatune::platform::SimGpu;
 use portatune::serving::batcher::{BucketPolicy, DynamicBatcher};
 use portatune::serving::router::synth_trace;
-use portatune::serving::{Router, ServerConfig, SimBackend};
+use portatune::serving::{PlacementPolicy, Router, Scenario, ServerConfig, SimBackend};
 use portatune::util::bench::Bench;
 use std::time::Instant;
 
@@ -83,6 +84,80 @@ fn main() {
             "{name}: tuning regressed mean exec latency"
         );
     }
+    println!();
+
+    // ------------------------------------------------------------------
+    // Sharded scenario throughput: the burst scenario replayed tuned
+    // through 1/2/4 executor shards (least-loaded placement) on the
+    // sim-a100 virtual clock.  `sim req/s` is the deterministic
+    // model-time figure the scaling tests compare (wall req/s is host
+    // overhead only); scaling is vs the 1-shard row.  The JSON block
+    // after the table is the paste-ready body of `BENCH_serving.json`
+    // (ROADMAP item 5: record the trajectory from a green CI run).
+    // ------------------------------------------------------------------
+    let sn = if fast { 192 } else { 480 };
+    println!("## sharded serving — burst scenario, tuned, sim-a100 ({sn} requests)\n");
+    println!("| shards | sim req/s | scaling | wall req/s | makespan (ms) | shed |");
+    println!("|---|---|---|---|---|---|");
+    let scenario = Scenario::by_name("burst").expect("burst is in the catalog");
+    let mut base_rps = 0.0f64;
+    let mut shard_rows = Vec::new();
+    for shards in [1usize, 2, 4] {
+        let cfg = ServerConfig::default();
+        let router = Router::with_shards(
+            move |_| Ok(SimBackend::new(SimGpu::a100(), 11)),
+            shards,
+            PlacementPolicy::LeastLoaded,
+            &cfg,
+        )
+        .expect("sharded sim router");
+        router.finish_tuning().expect("tuning drains");
+        let max_tokens = router.policy().seq_buckets.last().copied().unwrap_or(128);
+        let trace = scenario.generate(sn, max_tokens, 7);
+        let rep = router.serve_trace_timed(&trace).expect("sharded serve");
+        assert_eq!(rep.requests + rep.shed, sn, "{shards}-shard serve lost requests");
+        if shards == 1 {
+            base_rps = rep.sim_throughput_rps;
+        }
+        let scaling = rep.sim_throughput_rps / base_rps.max(1e-9);
+        println!(
+            "| {shards} | {:.1} | {:.2}x | {:.0} | {:.2} | {} |",
+            rep.sim_throughput_rps,
+            scaling,
+            rep.throughput_rps,
+            rep.sim_makespan_us / 1e3,
+            rep.shed,
+        );
+        shard_rows.push(Value::Obj(
+            [
+                ("shards".to_string(), Value::Num(shards as f64)),
+                ("sim_rps".to_string(), Value::Num(rep.sim_throughput_rps)),
+                ("scaling_vs_1_shard".to_string(), Value::Num(scaling)),
+                ("wall_rps".to_string(), Value::Num(rep.throughput_rps)),
+                ("makespan_ms".to_string(), Value::Num(rep.sim_makespan_us / 1e3)),
+                ("shed".to_string(), Value::Num(rep.shed as f64)),
+            ]
+            .into_iter()
+            .collect(),
+        ));
+    }
+    println!();
+    let bench_json = Value::Obj(
+        [
+            ("suite".to_string(), Value::Str("serving".to_string())),
+            ("scenario".to_string(), Value::Str("burst".to_string())),
+            ("placement".to_string(), Value::Str("least-loaded".to_string())),
+            ("platform".to_string(), Value::Str("sim-a100".to_string())),
+            ("requests".to_string(), Value::Num(sn as f64)),
+            ("seed".to_string(), Value::Num(7.0)),
+            ("pending".to_string(), Value::Bool(false)),
+            ("rows".to_string(), Value::Arr(shard_rows)),
+        ]
+        .into_iter()
+        .collect(),
+    );
+    println!("paste-ready BENCH_serving.json:");
+    println!("{}", bench_json.pretty(2));
     println!();
 
     b.finish("router");

@@ -7,6 +7,8 @@
 //!                 [--devices N]
 //! portatune serve [--requests N] [--seed N] [--no-tuning]
 //!                 [--platform a100|mi250|h100|cpu-pjrt[,P2,...]]
+//!                 [--shards N] [--placement bucket-affinity|least-loaded]
+//!                 [--scenario steady|burst|diurnal]
 //!                 [--chaos SEED [--fault-rate P]]
 //! portatune analyze <kernels|hlo> [path]
 //! portatune cache <show|clear> [--file F]
@@ -32,7 +34,8 @@ use portatune::report::Report;
 use portatune::runtime::Engine;
 use portatune::runtime::Manifest;
 use portatune::serving::{
-    router::synth_trace, ChaosBackend, FaultPlan, Router, ServeReport, ServerConfig, SimBackend,
+    router::synth_trace, ChaosBackend, FaultPlan, PlacementPolicy, Router, Scenario, ServeReport,
+    ServerConfig, SimBackend, TimedRequest,
 };
 use portatune::util::cli::Args;
 use portatune::workload::{DType, Workload};
@@ -60,9 +63,20 @@ USAGE:
                                    a comma list replays the same trace on
                                    each platform and prints a comparison;
                                    cpu-pjrt needs --features pjrt)
-                  [--chaos SEED]  (deterministic fault injection: wrap the
-                                   backend in ChaosBackend seeded with SEED;
-                                   sim platforms only)
+                  [--shards N]    (N executor shards per platform, each with
+                                   its own backend/tuner; sim platforms only)
+                  [--placement bucket-affinity|least-loaded]
+                                  (how formed batches are routed to shards;
+                                   default bucket-affinity)
+                  [--scenario steady|burst|diurnal]
+                                  (replayable scenario trace — seeded arrival
+                                   process x seq-length mixes x tenant
+                                   classes — instead of the all-at-once
+                                   synthetic trace)
+                  [--chaos SEED]  (deterministic fault injection: wrap each
+                                   shard's backend in ChaosBackend with a
+                                   per-shard decorrelated seed derived from
+                                   SEED; sim platforms only)
                   [--fault-rate P] (uniform per-verb fault rate for --chaos;
                                    default 0.1)
   portatune analyze kernels
@@ -493,22 +507,43 @@ fn cmd_tune(args: &Args) -> Result<()> {
 }
 
 /// Build the router for one serve platform: sim platforms go straight
-/// to the always-available [`SimBackend`]; `cpu-pjrt` needs the real
-/// PJRT executor behind the feature flag.
+/// to the always-available [`SimBackend`] (sharded when `--shards` asks
+/// for it); `cpu-pjrt` needs the real PJRT executor behind the feature
+/// flag and stays single-executor (PJRT handles are not `Send`).
 fn serve_router(
     pid: PlatformId,
     seed: u64,
     cfg: &ServerConfig,
     chaos: Option<FaultPlan>,
+    shards: usize,
+    placement: PlacementPolicy,
 ) -> Result<Router> {
     match (pid.sim(), chaos) {
-        (Some(gpu), Some(plan)) => {
-            let backend = SimBackend::new(gpu, seed);
-            Router::with_backend(move || Ok(ChaosBackend::new(backend, plan)), cfg)
-        }
-        (Some(gpu), None) => Router::sim(SimBackend::new(gpu, seed), cfg),
+        (Some(gpu), Some(plan)) => Router::with_shards(
+            move |i| {
+                // Decorrelated per-shard fault schedules: same rates,
+                // different seeds, so shards fail independently but the
+                // whole run stays deterministic.
+                let shard_plan =
+                    FaultPlan { seed: plan.seed.wrapping_add(i as u64), ..plan.clone() };
+                Ok(ChaosBackend::new(SimBackend::new(gpu.clone(), seed), shard_plan))
+            },
+            shards,
+            placement,
+            cfg,
+        ),
+        (Some(gpu), None) => Router::with_shards(
+            move |_| Ok(SimBackend::new(gpu.clone(), seed)),
+            shards,
+            placement,
+            cfg,
+        ),
         (None, Some(_)) => Err(anyhow!(
             "--chaos is supported on the sim platforms (a100|mi250|h100) only"
+        )),
+        (None, None) if shards > 1 => Err(anyhow!(
+            "--shards applies to sim platforms only: the PJRT path is \
+             single-executor (PJRT handles are not Send; see ROADMAP)"
         )),
         (None, None) => pjrt_serve_router(cfg),
     }
@@ -545,6 +580,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         return Err(anyhow!("--fault-rate must be a probability in [0, 1] (got {fault_rate})"));
     }
     let chaos = chaos_seed.map(|s| FaultPlan::uniform(s, fault_rate));
+    let shards = args.flag_parse_at_least("shards", 1, 1)?;
+    let placement: PlacementPolicy = args
+        .flag_or("placement", "bucket-affinity")
+        .parse()
+        .map_err(|e| anyhow!("--placement: {e}"))?;
+    let scenario = args
+        .flag("scenario")
+        .map(|name| {
+            Scenario::by_name(name)
+                .ok_or_else(|| anyhow!("unknown scenario {name:?} (catalog: {})", Scenario::names()))
+        })
+        .transpose()?;
     let cfg = ServerConfig { idle_tuning: !no_tuning, ..Default::default() };
     let platforms: Vec<PlatformId> = args
         .flag_or("platform", "a100")
@@ -567,12 +614,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 plan.seed, fault_rate
             );
         }
-        let router = serve_router(pid, seed, &cfg, chaos.clone())?;
+        let router = serve_router(pid, seed, &cfg, chaos.clone(), shards, placement)?;
+        if shards > 1 {
+            println!("({} executor shards, placement {})", shards, placement.name());
+        }
         let max_tokens = router.policy().seq_buckets.last().copied().unwrap_or(128);
-        let trace = synth_trace(requests, max_tokens, seed);
+        let trace: Vec<TimedRequest> = match &scenario {
+            Some(sc) => {
+                println!("(scenario {}: {})", sc.name, sc.description);
+                sc.generate(requests, max_tokens, seed)
+            }
+            None => synth_trace(requests, max_tokens, seed)
+                .into_iter()
+                .map(TimedRequest::immediate)
+                .collect(),
+        };
 
         println!("== phase 1: cold serve ({} requests) ==", trace.len());
-        let before = router.serve_trace(trace.clone())?;
+        let before = router.serve_trace_timed(&trace)?;
         print_serve("cold", &before);
 
         let mut after = None;
@@ -586,10 +645,37 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
 
             println!("\n== phase 2: tuned serve ==");
-            let tuned = router.serve_trace(trace)?;
+            let tuned = router.serve_trace_timed(&trace)?;
             print_serve("tuned", &tuned);
             println!("\nexec p50 improvement: {:.2}x", before.exec_p50_us / tuned.exec_p50_us);
             after = Some(tuned);
+        }
+        if shards > 1 || scenario.is_some() {
+            // One grep-able row per shard — CI's sharded smoke step
+            // asserts the `| shard |` table renders with N rows.
+            let last = after.as_ref().unwrap_or(&before);
+            let mut rep = Report::new(
+                &format!("per-shard utilization — {}", pid.name()),
+                &["shard", "batches", "requests", "busy (ms)", "util %"],
+            );
+            rep.note(format!(
+                "placement {} over {} shard(s); modeled makespan {:.2} ms, \
+                 sim throughput {:.1} req/s",
+                placement.name(),
+                last.shards,
+                last.sim_makespan_us / 1e3,
+                last.sim_throughput_rps,
+            ));
+            for u in &last.shard_util {
+                rep.row(vec![
+                    u.shard.to_string(),
+                    u.batches.to_string(),
+                    u.requests.to_string(),
+                    format!("{:.2}", u.busy_us / 1e3),
+                    format!("{:.0}", 100.0 * u.utilization(last.sim_makespan_us)),
+                ]);
+            }
+            println!("\n{}", rep.to_markdown());
         }
         if chaos.is_some() {
             // One grep-able row per counter — CI's chaos smoke step
@@ -654,6 +740,9 @@ fn print_serve(tag: &str, r: &ServeReport) {
             r.faults.fallbacks,
             r.shed
         );
+    }
+    if r.lost > 0 {
+        println!("[{tag}] LOST {} in-flight request(s) to dead shards", r.lost);
     }
 }
 
@@ -764,7 +853,10 @@ fn main() -> Result<()> {
         }
         "serve" => {
             let args = Args::parse(rest, &["no-tuning"])?;
-            args.ensure_known(&["requests", "seed", "no-tuning", "platform", "chaos", "fault-rate"])?;
+            args.ensure_known(&[
+                "requests", "seed", "no-tuning", "platform", "chaos", "fault-rate", "shards",
+                "placement", "scenario",
+            ])?;
             cmd_serve(&args)
         }
         "analyze" => cmd_analyze(&Args::parse(rest, &[])?),

@@ -258,6 +258,21 @@ impl FaultCounters {
         *self != FaultCounters::default()
     }
 
+    /// Add every counter of `other` into `self` — the rollup primitive
+    /// the sharded serving plane uses to aggregate per-shard counters
+    /// into one report-level set.
+    pub fn absorb(&mut self, other: &FaultCounters) {
+        self.injected += other.injected;
+        self.failures += other.failures;
+        self.retries += other.retries;
+        self.recovered += other.recovered;
+        self.quarantined += other.quarantined;
+        self.reprobed += other.reprobed;
+        self.gave_up += other.gave_up;
+        self.fallbacks += other.fallbacks;
+        self.shed += other.shed;
+    }
+
     /// (label, value) rows for rendering counter tables.
     pub fn rows(&self) -> Vec<(&'static str, usize)> {
         vec![
@@ -337,6 +352,29 @@ mod tests {
         // The mean, for contrast, is dragged by the same spike.
         let mean = spiked.iter().sum::<f64>() / 3.0;
         assert!(mean > clean * 5.0);
+    }
+
+    #[test]
+    fn fault_counters_absorb_sums_every_field() {
+        let mut a = FaultCounters {
+            injected: 1,
+            failures: 2,
+            retries: 3,
+            recovered: 4,
+            quarantined: 5,
+            reprobed: 6,
+            gave_up: 7,
+            fallbacks: 8,
+            shed: 9,
+        };
+        let b = a.clone();
+        a.absorb(&b);
+        for ((_, doubled), (_, base)) in a.rows().into_iter().zip(b.rows()) {
+            assert_eq!(doubled, base * 2);
+        }
+        let mut zero = FaultCounters::default();
+        zero.absorb(&FaultCounters::default());
+        assert!(!zero.any());
     }
 
     #[test]

@@ -143,6 +143,17 @@ pub trait ExecBackend {
     fn injected_faults(&self) -> usize {
         0
     }
+
+    /// Accumulated virtual-clock time (µs) this backend has modeled —
+    /// the deterministic time base sharded serving reports use for
+    /// makespan/throughput math.  Wall-clock backends return 0.0 (their
+    /// time lives in the report's wall-clock fields instead); the sim
+    /// backend returns its modeled compile/execute/measure/backoff
+    /// total, and decorators add any virtual time they injected
+    /// themselves (chaos stalls).
+    fn virtual_clock_us(&self) -> f64 {
+        0.0
+    }
 }
 
 /// The conservative default variant: small tiles, one stage — valid on
@@ -391,6 +402,10 @@ impl ExecBackend for SimBackend {
     fn backoff(&mut self, us: f64) {
         // Virtual clock: retries cost modeled time, never wall-clock.
         self.clock_us += us;
+    }
+
+    fn virtual_clock_us(&self) -> f64 {
+        self.clock_us
     }
 }
 

@@ -413,6 +413,11 @@ impl<B: ExecBackend> ExecBackend for ChaosBackend<B> {
     fn injected_faults(&self) -> usize {
         self.counters.total()
     }
+
+    fn virtual_clock_us(&self) -> f64 {
+        // Injected stalls are modeled time the inner clock never saw.
+        self.inner.virtual_clock_us() + self.stall_clock_us
+    }
 }
 
 #[cfg(test)]

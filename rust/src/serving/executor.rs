@@ -160,6 +160,37 @@ pub struct ExecutorStats {
     /// Fault-tolerance counters: injected faults (when the backend is a
     /// chaos decorator), failures, retries, quarantines, sheds.
     pub faults: FaultCounters,
+    /// Backend virtual-clock reading at snapshot time (µs): total
+    /// modeled compile/execute/measure/backoff time.  0.0 on wall-clock
+    /// backends.  Sharded reports difference two snapshots of this to
+    /// get a shard's deterministic busy time for a replay.
+    pub clock_us: f64,
+}
+
+impl ExecutorStats {
+    /// Fold another executor's snapshot into this one — the per-shard →
+    /// aggregate rollup.  Numeric counters and the virtual clock sum,
+    /// swap logs concatenate (callers absorb shards in index order, so
+    /// the merged log is deterministic), and the per-bucket active maps
+    /// merge (shards of one backend converge to the same winners, so
+    /// later shards overwriting earlier ones is the intended "one
+    /// answer per bucket" view).
+    pub fn absorb(&mut self, other: &ExecutorStats) {
+        self.warm_started += other.warm_started;
+        self.batches_executed += other.batches_executed;
+        self.requests_served += other.requests_served;
+        self.variants_measured += other.variants_measured;
+        self.compiles += other.compiles;
+        self.swaps.extend(other.swaps.iter().cloned());
+        for (k, v) in &other.active {
+            self.active.insert(k.clone(), v.clone());
+        }
+        for (k, v) in &other.active_us {
+            self.active_us.insert(k.clone(), *v);
+        }
+        self.faults.absorb(&other.faults);
+        self.clock_us += other.clock_us;
+    }
 }
 
 /// Run `op` with retry-and-exponential-backoff, folding the attempt
@@ -602,6 +633,7 @@ impl<B: ExecBackend> ExecutorState<B> {
     fn snapshot(&self) -> ExecutorStats {
         let mut s = self.stats.clone();
         s.faults.injected = self.backend.injected_faults();
+        s.clock_us = self.backend.virtual_clock_us();
         for (key, vs) in &self.variants {
             let Some(&idx) = self.active.get(key) else { continue };
             let Some(v) = vs.get(idx) else { continue };
@@ -771,7 +803,31 @@ fn executor_loop<B, F>(
                 while state.tune_step() {}
                 let _ = reply.send(());
             }
-            Some(ExecutorCommand::Shutdown) | None => return,
+            Some(ExecutorCommand::Shutdown) | None => {
+                // Drain, don't drop: Execute commands still queued
+                // behind the shutdown get a typed Shed reply so the
+                // router counts their requests instead of losing them
+                // silently to a closed reply channel.
+                while let Ok(late) = rx.try_recv() {
+                    match late {
+                        ExecutorCommand::Execute { batch, reply, .. } => {
+                            state.stats.faults.shed += batch.requests.len();
+                            let _ = reply.send(ExecOutcome::Shed {
+                                requests: batch.requests,
+                                reason: "executor shutting down".into(),
+                            });
+                        }
+                        ExecutorCommand::Stats { reply } => {
+                            let _ = reply.send(state.snapshot());
+                        }
+                        ExecutorCommand::FinishTuning { reply } => {
+                            let _ = reply.send(());
+                        }
+                        ExecutorCommand::Shutdown => {}
+                    }
+                }
+                return;
+            }
         }
     }
 }
@@ -799,6 +855,42 @@ mod tests {
         assert!(!stats.active_us.is_empty());
         for s in &stats.swaps {
             assert!(s.gain > 1.0, "swap {:?} without improvement", s.shape);
+        }
+    }
+
+    #[test]
+    fn shutdown_drains_queued_executes_with_a_typed_shed() {
+        use crate::serving::batcher::Batch;
+        use crate::serving::Request;
+        let (tx, rx) = std::sync::mpsc::channel();
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel();
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        let batch = Batch {
+            bucket: 0,
+            seq_len: 128,
+            batch_shape: 1,
+            requests: vec![Request { id: 1, tokens: 8 }, Request { id: 2, tokens: 8 }],
+            formed_at: std::time::Instant::now(),
+        };
+        // Queue the shutdown FIRST, then a straggler batch behind it:
+        // the loop must drain the straggler with a typed shed, not
+        // return and drop its reply channel.
+        tx.send(ExecutorCommand::Shutdown).unwrap();
+        tx.send(ExecutorCommand::Execute {
+            batch,
+            enqueued_at: std::time::Instant::now(),
+            reply: reply_tx,
+        })
+        .unwrap();
+        drop(tx);
+        executor_loop(move || Ok(SimBackend::new(SimGpu::a100(), 7)), false, None, rx, ready_tx);
+        ready_rx.recv().unwrap().unwrap();
+        match reply_rx.recv().expect("straggler must get a reply, not a closed channel") {
+            ExecOutcome::Shed { requests, reason } => {
+                assert_eq!(requests.len(), 2);
+                assert!(reason.contains("shutting down"), "unexpected reason: {reason}");
+            }
+            _ => panic!("straggler behind a shutdown must be shed, not executed"),
         }
     }
 

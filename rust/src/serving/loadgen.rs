@@ -1,0 +1,303 @@
+//! Scenario workload generator: seeded, replayable traffic traces.
+//!
+//! The serving plane's scaling claims only mean something under
+//! production-shaped load, so scenarios are first-class: a [`Scenario`]
+//! is an [`ArrivalProcess`] (when requests arrive) crossed with a set of
+//! [`TrafficClass`]es (who sends them and how long their sequences are,
+//! via [`SeqLenMix`]).  `generate` expands a scenario into a
+//! [`TimedRequest`] trace — a pure function of `(scenario, n, seed)`, so
+//! the same trace can be replayed through any shard count or placement
+//! policy and compared bit-for-bit (`ServeReport::replay_digest`).
+//!
+//! This is the LLMServingTuner workflow's "simulate the benchmark" leg
+//! (SNIPPETS.md §1): the generator supplies the benchmark, the
+//! `SimBackend` virtual clock supplies the simulation, and the tuner
+//! closes the loop.
+
+use crate::serving::Request;
+use crate::util::rng::Rng;
+use crate::workload::SeqLenMix;
+
+/// One request with an arrival timestamp on the scenario's trace clock.
+///
+/// `at_us` is microseconds since trace start; traces are generated in
+/// nondecreasing timestamp order.  `class` indexes the scenario's
+/// traffic classes (0 for single-class and legacy traces).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TimedRequest {
+    /// Arrival time, µs since trace start (nondecreasing within a trace).
+    pub at_us: u64,
+    /// Index into the generating scenario's [`TrafficClass`] list.
+    pub class: usize,
+    /// The request itself.
+    pub req: Request,
+}
+
+impl TimedRequest {
+    /// Wrap a plain request as arriving at trace start (class 0) — how
+    /// legacy untimed traces enter the timed serving path.
+    pub fn immediate(req: Request) -> Self {
+        TimedRequest { at_us: 0, class: 0, req }
+    }
+}
+
+/// When requests arrive: the time axis of a scenario.
+///
+/// All processes are sampled with the scenario's seeded [`Rng`] —
+/// inter-arrival gaps for the stochastic processes are exponential
+/// draws against the instantaneous rate, i.e. an (inhomogeneous)
+/// Poisson process — so arrival times are deterministic per seed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Clockwork arrivals at a fixed rate: one request every `1/rps`
+    /// seconds, no randomness on the time axis.
+    Steady {
+        /// Arrival rate, requests per second.
+        rps: f64,
+    },
+    /// Poisson arrivals whose rate square-waves between a quiet base
+    /// and a burst: the first `burst_frac` of every `period_s` window
+    /// runs at `burst_rps`, the rest at `base_rps`.  This is the
+    /// scenario saturation and scaling tests lean on.
+    PoissonBurst {
+        /// Quiet-phase arrival rate, requests per second.
+        base_rps: f64,
+        /// Burst-phase arrival rate, requests per second.
+        burst_rps: f64,
+        /// Burst cycle length, seconds.
+        period_s: f64,
+        /// Fraction of each period spent bursting, in (0, 1).
+        burst_frac: f64,
+    },
+    /// Poisson arrivals whose rate follows a raised cosine between
+    /// trough and peak over `period_s` — a compressed day/night cycle.
+    DiurnalRamp {
+        /// Minimum (night-time) arrival rate, requests per second.
+        trough_rps: f64,
+        /// Maximum (peak-hour) arrival rate, requests per second.
+        peak_rps: f64,
+        /// Full cycle length, seconds.
+        period_s: f64,
+    },
+}
+
+impl ArrivalProcess {
+    /// Instantaneous arrival rate at trace time `t_s` (seconds).
+    pub fn rate_at(&self, t_s: f64) -> f64 {
+        match *self {
+            ArrivalProcess::Steady { rps } => rps,
+            ArrivalProcess::PoissonBurst { base_rps, burst_rps, period_s, burst_frac } => {
+                let phase = (t_s / period_s).fract();
+                if phase < burst_frac {
+                    burst_rps
+                } else {
+                    base_rps
+                }
+            }
+            ArrivalProcess::DiurnalRamp { trough_rps, peak_rps, period_s } => {
+                let phase = (t_s / period_s).fract();
+                let wave = 0.5 * (1.0 - (2.0 * std::f64::consts::PI * phase).cos());
+                trough_rps + (peak_rps - trough_rps) * wave
+            }
+        }
+    }
+
+    /// Draw the gap (µs) to the next arrival after trace time `t_us`.
+    fn next_gap_us(&self, t_us: f64, rng: &mut Rng) -> f64 {
+        let rate = self.rate_at(t_us / 1e6).max(1e-9);
+        match self {
+            // Clockwork: exactly 1/rate apart, no draw consumed.
+            ArrivalProcess::Steady { .. } => 1e6 / rate,
+            // Exponential inter-arrival at the current rate.  u < 1 so
+            // -ln(1-u) is finite and >= 0, keeping timestamps monotone.
+            _ => {
+                let u = rng.f64();
+                -(1.0 - u).ln() / rate * 1e6
+            }
+        }
+    }
+
+    /// Short human name for the catalog.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Steady { .. } => "steady",
+            ArrivalProcess::PoissonBurst { .. } => "poisson-burst",
+            ArrivalProcess::DiurnalRamp { .. } => "diurnal-ramp",
+        }
+    }
+}
+
+/// One tenant / traffic class inside a scenario: a share of the traffic
+/// with its own sequence-length mix.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrafficClass {
+    /// Class name (reports, per-class accounting).
+    pub name: &'static str,
+    /// Relative traffic share (weights are normalized over the
+    /// scenario's classes; they need not sum to 1).
+    pub weight: f64,
+    /// Sequence-length distribution of this class's requests.
+    pub mix: SeqLenMix,
+}
+
+/// A named, fully seeded traffic scenario: arrival process × traffic
+/// classes.  See [`Scenario::catalog`] for the built-ins.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    /// Catalog name (`portatune serve --scenario NAME`).
+    pub name: &'static str,
+    /// One-line description for the catalog listing.
+    pub description: &'static str,
+    /// When requests arrive.
+    pub arrivals: ArrivalProcess,
+    /// Who sends them, and with what sequence lengths.
+    pub classes: Vec<TrafficClass>,
+}
+
+impl Scenario {
+    /// The built-in scenario catalog: `steady`, `burst`, `diurnal`.
+    pub fn catalog() -> Vec<Scenario> {
+        vec![
+            Scenario {
+                name: "steady",
+                description: "clockwork arrivals, single class, legacy long-tailed lengths",
+                arrivals: ArrivalProcess::Steady { rps: 400.0 },
+                classes: vec![TrafficClass {
+                    name: "standard",
+                    weight: 1.0,
+                    mix: SeqLenMix::LogNormal { median: 48.0, sigma: 0.6 },
+                }],
+            },
+            Scenario {
+                name: "burst",
+                description: "Poisson bursts (50→2000 rps), interactive decode + batch prefill tenants",
+                arrivals: ArrivalProcess::PoissonBurst {
+                    base_rps: 50.0,
+                    burst_rps: 2000.0,
+                    period_s: 2.0,
+                    burst_frac: 0.25,
+                },
+                classes: vec![
+                    TrafficClass { name: "interactive", weight: 0.7, mix: SeqLenMix::DecodeHeavy },
+                    TrafficClass { name: "batch", weight: 0.3, mix: SeqLenMix::PrefillHeavy },
+                ],
+            },
+            Scenario {
+                name: "diurnal",
+                description: "raised-cosine day/night ramp (20→800 rps), three tenants incl. bimodal background",
+                arrivals: ArrivalProcess::DiurnalRamp {
+                    trough_rps: 20.0,
+                    peak_rps: 800.0,
+                    period_s: 60.0,
+                },
+                classes: vec![
+                    TrafficClass { name: "interactive", weight: 0.5, mix: SeqLenMix::DecodeHeavy },
+                    TrafficClass { name: "batch", weight: 0.2, mix: SeqLenMix::PrefillHeavy },
+                    TrafficClass {
+                        name: "background",
+                        weight: 0.3,
+                        mix: SeqLenMix::Bimodal { short_frac: 0.6 },
+                    },
+                ],
+            },
+        ]
+    }
+
+    /// Look up a catalog scenario by name.
+    pub fn by_name(name: &str) -> Option<Scenario> {
+        Self::catalog().into_iter().find(|s| s.name == name)
+    }
+
+    /// Comma-separated catalog names (CLI error messages).
+    pub fn names() -> String {
+        Self::catalog().iter().map(|s| s.name).collect::<Vec<_>>().join(", ")
+    }
+
+    /// Expand the scenario into `n` timed requests with sequence
+    /// lengths clamped to `[SeqLenMix::MIN_TOKENS, max_tokens]`.
+    ///
+    /// Pure in `(self, n, max_tokens, seed)`: ids are sequential,
+    /// timestamps nondecreasing, and every random draw comes from one
+    /// seeded [`Rng`], so two calls with equal inputs return equal
+    /// traces — the property the replay-digest tests pin.
+    pub fn generate(&self, n: usize, max_tokens: usize, seed: u64) -> Vec<TimedRequest> {
+        assert!(!self.classes.is_empty(), "scenario {} has no traffic classes", self.name);
+        let mut rng = Rng::seed_from(seed);
+        let total_weight: f64 = self.classes.iter().map(|c| c.weight).sum();
+        let mut t_us = 0.0f64;
+        let mut out = Vec::with_capacity(n);
+        for id in 0..n as u64 {
+            t_us += self.arrivals.next_gap_us(t_us, &mut rng);
+            // Weighted class draw against the cumulative weights.
+            let mut u = rng.f64() * total_weight;
+            let mut class = self.classes.len() - 1;
+            for (i, c) in self.classes.iter().enumerate() {
+                if u < c.weight {
+                    class = i;
+                    break;
+                }
+                u -= c.weight;
+            }
+            let tokens = self.classes[class].mix.sample(&mut rng, max_tokens);
+            out.push(TimedRequest { at_us: t_us as u64, class, req: Request { id, tokens } });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_names_resolve() {
+        for sc in Scenario::catalog() {
+            let found = Scenario::by_name(sc.name).expect("catalog name must resolve");
+            assert_eq!(found, sc);
+        }
+        assert!(Scenario::by_name("nope").is_none());
+        assert!(Scenario::names().contains("burst"));
+    }
+
+    #[test]
+    fn burst_rate_square_waves() {
+        let p = ArrivalProcess::PoissonBurst {
+            base_rps: 10.0,
+            burst_rps: 100.0,
+            period_s: 2.0,
+            burst_frac: 0.25,
+        };
+        assert_eq!(p.rate_at(0.1), 100.0); // in the burst window
+        assert_eq!(p.rate_at(1.0), 10.0); // quiet phase
+        assert_eq!(p.rate_at(2.1), 100.0); // next period's burst
+    }
+
+    #[test]
+    fn diurnal_rate_spans_trough_to_peak() {
+        let p = ArrivalProcess::DiurnalRamp { trough_rps: 20.0, peak_rps: 800.0, period_s: 60.0 };
+        assert!((p.rate_at(0.0) - 20.0).abs() < 1e-9);
+        assert!((p.rate_at(30.0) - 800.0).abs() < 1e-9);
+        assert!((p.rate_at(60.0) - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn steady_trace_is_clockwork() {
+        let sc = Scenario::by_name("steady").unwrap();
+        let trace = sc.generate(10, 512, 1);
+        // 400 rps → one arrival every 2500 µs, exactly.
+        for (i, t) in trace.iter().enumerate() {
+            assert_eq!(t.at_us, 2500 * (i as u64 + 1));
+        }
+    }
+
+    #[test]
+    fn generate_is_seed_deterministic_with_monotone_times() {
+        for sc in Scenario::catalog() {
+            let a = sc.generate(200, 512, 77);
+            let b = sc.generate(200, 512, 77);
+            assert_eq!(a, b, "{} must be replayable", sc.name);
+            assert!(a.windows(2).all(|w| w[0].at_us <= w[1].at_us), "{}", sc.name);
+            assert!(a.iter().enumerate().all(|(i, t)| t.req.id == i as u64));
+        }
+    }
+}

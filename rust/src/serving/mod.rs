@@ -3,27 +3,33 @@
 //! — on a pluggable execution backend, so the whole path runs in
 //! default builds.
 //!
-//! Architecture (single-process, mirroring a vLLM engine worker):
+//! Architecture (single-process, mirroring a sharded vLLM engine):
 //!
 //! ```text
+//!  loadgen::Scenario ──► TimedRequest trace (seeded arrivals × mixes)
+//!                              │
 //!  clients ──► Router ──► BucketQueue(seq≤128) ──┐
-//!                    └──► BucketQueue(seq≤256) ──┤   commands
+//!                    └──► BucketQueue(seq≤256) ──┤  formed batches
 //!                                                ▼
-//!                                        ExecutorThread (owns the
-//!                                          │       ExecBackend)
-//!                                          │  idle? → run one tuning
-//!                                          │          measurement and
-//!                                          │          maybe swap the
-//!                                          ▼          active variant
-//!                                       replies
-//!                                          │
-//!                        ┌─────────────────┴─────────────────┐
-//!                        ▼                                   ▼
-//!                   SimBackend                          PjrtBackend
-//!             (always available: the              (feature `pjrt`: real
-//!              analytical platform models,         AOT HLO artifacts on
-//!              deterministic virtual-clock         the XLA PJRT CPU
-//!              latencies — a100/mi250/h100)        client)
+//!                                         PlacementPolicy
+//!                                 (bucket-affinity | least-loaded)
+//!                          ┌─────────────┼─────────────┐
+//!                          ▼             ▼             ▼
+//!                       shard 0       shard 1  ...  shard N-1
+//!                   (ExecutorThreads: each owns its own ExecBackend,
+//!                          │  tuning queue and breaker state;
+//!                          │  idle? → run one tuning measurement and
+//!                          │          maybe swap the active variant)
+//!                          ▼
+//!                       replies (reaped in dispatch order)
+//!                          │
+//!        ┌─────────────────┴─────────────────┐
+//!        ▼                                   ▼
+//!   SimBackend                          PjrtBackend
+//! (always available: the              (feature `pjrt`: real
+//!  analytical platform models,         AOT HLO artifacts on
+//!  deterministic virtual-clock         the XLA PJRT CPU
+//!  latencies — a100/mi250/h100)        client)
 //! ```
 //!
 //! The executor owns all backend state on one thread — PJRT objects are
@@ -40,7 +46,9 @@ pub mod backend;
 pub mod batcher;
 pub mod chaos;
 pub mod executor;
+pub mod loadgen;
 pub mod router;
+pub mod shard;
 
 #[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;
@@ -48,7 +56,9 @@ pub use backend::{ExecBackend, SimBackend};
 pub use batcher::{Batch, BucketPolicy, DynamicBatcher};
 pub use chaos::{ChaosBackend, ChaosCounters, FaultPlan, VerbRates};
 pub use executor::{ExecOutcome, ExecutorCommand, ExecutorHandle, ExecutorStats};
+pub use loadgen::{ArrivalProcess, Scenario, TimedRequest, TrafficClass};
 pub use router::{Router, ServeReport, ServerConfig};
+pub use shard::{PlacementPolicy, ShardSet, ShardUtil};
 
 /// One inference request: a prompt of `tokens` tokens.
 #[derive(Debug, Clone, PartialEq, Eq)]

@@ -1,0 +1,320 @@
+//! Executor sharding: N executor threads per backend, one placement
+//! policy, shared admission control.
+//!
+//! A [`ShardSet`] owns N [`ExecutorHandle`]s spawned from one backend
+//! factory — each shard is a full executor (its own backend instance,
+//! tuning queue, breaker state, virtual clock), so shards fail, tune
+//! and quarantine independently.  The router keeps a single
+//! [`DynamicBatcher`](super::batcher::DynamicBatcher) in front (batch
+//! composition is shard-count-independent, which is what makes
+//! throughput-scaling comparisons apples-to-apples) and asks the
+//! [`PlacementPolicy`] which shard runs each formed batch.
+//!
+//! Everything here is deterministic on the sim backend: placement is a
+//! pure function of the batch key and integer load counters (ties break
+//! to the lowest shard index), so same-seed replays land every batch on
+//! the same shard and `ServeReport::replay_digest` stays bit-identical
+//! across runs — the property the sharding test suite pins.
+
+use std::sync::mpsc::channel;
+
+use super::backend::{ExecBackend, ShapeKey};
+use super::batcher::Batch;
+use super::executor::{ExecutorCommand, ExecutorHandle, ExecutorStats};
+use crate::cache::TuningCache;
+use crate::util::fnv::Fnv64;
+use crate::Result;
+
+/// Which shard a formed batch executes on.
+///
+/// Policies are pure functions of `(batch key, load counters, liveness)`
+/// with deterministic tie-breaking, so sim replays are bit-reproducible
+/// under every policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// Hash the (bucket, padded batch shape) key onto a home shard:
+    /// every batch of one compiled shape lands on the same shard, so
+    /// each shard compiles/warms only its own slice of the shape grid.
+    /// Dead home shards are walked past, wrapping, to the next live one.
+    BucketAffinity,
+    /// Send the batch to the live shard with the fewest batches
+    /// currently outstanding; ties go to the lowest shard index.  Best
+    /// raw balance, at the cost of every shard eventually compiling
+    /// every shape.
+    LeastLoaded,
+}
+
+impl Default for PlacementPolicy {
+    fn default() -> Self {
+        PlacementPolicy::BucketAffinity
+    }
+}
+
+impl PlacementPolicy {
+    /// Short name for flags, reports and digests.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementPolicy::BucketAffinity => "bucket-affinity",
+            PlacementPolicy::LeastLoaded => "least-loaded",
+        }
+    }
+
+    /// Pick the shard for `batch` given per-shard outstanding-batch
+    /// counts and liveness flags (both length = shard count).  Returns
+    /// `None` only when every shard is dead.
+    pub fn place(&self, batch: &Batch, outstanding: &[usize], dead: &[bool]) -> Option<usize> {
+        let n = outstanding.len();
+        debug_assert_eq!(n, dead.len());
+        if n == 0 || dead.iter().all(|&d| d) {
+            return None;
+        }
+        match self {
+            PlacementPolicy::BucketAffinity => {
+                // FNV over the full compiled-shape key: bucket index
+                // alone has too few distinct values to spread, and the
+                // padded shape is what the executor actually compiles.
+                let mut h = Fnv64::new();
+                h.write_u64(batch.bucket as u64);
+                h.write_u64(batch.batch_shape as u64);
+                let home = (h.finish() % n as u64) as usize;
+                (0..n).map(|i| (home + i) % n).find(|&i| !dead[i])
+            }
+            PlacementPolicy::LeastLoaded => (0..n)
+                .filter(|&i| !dead[i])
+                .min_by_key(|&i| (outstanding[i], i)),
+        }
+    }
+}
+
+impl std::str::FromStr for PlacementPolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "bucket" | "bucket-affinity" | "affinity" => Ok(PlacementPolicy::BucketAffinity),
+            "least-loaded" | "least" | "load" => Ok(PlacementPolicy::LeastLoaded),
+            other => anyhow::bail!(
+                "unknown placement policy '{other}' (expected bucket-affinity or least-loaded)"
+            ),
+        }
+    }
+}
+
+/// Per-shard work accounting for one trace replay — the rollup rows of
+/// `ServeReport` and the CLI's per-shard utilization table.
+#[derive(Debug, Clone, Default)]
+pub struct ShardUtil {
+    /// Shard index.
+    pub shard: usize,
+    /// Batches dispatched to this shard during the replay.
+    pub batches: usize,
+    /// Requests inside those batches.
+    pub requests: usize,
+    /// Virtual-clock time this shard's backend spent on the replay, µs
+    /// (0.0 on wall-clock backends, which don't model a clock).
+    pub busy_us: f64,
+}
+
+impl ShardUtil {
+    /// Busy fraction of the replay's modeled makespan, clamped to
+    /// [0, 1]; 0.0 when no modeled time elapsed.
+    pub fn utilization(&self, makespan_us: f64) -> f64 {
+        if makespan_us <= 0.0 {
+            0.0
+        } else {
+            (self.busy_us / makespan_us).clamp(0.0, 1.0)
+        }
+    }
+}
+
+/// N executor shards over one backend factory, plus the placement
+/// policy that routes batches among them.
+pub struct ShardSet {
+    handles: Vec<ExecutorHandle>,
+    placement: PlacementPolicy,
+}
+
+impl ShardSet {
+    /// Spawn `shards` executors, each over its own backend built by
+    /// `make(shard_index)`.  Every shard must discover the same shape
+    /// grid (they serve one model); a mismatch is a configuration error.
+    ///
+    /// The persistent tuning `cache` is wired to shard 0 only: winners
+    /// are deterministic per backend, so one writer is enough, and a
+    /// single writer is what keeps concurrent cache-file saves from
+    /// racing.  Sibling shards cold-tune to the same winners.
+    pub fn spawn<B, F>(
+        make: F,
+        shards: usize,
+        placement: PlacementPolicy,
+        idle_tuning: bool,
+        cache: Option<TuningCache>,
+    ) -> Result<Self>
+    where
+        B: ExecBackend + 'static,
+        F: Fn(usize) -> Result<B> + Send + Clone + 'static,
+    {
+        anyhow::ensure!(shards >= 1, "need at least one shard");
+        let mut cache = cache;
+        let mut handles = Vec::with_capacity(shards);
+        for i in 0..shards {
+            let mk = make.clone();
+            let shard_cache = if i == 0 { cache.take() } else { None };
+            handles.push(ExecutorHandle::spawn(move || mk(i), idle_tuning, shard_cache)?);
+        }
+        Self::from_handles(handles, placement)
+    }
+
+    /// Wrap already-spawned executors as a shard set (single-shard
+    /// compatibility path, and the seam tests use to mix backends).
+    pub fn from_handles(handles: Vec<ExecutorHandle>, placement: PlacementPolicy) -> Result<Self> {
+        anyhow::ensure!(!handles.is_empty(), "need at least one shard");
+        for (i, h) in handles.iter().enumerate().skip(1) {
+            anyhow::ensure!(
+                h.shapes == handles[0].shapes,
+                "shard {i} discovered a different shape grid than shard 0 \
+                 ({} vs {} shapes) — shards must serve one model",
+                h.shapes.len(),
+                handles[0].shapes.len(),
+            );
+        }
+        Ok(ShardSet { handles, placement })
+    }
+
+    /// Number of shards.
+    pub fn len(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Always false: construction requires ≥ 1 shard.
+    pub fn is_empty(&self) -> bool {
+        self.handles.is_empty()
+    }
+
+    /// The executor handles, in shard order.
+    pub fn handles(&self) -> &[ExecutorHandle] {
+        &self.handles
+    }
+
+    /// The placement policy batches are routed with.
+    pub fn placement(&self) -> PlacementPolicy {
+        self.placement
+    }
+
+    /// The compiled shape grid (identical on every shard by
+    /// construction).
+    pub fn shapes(&self) -> &[ShapeKey] {
+        &self.handles[0].shapes
+    }
+
+    /// Snapshot every shard's stats, in shard order.  Dead shards (the
+    /// executor thread is gone) report default-zero stats instead of
+    /// failing the whole rollup — reports must survive partial outages.
+    pub fn stats(&self) -> Vec<ExecutorStats> {
+        // Fan the Stats commands out first, then collect, so shards
+        // snapshot concurrently instead of serializing behind each
+        // other's tuning slices.
+        let pending: Vec<_> = self
+            .handles
+            .iter()
+            .map(|h| {
+                let (tx, rx) = channel();
+                h.tx.send(ExecutorCommand::Stats { reply: tx }).ok().map(|_| rx)
+            })
+            .collect();
+        pending
+            .into_iter()
+            .map(|rx| rx.and_then(|rx| rx.recv().ok()).unwrap_or_default())
+            .collect()
+    }
+
+    /// Drain every shard's background tuning queue (all shards tune in
+    /// parallel; this blocks until the slowest finishes).
+    pub fn finish_tuning(&self) -> Result<()> {
+        let mut pending = Vec::with_capacity(self.handles.len());
+        for h in &self.handles {
+            let (tx, rx) = channel();
+            h.tx.send(ExecutorCommand::FinishTuning { reply: tx })
+                .map_err(|_| anyhow::anyhow!("executor gone"))?;
+            pending.push(rx);
+        }
+        for rx in pending {
+            rx.recv()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    fn batch(bucket: usize, batch_shape: usize) -> Batch {
+        Batch {
+            bucket,
+            seq_len: 128 << bucket,
+            batch_shape,
+            requests: Vec::new(),
+            formed_at: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn placement_parses_and_names() {
+        assert_eq!("bucket".parse::<PlacementPolicy>().unwrap(), PlacementPolicy::BucketAffinity);
+        assert_eq!(
+            "least-loaded".parse::<PlacementPolicy>().unwrap(),
+            PlacementPolicy::LeastLoaded
+        );
+        assert!("nope".parse::<PlacementPolicy>().is_err());
+        assert_eq!(PlacementPolicy::default(), PlacementPolicy::BucketAffinity);
+    }
+
+    #[test]
+    fn bucket_affinity_is_sticky_and_walks_past_dead_shards() {
+        let p = PlacementPolicy::BucketAffinity;
+        let outstanding = [0usize; 4];
+        let alive = [false; 4];
+        let b = batch(1, 4);
+        let home = p.place(&b, &outstanding, &alive).unwrap();
+        // Sticky: the same key always lands on the same shard.
+        assert_eq!(p.place(&b, &[9, 9, 9, 9], &alive), Some(home));
+        // Dead home: next live shard, wrapping.
+        let mut dead = [false; 4];
+        dead[home] = true;
+        let fallback = p.place(&b, &outstanding, &dead).unwrap();
+        assert_eq!(fallback, (home + 1) % 4);
+        // All dead: nowhere to place.
+        assert_eq!(p.place(&b, &outstanding, &[true; 4]), None);
+    }
+
+    #[test]
+    fn bucket_affinity_spreads_the_shape_grid() {
+        // The full (bucket, batch_shape) grid must not starve shards:
+        // with 12 distinct keys over 4 shards, at least 3 shards get
+        // traffic under FNV hashing.
+        let p = PlacementPolicy::BucketAffinity;
+        let mut hit = [false; 4];
+        for bucket in 0..3 {
+            for shape in [1usize, 2, 4, 8] {
+                if let Some(s) = p.place(&batch(bucket, shape), &[0; 4], &[false; 4]) {
+                    hit[s] = true;
+                }
+            }
+        }
+        assert!(hit.iter().filter(|&&h| h).count() >= 3, "hit map: {hit:?}");
+    }
+
+    #[test]
+    fn least_loaded_takes_min_with_lowest_index_ties() {
+        let p = PlacementPolicy::LeastLoaded;
+        let b = batch(0, 1);
+        assert_eq!(p.place(&b, &[2, 1, 1, 3], &[false; 4]), Some(1));
+        // Tie across all: lowest index.
+        assert_eq!(p.place(&b, &[5, 5, 5, 5], &[false; 4]), Some(0));
+        // The min shard being dead: next-best live shard.
+        assert_eq!(p.place(&b, &[2, 1, 1, 3], &[false, true, false, false]), Some(2));
+        assert_eq!(p.place(&b, &[0, 0], &[true, true]), None);
+    }
+}

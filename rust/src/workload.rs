@@ -4,6 +4,13 @@
 //! depends on **both** the platform and the workload (tensor shapes, dtype,
 //! batch size) — so workloads are first-class values, used as cache keys,
 //! sweep axes, and inputs to the analytical cost models.
+//!
+//! [`SeqLenMix`] extends this to *distributions* of workloads: the
+//! serving-plane scenario generator ([`crate::serving::loadgen`]) draws
+//! per-request sequence lengths from a named mix, so traffic classes
+//! ("interactive decode", "batch prefill") are first-class too.
+
+use crate::util::rng::Rng;
 
 /// Element type of kernel operands.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -203,6 +210,75 @@ impl Workload {
     }
 }
 
+/// A named distribution of request sequence lengths — the workload-mix
+/// axis of a serving scenario.
+///
+/// Mixes are sampled with the caller's seeded [`Rng`], so a scenario
+/// trace is a pure function of its seed.  Samples are clamped to
+/// `[MIN_TOKENS, max_tokens]`; the clamp floor keeps every request
+/// inside the smallest serving bucket.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SeqLenMix {
+    /// Long-prompt traffic: lengths cluster near `max_tokens`
+    /// (summarization, RAG context stuffing) — the compute-bound end.
+    PrefillHeavy,
+    /// Short-prompt traffic: lengths cluster near a few dozen tokens
+    /// (chat turns, tool calls) — the memory/launch-bound end.
+    DecodeHeavy,
+    /// Two populations: a `short_frac` fraction of decode-like requests
+    /// plus a long-prompt remainder — the shape that stresses bucket
+    /// policies hardest, because no single bucket fits the traffic.
+    Bimodal {
+        /// Fraction of requests drawn from the short mode, in [0, 1].
+        short_frac: f64,
+    },
+    /// A generic log-normal: `median` tokens scaled by `exp(sigma · z)`
+    /// for a standard normal `z` — the long-tailed shape real request
+    /// logs show.  The legacy `synth_trace` distribution is
+    /// `LogNormal { median: 48.0, sigma: 0.6 }`.
+    LogNormal {
+        /// Median of the distribution, tokens.
+        median: f64,
+        /// Log-space standard deviation.
+        sigma: f64,
+    },
+}
+
+impl SeqLenMix {
+    /// Smallest sequence length any mix emits.
+    pub const MIN_TOKENS: usize = 8;
+
+    /// Draw one sequence length in `[MIN_TOKENS, max_tokens]`.
+    pub fn sample(&self, rng: &mut Rng, max_tokens: usize) -> usize {
+        let lognormal = |rng: &mut Rng, median: f64, sigma: f64| median * (sigma * rng.normal()).exp();
+        let raw = match *self {
+            SeqLenMix::PrefillHeavy => lognormal(rng, 0.7 * max_tokens as f64, 0.25),
+            SeqLenMix::DecodeHeavy => lognormal(rng, 24.0, 0.5),
+            SeqLenMix::Bimodal { short_frac } => {
+                // One draw decides the mode, then one draw inside it —
+                // a fixed number of RNG pulls per sample either way.
+                if rng.f64() < short_frac {
+                    lognormal(rng, 16.0, 0.3)
+                } else {
+                    lognormal(rng, 0.9 * max_tokens as f64, 0.1)
+                }
+            }
+            SeqLenMix::LogNormal { median, sigma } => lognormal(rng, median, sigma),
+        };
+        raw.round().clamp(Self::MIN_TOKENS as f64, max_tokens as f64) as usize
+    }
+
+    /// Short human name for reports and the scenario catalog.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SeqLenMix::PrefillHeavy => "prefill-heavy",
+            SeqLenMix::DecodeHeavy => "decode-heavy",
+            SeqLenMix::Bimodal { .. } => "bimodal",
+            SeqLenMix::LogNormal { .. } => "log-normal",
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -261,4 +337,36 @@ mod tests {
         assert!(a.starts_with("attn_b1_"));
     }
 
+    #[test]
+    fn seq_len_mixes_are_clamped_and_shaped() {
+        let max = 512;
+        let mixes = [
+            SeqLenMix::PrefillHeavy,
+            SeqLenMix::DecodeHeavy,
+            SeqLenMix::Bimodal { short_frac: 0.5 },
+            SeqLenMix::LogNormal { median: 48.0, sigma: 0.6 },
+        ];
+        for mix in mixes {
+            let mut rng = Rng::seed_from(9);
+            let samples: Vec<usize> = (0..400).map(|_| mix.sample(&mut rng, max)).collect();
+            assert!(samples.iter().all(|&t| (SeqLenMix::MIN_TOKENS..=max).contains(&t)), "{mix:?}");
+        }
+        // Prefill-heavy means long: its mean must dominate decode-heavy's.
+        let mean = |mix: SeqLenMix| {
+            let mut rng = Rng::seed_from(9);
+            (0..400).map(|_| mix.sample(&mut rng, max)).sum::<usize>() as f64 / 400.0
+        };
+        assert!(mean(SeqLenMix::PrefillHeavy) > 4.0 * mean(SeqLenMix::DecodeHeavy));
+    }
+
+    #[test]
+    fn seq_len_mix_is_deterministic_per_seed() {
+        let mix = SeqLenMix::Bimodal { short_frac: 0.3 };
+        let draw = |seed| {
+            let mut rng = Rng::seed_from(seed);
+            (0..64).map(|_| mix.sample(&mut rng, 512)).collect::<Vec<_>>()
+        };
+        assert_eq!(draw(7), draw(7));
+        assert_ne!(draw(7), draw(8));
+    }
 }

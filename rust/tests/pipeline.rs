@@ -13,9 +13,10 @@ use portatune::kernels::baselines::{triton_codegen, TemplateLibrary};
 use portatune::platform::{PlatformId, SimGpu};
 #[cfg(feature = "pjrt")]
 use portatune::runtime::{Engine, Manifest};
+use portatune::serving::backend::{ExecHandle, ShapeKey, VariantDesc};
 use portatune::serving::{
-    router::synth_trace, BucketPolicy, ChaosBackend, DynamicBatcher, FaultPlan, Request, Router,
-    ServerConfig, SimBackend, VerbRates,
+    router::synth_trace, BucketPolicy, ChaosBackend, DynamicBatcher, ExecBackend, FaultPlan,
+    PlacementPolicy, Request, Router, Scenario, ServerConfig, SimBackend, VerbRates,
 };
 use portatune::util::tmp::TempDir;
 use portatune::workload::Workload;
@@ -596,4 +597,304 @@ fn vendor_library_never_serves_foreign_platform() {
     assert!(lib.latency_us(&SimGpu::mi250(), &Workload::llama3_attention(4, 512)).is_err());
     let rocm = TemplateLibrary::rocm_flash_attn();
     assert!(rocm.latency_us(&SimGpu::a100(), &Workload::llama3_attention(4, 512)).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Sharded serving: scaling, saturation, replay determinism, and chaos
+// isolation across executor shards.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sharded_throughput_scales_with_shard_count_on_bursty_scenario() {
+    // ISSUE acceptance: on the deterministic virtual clock, 4 tuned
+    // shards must serve the bursty scenario at >= 2x the 1-shard
+    // modeled throughput.  The single shared batcher forms the
+    // identical batch sequence for both runs (batch composition is
+    // shard-count-independent), so the comparison is apples-to-apples.
+    let run = |shards: usize| {
+        let cfg = ServerConfig::default();
+        let router = Router::with_shards(
+            move |_| Ok(SimBackend::new(SimGpu::a100(), 11)),
+            shards,
+            PlacementPolicy::LeastLoaded,
+            &cfg,
+        )
+        .unwrap();
+        // Tune first so both runs serve the same per-bucket winners and
+        // no compile time lands on the request path.
+        router.finish_tuning().unwrap();
+        let max_tokens = *router.policy().seq_buckets.last().unwrap();
+        let trace = Scenario::by_name("burst").unwrap().generate(480, max_tokens, 7);
+        let rep = router.serve_trace_timed(&trace).unwrap();
+        assert_eq!(rep.requests + rep.shed + rep.rejected + rep.lost, 480, "{shards}-shard accounting");
+        assert_eq!(rep.lost, 0, "{shards}-shard run must lose nothing");
+        assert_eq!(rep.shards, shards);
+        assert!(rep.sim_makespan_us > 0.0, "sim backend must model a makespan");
+        rep
+    };
+    let r1 = run(1);
+    let r4 = run(4);
+    assert_eq!(r1.requests, r4.requests, "shard count must not change what completes");
+    assert_eq!(r1.batches, r4.batches, "shared batcher must form the same batches");
+    assert!(
+        r4.sim_throughput_rps >= 2.0 * r1.sim_throughput_rps,
+        "4 shards at {:.1} req/s must be >= 2x 1 shard at {:.1} req/s",
+        r4.sim_throughput_rps,
+        r1.sim_throughput_rps
+    );
+    // The balancer actually spread the work: no single shard carried
+    // more than half the modeled busy time.
+    let busy: Vec<f64> = r4.shard_util.iter().map(|u| u.busy_us).collect();
+    let total: f64 = busy.iter().sum();
+    let max_busy = busy.iter().cloned().fold(0.0, f64::max);
+    assert!(
+        max_busy <= 0.5 * total,
+        "least-loaded left one shard with {max_busy} of {total} us busy"
+    );
+}
+
+#[test]
+fn sharded_replays_are_bit_reproducible_across_shards_scenarios_and_placements() {
+    // Same seed, same scenario => bit-identical replay digest, for
+    // every (shard count, scenario, placement policy) combination.
+    const SHAPES: &[(usize, usize)] = &[(1, 128), (4, 128), (2, 256), (8, 256), (4, 512)];
+    for scenario in Scenario::catalog() {
+        for shards in [1usize, 2, 4] {
+            for placement in [PlacementPolicy::BucketAffinity, PlacementPolicy::LeastLoaded] {
+                let digest = || {
+                    let cfg = ServerConfig { idle_tuning: false, ..Default::default() };
+                    let router = Router::with_shards(
+                        move |_| {
+                            Ok(SimBackend::new(SimGpu::mi250(), 3)
+                                .with_shapes(SHAPES)
+                                .with_variants_per_bucket(2))
+                        },
+                        shards,
+                        placement,
+                        &cfg,
+                    )
+                    .unwrap();
+                    let max_tokens = *router.policy().seq_buckets.last().unwrap();
+                    let trace = scenario.generate(90, max_tokens, 13);
+                    router.serve_trace_timed(&trace).unwrap().replay_digest()
+                };
+                assert_eq!(
+                    digest(),
+                    digest(),
+                    "digest must be bit-identical: scenario={} shards={} placement={}",
+                    scenario.name,
+                    shards,
+                    placement.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_serve_sheds_not_panics_past_saturation() {
+    // A 2000 rps burst into a max_pending=8 admission bound: the router
+    // must shed (typed and counted) instead of panicking or queueing
+    // without bound, and the request accounting must still balance.
+    let cfg = ServerConfig { max_pending: 8, idle_tuning: false, ..Default::default() };
+    let router = Router::with_shards(
+        move |_| Ok(SimBackend::new(SimGpu::a100(), 11)),
+        2,
+        PlacementPolicy::LeastLoaded,
+        &cfg,
+    )
+    .unwrap();
+    let max_tokens = *router.policy().seq_buckets.last().unwrap();
+    let trace = Scenario::by_name("burst").unwrap().generate(300, max_tokens, 7);
+    let rep = router.serve_trace_timed(&trace).unwrap();
+    assert!(rep.shed > 0, "a 2000 rps burst into max_pending=8 must shed");
+    assert!(rep.requests > 0, "shedding must not starve admitted requests");
+    assert_eq!(rep.lost, 0, "saturation sheds; it never loses requests");
+    assert_eq!(rep.requests + rep.shed + rep.rejected + rep.lost, 300);
+    // Admission sheds surface through the same fault counters the CLI
+    // prints, so saturation is observable, not silent.
+    assert_eq!(rep.faults.shed, rep.shed);
+}
+
+#[test]
+fn quarantined_variant_on_one_shard_does_not_poison_siblings() {
+    // Shard 0's measure path always faults: its 3 variants climb the
+    // full breaker ladder (quarantine -> re-probe -> written off) and
+    // it measures nothing.  Its siblings run a disabled fault plan and
+    // must tune to exactly the winners a clean single-shard router
+    // finds — shard-local chaos stays shard-local.
+    let cfg = ServerConfig { max_wait_us: 10_000_000, idle_tuning: true, ..Default::default() };
+    let hostile = FaultPlan {
+        seed: 5,
+        transient: VerbRates { measure: 1.0, ..VerbRates::default() },
+        ..FaultPlan::default()
+    };
+    let sim = || SimBackend::new(SimGpu::a100(), 5).with_shapes(&[(1, 128)]).with_variants_per_bucket(3);
+    let router = Router::with_shards(
+        move |i| {
+            let plan = if i == 0 { hostile.clone() } else { FaultPlan::disabled() };
+            Ok(ChaosBackend::new(
+                SimBackend::new(SimGpu::a100(), 5).with_shapes(&[(1, 128)]).with_variants_per_bucket(3),
+                plan,
+            ))
+        },
+        3,
+        PlacementPolicy::LeastLoaded,
+        &cfg,
+    )
+    .unwrap();
+    router.finish_tuning().unwrap();
+    let stats = router.shard_set().stats();
+    assert_eq!(stats.len(), 3);
+    // Shard 0: every variant breaker-laddered to written-off.
+    assert!(stats[0].faults.injected > 0, "the hostile plan must actually fire");
+    assert_eq!(stats[0].faults.gave_up, 3, "shard 0 writes all 3 variants off");
+    assert_eq!(stats[0].variants_measured, 0, "shard 0 measures nothing");
+    // Clean reference: what a fault-free router tunes to.
+    let clean = Router::sim(sim(), &cfg).unwrap();
+    clean.finish_tuning().unwrap();
+    let want = clean.executor().stats().unwrap();
+    assert!(want.variants_measured > 0);
+    for (i, s) in stats.iter().enumerate().skip(1) {
+        assert_eq!(s.faults.injected, 0, "shard {i} must see no injected faults");
+        assert_eq!(s.faults.gave_up, 0, "shard {i} must quarantine nothing");
+        assert_eq!(s.variants_measured, want.variants_measured, "shard {i} tunes fully");
+        assert_eq!(s.active, want.active, "shard {i} must land on the clean winners");
+        for (bucket, us) in &want.active_us {
+            assert_eq!(
+                s.active_us.get(bucket).map(|x| x.to_bits()),
+                Some(us.to_bits()),
+                "shard {i} bucket {bucket} winner latency must match the clean run bitwise"
+            );
+        }
+    }
+    // The fleet still serves: measure-path chaos never touches execute.
+    let reqs: Vec<Request> = (0..9).map(|id| Request { id, tokens: 16 + id as usize }).collect();
+    let rep = router.serve_trace(reqs).unwrap();
+    assert_eq!(rep.requests, 9);
+    assert_eq!(rep.shed + rep.lost, 0);
+}
+
+#[test]
+fn whole_shard_brownout_degrades_throughput_without_losing_the_winner() {
+    // Shard 0's execute path hard-fails under an injection budget of 8
+    // — exactly one batch's retry ladder (4 active-variant attempts,
+    // then 4 fallback attempts).  That batch is shed, the brown-out
+    // heals, and the fault-free tuned winners survive on every shard
+    // because execute-path failures never demote without a successful
+    // fallback and never touch the tuning path at all.
+    let cfg = ServerConfig { max_wait_us: 10_000_000, idle_tuning: true, ..Default::default() };
+    let brownout = FaultPlan {
+        seed: 9,
+        transient: VerbRates { execute: 1.0, ..VerbRates::default() },
+        max_injected: Some(8),
+        ..FaultPlan::default()
+    };
+    let router = Router::with_shards(
+        move |i| {
+            let plan = if i == 0 { brownout.clone() } else { FaultPlan::disabled() };
+            Ok(ChaosBackend::new(SimBackend::new(SimGpu::a100(), 11), plan))
+        },
+        2,
+        PlacementPolicy::LeastLoaded,
+        &cfg,
+    )
+    .unwrap();
+    // Tuning completes everywhere: the brown-out only covers execute.
+    router.finish_tuning().unwrap();
+    let max_tokens = *router.policy().seq_buckets.last().unwrap();
+    let rep = router.serve_trace(synth_trace(32, max_tokens, 3)).unwrap();
+    // The first batch lands on shard 0 (least-loaded ties break to the
+    // lowest index) and burns the whole budget on its retry ladder.
+    assert_eq!(rep.faults.injected, 8, "4 active + 4 fallback attempts consume the budget");
+    assert!(rep.shed > 0, "the browned-out batch is shed, not lost");
+    assert_eq!(rep.lost, 0);
+    assert_eq!(rep.requests + rep.shed, 32);
+    assert!(rep.requests > 0, "the fleet keeps serving through the brown-out");
+    assert_eq!(
+        rep.shard_stats[0].faults.shed,
+        rep.shed,
+        "every shed request is shard 0's"
+    );
+    // The winners survived: a clean single-shard reference tunes to the
+    // same active variants the browned-out fleet still holds.
+    let clean = Router::sim(SimBackend::new(SimGpu::a100(), 11), &cfg).unwrap();
+    clean.finish_tuning().unwrap();
+    let want = clean.executor().stats().unwrap();
+    for (i, s) in rep.shard_stats.iter().enumerate() {
+        assert_eq!(s.active, want.active, "shard {i} must keep the fault-free winners");
+    }
+}
+
+/// A backend whose executor thread dies (panics) on the Nth execute —
+/// the "shard process dies mid-batch" failure sharding must survive.
+struct DyingBackend {
+    inner: SimBackend,
+    executes_left: usize,
+}
+
+impl ExecBackend for DyingBackend {
+    fn platform(&self) -> String {
+        self.inner.platform()
+    }
+    fn discover(&mut self) -> portatune::Result<Vec<(ShapeKey, Vec<VariantDesc>)>> {
+        self.inner.discover()
+    }
+    fn bucket_workload(&self, shape: ShapeKey) -> Workload {
+        self.inner.bucket_workload(shape)
+    }
+    fn compile(&mut self, shape: ShapeKey, variant: &VariantDesc) -> portatune::Result<ExecHandle> {
+        self.inner.compile(shape, variant)
+    }
+    fn execute(&mut self, handle: ExecHandle, shape: ShapeKey) -> portatune::Result<f64> {
+        if self.executes_left == 0 {
+            panic!("injected shard death");
+        }
+        self.executes_left -= 1;
+        self.inner.execute(handle, shape)
+    }
+    fn measure(
+        &mut self,
+        handle: ExecHandle,
+        shape: ShapeKey,
+        warmup: usize,
+        iters: usize,
+    ) -> portatune::Result<f64> {
+        self.inner.measure(handle, shape, warmup, iters)
+    }
+    fn backoff(&mut self, us: f64) {
+        self.inner.backoff(us)
+    }
+    fn virtual_clock_us(&self) -> f64 {
+        self.inner.virtual_clock_us()
+    }
+}
+
+#[test]
+fn dying_shard_loses_only_its_in_flight_batches_never_the_replay() {
+    // Shard 0's thread panics on its first execute.  The router must
+    // finish the replay on the surviving shard, count (not drop) the
+    // dead shard's in-flight requests as lost, and keep the accounting
+    // identity intact.
+    let cfg = ServerConfig { max_wait_us: 10_000_000, idle_tuning: false, ..Default::default() };
+    let router = Router::with_shards(
+        move |i| {
+            Ok(DyingBackend {
+                inner: SimBackend::new(SimGpu::a100(), 7),
+                executes_left: if i == 0 { 0 } else { usize::MAX },
+            })
+        },
+        2,
+        PlacementPolicy::LeastLoaded,
+        &cfg,
+    )
+    .unwrap();
+    let max_tokens = *router.policy().seq_buckets.last().unwrap();
+    let n = 24;
+    let rep = router.serve_trace(synth_trace(n, max_tokens, 3)).unwrap();
+    assert!(rep.lost > 0, "shard 0 dies on its first execute; its batch is lost");
+    assert!(rep.requests > 0, "shard 1 must keep serving after its sibling dies");
+    assert_eq!(rep.requests + rep.shed + rep.rejected + rep.lost, n);
+    assert_eq!(rep.shards, 2);
+    assert!(rep.shard_util[1].requests > 0, "the survivor did real work");
 }

@@ -11,9 +11,9 @@ use portatune::json::{self, Value};
 use portatune::kernels::baselines::{triton_codegen, HAND_TUNED};
 use portatune::platform::SimGpu;
 use portatune::serving::batcher::{BucketPolicy, DynamicBatcher};
-use portatune::serving::Request;
+use portatune::serving::{Request, Scenario};
 use portatune::util::rng::Rng;
-use portatune::workload::{DType, Workload};
+use portatune::workload::{DType, SeqLenMix, Workload};
 
 const CASES: usize = 60;
 
@@ -343,5 +343,124 @@ fn prop_json_parser_never_panics_on_garbage() {
         let len = rng.below(60);
         let s: String = (0..len).map(|_| *rng.choose(&alphabet).unwrap()).collect();
         let _ = json::parse(&s); // must return, never panic
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scenario load-generator invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_scenario_traces_replay_per_seed_and_diverge_across_seeds() {
+    // Same (scenario, n, max_tokens, seed) => identical trace, always;
+    // a different seed must produce a different trace (arrival gaps
+    // and/or token draws move).  This is the contract that makes
+    // `serve --scenario` replays comparable across shard counts.
+    for sc in Scenario::catalog() {
+        for seed in [1u64, 7, 29, 1_000_003] {
+            let a = sc.generate(150, 512, seed);
+            let b = sc.generate(150, 512, seed);
+            assert_eq!(a, b, "{} seed {seed} must replay bit-identically", sc.name);
+            let c = sc.generate(150, 512, seed + 1);
+            assert_ne!(a, c, "{} must diverge when the seed moves", sc.name);
+        }
+    }
+}
+
+#[test]
+fn prop_scenario_traces_are_monotone_sequential_and_in_bounds() {
+    // Randomized (seeded) structural invariants over the whole catalog:
+    // trace length, nondecreasing timestamps, sequential ids, token
+    // counts inside [MIN_TOKENS, max_tokens], class indices in range.
+    let mut rng = Rng::seed_from(61);
+    let catalog = Scenario::catalog();
+    let max_tokens_choices = [8usize, 16, 64, 128, 512, 4096];
+    for _ in 0..CASES {
+        let sc = rng.choose(&catalog).unwrap();
+        let n = 1 + rng.below(200);
+        let max_tokens = *rng.choose(&max_tokens_choices).unwrap();
+        let seed = rng.below(1 << 30) as u64;
+        let trace = sc.generate(n, max_tokens, seed);
+        assert_eq!(trace.len(), n, "{}", sc.name);
+        for w in trace.windows(2) {
+            assert!(w[0].at_us <= w[1].at_us, "{} timestamps must be nondecreasing", sc.name);
+        }
+        for (i, t) in trace.iter().enumerate() {
+            assert_eq!(t.req.id, i as u64, "{} ids must be sequential", sc.name);
+            assert!(
+                (SeqLenMix::MIN_TOKENS..=max_tokens).contains(&t.req.tokens),
+                "{}: {} tokens outside [{}, {max_tokens}]",
+                sc.name,
+                t.req.tokens,
+                SeqLenMix::MIN_TOKENS
+            );
+            assert!(t.class < sc.classes.len(), "{} class index in range", sc.name);
+        }
+    }
+}
+
+#[test]
+fn prop_scenario_class_mix_converges_to_declared_weights() {
+    // Over a long trace, each traffic class's share must converge to
+    // its normalized weight — multi-tenant scenarios really produce the
+    // tenant mix they declare.
+    for sc in Scenario::catalog() {
+        let n = 4000usize;
+        let trace = sc.generate(n, 512, 29);
+        let total_weight: f64 = sc.classes.iter().map(|c| c.weight).sum();
+        let mut counts = vec![0usize; sc.classes.len()];
+        for t in &trace {
+            counts[t.class] += 1;
+        }
+        for (i, c) in sc.classes.iter().enumerate() {
+            let want = c.weight / total_weight;
+            let got = counts[i] as f64 / n as f64;
+            assert!(
+                (got - want).abs() <= 0.05,
+                "{} class {} share {got:.3} != declared {want:.3} (+/- 0.05)",
+                sc.name,
+                c.name
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_seq_len_mixes_stay_in_bounds_and_order_by_intent() {
+    // Every mix respects the clamp at every max_tokens, and the
+    // prefill-heavy mix draws longer sequences on average than the
+    // decode-heavy mix — the property that makes the burst scenario's
+    // tenant split meaningful.
+    let mixes = [
+        SeqLenMix::PrefillHeavy,
+        SeqLenMix::DecodeHeavy,
+        SeqLenMix::Bimodal { short_frac: 0.6 },
+        SeqLenMix::LogNormal { median: 48.0, sigma: 0.6 },
+    ];
+    for max_tokens in [64usize, 512, 4096] {
+        let mean = |mix: &SeqLenMix, seed: u64| {
+            let mut rng = Rng::seed_from(seed);
+            let mut sum = 0usize;
+            for _ in 0..2000 {
+                let t = mix.sample(&mut rng, max_tokens);
+                assert!(
+                    (SeqLenMix::MIN_TOKENS..=max_tokens).contains(&t),
+                    "{}: {t} outside [{}, {max_tokens}]",
+                    mix.name(),
+                    SeqLenMix::MIN_TOKENS
+                );
+                sum += t;
+            }
+            sum as f64 / 2000.0
+        };
+        let prefill = mean(&SeqLenMix::PrefillHeavy, 17);
+        let decode = mean(&SeqLenMix::DecodeHeavy, 17);
+        for mix in &mixes {
+            mean(mix, 23); // bounds hold for every mix
+        }
+        assert!(
+            prefill > decode,
+            "at max_tokens={max_tokens}, prefill mean {prefill:.1} must exceed decode mean {decode:.1}"
+        );
     }
 }
