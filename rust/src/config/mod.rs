@@ -11,6 +11,16 @@
 //! sample uniformly, and generate single-parameter neighbours for local
 //! search.
 //!
+//! Spaces are **hierarchical**: parameters group into [`Level`]s (tile →
+//! stage → schedule), and constraints declared with
+//! [`ConfigSpace::constraint_on`] are checked at the shallowest level
+//! that binds their parameters, so an invalid tile prunes its entire
+//! subtree instead of being re-rejected once per descendant
+//! configuration ([`SpaceStats`] reports the valid/invalid/pruned
+//! split).  Each [`Config`] also carries a modeled memory footprint
+//! ([`Config::mem_bytes`]) that the platform models check centrally
+//! against device capacity.
+//!
 //! [`dsl`] loads spaces from JSON descriptions with a constraint
 //! expression language, so kernel authors ship tuning spaces as data.
 //! [`spaces`] holds the concrete spaces used throughout the reproduction:
@@ -22,4 +32,4 @@ pub mod dsl;
 mod space;
 pub mod spaces;
 
-pub use space::{Config, ConfigSpace, Constraint, Enumerate, Param};
+pub use space::{Config, ConfigSpace, Constraint, Enumerate, Level, Param, SpaceStats};

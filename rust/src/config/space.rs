@@ -78,6 +78,66 @@ impl Config {
         }
         Some(Config(map))
     }
+
+    /// Modeled on-chip memory footprint of this configuration for `w`,
+    /// in bytes — memory as a first-class tuning dimension instead of a
+    /// side effect buried in per-kernel validity checks.
+    ///
+    /// The formula is keyed on which parameters the config carries:
+    ///
+    /// * Triton-style sim attention (`BLOCK_M`/`BLOCK_N`): the staged
+    ///   tile buffers
+    ///   `(BLOCK_M·head_dim + num_stages·2·BLOCK_N·head_dim)·dtype_bytes`
+    ///   — bit-identical to the shared-memory term the analytical model
+    ///   previously hand-rolled, so validity and modeled occupancy are
+    ///   unchanged.
+    /// * Pallas AOT attention (`block_q`/`block_k`): the kernel's VMEM
+    ///   scratch, mirroring `flash_attention.vmem_bytes` in
+    ///   `python/compile/kernels/`.
+    /// * RMS norm: `BLOCK·4` f32 staging (sim) or the Pallas `rms_norm`
+    ///   VMEM formula (`block_h`/`rows_per_block`, AOT).
+    /// * Vector add: 0 — it streams through registers.
+    ///
+    /// Configs from unrecognized spaces claim 0 bytes (nothing to
+    /// reject them by).
+    pub fn mem_bytes(&self, w: &Workload) -> usize {
+        let dtb = w.dtype().bytes();
+        let u = |v: i64| v.max(0) as usize;
+        match *w {
+            Workload::Attention { head_dim, .. } => {
+                if let (Some(bm), Some(bn)) = (self.get("BLOCK_M"), self.get("BLOCK_N")) {
+                    let stages = u(self.get("num_stages").unwrap_or(1)).max(1);
+                    (u(bm) * head_dim + stages * 2 * u(bn) * head_dim) * dtb
+                } else if let (Some(bq), Some(bk)) = (self.get("block_q"), self.get("block_k")) {
+                    let (bq, bk) = (u(bq), u(bk));
+                    // q tile + k/v tiles + f32 scores + f32 accumulator
+                    // + output tile (flash_attention.vmem_bytes).
+                    bq * head_dim * dtb
+                        + 2 * bk * head_dim * dtb
+                        + bq * bk * 4
+                        + bq * head_dim * 4
+                        + bq * head_dim * dtb
+                } else {
+                    0
+                }
+            }
+            Workload::RmsNorm { .. } => {
+                if let Some(block) = self.get("BLOCK") {
+                    u(block) * 4
+                } else if let (Some(bh), Some(rpb)) =
+                    (self.get("block_h"), self.get("rows_per_block"))
+                {
+                    let (bh, rpb) = (u(bh), u(rpb));
+                    // per-row input/output tiles + f32 accumulator,
+                    // plus the shared weight tile (rms_norm.vmem_bytes).
+                    rpb * (2 * bh * dtb + bh * 4) + bh * dtb
+                } else {
+                    0
+                }
+            }
+            Workload::VectorAdd { .. } => 0,
+        }
+    }
 }
 
 impl fmt::Display for Config {
@@ -116,16 +176,43 @@ impl Param {
 pub struct Constraint {
     /// Human-readable constraint name, reported on rejection.
     pub name: String,
+    /// Parameters the predicate declared it reads (`None` = may read
+    /// anything, so it can only be checked on full configurations).
+    bindings: Option<Vec<String>>,
     pred: Arc<dyn Fn(&Config, &Workload) -> bool + Send + Sync>,
 }
 
 impl Constraint {
-    /// A named validity predicate.
+    /// A named validity predicate (checked on full configurations only).
     pub fn new(
         name: &str,
         pred: impl Fn(&Config, &Workload) -> bool + Send + Sync + 'static,
     ) -> Self {
-        Constraint { name: name.to_string(), pred: Arc::new(pred) }
+        Constraint { name: name.to_string(), bindings: None, pred: Arc::new(pred) }
+    }
+
+    /// A named predicate that declares it reads **only** the listed
+    /// parameters (plus the workload).  The declaration is a contract:
+    /// hierarchical enumeration may call the predicate with a *partial*
+    /// config assigning only a prefix of the space's parameters that
+    /// covers the bindings, and a rejection prunes the whole subtree
+    /// below that prefix.
+    pub fn bound(
+        name: &str,
+        params: &[&str],
+        pred: impl Fn(&Config, &Workload) -> bool + Send + Sync + 'static,
+    ) -> Self {
+        Constraint {
+            name: name.to_string(),
+            bindings: Some(params.iter().map(|p| p.to_string()).collect()),
+            pred: Arc::new(pred),
+        }
+    }
+
+    /// The declared parameter bindings (`None` for full-config
+    /// constraints built with [`Constraint::new`]).
+    pub fn bindings(&self) -> Option<&[String]> {
+        self.bindings.as_deref()
     }
 
     /// Does `cfg` satisfy this constraint for `w`?
@@ -140,6 +227,28 @@ impl fmt::Debug for Constraint {
     }
 }
 
+/// A named group of consecutive parameters within a [`ConfigSpace`] —
+/// e.g. an attention space structured as `tile` (BLOCK_M, BLOCK_N) →
+/// `stage` (num_warps, num_stages) → `schedule` (waves_per_eu).
+///
+/// Levels never change *what* a space contains, only how it is walked:
+/// a constraint bound to shallow-level parameters (via
+/// [`ConfigSpace::constraint_on`]) is checked as soon as those levels
+/// are assigned, so a failing prefix prunes its entire subtree instead
+/// of being re-rejected once per descendant config.  Levels are
+/// deliberately **excluded** from [`ConfigSpace::fingerprint`]: they
+/// are an enumeration strategy, not part of the space definition, and
+/// persisted cache keys must survive the flat→hierarchical refactor.
+#[derive(Debug, Clone)]
+pub struct Level {
+    /// Level name (e.g. `tile`).
+    pub name: String,
+    /// Index into [`ConfigSpace::params`] of this level's first
+    /// parameter; the level spans up to the next level's `start` (or
+    /// the end of the parameter list).
+    pub start: usize,
+}
+
 /// A discrete configuration space: the cartesian product of parameter
 /// choices, filtered by constraints.
 #[derive(Debug, Clone)]
@@ -150,13 +259,21 @@ pub struct ConfigSpace {
     pub params: Vec<Param>,
     /// Named validity predicates coupling parameters and workload.
     pub constraints: Vec<Constraint>,
+    /// Hierarchy levels (possibly empty = one flat level spanning every
+    /// parameter).  Structural only — see [`Level`].
+    pub levels: Vec<Level>,
 }
 
 impl ConfigSpace {
     /// An empty space named `name`; add parameters/constraints with the
     /// builder methods.
     pub fn new(name: &str) -> Self {
-        ConfigSpace { name: name.to_string(), params: Vec::new(), constraints: Vec::new() }
+        ConfigSpace {
+            name: name.to_string(),
+            params: Vec::new(),
+            constraints: Vec::new(),
+            levels: Vec::new(),
+        }
     }
 
     /// Builder: add a parameter with its choices.
@@ -169,6 +286,22 @@ impl ConfigSpace {
         self
     }
 
+    /// Builder: open a new [`Level`]; subsequent [`ConfigSpace::param`]
+    /// calls belong to it until the next `level` call.
+    ///
+    /// # Panics
+    /// Panics on a duplicate level name or when the previous level was
+    /// left without any parameters.
+    pub fn level(mut self, name: &str) -> Self {
+        assert!(self.levels.iter().all(|l| l.name != name), "duplicate level {name}");
+        assert!(
+            self.levels.last().map(|l| l.start < self.params.len()).unwrap_or(true),
+            "level {name} opened before the previous level got any parameters"
+        );
+        self.levels.push(Level { name: name.to_string(), start: self.params.len() });
+        self
+    }
+
     /// Builder: add a named constraint.
     pub fn constraint(
         mut self,
@@ -177,6 +310,79 @@ impl ConfigSpace {
     ) -> Self {
         self.constraints.push(Constraint::new(name, pred));
         self
+    }
+
+    /// Builder: add a named constraint that reads **only** the listed
+    /// parameters (see [`Constraint::bound`]).  During enumeration it
+    /// is checked at the shallowest level boundary where every listed
+    /// parameter is assigned, so a rejection skips the whole subtree
+    /// below that prefix.  [`ConfigSpace::contains`] and friends still
+    /// evaluate it on full configs — the valid set is identical to
+    /// declaring the same predicate with [`ConfigSpace::constraint`].
+    ///
+    /// # Panics
+    /// Panics when a listed parameter is not (yet) declared — bind
+    /// constraints after their parameters.
+    pub fn constraint_on(
+        mut self,
+        name: &str,
+        params: &[&str],
+        pred: impl Fn(&Config, &Workload) -> bool + Send + Sync + 'static,
+    ) -> Self {
+        for b in params {
+            assert!(
+                self.params.iter().any(|p| p.name == *b),
+                "constraint {name} binds unknown parameter {b}"
+            );
+        }
+        self.constraints.push(Constraint::bound(name, params, pred));
+        self
+    }
+
+    /// A flat-equivalent copy: same name, parameters, and constraint
+    /// predicates, but with levels and bindings erased, so every
+    /// constraint is evaluated on full configurations only — exactly
+    /// the pre-hierarchy grid.  Same [`ConfigSpace::fingerprint`], same
+    /// valid set, same enumeration order; the equivalence suite and the
+    /// enumeration-throughput bench diff a space against its
+    /// flattening.
+    pub fn flatten(&self) -> ConfigSpace {
+        ConfigSpace {
+            name: self.name.clone(),
+            params: self.params.clone(),
+            constraints: self
+                .constraints
+                .iter()
+                .map(|c| Constraint { name: c.name.clone(), bindings: None, pred: c.pred.clone() })
+                .collect(),
+            levels: Vec::new(),
+        }
+    }
+
+    /// Prefix length (parameter count) at which `c` can first be
+    /// checked: the end of the deepest level containing one of its
+    /// bound parameters, or the full parameter count for unbound
+    /// constraints.
+    fn check_depth(&self, c: &Constraint) -> usize {
+        let n = self.params.len();
+        let Some(binds) = c.bindings() else { return n };
+        let mut depth = 0usize;
+        for b in binds {
+            let Some(pi) = self.params.iter().position(|p| &p.name == b) else {
+                return n; // unknown binding: fail safe, full-config check
+            };
+            let end = match self.levels.iter().rposition(|l| l.start <= pi) {
+                // End of the level containing param `pi`.
+                Some(li) => {
+                    self.levels.get(li + 1).map(|l| l.start).unwrap_or(n)
+                }
+                // Params before the first declared level form an
+                // implicit leading level.
+                None => self.levels.first().map(|l| l.start).unwrap_or(n),
+            };
+            depth = depth.max(end);
+        }
+        depth
     }
 
     /// Size of the unconstrained cartesian product.
@@ -216,14 +422,38 @@ impl ConfigSpace {
     /// evaluation instead of allocating the whole space first.  Collect
     /// it when random access is needed.
     pub fn enumerate<'a>(&'a self, w: &'a Workload) -> Enumerate<'a> {
-        Enumerate { space: self, w, idx: vec![0; self.params.len()], done: false }
+        // Schedule: constraint indices due at each prefix length
+        // (boundary 0 = workload-only, boundary n = full config),
+        // preserving declaration order within a boundary.
+        let n = self.params.len();
+        let mut due = vec![Vec::new(); n + 1];
+        for (ci, c) in self.constraints.iter().enumerate() {
+            due[self.check_depth(c)].push(ci);
+        }
+        Enumerate {
+            space: self,
+            w,
+            idx: vec![0; n],
+            done: false,
+            due,
+            valid: 0,
+            invalid: 0,
+            pruned: 0,
+        }
     }
 
-    /// Count valid and invalid configurations (the paper reports both:
-    /// "some of which are invalid on certain GPU platforms").
-    pub fn count_valid(&self, w: &Workload) -> (usize, usize) {
-        let valid = self.enumerate(w).count();
-        (valid, self.cardinality() - valid)
+    /// Census of every configuration in one enumeration pass (the paper
+    /// reports both sides: "some of which are invalid on certain GPU
+    /// platforms"); subtree pruning makes this cheaper than a full
+    /// `enumerate().count()` walk whenever level-bound constraints
+    /// reject prefixes.
+    pub fn count_valid(&self, w: &Workload) -> SpaceStats {
+        let mut it = self.enumerate(w);
+        let mut valid = 0usize;
+        for _ in it.by_ref() {
+            valid += 1;
+        }
+        SpaceStats { valid, invalid: it.invalid(), pruned: it.pruned() }
     }
 
     /// Stable 64-bit fingerprint of the space *definition*: name,
@@ -305,44 +535,153 @@ impl ConfigSpace {
     }
 }
 
+/// Enumeration census: how the raw cartesian product of a space splits
+/// for one workload.  Invariant (pinned by the property suite):
+/// `valid + invalid + pruned == cardinality()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SpaceStats {
+    /// Configurations satisfying every constraint.
+    pub valid: usize,
+    /// Fully-built configurations rejected by a constraint at full
+    /// depth (per-config evaluation).
+    pub invalid: usize,
+    /// Configurations skipped **without any per-config evaluation**
+    /// because a level-bound constraint rejected their prefix — whole
+    /// subtrees eliminated at once.
+    pub pruned: usize,
+}
+
+impl SpaceStats {
+    /// The raw cartesian product (`valid + invalid + pruned`).
+    pub fn total(&self) -> usize {
+        self.valid + self.invalid + self.pruned
+    }
+
+    /// Fraction of the raw product eliminated by subtree pruning
+    /// (0.0 for an empty space).
+    pub fn pruned_fraction(&self) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            0.0
+        } else {
+            self.pruned as f64 / total as f64
+        }
+    }
+}
+
 /// Lazy enumeration of a [`ConfigSpace`]'s valid configurations
 /// (odometer over the cartesian product, last parameter varying
 /// fastest — the same lexicographic order the old materializing
 /// implementation produced).
+///
+/// The walk is **hierarchical**: the config is built one parameter at
+/// a time, and every constraint bound to a level (see
+/// [`ConfigSpace::constraint_on`]) is checked as soon as its level's
+/// parameters are assigned.  A prefix rejection advances the odometer
+/// past the entire subtree and adds its size to [`Enumerate::pruned`];
+/// full-depth rejections count as [`Enumerate::invalid`].  Because
+/// levels respect parameter definition order and a bound predicate
+/// depends only on its prefix, the yielded sequence is bit-identical
+/// to flat enumeration of the same parameters and predicates.
 pub struct Enumerate<'a> {
     space: &'a ConfigSpace,
     w: &'a Workload,
     /// Current choice index per parameter.
     idx: Vec<usize>,
     done: bool,
+    /// Constraint indices due at each prefix length (0..=n_params).
+    due: Vec<Vec<usize>>,
+    valid: usize,
+    invalid: usize,
+    pruned: usize,
+}
+
+impl Enumerate<'_> {
+    /// Valid configurations yielded so far.
+    pub fn valid(&self) -> usize {
+        self.valid
+    }
+
+    /// Full-depth constraint rejections so far.
+    pub fn invalid(&self) -> usize {
+        self.invalid
+    }
+
+    /// Configurations skipped via subtree pruning so far.
+    pub fn pruned(&self) -> usize {
+        self.pruned
+    }
+
+    /// Size of the subtree under a prefix of length `d` (product of the
+    /// remaining choice-list sizes; 1 for a full-length prefix).
+    fn subtree(&self, d: usize) -> usize {
+        self.space.params[d..].iter().map(|p| p.choices.len()).product()
+    }
+
+    /// Bump digit `d`, resetting deeper digits, carrying upward; sets
+    /// `done` when the odometer wraps.
+    fn advance(&mut self, mut d: usize) {
+        if self.idx.is_empty() {
+            self.done = true;
+            return;
+        }
+        loop {
+            for i in (d + 1)..self.idx.len() {
+                self.idx[i] = 0;
+            }
+            self.idx[d] += 1;
+            if self.idx[d] < self.space.params[d].choices.len() {
+                return;
+            }
+            self.idx[d] = 0;
+            if d == 0 {
+                self.done = true;
+                return;
+            }
+            d -= 1;
+        }
+    }
 }
 
 impl Iterator for Enumerate<'_> {
     type Item = Config;
 
     fn next(&mut self) -> Option<Config> {
-        while !self.done {
+        let n = self.space.params.len();
+        'outer: while !self.done {
             let mut cfg = Config::default();
-            for (p, &i) in self.space.params.iter().zip(&self.idx) {
-                cfg.set(&p.name, p.choices[i]);
-            }
-            // Advance the odometer (last parameter fastest).
-            let mut d = self.space.params.len();
-            loop {
-                if d == 0 {
-                    self.done = true;
-                    break;
+            // Build the config prefix by prefix; boundary b means
+            // params[..b] are assigned.
+            for b in 0..=n {
+                if b > 0 {
+                    let p = &self.space.params[b - 1];
+                    cfg.set(&p.name, p.choices[self.idx[b - 1]]);
                 }
-                d -= 1;
-                self.idx[d] += 1;
-                if self.idx[d] < self.space.params[d].choices.len() {
-                    break;
+                for &ci in &self.due[b] {
+                    if !self.space.constraints[ci].check(&cfg, self.w) {
+                        if b == n {
+                            self.invalid += 1;
+                        } else {
+                            self.pruned += self.subtree(b);
+                        }
+                        if b == 0 {
+                            // Workload-only rejection: nothing in the
+                            // space can be valid.
+                            self.done = true;
+                        } else {
+                            self.advance(b - 1);
+                        }
+                        continue 'outer;
+                    }
                 }
-                self.idx[d] = 0;
             }
-            if self.space.violated_constraint(&cfg, self.w).is_none() {
-                return Some(cfg);
+            self.valid += 1;
+            if n == 0 {
+                self.done = true;
+            } else {
+                self.advance(n - 1);
             }
+            return Some(cfg);
         }
         None
     }
@@ -447,8 +786,133 @@ mod tests {
 
     #[test]
     fn count_valid_matches_enumerate() {
-        let (valid, invalid) = space().count_valid(&w());
-        assert_eq!((valid, invalid), (5, 1));
+        let stats = space().count_valid(&w());
+        assert_eq!(stats, SpaceStats { valid: 5, invalid: 1, pruned: 0 });
+        assert_eq!(stats.total(), space().cardinality());
+        assert_eq!(stats.pruned_fraction(), 0.0);
+    }
+
+    /// The test space with a tile-style hierarchy: `a` alone in the
+    /// first level, `b` in the second, plus a constraint bound to `a`.
+    fn hier_space() -> ConfigSpace {
+        ConfigSpace::new("test")
+            .level("first")
+            .param("a", &[1, 2, 4])
+            .level("second")
+            .param("b", &[10, 20])
+            .constraint_on("a_ne_2", &["a"], |c, _| c.req("a") != 2)
+            .constraint("a_times_b_le_40", |c, _| c.req("a") * c.req("b") <= 40)
+    }
+
+    #[test]
+    fn level_bound_constraint_prunes_subtrees() {
+        let s = hier_space();
+        let stats = s.count_valid(&w());
+        // a=2 is rejected at the level boundary: its whole b-subtree
+        // (2 configs) is pruned without per-config evaluation.  Of the
+        // remaining 4, (a=4,b=20) fails the full-depth constraint.
+        assert_eq!(stats, SpaceStats { valid: 3, invalid: 1, pruned: 2 });
+        assert_eq!(stats.total(), s.cardinality());
+        assert!(stats.pruned_fraction() > 0.3);
+    }
+
+    #[test]
+    fn hierarchical_enumeration_matches_flat() {
+        let s = hier_space();
+        let flat = s.flatten();
+        let wl = w();
+        // Same valid sequence (order and content) as the flattened
+        // grid...
+        let hier: Vec<Config> = s.enumerate(&wl).collect();
+        let flat_cfgs: Vec<Config> = flat.enumerate(&wl).collect();
+        assert_eq!(hier, flat_cfgs);
+        // ...and flat evaluation never prunes.
+        let fs = flat.count_valid(&wl);
+        assert_eq!(fs, SpaceStats { valid: 3, invalid: 3, pruned: 0 });
+    }
+
+    #[test]
+    fn levels_and_bindings_do_not_change_the_fingerprint() {
+        // Hierarchy is an enumeration strategy, not a definition
+        // change: persisted cache keys must survive the refactor.
+        let hier = hier_space();
+        assert_eq!(hier.fingerprint(), hier.flatten().fingerprint());
+        // A space differing only in levels from `space()` (same
+        // constraint set) also fingerprints identically.
+        let leveled = ConfigSpace::new("test")
+            .level("first")
+            .param("a", &[1, 2, 4])
+            .level("second")
+            .param("b", &[10, 20])
+            .constraint_on("a_times_b_le_40", &["a", "b"], |c, _| {
+                c.req("a") * c.req("b") <= 40
+            });
+        assert_eq!(leveled.fingerprint(), space().fingerprint());
+    }
+
+    #[test]
+    fn constraint_bound_to_deepest_level_behaves_like_flat() {
+        // Binding to params of the last level means full-depth checks:
+        // no pruning, counts identical to the flat grid.
+        let s = ConfigSpace::new("test")
+            .level("first")
+            .param("a", &[1, 2, 4])
+            .level("second")
+            .param("b", &[10, 20])
+            .constraint_on("a_times_b_le_40", &["a", "b"], |c, _| {
+                c.req("a") * c.req("b") <= 40
+            });
+        assert_eq!(s.count_valid(&w()), SpaceStats { valid: 5, invalid: 1, pruned: 0 });
+    }
+
+    #[test]
+    fn workload_only_constraint_prunes_everything() {
+        let s = ConfigSpace::new("gated")
+            .level("only")
+            .param("a", &[1, 2, 4])
+            .constraint_on("never", &[], |_, _| false);
+        let stats = s.count_valid(&w());
+        assert_eq!(stats, SpaceStats { valid: 0, invalid: 0, pruned: 3 });
+    }
+
+    #[test]
+    fn enumerate_counters_track_progress() {
+        let s = hier_space();
+        let wl = w();
+        let mut it = s.enumerate(&wl);
+        assert_eq!((it.valid(), it.invalid(), it.pruned()), (0, 0, 0));
+        let first = it.next().unwrap();
+        assert_eq!(first, Config::new(&[("a", 1), ("b", 10)]));
+        assert_eq!(it.valid(), 1);
+        while it.next().is_some() {}
+        assert_eq!((it.valid(), it.invalid(), it.pruned()), (3, 1, 2));
+    }
+
+    #[test]
+    fn mem_bytes_matches_the_analytical_smem_formula() {
+        let wl = Workload::llama3_attention(1, 1024); // head_dim 128, f16
+        let cfg = Config::new(&[
+            ("BLOCK_M", 64),
+            ("BLOCK_N", 32),
+            ("num_warps", 4),
+            ("num_stages", 2),
+            ("waves_per_eu", 0),
+        ]);
+        // (BLOCK_M*hd + stages*2*BLOCK_N*hd) * dtype_bytes
+        assert_eq!(cfg.mem_bytes(&wl), (64 * 128 + 2 * 2 * 32 * 128) * 2);
+        // AOT attention mirrors flash_attention.vmem_bytes.
+        let aot = Config::new(&[("block_q", 32), ("block_k", 64), ("unroll", 1)]);
+        let hd = 128;
+        let expect =
+            32 * hd * 2 + 2 * 64 * hd * 2 + 32 * 64 * 4 + 32 * hd * 4 + 32 * hd * 2;
+        assert_eq!(aot.mem_bytes(&wl), expect);
+        // Rms sim staging is BLOCK * 4 f32 bytes.
+        let rms = Workload::llama3_rms(1, 64);
+        assert_eq!(Config::new(&[("BLOCK", 512)]).mem_bytes(&rms), 512 * 4);
+        // Vecadd streams: no claim.
+        assert_eq!(Config::new(&[("block_size", 256)]).mem_bytes(&w()), 0);
+        // Unknown parameter sets claim nothing.
+        assert_eq!(Config::new(&[("mystery", 1)]).mem_bytes(&wl), 0);
     }
 
     #[test]

@@ -9,7 +9,19 @@
 //!   `waves_per_eu` (an AMD scheduler hint, ignored by the NVIDIA model).
 //! - **AOT spaces** — the smaller spaces every member of which was lowered
 //!   by `python/compile/aot.py` to a real HLO artifact.  These mirror the
-//!   `config_is_valid` functions in the Pallas kernels — keep them in sync.
+//!   `config_is_valid` functions in the Pallas kernels; the golden test
+//!   `aot_spaces_match_python_config_is_valid` re-derives the python
+//!   predicates and diffs full enumerations, so silent divergence fails
+//!   loudly instead of relying on a "keep in sync" comment.
+//!
+//! Every space here is **hierarchical** (`tile → stage → schedule`-style
+//! [`Level`](super::Level)s): constraints that only read shallow-level
+//! parameters are bound to those levels with
+//! [`ConfigSpace::constraint_on`], so an invalid tile prunes its whole
+//! subtree during enumeration.  The predicates, constraint names, and
+//! parameter grids are exactly the pre-hierarchy ones — the valid sets,
+//! enumeration order, and space fingerprints are unchanged (pinned by
+//! the equivalence suite in `tests/properties.rs`).
 //!
 //! Workload-independent hardware limits (shared-memory capacity, thread
 //! ceilings) are *not* encoded here: they belong to the platform models,
@@ -24,18 +36,21 @@ use crate::workload::Workload;
 /// tensor shape" for attention.
 pub fn attention_sim_space() -> ConfigSpace {
     ConfigSpace::new("attention_sim")
+        .level("tile")
         .param("BLOCK_M", &[16, 32, 64, 128, 256])
         .param("BLOCK_N", &[16, 32, 64, 128, 256])
+        .level("stage")
         .param("num_warps", &[1, 2, 4, 8])
         .param("num_stages", &[1, 2, 3, 4, 5])
+        .level("schedule")
         .param("waves_per_eu", &[0, 2])
-        .constraint("block_m_le_seq_padded", |c, w| match w {
+        .constraint_on("block_m_le_seq_padded", &["BLOCK_M"], |c, w| match w {
             // Triton masks out-of-range rows, but a tile larger than the
             // whole (padded) sequence is pure waste and never valid.
             Workload::Attention { seq_len, .. } => c.req("BLOCK_M") <= (*seq_len as i64).max(16),
             _ => true,
         })
-        .constraint("tile_not_degenerate", |c, _| {
+        .constraint_on("tile_not_degenerate", &["BLOCK_M", "BLOCK_N"], |c, _| {
             // Extreme aspect ratios starve the matrix units on both
             // vendors; Triton refuses to compile some of these.
             let (m, n) = (c.req("BLOCK_M"), c.req("BLOCK_N"));
@@ -47,17 +62,19 @@ pub fn attention_sim_space() -> ConfigSpace {
 /// `python/compile/kernels/flash_attention.py::config_is_valid`.
 pub fn attention_aot_space() -> ConfigSpace {
     ConfigSpace::new("attention_aot")
+        .level("block")
         .param("block_q", &[16, 32, 64, 128])
         .param("block_k", &[16, 32, 64, 128])
+        .level("schedule")
         .param("unroll", &[1, 2, 4])
-        .constraint("blocks_divide_seq", |c, w| match w {
+        .constraint_on("blocks_divide_seq", &["block_q", "block_k"], |c, w| match w {
             Workload::Attention { seq_len, .. } => {
                 let s = *seq_len as i64;
                 s % c.req("block_q") == 0 && s % c.req("block_k") == 0
             }
             _ => false,
         })
-        .constraint("unroll_divides_panels", |c, w| match w {
+        .constraint_on("unroll_divides_panels", &["block_k", "unroll"], |c, w| match w {
             Workload::Attention { seq_len, .. } => {
                 let nk = *seq_len as i64 / c.req("block_k");
                 let u = c.req("unroll");
@@ -65,7 +82,7 @@ pub fn attention_aot_space() -> ConfigSpace {
             }
             _ => false,
         })
-        .constraint("blocks_le_seq", |c, w| match w {
+        .constraint_on("blocks_le_seq", &["block_q", "block_k"], |c, w| match w {
             Workload::Attention { seq_len, .. } => {
                 let s = *seq_len as i64;
                 c.req("block_q") <= s && c.req("block_k") <= s
@@ -78,30 +95,37 @@ pub fn attention_aot_space() -> ConfigSpace {
 /// per-thread vector width).
 pub fn rms_sim_space() -> ConfigSpace {
     ConfigSpace::new("rms_sim")
+        .level("tile")
         .param("BLOCK", &[64, 128, 256, 512, 1024, 2048, 4096, 8192])
+        .level("stage")
         .param("num_warps", &[1, 2, 4, 8, 16])
+        .level("vector")
         .param("VEC", &[1, 2, 4, 8])
-        .constraint("block_le_2x_hidden", |c, w| match w {
+        .constraint_on("block_le_2x_hidden", &["BLOCK"], |c, w| match w {
             Workload::RmsNorm { hidden, .. } => c.req("BLOCK") <= 2 * *hidden as i64,
             _ => true,
         })
-        .constraint("vec_divides_block", |c, _| c.req("BLOCK") % c.req("VEC") == 0)
+        .constraint_on("vec_divides_block", &["BLOCK", "VEC"], |c, _| {
+            c.req("BLOCK") % c.req("VEC") == 0
+        })
 }
 
 /// Pallas AOT RMS-norm space — mirrors
 /// `python/compile/kernels/rms_norm.py::config_is_valid`.
 pub fn rms_aot_space() -> ConfigSpace {
     ConfigSpace::new("rms_aot")
+        .level("block")
         .param("block_h", &[128, 256, 512, 1024, 2048, 4096])
+        .level("rows")
         .param("rows_per_block", &[1, 2, 4])
-        .constraint("block_divides_hidden", |c, w| match w {
+        .constraint_on("block_divides_hidden", &["block_h"], |c, w| match w {
             Workload::RmsNorm { hidden, .. } => {
                 let h = *hidden as i64;
                 h % c.req("block_h") == 0 && c.req("block_h") <= h
             }
             _ => false,
         })
-        .constraint("rows_divide_n", |c, w| match w {
+        .constraint_on("rows_divide_n", &["rows_per_block"], |c, w| match w {
             Workload::RmsNorm { n_rows, .. } => *n_rows as i64 % c.req("rows_per_block") == 0,
             _ => false,
         })
@@ -110,8 +134,9 @@ pub fn rms_aot_space() -> ConfigSpace {
 /// Vector-add AOT space (Listing 1's `BLOCK_SIZE`).
 pub fn vecadd_aot_space() -> ConfigSpace {
     ConfigSpace::new("vecadd_aot")
+        .level("block")
         .param("block_size", &[64, 128, 256, 512, 1024])
-        .constraint("block_divides_n", |c, w| match w {
+        .constraint_on("block_divides_n", &["block_size"], |c, w| match w {
             Workload::VectorAdd { n, .. } => {
                 let n = *n as i64;
                 n % c.req("block_size") == 0 && c.req("block_size") <= n
@@ -209,5 +234,117 @@ mod tests {
         let w = Workload::llama3_attention(64, 2048);
         let valid = attention_sim_space().enumerate(&w).count();
         assert!(valid as f64 / 30.0 >= 15.0);
+    }
+
+    #[test]
+    fn attention_sim_pruning_stats() {
+        use crate::config::SpaceStats;
+        // seq 64: BLOCK_M ∈ {128, 256} fails at the tile level (10
+        // (M,N) pairs) and (16,16) is degenerate (1 pair): 11 pairs ×
+        // the 40-config stage×schedule subtree = 440 pruned before any
+        // per-config evaluation — > 30% of the 1000-config raw product.
+        let w = Workload::llama3_attention(1, 64);
+        let stats = attention_sim_space().count_valid(&w);
+        assert_eq!(stats, SpaceStats { valid: 560, invalid: 0, pruned: 440 });
+        assert!(stats.pruned_fraction() > 0.3);
+        assert_eq!(stats.total(), 1000);
+        // Long sequences keep every tile except the degenerate one.
+        let big = Workload::llama3_attention(1, 1024);
+        let stats = attention_sim_space().count_valid(&big);
+        assert_eq!(stats, SpaceStats { valid: 960, invalid: 0, pruned: 40 });
+    }
+
+    /// Verbatim reimplementation of the `config_is_valid` predicates in
+    /// `python/compile/kernels/*.py` — the golden source for the AOT
+    /// spaces.  A divergence between a space's enumeration and these
+    /// functions means someone edited one side only.
+    mod python_reference {
+        pub const ATTN_BLOCKS: &[i64] = &[16, 32, 64, 128];
+        pub const ATTN_UNROLLS: &[i64] = &[1, 2, 4];
+        pub const RMS_BLOCKS: &[i64] = &[128, 256, 512, 1024, 2048, 4096];
+        pub const RMS_ROWS: &[i64] = &[1, 2, 4];
+        pub const VECADD_BLOCKS: &[i64] = &[64, 128, 256, 512, 1024];
+
+        pub fn attention_is_valid(seq: i64, bq: i64, bk: i64, u: i64) -> bool {
+            seq % bq == 0
+                && seq % bk == 0
+                && (u <= 1 || (seq / bk) % u == 0)
+                && bq <= seq
+                && bk <= seq
+        }
+
+        pub fn rms_is_valid(hidden: i64, n_rows: i64, block_h: i64, rpb: i64) -> bool {
+            hidden % block_h == 0 && block_h <= hidden && n_rows % rpb == 0
+        }
+
+        pub fn vecadd_is_valid(n: i64, bs: i64) -> bool {
+            n % bs == 0 && bs <= n
+        }
+    }
+
+    #[test]
+    fn aot_spaces_match_python_config_is_valid() {
+        use python_reference as py;
+        use std::collections::BTreeSet;
+
+        // The grids themselves must match the python kernels first —
+        // a silently widened choice list is also a divergence.
+        let attn = attention_aot_space();
+        assert_eq!(attn.params[0].choices, py::ATTN_BLOCKS, "block_q grid");
+        assert_eq!(attn.params[1].choices, py::ATTN_BLOCKS, "block_k grid");
+        assert_eq!(attn.params[2].choices, py::ATTN_UNROLLS, "unroll grid");
+        for seq in [16usize, 32, 64, 128, 192, 256, 1024] {
+            let w = Workload::Attention {
+                batch: 1,
+                q_heads: 8,
+                kv_heads: 2,
+                seq_len: seq,
+                head_dim: 64,
+                dtype: DType::F32,
+                causal: true,
+            };
+            let ours: BTreeSet<String> = attn.enumerate(&w).map(|c| c.key()).collect();
+            let mut python = BTreeSet::new();
+            for &bq in py::ATTN_BLOCKS {
+                for &bk in py::ATTN_BLOCKS {
+                    for &u in py::ATTN_UNROLLS {
+                        if py::attention_is_valid(seq as i64, bq, bk, u) {
+                            python.insert(format!("block_k={bk},block_q={bq},unroll={u}"));
+                        }
+                    }
+                }
+            }
+            assert_eq!(ours, python, "attention_aot diverged from python at seq={seq}");
+        }
+
+        let rms = rms_aot_space();
+        assert_eq!(rms.params[0].choices, py::RMS_BLOCKS, "block_h grid");
+        assert_eq!(rms.params[1].choices, py::RMS_ROWS, "rows_per_block grid");
+        for (n_rows, hidden) in [(64usize, 1024usize), (33, 4096), (128, 2048), (7, 128)] {
+            let w = Workload::RmsNorm { n_rows, hidden, dtype: DType::F32 };
+            let ours: BTreeSet<String> = rms.enumerate(&w).map(|c| c.key()).collect();
+            let mut python = BTreeSet::new();
+            for &bh in py::RMS_BLOCKS {
+                for &rpb in py::RMS_ROWS {
+                    if py::rms_is_valid(hidden as i64, n_rows as i64, bh, rpb) {
+                        python.insert(format!("block_h={bh},rows_per_block={rpb}"));
+                    }
+                }
+            }
+            assert_eq!(ours, python, "rms_aot diverged from python at {n_rows}x{hidden}");
+        }
+
+        let vecadd = vecadd_aot_space();
+        assert_eq!(vecadd.params[0].choices, py::VECADD_BLOCKS, "block_size grid");
+        for n in [64usize, 100, 256, 1024, 4096] {
+            let w = Workload::VectorAdd { n, dtype: DType::F32 };
+            let ours: BTreeSet<String> = vecadd.enumerate(&w).map(|c| c.key()).collect();
+            let python: BTreeSet<String> = py::VECADD_BLOCKS
+                .iter()
+                .filter(|&&bs| py::vecadd_is_valid(n as i64, bs))
+                .map(|bs| format!("block_size={bs}"))
+                .collect();
+            assert_eq!(ours, python, "vecadd_aot diverged from python at n={n}");
+        }
     }
 }

@@ -10,6 +10,7 @@
 //!                 [--shards N] [--placement bucket-affinity|least-loaded]
 //!                 [--scenario steady|burst|diurnal]
 //!                 [--chaos SEED [--fault-rate P]]
+//! portatune space --stats [--kernel K]
 //! portatune analyze <kernels|hlo> [path]
 //! portatune cache <show|clear> [--file F]
 //! ```
@@ -79,6 +80,10 @@ USAGE:
                                    SEED; sim platforms only)
                   [--fault-rate P] (uniform per-verb fault rate for --chaos;
                                    default 0.1)
+  portatune space --stats [--kernel attention|rms_norm|vector_add|all]
+                                  (enumerate the built-in hierarchical
+                                   spaces and report the valid/invalid/
+                                   pruned-subtree split per workload)
   portatune analyze kernels
   portatune analyze hlo <path>
   portatune cache <show|clear> [--file F]
@@ -746,6 +751,61 @@ fn print_serve(tag: &str, r: &ServeReport) {
     }
 }
 
+/// `space --stats`: enumerate the built-in hierarchical spaces and
+/// report the (valid, invalid, pruned-subtree) split per workload —
+/// the observable payoff of level-bound constraints (ISSUE 8).
+fn cmd_space(args: &Args) -> Result<()> {
+    if !args.has("stats") {
+        return Err(anyhow!("space supports: portatune space --stats [--kernel K]\n{USAGE}"));
+    }
+    let kernel = args.flag_or("kernel", "all");
+    if !["all", "attention", "rms_norm", "vector_add"].contains(&kernel.as_str()) {
+        return Err(anyhow!("unknown kernel {kernel} (attention|rms_norm|vector_add|all)"));
+    }
+    let mut rep = Report::new(
+        "config-space statistics — hierarchical subtree pruning",
+        &["space", "workload", "raw", "valid", "invalid", "pruned", "pruned %"],
+    );
+    rep.note(
+        "`pruned` counts raw cross-product configurations eliminated a whole subtree at a \
+         time by level-bound constraints, before any per-config evaluation; `invalid` are \
+         full-depth rejections",
+    );
+    let mut add = |space: &portatune::config::ConfigSpace, w: &Workload| {
+        let s = space.count_valid(w);
+        rep.row(vec![
+            space.name.clone(),
+            w.key(),
+            s.total().to_string(),
+            s.valid.to_string(),
+            s.invalid.to_string(),
+            s.pruned.to_string(),
+            format!("{:.1}", 100.0 * s.pruned_fraction()),
+        ]);
+    };
+    if kernel == "all" || kernel == "attention" {
+        for seq in [32, 64, 128, 256, 512, 1024] {
+            add(&spaces::attention_sim_space(), &Workload::llama3_attention(8, seq));
+        }
+        for seq in [64, 256, 1024] {
+            add(&spaces::attention_aot_space(), &Workload::llama3_attention(1, seq));
+        }
+    }
+    if kernel == "all" || kernel == "rms_norm" {
+        for (batch, seq) in [(1usize, 64usize), (8, 512)] {
+            add(&spaces::rms_sim_space(), &Workload::llama3_rms(batch, seq));
+            add(&spaces::rms_aot_space(), &Workload::llama3_rms(batch, seq));
+        }
+    }
+    if kernel == "all" || kernel == "vector_add" {
+        for n in [100usize, 1 << 20] {
+            add(&spaces::vecadd_aot_space(), &Workload::VectorAdd { n, dtype: DType::F32 });
+        }
+    }
+    println!("{}", rep.to_markdown());
+    Ok(())
+}
+
 fn cmd_analyze(args: &Args) -> Result<()> {
     let what = args
         .positional
@@ -762,11 +822,14 @@ fn cmd_analyze(args: &Args) -> Result<()> {
                 &["bucket", "config", "vmem_bytes", "vmem_%_of_16MiB", "mxu_tile_util"],
             );
             for w in manifest.workload_buckets("attention") {
-                let Workload::Attention { head_dim, .. } = w else { continue };
+                let Workload::Attention { .. } = w else { continue };
                 for a in manifest.candidates_for(&w) {
                     let c = a.config();
                     let (bq, bk) = (c.req("block_q") as usize, c.req("block_k") as usize);
-                    let vmem = vmem_bytes(bq, bk, head_dim);
+                    // Config::mem_bytes IS the python vmem_bytes formula
+                    // (pinned by the golden test in config::spaces), so
+                    // the old hand-rolled mirror here is gone.
+                    let vmem = c.mem_bytes(&w);
                     // MXU 128x128 systolic: how full are the matmul tiles?
                     let util = (bq.min(128) * bk.min(128)) as f64 / (128.0 * 128.0);
                     rep.row(vec![
@@ -791,16 +854,6 @@ fn cmd_analyze(args: &Args) -> Result<()> {
         other => return Err(anyhow!("unknown analysis {other}")),
     }
     Ok(())
-}
-
-/// Mirror of python flash_attention.vmem_bytes (f32).
-fn vmem_bytes(block_q: usize, block_k: usize, head_dim: usize) -> usize {
-    let dtb = 4;
-    block_q * head_dim * dtb
-        + 2 * block_k * head_dim * dtb
-        + block_q * block_k * 4
-        + block_q * head_dim * 4
-        + block_q * head_dim * dtb
 }
 
 fn cmd_cache(args: &Args) -> Result<()> {
@@ -858,6 +911,11 @@ fn main() -> Result<()> {
                 "placement", "scenario",
             ])?;
             cmd_serve(&args)
+        }
+        "space" => {
+            let args = Args::parse(rest, &["stats"])?;
+            args.ensure_known(&["stats", "kernel"])?;
+            cmd_space(&args)
         }
         "analyze" => cmd_analyze(&Args::parse(rest, &[])?),
         "cache" => cmd_cache(&Args::parse(rest, &[])?),

@@ -78,6 +78,12 @@ pub struct SimGpu {
 }
 
 impl SimGpu {
+    /// A model around an arbitrary (possibly mutated) architecture sheet —
+    /// used by capacity edge-case tests and what-if experiments.
+    pub fn new(spec: GpuSpec) -> Self {
+        SimGpu { spec }
+    }
+
     /// The modeled NVIDIA A100-80GB ([`A100`]).
     pub fn a100() -> Self {
         SimGpu { spec: A100 }
@@ -102,16 +108,26 @@ impl SimGpu {
         }
     }
 
+    /// Central memory-capacity check: the configuration's modeled
+    /// on-chip staging footprint ([`Config::mem_bytes`]) must fit this
+    /// platform's per-block shared-memory / LDS budget.  Every kernel
+    /// validator routes through here instead of hand-rolling its own
+    /// footprint formula, so the memory dimension is rejected in one
+    /// place with one reason string.
+    pub fn validate_memory(&self, cfg: &Config, w: &Workload) -> Result<(), InvalidConfig> {
+        let mem = cfg.mem_bytes(w);
+        if mem > self.spec.smem_per_block {
+            return Err(invalid(format!(
+                "shared memory {mem} B exceeds {} B per block",
+                self.spec.smem_per_block
+            )));
+        }
+        Ok(())
+    }
+
     // -----------------------------------------------------------------
     // Flash attention
     // -----------------------------------------------------------------
-
-    /// Shared-memory footprint of one flash-attention block:
-    /// the Q tile resides for the block lifetime; K and V panels are
-    /// staged `num_stages` deep for pipelining.
-    fn attn_smem_bytes(&self, block_m: usize, block_n: usize, stages: usize, head_dim: usize, dtb: usize) -> usize {
-        (block_m * head_dim + stages * 2 * block_n * head_dim) * dtb
-    }
 
     /// Architectural registers per thread for the accumulator + scores
     /// (f32), the dominant register consumer in flash attention.
@@ -122,12 +138,11 @@ impl SimGpu {
 
     /// Validity of a flash-attention config on this platform.
     pub fn validate_attention(&self, cfg: &Config, w: &Workload) -> Result<(), InvalidConfig> {
-        let Workload::Attention { head_dim, dtype, .. } = *w else {
+        let Workload::Attention { head_dim, .. } = *w else {
             return Err(invalid("workload is not attention"));
         };
         let s = &self.spec;
         let (bm, bn) = (cfg.req("BLOCK_M") as usize, cfg.req("BLOCK_N") as usize);
-        let stages = cfg.req("num_stages") as usize;
         let warps = cfg.req("num_warps") as usize;
         let threads = warps * s.warp_width;
         if threads > s.max_threads_per_block {
@@ -136,13 +151,7 @@ impl SimGpu {
                 threads, s.max_threads_per_block, warps, s.warp_width
             )));
         }
-        let smem = self.attn_smem_bytes(bm, bn, stages, head_dim, dtype.bytes());
-        if smem > s.smem_per_block {
-            return Err(invalid(format!(
-                "shared memory {smem} B exceeds {} B per block",
-                s.smem_per_block
-            )));
-        }
+        self.validate_memory(cfg, w)?;
         let regs = self.attn_regs_per_thread(bm, bn, head_dim, threads);
         if regs > s.max_regs_per_thread {
             return Err(invalid(format!(
@@ -170,7 +179,7 @@ impl SimGpu {
         // ---- grid & occupancy -----------------------------------------
         let q_tiles = ceil_div(seq_len, bm);
         let total_blocks = batch * q_heads * q_tiles;
-        let smem = self.attn_smem_bytes(bm, bn, stages, head_dim, dtb);
+        let smem = cfg.mem_bytes(w);
         let regs = self.attn_regs_per_thread(bm, bn, head_dim, threads);
         let blocks_by_smem = (s.smem_per_cu / smem.max(1)).max(1);
         let blocks_by_warps = (s.max_warps_per_cu / warps).max(1);
@@ -340,12 +349,9 @@ impl SimGpu {
         if vec_bytes > 16 {
             return Err(invalid(format!("{vec_bytes}-byte vector loads exceed 16B/lane")));
         }
-        // The Triton row reduction stages one BLOCK through LDS/smem.
-        let block_bytes = cfg.req("BLOCK") as usize * 4;
-        if block_bytes > s.smem_per_block {
-            return Err(invalid(format!("BLOCK staging {block_bytes} B exceeds shared memory")));
-        }
-        Ok(())
+        // The Triton row reduction stages one BLOCK through LDS/smem;
+        // [`Config::mem_bytes`] models that staging buffer.
+        self.validate_memory(cfg, w)
     }
 
     /// Predicted latency (µs) of one RMS-norm launch (one block per
@@ -592,5 +598,59 @@ mod tests {
             .validate_attention(&attn_cfg(256, 256, 4, 5), &w)
             .unwrap_err();
         assert!(err.reason.contains("shared memory"), "{}", err.reason);
+    }
+
+    #[test]
+    fn memory_invalid_configs_rejected_on_all_three_platforms() {
+        // (256*128 + 5*2*256*128)*2 = 704 KiB staging: over every
+        // platform's per-block budget, rejected centrally with the same
+        // descriptive reason everywhere.
+        let w = paper_attn();
+        let cfg = attn_cfg(256, 256, 4, 5);
+        for gpu in [SimGpu::a100(), SimGpu::mi250(), SimGpu::h100()] {
+            let err = gpu.validate_attention(&cfg, &w).unwrap_err();
+            assert!(
+                err.reason.contains("shared memory"),
+                "{}: {}",
+                gpu.spec.name,
+                err.reason
+            );
+        }
+    }
+
+    #[test]
+    fn memory_check_uses_the_config_footprint_model() {
+        // validate_memory and Config::mem_bytes must agree exactly —
+        // the occupancy term in the latency model reads the same value.
+        let w = paper_attn();
+        let cfg = attn_cfg(64, 32, 4, 2);
+        let mem = cfg.mem_bytes(&w);
+        assert_eq!(mem, (64 * 128 + 2 * 2 * 32 * 128) * 2);
+        for gpu in [SimGpu::a100(), SimGpu::mi250(), SimGpu::h100()] {
+            assert_eq!(gpu.validate_memory(&cfg, &w).is_ok(), mem <= gpu.spec.smem_per_block);
+        }
+    }
+
+    #[test]
+    fn capacity_edge_cases_zero_exact_and_off_by_one() {
+        let w = paper_attn();
+        let cfg = attn_cfg(64, 32, 4, 2);
+        let mem = cfg.mem_bytes(&w); // 49152 B
+        let with_budget = |b: usize| {
+            let mut spec = A100;
+            spec.smem_per_block = b;
+            SimGpu::new(spec)
+        };
+        // Zero capacity: everything with a footprint is invalid.
+        let err = with_budget(0).validate_memory(&cfg, &w).unwrap_err();
+        assert!(err.reason.contains("shared memory"), "{}", err.reason);
+        // Exact fit: a footprint equal to the budget still runs.
+        assert!(with_budget(mem).validate_memory(&cfg, &w).is_ok());
+        // Off by one: one byte short rejects.
+        assert!(with_budget(mem - 1).validate_memory(&cfg, &w).is_err());
+        // Footprint-free configs survive even a zero budget.
+        let free = Config::new(&[("block_size", 256)]);
+        let vw = Workload::VectorAdd { n: 1 << 20, dtype: DType::F32 };
+        assert!(with_budget(0).validate_memory(&free, &vw).is_ok());
     }
 }

@@ -65,6 +65,11 @@ pub struct GpuSpec {
     pub fp32_tflops: f64,
     /// HBM bandwidth (GB/s).
     pub hbm_gbps: f64,
+    /// Device memory capacity (bytes) — the budget the serving plane
+    /// tunes its bucket grid and resident KV cache against
+    /// (SNIPPETS.md §3's vLLM memory tradeoff as a first-class
+    /// dimension).
+    pub hbm_bytes: usize,
     /// L2 cache (bytes).
     pub l2_bytes: usize,
     /// Kernel launch overhead (µs) — amortized by CUDA/HIP graphs in the
@@ -106,6 +111,7 @@ pub const A100: GpuSpec = GpuSpec {
     fp16_matrix_tflops: 312.0,
     fp32_tflops: 19.5,
     hbm_gbps: 2039.0,
+    hbm_bytes: 80 * 1024 * 1024 * 1024,
     l2_bytes: 40 * 1024 * 1024,
     launch_overhead_us: 3.0,
     mma_tile: 16,
@@ -129,6 +135,7 @@ pub const MI250: GpuSpec = GpuSpec {
     fp16_matrix_tflops: 181.0,
     fp32_tflops: 22.6,
     hbm_gbps: 1638.0,
+    hbm_bytes: 64 * 1024 * 1024 * 1024, // one GCD's half of the 128 GB card
     l2_bytes: 8 * 1024 * 1024,
     launch_overhead_us: 4.0,
     mma_tile: 32,
@@ -155,6 +162,7 @@ pub const H100: GpuSpec = GpuSpec {
     fp16_matrix_tflops: 989.0,
     fp32_tflops: 67.0,
     hbm_gbps: 3352.0,
+    hbm_bytes: 80 * 1024 * 1024 * 1024,
     l2_bytes: 50 * 1024 * 1024,
     launch_overhead_us: 2.5,
     mma_tile: 16,
@@ -203,6 +211,14 @@ mod tests {
                 assert_ne!(a, b, "two GPU models share the slug {a:?}");
             }
         }
+    }
+
+    #[test]
+    fn device_capacities_match_the_datasheets() {
+        assert_eq!(A100.hbm_bytes, 80 * 1024 * 1024 * 1024);
+        assert_eq!(H100.hbm_bytes, 80 * 1024 * 1024 * 1024);
+        // Per-GCD: half of the 128 GB card.
+        assert_eq!(MI250.hbm_bytes, 64 * 1024 * 1024 * 1024);
     }
 
     #[test]

@@ -251,6 +251,14 @@ pub struct SimBackend {
     /// paper: "compilation time accounts for around 80% of the
     /// autotuning time".
     compile_cost_us: f64,
+    /// Device-memory budget (bytes) for the resident KV cache of the
+    /// largest bucket served.  Defaults to the full
+    /// [`crate::platform::spec::GpuSpec::hbm_bytes`] capacity; tests and
+    /// capacity experiments shrink it.  Shapes whose
+    /// bucket workload pins more KV cache than this are dropped at
+    /// [`ExecBackend::discover`] time, so bucket-grid choice and kernel
+    /// variants are tuned jointly under one capacity budget.
+    mem_budget_bytes: usize,
 }
 
 impl SimBackend {
@@ -260,6 +268,7 @@ impl SimBackend {
     /// bucket drawn with `seed`.
     pub fn new(gpu: SimGpu, seed: u64) -> Self {
         let vendor = gpu.spec.vendor;
+        let mem_budget_bytes = gpu.spec.hbm_bytes;
         let geom = SimModelGeom::default();
         // The workload field is re-pointed per bucket; seed it with the
         // first shape's geometry so the evaluator is always coherent.
@@ -284,6 +293,7 @@ impl SimBackend {
             compiled: Vec::new(),
             clock_us: 0.0,
             compile_cost_us: 250_000.0,
+            mem_budget_bytes,
         }
     }
 
@@ -291,6 +301,19 @@ impl SimBackend {
     pub fn with_shapes(mut self, shapes: &[ShapeKey]) -> Self {
         self.shapes = shapes.to_vec();
         self
+    }
+
+    /// Shrink (or grow) the device-memory budget the bucket grid is
+    /// discovered under.  Shapes whose bucket workload would pin a KV
+    /// cache larger than `bytes` are not served.
+    pub fn with_mem_budget(mut self, bytes: usize) -> Self {
+        self.mem_budget_bytes = bytes;
+        self
+    }
+
+    /// The active device-memory budget (bytes).
+    pub fn mem_budget_bytes(&self) -> usize {
+        self.mem_budget_bytes
     }
 
     /// Candidate variants per bucket (≥ 1; index 0 is always the
@@ -332,19 +355,32 @@ impl ExecBackend for SimBackend {
 
     fn discover(&mut self) -> Result<Vec<(ShapeKey, Vec<VariantDesc>)>> {
         let space = spaces::attention_sim_space();
+        let smem_budget = self.eval.gpu.spec.smem_per_block;
         let mut out = Vec::with_capacity(self.shapes.len());
         for &shape in &self.shapes {
             let w = self.bucket_workload(shape);
+            // Memory-aware bucket grid: a shape whose resident KV cache
+            // would not fit the device budget is never served — the
+            // capacity dimension prunes buckets exactly like an invalid
+            // tile prunes a config subtree.
+            if w.kv_cache_bytes() > self.mem_budget_bytes {
+                continue;
+            }
             let mut configs = vec![default_variant_config()];
             // Seeded, per-shape draw: deterministic per (seed, shape),
-            // independent of the other buckets.
+            // independent of the other buckets.  Draws whose on-chip
+            // footprint cannot fit this platform's per-block budget are
+            // rejected up front instead of burning a compile to fail.
             let mix = ((shape.0 as u64) << 32 | shape.1 as u64)
                 .wrapping_mul(0x9E37_79B9_7F4A_7C15);
             let mut rng = Rng::seed_from(self.seed ^ mix);
             let mut stall = 0usize;
             while configs.len() < self.variants_per_bucket && stall < 200 {
                 match space.sample(&w, &mut rng, 200) {
-                    Some(c) if !configs.iter().any(|k| k.fingerprint() == c.fingerprint()) => {
+                    Some(c)
+                        if c.mem_bytes(&w) <= smem_budget
+                            && !configs.iter().any(|k| k.fingerprint() == c.fingerprint()) =>
+                    {
                         configs.push(c);
                         stall = 0;
                     }
@@ -736,6 +772,53 @@ mod tests {
         let desc = VariantDesc { artifact_id: "sim/huge".into(), config: cfg, path: None };
         let err = b.compile((1, 256), &desc).unwrap_err();
         assert!(err.to_string().contains("shared memory"), "{err}");
+    }
+
+    #[test]
+    fn default_budget_serves_the_whole_shape_grid() {
+        // The stock grid's largest bucket (batch 8, seq 512) pins
+        // 8*512*8*128*2*4 B = 32 MiB of KV cache — nowhere near the
+        // 64-80 GiB device budgets, so nothing is filtered by default.
+        let mut b = SimBackend::new(SimGpu::a100(), 0);
+        let shapes = b.shapes.clone();
+        let served: Vec<ShapeKey> = b.discover().unwrap().into_iter().map(|(k, _)| k).collect();
+        assert_eq!(served, shapes);
+    }
+
+    #[test]
+    fn tiny_budget_filters_oversized_buckets() {
+        let mut b = SimBackend::new(SimGpu::a100(), 0)
+            .with_shapes(&[(1, 128), (8, 512)])
+            .with_mem_budget(Workload::Attention {
+                batch: 1,
+                q_heads: 32,
+                kv_heads: 8,
+                seq_len: 128,
+                head_dim: 128,
+                dtype: DType::F32,
+                causal: true,
+            }
+            .kv_cache_bytes());
+        let served: Vec<ShapeKey> = b.discover().unwrap().into_iter().map(|(k, _)| k).collect();
+        assert_eq!(served, vec![(1, 128)], "the 8x512 bucket exceeds the KV budget");
+    }
+
+    #[test]
+    fn discovered_variants_fit_the_platform_memory_budget() {
+        // Even on the smallest-LDS platform, every candidate the
+        // backend proposes must survive its own compile-time memory
+        // check — no variant is born dead.
+        let mut b = SimBackend::new(SimGpu::mi250(), 3);
+        for (shape, vs) in b.discover().unwrap() {
+            let w = SimModelGeom::default().bucket_workload(shape);
+            for v in vs {
+                assert!(
+                    v.config.mem_bytes(&w) <= crate::platform::spec::MI250.smem_per_block,
+                    "{shape:?}: {} overflows LDS",
+                    v.artifact_id
+                );
+            }
+        }
     }
 
     #[test]

@@ -46,6 +46,26 @@ impl BucketPolicy {
         BucketPolicy { seq_buckets, batch_sizes, max_wait_us }
     }
 
+    /// Build a grid from compiled `(seq, batch)` pairs under a device
+    /// memory budget: pairs whose resident footprint (per the caller's
+    /// `bytes_of(seq, batch)` model — typically
+    /// [`crate::workload::Workload::kv_cache_bytes`] of the bucket
+    /// workload) exceeds `capacity_bytes` are dropped before the grid is
+    /// built, so bucket-shape choice is tuned jointly with the kernel
+    /// variants under one capacity budget.
+    pub fn memory_aware(
+        pairs: Vec<(usize, usize)>,
+        max_wait_us: u64,
+        capacity_bytes: usize,
+        bytes_of: impl Fn(usize, usize) -> usize,
+    ) -> Self {
+        let kept = pairs
+            .into_iter()
+            .filter(|&(seq, batch)| bytes_of(seq, batch) <= capacity_bytes)
+            .collect();
+        BucketPolicy::new(kept, max_wait_us)
+    }
+
     /// Smallest seq bucket that fits `tokens`, if any.
     pub fn bucket_for(&self, tokens: usize) -> Option<usize> {
         let i = self.seq_buckets.partition_point(|&s| s < tokens);
@@ -195,6 +215,43 @@ mod tests {
         assert_eq!(p.seq_buckets, vec![128, 256]);
         assert_eq!(p.batch_sizes[0], vec![1, 2, 4]);
         assert_eq!(p.max_batch(0), 4);
+    }
+
+    #[test]
+    fn memory_aware_grid_drops_over_budget_shapes() {
+        // Footprint model: batch x seq "tokens" of 1 B each; budget 512
+        // keeps (128,1), (128,2), (128,4), (256,1), (256,2) minus the
+        // two shapes above 512 B.
+        let p = BucketPolicy::memory_aware(
+            vec![(128, 1), (128, 2), (128, 4), (256, 1), (256, 2)],
+            10_000,
+            512,
+            |seq, batch| seq * batch,
+        );
+        assert_eq!(p.seq_buckets, vec![128, 256]);
+        assert_eq!(p.batch_sizes[0], vec![1, 2, 4], "512 B exactly fits (128,4)");
+        assert_eq!(p.batch_sizes[1], vec![1, 2], "(256,2) = 512 B exactly fits");
+        let tight = BucketPolicy::memory_aware(
+            vec![(128, 1), (128, 2), (128, 4), (256, 1), (256, 2)],
+            10_000,
+            300,
+            |seq, batch| seq * batch,
+        );
+        assert_eq!(tight.batch_sizes[0], vec![1, 2], "(128,4) over budget");
+        assert_eq!(tight.batch_sizes[1], vec![1], "(256,2) over budget");
+        // Zero capacity with a nonzero footprint model empties the grid.
+        let none =
+            BucketPolicy::memory_aware(vec![(128, 1)], 10_000, 0, |seq, batch| seq * batch);
+        assert!(none.seq_buckets.is_empty());
+    }
+
+    #[test]
+    fn memory_aware_with_infinite_budget_equals_plain_new() {
+        let pairs = vec![(128, 1), (128, 2), (256, 1)];
+        let a = BucketPolicy::new(pairs.clone(), 10_000);
+        let b = BucketPolicy::memory_aware(pairs, 10_000, usize::MAX, |seq, batch| seq * batch);
+        assert_eq!(a.seq_buckets, b.seq_buckets);
+        assert_eq!(a.batch_sizes, b.batch_sizes);
     }
 
     #[test]

@@ -38,7 +38,10 @@
 //! [`QUARANTINE_AFTER`] consecutive hard tuning failures, re-probes it
 //! once after [`QUARANTINE_COOLDOWN_TICKS`] tuning ticks, and writes it
 //! off as dead when the re-probe also fails — a flaky variant cannot
-//! poison idle tuning.  On the request path, an execute failure falls
+//! poison idle tuning.  Write-offs persist through the [`TuningCache`]
+//! (a `serving_dead_variants#<fingerprint>` entry per variant), so a
+//! restarted server remembers dead variants instead of replaying the
+//! whole quarantine ladder against them.  On the request path, an execute failure falls
 //! back to the last-known-good variant (then the conservative default)
 //! before the batch is shed with a typed [`ExecOutcome::Shed`] reply,
 //! so an injected fault can degrade service but never panic the thread
@@ -54,6 +57,7 @@ use super::batcher::Batch;
 use super::{Completion, Request};
 use crate::autotuner::search::Recorder;
 use crate::cache::{entry_now, TuningCache};
+use crate::config::Config;
 use crate::metrics::FaultCounters;
 use crate::platform::model::InvalidConfig;
 use crate::Result;
@@ -274,6 +278,19 @@ struct ExecutorState<B: ExecBackend> {
 impl<B: ExecBackend> ExecutorState<B> {
     const CACHE_SPACE: &'static str = "serving_model_variants";
 
+    /// Cache-space prefix for written-off variants (see
+    /// [`ExecutorState::dead_space`]).
+    const DEAD_SPACE_PREFIX: &'static str = "serving_dead_variants";
+
+    /// Cache-space string of one written-off variant.  The config
+    /// fingerprint is baked into the space so each (bucket workload,
+    /// variant) pair gets its own exact-match cache key — the winner
+    /// namespace ([`ExecutorState::CACHE_SPACE`]) holds one entry per
+    /// bucket, but every variant of a bucket can independently be dead.
+    fn dead_space(cfg: &Config) -> String {
+        format!("{}#{:016x}", Self::DEAD_SPACE_PREFIX, cfg.fingerprint())
+    }
+
     fn new(mut backend: B, cache: Option<TuningCache>) -> Result<Self> {
         // Discovery is retried like every other backend verb: a
         // transient fault at boot must not kill the server.
@@ -306,6 +323,7 @@ impl<B: ExecBackend> ExecutorState<B> {
             tick: 0,
         };
         state.warm_start_from_cache();
+        state.restore_dead_variants();
         Ok(state)
     }
 
@@ -333,6 +351,61 @@ impl<B: ExecBackend> ExecutorState<B> {
             self.stats.warm_started = warmed.len();
             // Nothing left to prove for adopted buckets this session.
             self.tune_queue.retain(|(k, _)| !warmed.contains(k));
+        }
+    }
+
+    /// Warm start for *failures*: re-adopt variants a previous session
+    /// wrote off as dead, so a restarted server never spends its whole
+    /// quarantine ladder (re-probes included) re-discovering a variant
+    /// that is known broken.  Restored variants are marked dead in the
+    /// breaker, dropped from the tuning queue, and recorded invalid in
+    /// the bucket recorder — so [`ExecutorState::try_activate`] still
+    /// sees the bucket as fully measured and activates its best healthy
+    /// variant.
+    fn restore_dead_variants(&mut self) {
+        let Some(cache) = &self.cache else { return };
+        let platform = self.backend.platform();
+        let mut dead: Vec<(ShapeKey, usize)> = Vec::new();
+        for (key, vs) in &self.variants {
+            let w = self.backend.bucket_workload(*key);
+            for (idx, v) in vs.iter().enumerate() {
+                let space = Self::dead_space(&v.desc.config);
+                if cache.get(&w, &platform, &space).is_some() {
+                    dead.push((*key, idx));
+                }
+            }
+        }
+        for &(key, idx) in &dead {
+            self.breaker.insert(
+                (key, idx),
+                Breaker {
+                    streak: QUARANTINE_AFTER,
+                    quarantined_until: None,
+                    reprobed: true,
+                    dead: true,
+                },
+            );
+            self.tune_queue.retain(|&(k, i)| (k, i) != (key, idx));
+            self.record_measurement(
+                key,
+                idx,
+                Err(anyhow::anyhow!("written off as dead in a previous session")),
+            );
+        }
+    }
+
+    /// Persist a written-off variant so the *next* session skips it
+    /// (the fault-tolerance twin of [`ExecutorState::persist_winner`]).
+    fn persist_dead_variant(&mut self, key: ShapeKey, idx: usize) {
+        let Some(cfg) = self.variants.get(&key).and_then(|vs| vs.get(idx)).map(|v| v.desc.config.clone())
+        else {
+            return;
+        };
+        let w = self.backend.bucket_workload(key);
+        let platform = self.backend.platform();
+        if let Some(cache) = &mut self.cache {
+            cache.put(&w, entry_now(&cfg, 0.0, 0, 1, &platform, &Self::dead_space(&cfg), 0.0));
+            let _ = cache.save();
         }
     }
 
@@ -621,6 +694,7 @@ impl<B: ExecBackend> ExecutorState<B> {
         };
         if dead {
             self.stats.faults.gave_up += 1;
+            self.persist_dead_variant(key, idx);
             self.record_measurement(key, idx, Err(err));
         } else {
             if quarantined {
@@ -941,6 +1015,96 @@ mod tests {
         assert_eq!(faults.failures, MAX_RETRIES + 1);
         assert_eq!(faults.retries, MAX_RETRIES);
         assert_eq!(faults.recovered, 0);
+    }
+
+    #[test]
+    fn dead_variants_persist_across_restart() {
+        let dir = crate::util::tmp::TempDir::new("dead-variants").unwrap();
+        let cache_path = dir.join("cache.json");
+        // Session 1: drive one variant to dead (its re-probe is spent,
+        // so the next hard failure writes it off) and let the cache
+        // persist the write-off.
+        let (key, dead_cfg, measured_before);
+        {
+            let backend = SimBackend::new(SimGpu::a100(), 7);
+            let cache = TuningCache::open(&cache_path).unwrap();
+            let mut state = ExecutorState::new(backend, Some(cache)).unwrap();
+            key = *state.variants.keys().min().unwrap();
+            let idx = 1; // a non-default variant
+            dead_cfg = state.variants[&key][idx].desc.config.clone();
+            state
+                .breaker
+                .insert((key, idx), Breaker { reprobed: true, ..Breaker::default() });
+            state.note_tune_failure(key, idx, anyhow::anyhow!("persistent fault"));
+            assert!(state.breaker[&(key, idx)].dead);
+            measured_before = state.stats.faults.gave_up;
+            assert_eq!(measured_before, 1);
+        } // state dropped; cache saved on drop
+        // The write-off is on disk under the variant's own space key.
+        let reread = TuningCache::open(&cache_path).unwrap();
+        let space = ExecutorState::<SimBackend>::dead_space(&dead_cfg);
+        assert!(
+            reread
+                .entries()
+                .any(|(_, e)| e.space == space && e.invalid == 1),
+            "dead variant must be persisted"
+        );
+        // Session 2 (restart): the variant comes back pre-dead — out of
+        // the tuning queue, breaker open, recorded invalid so the
+        // bucket can still activate.
+        let backend = SimBackend::new(SimGpu::a100(), 7);
+        let cache = TuningCache::open(&cache_path).unwrap();
+        let state = ExecutorState::new(backend, Some(cache)).unwrap();
+        let idx = state.variants[&key]
+            .iter()
+            .position(|v| v.desc.config == dead_cfg)
+            .expect("same seed, same variant universe");
+        assert!(state.breaker.get(&(key, idx)).map_or(false, |b| b.dead));
+        assert!(
+            !state.tune_queue.contains(&(key, idx)),
+            "dead variant must not be re-tuned"
+        );
+        assert!(
+            state.bucket_recs.get(&key).map_or(false, |r| r.len() >= 1),
+            "restored write-off must be recorded invalid"
+        );
+    }
+
+    #[test]
+    fn restored_dead_variant_never_blocks_activation() {
+        // A bucket whose non-default variant was written off last
+        // session must still fully tune and activate a winner.
+        let dir = crate::util::tmp::TempDir::new("dead-activate").unwrap();
+        let cache_path = dir.join("cache.json");
+        let (key, idx) = {
+            let backend = SimBackend::new(SimGpu::a100(), 7);
+            let cache = TuningCache::open(&cache_path).unwrap();
+            let mut state = ExecutorState::new(backend, Some(cache)).unwrap();
+            let key = *state.variants.keys().min().unwrap();
+            state
+                .breaker
+                .insert((key, 2), Breaker { reprobed: true, ..Breaker::default() });
+            state.note_tune_failure(key, 2, anyhow::anyhow!("persistent fault"));
+            (key, 2)
+        };
+        let handle = {
+            let cache_path = cache_path.clone();
+            ExecutorHandle::spawn(
+                move || Ok(SimBackend::new(SimGpu::a100(), 7)),
+                false,
+                Some(TuningCache::open(&cache_path).unwrap()),
+            )
+            .unwrap()
+        };
+        handle.finish_tuning().unwrap();
+        let stats = handle.stats().unwrap();
+        assert_eq!(
+            stats.active.len(),
+            handle.shapes.len(),
+            "every bucket (including the one with a dead variant) activates"
+        );
+        let name = format!("b{}s{}", key.0, key.1);
+        assert!(stats.active.contains_key(&name), "bucket {name} must serve; dead idx {idx}");
     }
 
     #[test]

@@ -168,6 +168,21 @@ impl Workload {
         self.flops() / self.min_bytes()
     }
 
+    /// Resident KV-cache footprint (bytes) this workload pins in device
+    /// memory while it is being served: K and V panels for every
+    /// sequence in the batch (`batch × seq_len × kv_heads × head_dim × 2`
+    /// elements).  Non-attention kernels hold no KV state.  The serving
+    /// plane budgets its bucket grid against this (SNIPPETS.md §3's
+    /// vLLM KV-cache-vs-graph memory tradeoff).
+    pub fn kv_cache_bytes(&self) -> usize {
+        match *self {
+            Workload::Attention { batch, kv_heads, seq_len, head_dim, dtype, .. } => {
+                batch * seq_len * kv_heads * head_dim * 2 * dtype.bytes()
+            }
+            Workload::RmsNorm { .. } | Workload::VectorAdd { .. } => 0,
+        }
+    }
+
     /// The operand element type.
     pub fn dtype(&self) -> DType {
         match *self {
@@ -327,6 +342,15 @@ mod tests {
     fn rms_is_memory_bound() {
         let w = Workload::llama3_rms(64, 1024);
         assert!(w.arithmetic_intensity() < 2.0);
+    }
+
+    #[test]
+    fn kv_cache_bytes_counts_k_and_v() {
+        // 64 seqs x 1024 tokens x 8 KV heads x 128 dim x 2 (K+V) x 2 B.
+        let w = Workload::llama3_attention(64, 1024);
+        assert_eq!(w.kv_cache_bytes(), 64 * 1024 * 8 * 128 * 2 * 2);
+        assert_eq!(Workload::llama3_rms(4, 128).kv_cache_bytes(), 0);
+        assert_eq!(Workload::VectorAdd { n: 1 << 20, dtype: DType::F32 }.kv_cache_bytes(), 0);
     }
 
     #[test]

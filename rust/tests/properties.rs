@@ -106,6 +106,98 @@ fn prop_constraint_rejection_is_sound() {
 }
 
 // ---------------------------------------------------------------------
+// Hierarchical-space invariants: the hierarchy is an enumeration
+// optimisation, never a semantic change — every space must yield the
+// bit-identical valid sequence its flattened (level-free, leaf-checked)
+// equivalent yields, and the stats triple must partition the raw
+// cartesian product exactly.
+// ---------------------------------------------------------------------
+
+fn random_rms_workload(rng: &mut Rng) -> Workload {
+    Workload::RmsNorm {
+        n_rows: *rng.choose(&[1usize, 64, 512, 4096, 16384]).unwrap(),
+        hidden: *rng.choose(&[256usize, 1024, 4096, 8192]).unwrap(),
+        dtype: if rng.f64() < 0.5 { DType::F16 } else { DType::BF16 },
+    }
+}
+
+fn random_space_and_workload(case: usize, rng: &mut Rng) -> (ConfigSpace, Workload) {
+    match case % 5 {
+        0 => (spaces::attention_sim_space(), random_attention_workload(rng)),
+        1 => (spaces::attention_aot_space(), random_attention_workload(rng)),
+        2 => (spaces::rms_sim_space(), random_rms_workload(rng)),
+        3 => (spaces::rms_aot_space(), random_rms_workload(rng)),
+        _ => (
+            spaces::vecadd_aot_space(),
+            Workload::VectorAdd { n: 1 + rng.below(1 << 22), dtype: DType::F32 },
+        ),
+    }
+}
+
+#[test]
+fn prop_hierarchy_enumerates_bit_identically_to_flat() {
+    // Same configs, same fingerprints, same order — across all five
+    // shipped spaces and randomized workloads.
+    let mut rng = Rng::seed_from(71);
+    for case in 0..CASES {
+        let (space, w) = random_space_and_workload(case, &mut rng);
+        let flat = space.flatten();
+        let h: Vec<(String, u64)> =
+            space.enumerate(&w).map(|c| (c.key(), c.fingerprint())).collect();
+        let f: Vec<(String, u64)> =
+            flat.enumerate(&w).map(|c| (c.key(), c.fingerprint())).collect();
+        assert_eq!(h, f, "{}: hierarchy changed the valid set or its order", space.name);
+    }
+}
+
+#[test]
+fn prop_space_stats_partition_the_raw_product() {
+    // valid + invalid + pruned-subtree leaves == cardinality, the valid
+    // count agrees with enumeration, and flattening converts every
+    // pruned leaf into an individually-rejected invalid one.
+    let mut rng = Rng::seed_from(72);
+    for case in 0..CASES {
+        let (space, w) = random_space_and_workload(case, &mut rng);
+        let s = space.count_valid(&w);
+        assert_eq!(s.total(), space.cardinality(), "{}: stats must partition", space.name);
+        assert_eq!(s.valid, space.enumerate(&w).count(), "{}", space.name);
+        let fs = space.flatten().count_valid(&w);
+        assert_eq!(fs.pruned, 0, "{}: a flat space cannot prune subtrees", space.name);
+        assert_eq!(fs.valid, s.valid, "{}", space.name);
+        assert_eq!(fs.total(), space.cardinality(), "{}", space.name);
+    }
+}
+
+#[test]
+fn prop_memory_rejection_edges_hold_on_every_platform() {
+    // For any sampled config with footprint m on any platform sheet:
+    // capacity m accepts (exact fit), capacity m-1 rejects (off by
+    // one), capacity 0 rejects anything with a nonzero footprint — and
+    // the rejection reason always names the shared-memory budget.
+    let mut rng = Rng::seed_from(73);
+    let space = spaces::attention_sim_space();
+    for gpu in [SimGpu::a100(), SimGpu::mi250(), SimGpu::h100()] {
+        for _ in 0..CASES / 3 {
+            let w = random_attention_workload(&mut rng);
+            let Some(cfg) = space.sample(&w, &mut rng, 100) else { continue };
+            let mem = cfg.mem_bytes(&w);
+            assert!(mem > 0, "attention configs always stage tiles");
+            let at = |budget: usize| {
+                let mut g = gpu.clone();
+                g.spec.smem_per_block = budget;
+                g.validate_memory(&cfg, &w)
+            };
+            assert!(at(mem).is_ok(), "exact fit must be accepted");
+            assert!(at(mem + 1).is_ok(), "slack must be accepted");
+            let off = at(mem - 1).expect_err("one byte short must reject");
+            assert!(off.reason.contains("shared memory"), "reason: {}", off.reason);
+            let zero = at(0).expect_err("zero capacity must reject");
+            assert!(zero.reason.contains("shared memory"), "reason: {}", zero.reason);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
 // Platform-model invariants
 // ---------------------------------------------------------------------
 
