@@ -20,8 +20,10 @@ use portatune::autotuner::{
     Strategy, TuneOutcome, TuningSession,
 };
 use portatune::config::spaces;
+use portatune::json::Value;
 use portatune::kernels::baselines::{TRITON_AMD, TRITON_NVIDIA};
 use portatune::platform::SimGpu;
+use portatune::surrogate::{CostModel, RIDGE_LAMBDA, SEED_SAMPLE};
 use portatune::util::bench::Bench;
 use portatune::workload::Workload;
 
@@ -268,6 +270,81 @@ fn main() {
         raw as f64 / (fr2.median_us * 1e-6),
         raw as f64 / (hr.median_us * 1e-6),
         fr2.median_us / hr.median_us,
+    );
+
+    // -----------------------------------------------------------------
+    // Surrogate pre-ranking: configs *scored* per second (pure model
+    // arithmetic over the fitted cost model) vs configs *measured* per
+    // second (sim evaluation at EVAL_COST spins) — the gap between the
+    // two rates is the budget the learned model frees up.  The JSON
+    // block after the table is the paste-ready body of
+    // `BENCH_surrogate.json` (ROADMAP item 5).
+    // -----------------------------------------------------------------
+    let cfgs: Vec<portatune::config::Config> = space.enumerate(&w).collect();
+    let mut seed_eval = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA).sequential();
+    let train: Vec<(portatune::config::Config, Workload, f64)> = space
+        .equally_spaced(&w, SEED_SAMPLE)
+        .into_iter()
+        .filter_map(|c| seed_eval.evaluate(&c).ok().map(|us| (c, w, us)))
+        .collect();
+    let model =
+        CostModel::fit(&seed_eval.name(), &train, RIDGE_LAMBDA).expect("seed sample must fit");
+    let sr = b.run("autotuner/surrogate/score_space", || {
+        cfgs.iter().map(|c| model.predict_us(c, &w)).sum::<f64>()
+    });
+    let mut measured_eval =
+        SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA).with_eval_cost(EVAL_COST);
+    let mr = b.run("autotuner/surrogate/measure_space", || {
+        measured_eval.evaluate_batch(&cfgs, 1.0).len()
+    });
+    let scored_per_s = cfgs.len() as f64 / (sr.median_us * 1e-6);
+    let measured_per_s = cfgs.len() as f64 / (mr.median_us * 1e-6);
+    let mut s_eval = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
+    let sur = TuningSession::new(&space, &w)
+        .surrogate(32)
+        .evaluator(&mut s_eval)
+        .run()
+        .and_then(SessionOutcome::into_solo)
+        .expect("surrogate session finds a winner");
+    let winner_ratio = sur.best_latency_us / exhaustive.best_latency_us;
+    println!(
+        "\n## surrogate pre-ranking — scoring vs measuring at eval_cost={EVAL_COST} spins\n\n\
+         | configs | scored/s | measured/s | score/measure | surrogate evals | winner ratio |\n\
+         |---|---|---|---|---|---|\n\
+         | {} | {:.0} | {:.0} | {:.0}x | {} | {:.3}x |",
+        cfgs.len(),
+        scored_per_s,
+        measured_per_s,
+        scored_per_s / measured_per_s,
+        sur.evaluated,
+        winner_ratio,
+    );
+    let bench_json = Value::Obj(
+        [
+            ("suite".to_string(), Value::Str("surrogate".to_string())),
+            ("platform".to_string(), Value::Str("sim-a100".to_string())),
+            ("workload".to_string(), Value::Str(w.key())),
+            ("k".to_string(), Value::Num(32.0)),
+            ("seed_sample".to_string(), Value::Num(SEED_SAMPLE as f64)),
+            ("pending".to_string(), Value::Bool(false)),
+            ("configs".to_string(), Value::Num(cfgs.len() as f64)),
+            ("scored_per_sec".to_string(), Value::Num(scored_per_s)),
+            ("measured_per_sec".to_string(), Value::Num(measured_per_s)),
+            ("score_speedup".to_string(), Value::Num(scored_per_s / measured_per_s)),
+            ("surrogate_evals".to_string(), Value::Num(sur.evaluated as f64)),
+            ("exhaustive_evals".to_string(), Value::Num(exhaustive.evaluated as f64)),
+            ("winner_ratio".to_string(), Value::Num(winner_ratio)),
+        ]
+        .into_iter()
+        .collect(),
+    );
+    println!("\npaste-ready BENCH_surrogate.json:");
+    println!("{}", bench_json.pretty(2));
+    assert!(
+        winner_ratio <= 1.10,
+        "surrogate winner {:.2} us misses the exhaustive winner {:.2} us by more than 10%",
+        sur.best_latency_us,
+        exhaustive.best_latency_us
     );
 
     for (name, _, same) in &rows {

@@ -13,6 +13,12 @@
 //!   evaluators (simulated device replicas for now) — the
 //!   placement-agnostic step toward the ROADMAP's multi-GPU evaluator —
 //!   and tracks per-device utilization via [`crate::metrics::DeviceUtil`].
+//! - [`SurrogatePrior`](crate::surrogate::SurrogatePrior) (in
+//!   [`crate::surrogate`]) is the *learned* evaluator: a fitted
+//!   [`CostModel`](crate::surrogate::CostModel) borrowed as an
+//!   [`Evaluator`], so it plugs straight into
+//!   [`TuningSession::guided`](crate::autotuner::TuningSession::guided)
+//!   as a self-generated prior.
 //! - `PjrtEvaluator` (feature `pjrt`) compiles and *actually executes*
 //!   the AOT artifact for a configuration on the PJRT CPU client and
 //!   reports measured wall-clock — the real autotuning loop (compile
@@ -713,6 +719,44 @@ mod tests {
         assert_eq!(fp1, fp2, "chaos tuning must be reproducible per seed");
         assert_eq!(lat1, lat2, "best latency must be bit-identical across reruns");
         assert_eq!(inj1, inj2, "fault schedule must be bit-reproducible");
+    }
+
+    #[test]
+    fn surrogate_prior_plugs_into_guided_sessions() {
+        // The tentpole contract: a fitted CostModel, borrowed as an
+        // Evaluator, IS a `.guided()` prior — no adapter code beyond
+        // `model.prior(w)`.
+        use crate::autotuner::{SessionOutcome, TuningSession};
+        use crate::surrogate::{CostModel, RIDGE_LAMBDA};
+        let w = Workload::llama3_attention(1, 256);
+        let space = crate::config::spaces::attention_sim_space();
+        let mut target = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED).sequential();
+        // Train on a cheap seed sample measured at full fidelity.
+        let samples: Vec<(Config, Workload, f64)> = space
+            .equally_spaced(&w, 48)
+            .into_iter()
+            .filter_map(|c| target.evaluate(&c).ok().map(|us| (c, w, us)))
+            .collect();
+        let model = CostModel::fit(&target.name(), &samples, RIDGE_LAMBDA)
+            .expect("48 full-fidelity samples must fit the attention schema");
+        let mut prior = model.prior(w);
+        let guided = TuningSession::new(&space, &w)
+            .guided(&mut prior, 32)
+            .evaluator(&mut SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED).sequential())
+            .run()
+            .and_then(SessionOutcome::into_solo)
+            .expect("guided session completes");
+        let exhaustive = TuningSession::new(&space, &w)
+            .evaluator(&mut SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED).sequential())
+            .run()
+            .and_then(SessionOutcome::into_solo)
+            .expect("exhaustive session completes");
+        assert!(
+            guided.best_latency_us <= exhaustive.best_latency_us * 1.10,
+            "learned-prior top-32 winner ({} µs) must be within 10% of exhaustive ({} µs)",
+            guided.best_latency_us,
+            exhaustive.best_latency_us
+        );
     }
 
     #[test]

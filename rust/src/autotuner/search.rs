@@ -58,6 +58,23 @@ use crate::workload::Workload;
 /// streaming (lazy enumeration never materializes more than one batch).
 pub const EVAL_BATCH: usize = 256;
 
+/// Total order for prior-scored configurations, shared by the guided
+/// and surrogate tuning paths: lower scores first, unscored (`None` —
+/// the prior rejected the config) last, and score ties broken by the
+/// config fingerprint.  The fingerprint tie-break matters: ties are
+/// common when a prior ignores a parameter, and without a total order
+/// the measured top-k *set* would depend on
+/// `select_nth_unstable_by`'s unspecified ordering among equals.
+pub(crate) fn rank_order(a: &(Config, Option<f64>), b: &(Config, Option<f64>)) -> std::cmp::Ordering {
+    let primary = match (a.1, b.1) {
+        (Some(x), Some(y)) => x.total_cmp(&y),
+        (Some(_), None) => std::cmp::Ordering::Less,
+        (None, Some(_)) => std::cmp::Ordering::Greater,
+        (None, None) => std::cmp::Ordering::Equal,
+    };
+    primary.then_with(|| a.0.fingerprint().cmp(&b.0.fingerprint()))
+}
+
 /// Floor for [`Strategy::SuccessiveHalving`]'s rung-0 fidelity.  The
 /// rung schedule is computed in `f64` (the previous integer
 /// `eta.pow(rungs - 1)` overflowed in debug builds for extreme

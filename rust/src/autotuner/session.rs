@@ -31,6 +31,8 @@
 //! (including guided and fleet runs), `.guided(prior, k)` prunes with a
 //! model prior (solo targets only — combining it with `.fleet()`
 //! panics rather than silently running an unguided fleet pass),
+//! `.surrogate(k)` does the same with a **self-generated** prior (a
+//! [`crate::surrogate::CostModel`] fit on a cheap seed sample),
 //! `.fleet(&mut f)` tunes every distinct platform at once,
 //! `.budget(Budget::Evals(n))` caps any of them, and `.observe(&mut o)`
 //! streams progress from all of them.  The legacy free functions spent
@@ -156,6 +158,7 @@ pub struct TuningSession<'a> {
     seed: u64,
     cache: Option<&'a mut TuningCache>,
     prior: Option<(&'a mut (dyn Evaluator + 'a), usize)>,
+    surrogate_k: Option<usize>,
     budget: Option<Budget>,
     observers: Vec<&'a mut dyn Observer>,
     target: Target<'a>,
@@ -173,6 +176,7 @@ impl<'a> TuningSession<'a> {
             seed: 0,
             cache: None,
             prior: None,
+            surrogate_k: None,
             budget: None,
             observers: Vec::new(),
             target: Target::Unset,
@@ -222,6 +226,30 @@ impl<'a> TuningSession<'a> {
     /// combining it with [`TuningSession::fleet`] panics in `run()`.
     pub fn guided(mut self, prior: &'a mut (dyn Evaluator + 'a), top_k: usize) -> Self {
         self.prior = Some((prior, top_k));
+        self
+    }
+
+    /// Surrogate-assisted tuning — [`TuningSession::guided`] with a
+    /// **self-generated** prior (ROADMAP item 3).  The session measures
+    /// a small deterministic seed sample
+    /// ([`crate::surrogate::SEED_SAMPLE`] equally spaced configs) at
+    /// full fidelity, fits a [`crate::surrogate::CostModel`] on it by
+    /// deterministic ridge regression, scores the rest of the space in
+    /// nanoseconds per config, and measures only the model's top `k`
+    /// predictions.  Seed measurements count toward the history, the
+    /// running best and any [`Budget`] exactly like ordinary
+    /// evaluations.
+    ///
+    /// Degradation is graceful and pinned by tests: with `k ≥` the
+    /// valid-space size the run delegates to the exhaustive engine and
+    /// is bit-identical to [`Strategy::Exhaustive`]; when the fit
+    /// declines (fewer usable seed measurements than features, or a
+    /// singular system) every remaining config is measured unguided —
+    /// never a panic, never a silently wrong prune.  Like `.guided()`,
+    /// this requires a solo target and is mutually exclusive with an
+    /// explicit prior (combining them panics in `run()`).
+    pub fn surrogate(mut self, top_k: usize) -> Self {
+        self.surrogate_k = Some(top_k);
         self
     }
 
@@ -289,6 +317,11 @@ impl<'a> TuningSession<'a> {
     /// target; silently ignoring the prior would run a far more
     /// expensive unguided fleet pass than the caller asked for).
     pub fn run(mut self) -> Option<SessionOutcome> {
+        assert!(
+            self.prior.is_none() || self.surrogate_k.is_none(),
+            "TuningSession: .guided() and .surrogate() are mutually exclusive \
+             (the surrogate mode generates its own prior)"
+        );
         match std::mem::replace(&mut self.target, Target::Unset) {
             Target::Solo(eval) => self.run_solo(eval).map(SessionOutcome::Solo),
             Target::Owned(mut owned) => self.run_solo(owned.as_mut()).map(SessionOutcome::Solo),
@@ -297,6 +330,11 @@ impl<'a> TuningSession<'a> {
                     self.prior.is_none(),
                     "TuningSession: .guided() requires a solo target \
                      (.evaluator() or .devices()); guided fleet tuning is not supported"
+                );
+                assert!(
+                    self.surrogate_k.is_none(),
+                    "TuningSession: .surrogate() requires a solo target \
+                     (.evaluator() or .devices()); surrogate fleet tuning is not supported"
                 );
                 self.run_fleet(fleet).map(SessionOutcome::Fleet)
             }
@@ -355,12 +393,14 @@ impl<'a> TuningSession<'a> {
     }
 
     fn execute_solo<'e>(self, eval: &mut (dyn Evaluator + 'e)) -> Option<TuneOutcome> {
-        let TuningSession { space, workload, strategy, seed, prior, budget, observers, .. } = self;
-        match prior {
-            Some((prior, top_k)) => {
+        let TuningSession { space, workload, strategy, seed, prior, surrogate_k, budget, observers, .. } =
+            self;
+        match (prior, surrogate_k) {
+            (Some((prior, top_k)), _) => {
                 guided_impl(space, workload, prior, top_k, eval, &budget, observers)
             }
-            None => tune_impl(space, workload, eval, &strategy, seed, &budget, observers),
+            (None, Some(k)) => surrogate_impl(space, workload, k, eval, seed, &budget, observers),
+            (None, None) => tune_impl(space, workload, eval, &strategy, seed, &budget, observers),
         }
     }
 
@@ -584,34 +624,106 @@ fn guided_impl<'o, 'p, 'e>(
     }
     let mut ranked: Vec<(Config, Option<f64>)> = configs.into_iter().zip(priors).collect();
 
-    // Total order: prior-score ties (common when the prior ignores a
-    // parameter) break on the config fingerprint, so the measured
-    // top-k set is pinned regardless of `select_nth_unstable_by`'s
-    // unspecified ordering among equals.
-    fn by_prior(a: &(Config, Option<f64>), b: &(Config, Option<f64>)) -> std::cmp::Ordering {
-        let primary = match (a.1, b.1) {
-            (Some(x), Some(y)) => x.total_cmp(&y),
-            (Some(_), None) => std::cmp::Ordering::Less,
-            (None, Some(_)) => std::cmp::Ordering::Greater,
-            (None, None) => std::cmp::Ordering::Equal,
-        };
-        primary.then_with(|| a.0.fingerprint().cmp(&b.0.fingerprint()))
-    }
-
     // Only top_k configs are ever measured, so an O(n) partial selection
     // replaces a full sort of the entire ranked space; only the k
-    // survivors are sorted (for measurement order).
+    // survivors are sorted (for measurement order).  `rank_order` is the
+    // shared total order (score, then fingerprint — see search.rs): ties
+    // are pinned regardless of `select_nth_unstable_by`'s unspecified
+    // ordering among equals, and the surrogate mode ranks with the very
+    // same comparator.
     let k = top_k.max(1).min(ranked.len());
     if k < ranked.len() {
-        ranked.select_nth_unstable_by(k - 1, by_prior);
+        ranked.select_nth_unstable_by(k - 1, search::rank_order);
         ranked.truncate(k);
     }
-    ranked.sort_by(by_prior);
+    ranked.sort_by(search::rank_order);
 
     // Measure the survivors through the recorder: same bookkeeping
     // (fingerprint history, invalid count, running best) as every
     // search strategy — budget and observers included.
     for (cfg, _) in ranked {
+        if rec.out_of_budget() {
+            break;
+        }
+        rec.eval(target, &cfg, 1.0);
+    }
+    finish(rec, t0)
+}
+
+/// Surrogate-assisted tuning: [`guided_impl`] with a self-generated
+/// prior.  Measures a deterministic seed sample at full fidelity, fits
+/// a [`crate::surrogate::CostModel`] on it, ranks the rest of the
+/// space with the model and measures only the predicted top-k — see
+/// [`TuningSession::surrogate`] for the degradation contract.
+fn surrogate_impl<'o, 'e>(
+    space: &ConfigSpace,
+    workload: &Workload,
+    top_k: usize,
+    target: &mut (dyn Evaluator + 'e),
+    seed: u64,
+    budget: &Option<Budget>,
+    observers: Vec<&'o mut dyn Observer>,
+) -> Option<TuneOutcome> {
+    use crate::surrogate::{CostModel, RIDGE_LAMBDA, SEED_SAMPLE};
+    // Top-k of everything is everything: delegate to the exhaustive
+    // engine so the run is bit-identical to `Strategy::Exhaustive`
+    // (pinned by tests/parallel_equiv.rs) instead of re-implementing
+    // its trajectory here.
+    let n_valid = space.enumerate(workload).count();
+    if top_k >= n_valid {
+        return tune_impl(space, workload, target, &Strategy::Exhaustive, seed, budget, observers);
+    }
+    let t0 = Instant::now();
+    let mut rec = Recorder::default();
+    rec.set_observers(observers);
+    apply_budget(&mut rec, budget, t0);
+    if rec.out_of_budget() {
+        return finish(rec, t0);
+    }
+    // 1. Train on a cheap seed sample: equally spaced through the valid
+    //    enumeration (deterministic, no RNG), measured at full fidelity
+    //    through the recorder so the samples count toward the history,
+    //    the budget and the running best like any other measurement.
+    let platform = target.name();
+    let mut train: Vec<(Config, Workload, f64)> = Vec::new();
+    let mut sampled: std::collections::HashSet<u64> = std::collections::HashSet::new();
+    for cfg in space.equally_spaced(workload, SEED_SAMPLE.min(n_valid)) {
+        if rec.out_of_budget() {
+            break;
+        }
+        sampled.insert(cfg.fingerprint());
+        if let Some(us) = rec.eval(target, &cfg, 1.0) {
+            train.push((cfg, *workload, us));
+        }
+    }
+    // 2. Fit.  A declined fit (fewer usable seed measurements than
+    //    features, or a singular system) leaves `model` empty and the
+    //    run falls back to unguided completion below: every remaining
+    //    config is measured in enumeration order — slower, never wrong,
+    //    never a panic.
+    let model = CostModel::fit(&platform, &train, RIDGE_LAMBDA);
+    // 3. Score the rest of the space with the model (nanoseconds per
+    //    config, no hardware) and keep only the predicted top-k, ranked
+    //    by the same total order as `.guided()` (score, then
+    //    fingerprint).
+    let mut rest: Vec<(Config, Option<f64>)> = space
+        .enumerate(workload)
+        .filter(|c| !sampled.contains(&c.fingerprint()))
+        .map(|c| {
+            let p = model.as_ref().map(|m| m.predict_us(&c, workload));
+            (c, p)
+        })
+        .collect();
+    if model.is_some() {
+        let k = top_k.max(1).min(rest.len());
+        if k < rest.len() {
+            rest.select_nth_unstable_by(k - 1, search::rank_order);
+            rest.truncate(k);
+        }
+        rest.sort_by(search::rank_order);
+    }
+    // 4. Spend hardware time only on the frontier.
+    for (cfg, _) in rest {
         if rec.out_of_budget() {
             break;
         }

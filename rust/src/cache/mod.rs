@@ -177,6 +177,17 @@ impl TuningCache {
 
     /// Drop every entry for a platform (e.g. after a driver upgrade).
     ///
+    /// "Every entry" includes the namespaced sidecars that ride in the
+    /// cache next to tuning winners — learned cost-model coefficients
+    /// (`surrogate_model#...`, [`crate::surrogate`]), serving bucket
+    /// winners (`serving_model_variants`) and dead-variant write-offs
+    /// (`serving_dead_variants#...`).  Sidecars store the real platform
+    /// fingerprint in [`CacheEntry::platform`] and keep their namespace
+    /// in the *space* component, so the same exact-match retain that
+    /// covers tuning results covers them: a driver upgrade that
+    /// invalidates a platform's latencies also invalidates every model
+    /// fit from them.
+    ///
     /// Heterogeneous-fleet entries are covered too: an entry recorded
     /// under `multi[a+b]` (a sharded
     /// [`crate::autotuner::MultiDeviceEvaluator`] run over platforms `a`
@@ -404,6 +415,65 @@ mod tests {
         c.put(&rms, entry("multi[sim-a100/model-v30+sim-mi250/model-v3]"));
         assert_eq!(c.invalidate_platform("sim-a100/model-v3"), 0);
         assert_eq!(c.len(), 2);
+    }
+
+    fn toy_model(platform: &str) -> crate::surrogate::CostModel {
+        crate::surrogate::CostModel {
+            platform: platform.to_string(),
+            kernel: "attention".to_string(),
+            params: vec!["BLOCK_M".to_string()],
+            coefs: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0],
+            fit: crate::surrogate::FitQuality { n: 7, r2: 1.0, rank_corr: 1.0 },
+        }
+    }
+
+    #[test]
+    fn invalidate_platform_drops_surrogate_and_sidecar_entries() {
+        use crate::surrogate::CostModel;
+        let mut c = TuningCache::ephemeral();
+        // A tuning winner, a serving dead-variant write-off, and a
+        // fitted cost model all recorded for a100 — plus an mi250 model
+        // that must survive the a100 invalidation untouched.
+        c.put(&wl(), entry("sim-a100/model-v3"));
+        c.put(
+            &wl(),
+            entry_now(
+                &Config::new(&[("BLOCK_M", 32)]),
+                0.0,
+                0,
+                1,
+                "sim-a100/model-v3",
+                "serving_dead_variants#00000000deadbeef",
+                0.0,
+            ),
+        );
+        toy_model("sim-a100/model-v3").save(&mut c);
+        toy_model("sim-mi250/model-v3").save(&mut c);
+        assert_eq!(c.len(), 4);
+        assert_eq!(c.invalidate_platform("sim-a100/model-v3"), 3);
+        assert_eq!(c.len(), 1);
+        assert!(
+            CostModel::load(&c, "sim-mi250/model-v3", "attention").is_some(),
+            "the other platform's model must survive"
+        );
+        assert!(
+            CostModel::load(&c, "sim-a100/model-v3", "attention").is_none(),
+            "the invalidated platform's model must be gone"
+        );
+    }
+
+    #[test]
+    fn sidecar_invalidation_is_substring_safe() {
+        // Same safety bar the `multi[a+b]` fix got: invalidating
+        // `...model-v3` must not drag down a sidecar recorded for
+        // `...model-v30`.
+        use crate::surrogate::CostModel;
+        let mut c = TuningCache::ephemeral();
+        toy_model("sim-a100/model-v30").save(&mut c);
+        assert_eq!(c.invalidate_platform("sim-a100/model-v3"), 0);
+        assert!(CostModel::load(&c, "sim-a100/model-v30", "attention").is_some());
+        assert_eq!(c.invalidate_platform("sim-a100/model-v30"), 1);
+        assert!(c.is_empty());
     }
 
     #[test]

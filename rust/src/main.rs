@@ -11,6 +11,7 @@
 //!                 [--scenario steady|burst|diurnal]
 //!                 [--chaos SEED [--fault-rate P]]
 //! portatune space --stats [--kernel K]
+//! portatune surrogate --report [--k N] [--check] [--from-log F]
 //! portatune analyze <kernels|hlo> [path]
 //! portatune cache <show|clear> [--file F]
 //! ```
@@ -20,8 +21,8 @@ use anyhow::{anyhow, Result};
 #[cfg(feature = "pjrt")]
 use portatune::autotuner::PjrtEvaluator;
 use portatune::autotuner::{
-    Budget, EvalRecord, MultiDeviceEvaluator, Observer, SessionOutcome, SimEvaluator, Strategy,
-    TuningSession,
+    Budget, EvalRecord, Evaluator, MultiDeviceEvaluator, Observer, SessionOutcome, SimEvaluator,
+    Strategy, TuningSession,
 };
 use portatune::cache::TuningCache;
 use portatune::config::Config;
@@ -35,8 +36,12 @@ use portatune::report::Report;
 use portatune::runtime::Engine;
 use portatune::runtime::Manifest;
 use portatune::serving::{
-    router::synth_trace, ChaosBackend, FaultPlan, PlacementPolicy, Router, Scenario, ServeReport,
-    ServerConfig, SimBackend, TimedRequest,
+    router::synth_trace, ChaosBackend, EvalLogBackend, FaultPlan, PlacementPolicy, Router,
+    Scenario, ServeReport, ServerConfig, SimBackend, TimedRequest,
+};
+use portatune::surrogate::{
+    load_eval_log, r_squared, rank_correlation, CostModel, EvalLogWriter, LoggingEvaluator,
+    RIDGE_LAMBDA, SEED_SAMPLE,
 };
 use portatune::util::cli::Args;
 use portatune::workload::{DType, Workload};
@@ -50,6 +55,13 @@ USAGE:
                   [--platform sim-a100|sim-mi250|sim-h100|cpu-pjrt]
                   [--batch N] [--seq N]
                   [--strategy exhaustive|random|hillclimb|anneal|sha]
+                  [--surrogate-k N] (replaces --strategy: measure a seed
+                                        sample, fit a learned cost model,
+                                        then measure only its top-N
+                                        predictions)
+                  [--log-evals F] (append every full-fidelity measurement
+                                        to F as a JSONL eval record for
+                                        offline surrogate refits)
                   [--budget N] [--cache FILE] [--seed N] [--space FILE.json]
                   [--devices N]   (shard evaluation across N simulated devices)
                   [--fleet P1,P2,...]  (measure every config on every listed
@@ -80,10 +92,23 @@ USAGE:
                                    SEED; sim platforms only)
                   [--fault-rate P] (uniform per-verb fault rate for --chaos;
                                    default 0.1)
+                  [--log-evals F] (append every full-fidelity backend
+                                   measurement to F as a JSONL eval record;
+                                   sim platforms only)
   portatune space --stats [--kernel attention|rms_norm|vector_add|all]
                                   (enumerate the built-in hierarchical
                                    spaces and report the valid/invalid/
                                    pruned-subtree split per workload)
+  portatune surrogate --report [--k N] [--kernel K] [--batch N] [--seq N]
+                                  (fit quality — R2, rank correlation —
+                                   and surrogate-vs-exhaustive winner
+                                   agreement per sim platform)
+                  [--check]       (exit nonzero unless the surrogate
+                                   winner is within 10% of the exhaustive
+                                   winner on every platform)
+                  [--from-log F]  (refit from a recorded --log-evals file
+                                   and report fit quality instead of
+                                   running fresh measurements)
   portatune analyze kernels
   portatune analyze hlo <path>
   portatune cache <show|clear> [--file F]
@@ -209,6 +234,12 @@ fn cmd_tune_fleet(args: &Args, fleet_spec: &str) -> Result<()> {
         return Err(anyhow!(
             "--fleet replaces --platform/--devices: list the fleet's platforms \
              (repeats allowed, e.g. --fleet a100,a100,mi250)"
+        ));
+    }
+    if args.flag("surrogate-k").is_some() || args.flag("log-evals").is_some() {
+        return Err(anyhow!(
+            "--surrogate-k/--log-evals apply to solo tuning only \
+             (surrogate fleet tuning is not supported; see TuningSession::surrogate)"
         ));
     }
     let kernel = args.flag_or("kernel", "attention");
@@ -346,7 +377,11 @@ fn cmd_tune_fleet(args: &Args, fleet_spec: &str) -> Result<()> {
 }
 
 /// One solo tuning run through the builder: cache always attached,
-/// budget and progress observer when the flags ask for them.
+/// budget and progress observer when the flags ask for them,
+/// `--surrogate-k` switching to the self-priming surrogate mode and
+/// `--log-evals` wrapping the evaluator in a [`LoggingEvaluator`]
+/// (results pass through bit-identical; successes are appended to the
+/// eval log).
 #[allow(clippy::too_many_arguments)]
 fn run_session(
     space: &portatune::config::ConfigSpace,
@@ -355,18 +390,32 @@ fn run_session(
     strat: &Strategy,
     seed: u64,
     budget: Option<Budget>,
+    surrogate_k: Option<usize>,
+    log_evals: Option<&str>,
     progress: Option<&mut Progress>,
-    eval: &mut dyn portatune::autotuner::Evaluator,
-) -> Option<portatune::autotuner::TuneOutcome> {
+    eval: &mut dyn Evaluator,
+) -> Result<Option<portatune::autotuner::TuneOutcome>> {
+    let mut logged;
+    let eval: &mut dyn Evaluator = match log_evals {
+        Some(path) => {
+            let log = EvalLogWriter::open(std::path::Path::new(path))?;
+            logged = LoggingEvaluator::new(eval, *w, log);
+            &mut logged
+        }
+        None => eval,
+    };
     let mut session =
         TuningSession::new(space, w).strategy(strat.clone()).seed(seed).cache(cache);
+    if let Some(k) = surrogate_k {
+        session = session.surrogate(k);
+    }
     if let Some(b) = budget {
         session = session.budget(b);
     }
     if let Some(p) = progress {
         session = session.observe(p);
     }
-    session.evaluator(eval).run().and_then(SessionOutcome::into_solo)
+    Ok(session.evaluator(eval).run().and_then(SessionOutcome::into_solo))
 }
 
 fn cmd_tune(args: &Args) -> Result<()> {
@@ -381,6 +430,20 @@ fn cmd_tune(args: &Args) -> Result<()> {
     let seed = args.flag_parse("seed", 0u64)?;
     let devices = args.flag_parse_at_least("devices", 1, 1)?;
     let strat = parse_strategy(&args.flag_or("strategy", "exhaustive"), budget)?;
+    let surrogate_k = args
+        .flag("surrogate-k")
+        .map(|s| s.parse::<usize>().map_err(|e| anyhow!("--surrogate-k: {e}")))
+        .transpose()?;
+    if surrogate_k == Some(0) {
+        return Err(anyhow!("--surrogate-k must be >= 1"));
+    }
+    if surrogate_k.is_some() && args.flag("strategy").is_some() {
+        return Err(anyhow!(
+            "--surrogate-k replaces --strategy: the surrogate mode measures a seed \
+             sample, fits the learned cost model, then measures only its top-k"
+        ));
+    }
+    let log_evals = args.flag("log-evals").cloned();
     let w = workload_for(&kernel, batch, seq)?;
     let mut cache = match args.flag("cache") {
         Some(p) => TuningCache::open(p)?,
@@ -412,9 +475,11 @@ fn cmd_tune(args: &Args) -> Result<()> {
                 &strat,
                 seed,
                 budget,
+                surrogate_k,
+                log_evals.as_deref(),
                 show_progress.then_some(&mut progress),
                 &mut eval,
-            )
+            )?
         }
         #[cfg(not(feature = "pjrt"))]
         PlatformId::CpuPjrt => {
@@ -446,9 +511,11 @@ fn cmd_tune(args: &Args) -> Result<()> {
                     &strat,
                     seed,
                     budget,
+                    surrogate_k,
+                    log_evals.as_deref(),
                     show_progress.then_some(&mut progress),
                     &mut eval,
-                );
+                )?;
                 // Utilization is only meaningful when the devices
                 // actually ran (a cache hit performs zero evaluations).
                 if outcome.as_ref().map(|o| !o.from_cache).unwrap_or(false) {
@@ -479,9 +546,11 @@ fn cmd_tune(args: &Args) -> Result<()> {
                     &strat,
                     seed,
                     budget,
+                    surrogate_k,
+                    log_evals.as_deref(),
                     show_progress.then_some(&mut progress),
                     &mut eval,
-                )
+                )?
             }
         }
     }
@@ -489,7 +558,10 @@ fn cmd_tune(args: &Args) -> Result<()> {
 
     println!("workload      : {}", w.key());
     println!("platform      : {}", platform.name());
-    println!("strategy      : {}", strat.label());
+    match surrogate_k {
+        Some(k) => println!("strategy      : surrogate top-{k} ({SEED_SAMPLE}-config seed sample)"),
+        None => println!("strategy      : {}", strat.label()),
+    }
     println!("best config   : {}", outcome.best);
     println!("best latency  : {:.2} us", outcome.best_latency_us);
     println!("evaluated     : {} ({} invalid)", outcome.evaluated, outcome.invalid);
@@ -522,9 +594,26 @@ fn serve_router(
     chaos: Option<FaultPlan>,
     shards: usize,
     placement: PlacementPolicy,
+    log_evals: Option<String>,
 ) -> Result<Router> {
-    match (pid.sim(), chaos) {
-        (Some(gpu), Some(plan)) => Router::with_shards(
+    match (pid.sim(), chaos, log_evals) {
+        (Some(gpu), Some(plan), Some(path)) => Router::with_shards(
+            move |i| {
+                let shard_plan =
+                    FaultPlan { seed: plan.seed.wrapping_add(i as u64), ..plan.clone() };
+                // The log decorator wraps outermost so it records the
+                // chaos-affected latencies the executor actually sees.
+                let log = EvalLogWriter::open(std::path::Path::new(&path))?;
+                Ok(EvalLogBackend::new(
+                    ChaosBackend::new(SimBackend::new(gpu.clone(), seed), shard_plan),
+                    log,
+                ))
+            },
+            shards,
+            placement,
+            cfg,
+        ),
+        (Some(gpu), Some(plan), None) => Router::with_shards(
             move |i| {
                 // Decorrelated per-shard fault schedules: same rates,
                 // different seeds, so shards fail independently but the
@@ -537,20 +626,32 @@ fn serve_router(
             placement,
             cfg,
         ),
-        (Some(gpu), None) => Router::with_shards(
+        (Some(gpu), None, Some(path)) => Router::with_shards(
+            move |_| {
+                let log = EvalLogWriter::open(std::path::Path::new(&path))?;
+                Ok(EvalLogBackend::new(SimBackend::new(gpu.clone(), seed), log))
+            },
+            shards,
+            placement,
+            cfg,
+        ),
+        (Some(gpu), None, None) => Router::with_shards(
             move |_| Ok(SimBackend::new(gpu.clone(), seed)),
             shards,
             placement,
             cfg,
         ),
-        (None, Some(_)) => Err(anyhow!(
+        (None, _, Some(_)) => Err(anyhow!(
+            "--log-evals is supported on the sim platforms (a100|mi250|h100) only"
+        )),
+        (None, Some(_), None) => Err(anyhow!(
             "--chaos is supported on the sim platforms (a100|mi250|h100) only"
         )),
-        (None, None) if shards > 1 => Err(anyhow!(
+        (None, None, None) if shards > 1 => Err(anyhow!(
             "--shards applies to sim platforms only: the PJRT path is \
              single-executor (PJRT handles are not Send; see ROADMAP)"
         )),
-        (None, None) => pjrt_serve_router(cfg),
+        (None, None, None) => pjrt_serve_router(cfg),
     }
 }
 
@@ -585,6 +686,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         return Err(anyhow!("--fault-rate must be a probability in [0, 1] (got {fault_rate})"));
     }
     let chaos = chaos_seed.map(|s| FaultPlan::uniform(s, fault_rate));
+    let log_evals = args.flag("log-evals").cloned();
     let shards = args.flag_parse_at_least("shards", 1, 1)?;
     let placement: PlacementPolicy = args
         .flag_or("placement", "bucket-affinity")
@@ -619,7 +721,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 plan.seed, fault_rate
             );
         }
-        let router = serve_router(pid, seed, &cfg, chaos.clone(), shards, placement)?;
+        let router =
+            serve_router(pid, seed, &cfg, chaos.clone(), shards, placement, log_evals.clone())?;
         if shards > 1 {
             println!("({} executor shards, placement {})", shards, placement.name());
         }
@@ -806,6 +909,153 @@ fn cmd_space(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `surrogate --report`: fit quality (R², Spearman rank correlation)
+/// and surrogate-vs-exhaustive winner agreement per sim platform — the
+/// observable payoff of the learned cost model (ISSUE 9).  With
+/// `--check` the command exits nonzero unless the surrogate winner is
+/// within 10% of the exhaustive winner everywhere (CI's smoke gate);
+/// with `--from-log F` it refits from a recorded `--log-evals` file
+/// instead of running fresh measurements.
+fn cmd_surrogate(args: &Args) -> Result<()> {
+    if let Some(path) = args.flag("from-log") {
+        return surrogate_from_log(path);
+    }
+    if !args.has("report") {
+        return Err(anyhow!(
+            "surrogate supports: portatune surrogate --report [--k N] [--kernel K] \
+             [--batch N] [--seq N] [--check] [--from-log F]\n{USAGE}"
+        ));
+    }
+    let kernel = args.flag_or("kernel", "attention");
+    let batch = args.flag_parse("batch", 8usize)?;
+    let seq = args.flag_parse("seq", 1024usize)?;
+    let k = args.flag_parse("k", 32usize)?;
+    if k == 0 {
+        return Err(anyhow!("--k must be >= 1"));
+    }
+    let w = workload_for(&kernel, batch, seq)?;
+    let space = spaces::sim_space_for(&w);
+    let mut rep = Report::new(
+        &format!("surrogate vs exhaustive — {} (top-k = {k})", w.key()),
+        &[
+            "platform",
+            "fit n",
+            "R2",
+            "rank corr",
+            "exhaustive_us",
+            "surrogate_us",
+            "ratio",
+            "within 10%",
+            "measured",
+            "|space|",
+        ],
+    );
+    rep.note(format!(
+        "fit quality scores a model trained on the {SEED_SAMPLE}-config seed sample \
+         against full-fidelity latencies of the whole valid space (R2, Spearman rank \
+         correlation); `measured` counts hardware measurements the surrogate mode spent \
+         (seed sample + top-k) vs the exhaustive `|space|`"
+    ));
+    let mut worst_ratio = 1.0f64;
+    for name in ["a100", "mi250"] {
+        let pid: PlatformId = name.parse().map_err(|e| anyhow!("{e}"))?;
+        let gpu = pid.sim().expect("sim platform");
+        // Ground truth: every valid config at full fidelity.
+        let mut truth_eval = SimEvaluator::new(gpu.clone(), w, triton_codegen(gpu.spec.vendor));
+        let platform = truth_eval.name();
+        let truth: Vec<(Config, f64)> = space
+            .enumerate(&w)
+            .filter_map(|c| truth_eval.evaluate(&c).ok().map(|us| (c, us)))
+            .collect();
+        let exhaustive_us = truth.iter().map(|(_, us)| *us).fold(f64::INFINITY, f64::min);
+        if !exhaustive_us.is_finite() {
+            return Err(anyhow!("no valid config in {} on {platform}", space.name));
+        }
+        // The model the surrogate mode fits: the seed sample only.
+        let train: Vec<(Config, Workload, f64)> = space
+            .equally_spaced(&w, SEED_SAMPLE)
+            .into_iter()
+            .filter_map(|c| truth_eval.evaluate(&c).ok().map(|us| (c, w, us)))
+            .collect();
+        let model = CostModel::fit(&platform, &train, RIDGE_LAMBDA)
+            .ok_or_else(|| anyhow!("seed sample too small to fit a surrogate on {platform}"))?;
+        let (pred, act): (Vec<f64>, Vec<f64>) =
+            truth.iter().map(|(c, us)| (model.predict_us(c, &w), *us)).unzip();
+        let r2 = r_squared(&pred, &act);
+        let rank = rank_correlation(&pred, &act);
+        // The actual surrogate-guided session: seed sample + top-k measured.
+        let mut eval = SimEvaluator::new(gpu.clone(), w, triton_codegen(gpu.spec.vendor));
+        let out = TuningSession::new(&space, &w)
+            .surrogate(k)
+            .evaluator(&mut eval)
+            .run()
+            .and_then(SessionOutcome::into_solo)
+            .ok_or_else(|| anyhow!("surrogate session found no valid config on {platform}"))?;
+        let ratio = out.best_latency_us / exhaustive_us;
+        worst_ratio = worst_ratio.max(ratio);
+        rep.row(vec![
+            platform,
+            model.fit.n.to_string(),
+            format!("{r2:.3}"),
+            format!("{rank:.3}"),
+            format!("{exhaustive_us:.2}"),
+            format!("{:.2}", out.best_latency_us),
+            format!("{ratio:.3}"),
+            if ratio <= 1.10 { "yes" } else { "NO" }.to_string(),
+            out.evaluated.to_string(),
+            truth.len().to_string(),
+        ]);
+    }
+    println!("{}", rep.to_markdown());
+    if args.has("check") && worst_ratio > 1.10 {
+        return Err(anyhow!(
+            "surrogate winner agreement check failed: worst ratio {worst_ratio:.3} > 1.10"
+        ));
+    }
+    Ok(())
+}
+
+/// `surrogate --from-log F`: reload a `--log-evals` JSONL file, refit
+/// one model per platform found in it, and report fit quality against
+/// the recorded latencies.
+fn surrogate_from_log(path: &str) -> Result<()> {
+    let load = load_eval_log(std::path::Path::new(path))?;
+    println!(
+        "{path}: {} record(s) loaded ({} duplicate fingerprint(s) dropped, \
+         {} rejected for model-version mismatch)",
+        load.records.len(),
+        load.deduped,
+        load.version_rejected
+    );
+    let mut platforms: Vec<String> = load.records.iter().map(|r| r.platform.clone()).collect();
+    platforms.sort();
+    platforms.dedup();
+    let mut rep = Report::new(
+        "surrogate refit from eval log",
+        &["platform", "kernel", "fit n", "R2", "rank corr"],
+    );
+    for p in &platforms {
+        match CostModel::fit_logged(p, &load.records, RIDGE_LAMBDA) {
+            Some(m) => rep.row(vec![
+                p.clone(),
+                m.kernel.clone(),
+                m.fit.n.to_string(),
+                format!("{:.3}", m.fit.r2),
+                format!("{:.3}", m.fit.rank_corr),
+            ]),
+            None => rep.row(vec![
+                p.clone(),
+                "-".into(),
+                "too few records".into(),
+                "-".into(),
+                "-".into(),
+            ]),
+        }
+    }
+    println!("{}", rep.to_markdown());
+    Ok(())
+}
+
 fn cmd_analyze(args: &Args) -> Result<()> {
     let what = args
         .positional
@@ -900,7 +1150,8 @@ fn main() -> Result<()> {
             let args = Args::parse(rest, &["progress"])?;
             args.ensure_known(&[
                 "kernel", "platform", "batch", "seq", "strategy", "budget", "cache", "seed",
-                "space", "devices", "fleet", "max-evals", "wall-secs", "progress",
+                "space", "devices", "fleet", "max-evals", "wall-secs", "progress", "surrogate-k",
+                "log-evals",
             ])?;
             cmd_tune(&args)
         }
@@ -908,7 +1159,7 @@ fn main() -> Result<()> {
             let args = Args::parse(rest, &["no-tuning"])?;
             args.ensure_known(&[
                 "requests", "seed", "no-tuning", "platform", "chaos", "fault-rate", "shards",
-                "placement", "scenario",
+                "placement", "scenario", "log-evals",
             ])?;
             cmd_serve(&args)
         }
@@ -916,6 +1167,11 @@ fn main() -> Result<()> {
             let args = Args::parse(rest, &["stats"])?;
             args.ensure_known(&["stats", "kernel"])?;
             cmd_space(&args)
+        }
+        "surrogate" => {
+            let args = Args::parse(rest, &["report", "check"])?;
+            args.ensure_known(&["report", "check", "k", "kernel", "batch", "seq", "from-log"])?;
+            cmd_surrogate(&args)
         }
         "analyze" => cmd_analyze(&Args::parse(rest, &[])?),
         "cache" => cmd_cache(&Args::parse(rest, &[])?),

@@ -445,6 +445,88 @@ impl ExecBackend for SimBackend {
     }
 }
 
+/// Decorator that appends every full-fidelity tuning measurement the
+/// executor takes to a JSONL eval log — the serving half of
+/// `--log-evals PATH` (the tuning half wraps the evaluator in a
+/// [`crate::surrogate::LoggingEvaluator`]).  Results pass through
+/// bit-identical; the only side effect is the appended line, so a
+/// logged serve replays exactly like an unlogged one.  Handles are
+/// mapped back to configs via a compile-time mirror of the inner
+/// backend's handle table (the executor compiles each (shape, variant)
+/// at most once, so the mirror stays small).
+pub struct EvalLogBackend<B: ExecBackend> {
+    inner: B,
+    log: crate::surrogate::EvalLogWriter,
+    compiled: std::collections::HashMap<ExecHandle, Config>,
+}
+
+impl<B: ExecBackend> EvalLogBackend<B> {
+    /// Wrap `inner` so its tuning measurements append to `log`.
+    pub fn new(inner: B, log: crate::surrogate::EvalLogWriter) -> Self {
+        EvalLogBackend { inner, log, compiled: std::collections::HashMap::new() }
+    }
+}
+
+impl<B: ExecBackend> ExecBackend for EvalLogBackend<B> {
+    fn platform(&self) -> String {
+        self.inner.platform()
+    }
+
+    fn discover(&mut self) -> Result<Vec<(ShapeKey, Vec<VariantDesc>)>> {
+        self.inner.discover()
+    }
+
+    fn bucket_workload(&self, shape: ShapeKey) -> Workload {
+        self.inner.bucket_workload(shape)
+    }
+
+    fn compile(&mut self, shape: ShapeKey, variant: &VariantDesc) -> Result<ExecHandle> {
+        let h = self.inner.compile(shape, variant)?;
+        self.compiled.insert(h, variant.config.clone());
+        Ok(h)
+    }
+
+    fn execute(&mut self, handle: ExecHandle, shape: ShapeKey) -> Result<f64> {
+        self.inner.execute(handle, shape)
+    }
+
+    fn measure(&mut self, handle: ExecHandle, shape: ShapeKey, warmup: usize, iters: usize) -> Result<f64> {
+        let us = self.inner.measure(handle, shape, warmup, iters)?;
+        if let Some(cfg) = self.compiled.get(&handle) {
+            let w = self.inner.bucket_workload(shape);
+            let platform = self.inner.platform();
+            // Logging is best-effort: a full disk must not fail the
+            // measurement that already succeeded.
+            let _ = self.log.append(&platform, &w, cfg, us, 1.0);
+        }
+        Ok(us)
+    }
+
+    fn prefetch(&mut self, upcoming: &[ShapeKey]) {
+        self.inner.prefetch(upcoming);
+    }
+
+    fn release(&mut self, shape: ShapeKey) {
+        self.inner.release(shape);
+    }
+
+    fn release_all(&mut self) {
+        self.inner.release_all();
+    }
+
+    fn backoff(&mut self, us: f64) {
+        self.inner.backoff(us);
+    }
+
+    fn injected_faults(&self) -> usize {
+        self.inner.injected_faults()
+    }
+
+    fn virtual_clock_us(&self) -> f64 {
+        self.inner.virtual_clock_us()
+    }
+}
+
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 

@@ -47,6 +47,19 @@
 //! so an injected fault can degrade service but never panic the thread
 //! or silently drop requests.  All of it is counted in
 //! [`ExecutorStats::faults`].
+//!
+//! **Surrogate pre-ranking.**  When a persistent cache is attached, the
+//! executor loads the platform's learned [`CostModel`]
+//! ([`crate::surrogate`]) at boot and re-orders each bucket's queued
+//! variant measurements best-predicted-first, so the earliest idle
+//! slices measure the likely winners.  Every completed bucket folds its
+//! full-fidelity measurements back into the model (online refit), the
+//! refreshed coefficients are persisted through the cache under the
+//! `surrogate_model#...` namespace, and the remaining queue is
+//! re-ranked — each finished bucket improves the next bucket's ranking.
+//! Winner selection is unchanged: a bucket still activates only after
+//! *all* its variants are measured, so pre-ranking shifts measurement
+//! *order*, never the final argmin.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
@@ -60,6 +73,8 @@ use crate::cache::{entry_now, TuningCache};
 use crate::config::Config;
 use crate::metrics::FaultCounters;
 use crate::platform::model::InvalidConfig;
+use crate::surrogate::CostModel;
+use crate::workload::Workload;
 use crate::Result;
 
 pub use super::backend::ShapeKey;
@@ -273,6 +288,16 @@ struct ExecutorState<B: ExecBackend> {
     /// Tuning tick counter (one per [`ExecutorState::tune_step`] call)
     /// — the clock quarantine cooldowns are measured on.
     tick: u64,
+    /// Learned cost model for this platform's serving kernel — loaded
+    /// from the cache at boot and refit after every completed bucket —
+    /// used to pre-rank the tuning queue so idle measurements go to the
+    /// best-predicted variants first.  `None` without a cache or until
+    /// enough training data accumulates.
+    surrogate: Option<CostModel>,
+    /// Accumulated full-fidelity (config, bucket workload, µs) triples
+    /// behind the online refit.  [`CostModel::fit`] canonicalizes and
+    /// deduplicates, so accumulation order never changes coefficients.
+    surrogate_train: Vec<(Config, Workload, f64)>,
 }
 
 impl<B: ExecBackend> ExecutorState<B> {
@@ -321,10 +346,116 @@ impl<B: ExecBackend> ExecutorState<B> {
             breaker: HashMap::new(),
             last_good: HashMap::new(),
             tick: 0,
+            surrogate: None,
+            surrogate_train: Vec::new(),
         };
         state.warm_start_from_cache();
         state.restore_dead_variants();
+        state.load_surrogate();
+        state.rank_tune_queue();
         Ok(state)
+    }
+
+    /// Adopt a persisted cost model for this (platform, kernel), if the
+    /// cache holds one with a matching version — the serving twin of
+    /// the winner warm start, but for measurement *order* instead of
+    /// the active variant.
+    fn load_surrogate(&mut self) {
+        let Some(cache) = &self.cache else { return };
+        let platform = self.backend.platform();
+        let Some(shape) = self.variants.keys().min().copied() else { return };
+        let kernel = self.backend.bucket_workload(shape).kernel_name();
+        self.surrogate = CostModel::load(cache, &platform, kernel);
+    }
+
+    /// Re-order the pending tuning queue with the surrogate: buckets
+    /// keep their first-appearance order (and their entries stay
+    /// contiguous), but within a bucket the best-predicted variant is
+    /// measured first.  `tune_queue.pop()` takes from the *back*, so a
+    /// bucket's run is sorted worst-predicted-first — the surrogate's
+    /// favorite sits last and is popped next.  Deterministic: ties
+    /// break toward the lower variant index measuring first.  A no-op
+    /// without a model, and winner selection is unaffected either way
+    /// (activation waits for the full bucket).
+    fn rank_tune_queue(&mut self) {
+        let Some(model) = self.surrogate.clone() else { return };
+        if self.tune_queue.is_empty() {
+            return;
+        }
+        let mut order: Vec<ShapeKey> = Vec::new();
+        let mut groups: HashMap<ShapeKey, Vec<usize>> = HashMap::new();
+        for &(key, idx) in &self.tune_queue {
+            if !groups.contains_key(&key) {
+                order.push(key);
+            }
+            groups.entry(key).or_default().push(idx);
+        }
+        let mut ranked: Vec<(ShapeKey, usize)> = Vec::with_capacity(self.tune_queue.len());
+        for key in order {
+            let w = self.backend.bucket_workload(key);
+            let Some(idxs) = groups.remove(&key) else { continue };
+            let mut scored: Vec<(f64, usize)> = idxs
+                .into_iter()
+                .map(|i| {
+                    let p = self
+                        .variants
+                        .get(&key)
+                        .and_then(|vs| vs.get(i))
+                        .map(|v| model.predict_us(&v.desc.config, &w))
+                        .unwrap_or(f64::INFINITY);
+                    (p, i)
+                })
+                .collect();
+            scored.sort_by(|a, b| b.0.total_cmp(&a.0).then(b.1.cmp(&a.1)));
+            ranked.extend(scored.into_iter().map(|(_, i)| (key, i)));
+        }
+        self.tune_queue = ranked;
+    }
+
+    /// Online refit (each completed bucket improves the next bucket's
+    /// ranking): fold `key`'s full-fidelity measurements into the
+    /// training set, refit the cost model, persist the coefficients
+    /// through the cache, and re-rank what's left of the tuning queue.
+    /// Gated on the cache — without persistence there is nothing to
+    /// warm-start from, and ephemeral runs stay byte-for-byte as before.
+    fn refit_surrogate(&mut self, key: ShapeKey) {
+        if self.cache.is_none() {
+            return;
+        }
+        let w = self.backend.bucket_workload(key);
+        let pairs: Vec<(Config, Workload, f64)> = {
+            let Some(vs) = self.variants.get(&key) else { return };
+            let Some(rec) = self.bucket_recs.get(&key) else { return };
+            let latencies = rec.full_fidelity_latencies();
+            vs.iter()
+                .filter_map(|v| {
+                    latencies
+                        .get(&v.desc.config.fingerprint())
+                        .map(|us| (v.desc.config.clone(), w, *us))
+                })
+                .collect()
+        };
+        for p in pairs {
+            let dup = self
+                .surrogate_train
+                .iter()
+                .any(|(c, tw, _)| tw.key() == p.1.key() && c.fingerprint() == p.0.fingerprint());
+            if !dup {
+                self.surrogate_train.push(p);
+            }
+        }
+        let platform = self.backend.platform();
+        let Some(model) =
+            CostModel::fit(&platform, &self.surrogate_train, crate::surrogate::RIDGE_LAMBDA)
+        else {
+            return;
+        };
+        if let Some(cache) = &mut self.cache {
+            model.save(cache);
+            let _ = cache.save();
+        }
+        self.surrogate = Some(model);
+        self.rank_tune_queue();
     }
 
     /// Warm start: adopt cached per-bucket winners before any tuning.
@@ -593,6 +724,7 @@ impl<B: ExecBackend> ExecutorState<B> {
         self.stats.active.insert(shape_name.clone(), best_id);
         self.stats.active_us.insert(shape_name, best_us);
         self.persist_winner(key, best, best_us, n);
+        self.refit_surrogate(key);
     }
 
     /// Run ONE background tuning measurement. Returns false when the
@@ -1105,6 +1237,58 @@ mod tests {
         );
         let name = format!("b{}s{}", key.0, key.1);
         assert!(stats.active.contains_key(&name), "bucket {name} must serve; dead idx {idx}");
+    }
+
+    #[test]
+    fn completed_buckets_persist_a_surrogate_and_restarts_pre_rank_with_it() {
+        let dir = crate::util::tmp::TempDir::new("surrogate-serving").unwrap();
+        let cache_path = dir.join("cache.json");
+        // Session 1: tune every bucket; each completed bucket refits
+        // the cost model and persists the coefficients.
+        {
+            let backend = SimBackend::new(SimGpu::a100(), 7);
+            let cache = TuningCache::open(&cache_path).unwrap();
+            let mut state = ExecutorState::new(backend, Some(cache)).unwrap();
+            while state.tune_step() {}
+            assert!(state.surrogate.is_some(), "completed buckets must refit a model");
+        }
+        let reread = TuningCache::open(&cache_path).unwrap();
+        assert!(
+            reread
+                .entries()
+                .any(|(_, e)| e.space.starts_with(crate::surrogate::SURROGATE_SPACE_PREFIX)),
+            "coefficients must persist under the surrogate namespace"
+        );
+        // Session 2: a different sim seed serves different candidate
+        // sets, so the winners can't warm-start — but the model does,
+        // and the queue is pre-ranked: within each bucket's contiguous
+        // run the entries are worst-predicted-first, so `pop()` (which
+        // takes from the back) measures the model's favorite first.
+        let backend = SimBackend::new(SimGpu::a100(), 11);
+        let cache = TuningCache::open(&cache_path).unwrap();
+        let state = ExecutorState::new(backend, Some(cache)).unwrap();
+        let model = state.surrogate.clone().expect("restart must adopt the persisted model");
+        assert!(!state.tune_queue.is_empty());
+        let mut i = 0;
+        while i < state.tune_queue.len() {
+            let key = state.tune_queue[i].0;
+            let mut j = i;
+            while j < state.tune_queue.len() && state.tune_queue[j].0 == key {
+                j += 1;
+            }
+            let w = state.backend.bucket_workload(key);
+            let preds: Vec<f64> = state.tune_queue[i..j]
+                .iter()
+                .map(|&(_, idx)| model.predict_us(&state.variants[&key][idx].desc.config, &w))
+                .collect();
+            for win in preds.windows(2) {
+                assert!(
+                    win[0] >= win[1],
+                    "bucket {key:?} queue not worst-predicted-first: {preds:?}"
+                );
+            }
+            i = j;
+        }
     }
 
     #[test]

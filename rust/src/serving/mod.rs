@@ -52,7 +52,7 @@ pub mod shard;
 
 #[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;
-pub use backend::{ExecBackend, SimBackend};
+pub use backend::{EvalLogBackend, ExecBackend, SimBackend};
 pub use batcher::{Batch, BucketPolicy, DynamicBatcher};
 pub use chaos::{ChaosBackend, ChaosCounters, FaultPlan, VerbRates};
 pub use executor::{ExecOutcome, ExecutorCommand, ExecutorHandle, ExecutorStats};

@@ -1,0 +1,853 @@
+//! Learned cost model: an online-calibrated surrogate that pre-ranks a
+//! configuration space so hardware time is spent only on the frontier.
+//!
+//! The paper's headline result — exploring up to 15x more kernel
+//! configurations than vendor libraries — is bounded by how many
+//! configs can be *measured*.  This module scales exploration another
+//! order of magnitude by scoring configs in nanoseconds and reserving
+//! measurement for the surrogate's top-k:
+//!
+//! - [`features`] extracts a deterministic numeric feature vector from
+//!   a [`Config`] + [`Workload`] pair (log-transformed tile dims,
+//!   stages, the tile-volume occupancy proxy, [`Config::mem_bytes`],
+//!   and workload terms).
+//! - [`CostModel::fit`] fits per-(platform, kernel) coefficients by
+//!   deterministic ridge regression on log-latency over full-fidelity
+//!   measurement histories.  Fitting is bitwise deterministic under
+//!   permutation of the training set (records are canonicalized by
+//!   fingerprint before accumulation) and degrades gracefully: fewer
+//!   usable records than features yields `None`, never a panic.
+//! - [`CostModel::prior`] adapts a fitted model to the
+//!   [`Evaluator`] interface so it plugs straight into
+//!   `TuningSession::guided` as a self-generated prior; the dedicated
+//!   `TuningSession::surrogate(k)` mode goes further and trains the
+//!   model itself from a cheap seed sample.
+//! - [`CostModel::save`]/[`CostModel::load`] persist coefficients
+//!   through the [`TuningCache`] under a versioned, per-platform
+//!   `surrogate_model#...` namespace, which is how the serving plane
+//!   warm-starts its idle-tuning queue pre-ranked (and refits after
+//!   every completed bucket).
+//! - [`EvalLogWriter`]/[`load_eval_log`] append and reload
+//!   full-fidelity evaluation records (with features) as JSONL, so
+//!   surrogate training data survives across runs.
+//!
+//! Everything here is deterministic: no randomness, no wall-clock in
+//! any fitted quantity, and the non-surrogate tuning paths are
+//! untouched (pinned bit-identical by the equivalence suite).
+
+use std::collections::HashSet;
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::autotuner::Evaluator;
+use crate::cache::{entry_now, TuningCache};
+use crate::config::Config;
+use crate::json::{self, Value};
+use crate::platform::model::{InvalidConfig, MODEL_VERSION};
+use crate::workload::{DType, Workload};
+use crate::Result;
+
+/// Cache-space prefix for persisted surrogate coefficients.  The full
+/// space string is versioned and per-kernel
+/// (`surrogate_model#v1#attention`); the entry's `platform` field keys
+/// it per platform, so [`TuningCache::invalidate_platform`] drops a
+/// platform's models together with its tuning results.
+pub const SURROGATE_SPACE_PREFIX: &str = "surrogate_model";
+
+/// Version of the surrogate feature layout + coefficient encoding.
+/// Bumping it orphans persisted models (their cache space string no
+/// longer matches), forcing a refit instead of a misinterpretation.
+pub const SURROGATE_VERSION: u32 = 1;
+
+/// Default ridge penalty.  Small enough not to bias well-conditioned
+/// fits, large enough to keep the normal equations solvable when
+/// workload-constant features are collinear with the intercept.
+pub const RIDGE_LAMBDA: f64 = 1e-6;
+
+/// Seed-sample size for `TuningSession::surrogate(k)`: the number of
+/// equally spaced configs measured at full fidelity to train the model
+/// before the surrogate ranks the rest of the space.
+pub const SEED_SAMPLE: usize = 32;
+
+/// Cache-space string of a persisted model for one kernel.
+pub fn model_space(kernel: &str) -> String {
+    format!("{SURROGATE_SPACE_PREFIX}#v{SURROGATE_VERSION}#{kernel}")
+}
+
+/// Canonical workload used only to form the cache *key* of a persisted
+/// model, so each (platform, kernel) pair maps to exactly one entry
+/// regardless of which workloads trained it.
+pub fn model_workload(kernel: &str) -> Workload {
+    match kernel {
+        "rms_norm" => Workload::RmsNorm { n_rows: 1, hidden: 1, dtype: DType::F16 },
+        "vector_add" => Workload::VectorAdd { n: 1, dtype: DType::F16 },
+        _ => Workload::llama3_attention(1, 16),
+    }
+}
+
+fn ln1p_clamped(v: i64) -> f64 {
+    (1.0 + v.max(0) as f64).ln()
+}
+
+/// Deterministic feature vector of one (config, workload) pair.
+///
+/// Layout (length `2p + 5` for a config with `p` parameters, matching
+/// [`feature_names`]): an intercept; `ln(1 + v)` per config parameter
+/// in sorted-name order; the same terms squared (curvature); the
+/// log tile volume (product of all parameter values, the
+/// occupancy-relevant proxy); log [`Config::mem_bytes`]; and the
+/// workload's log FLOPs and log minimum bytes moved.
+pub fn features(cfg: &Config, w: &Workload) -> Vec<f64> {
+    let p = cfg.0.len();
+    let mut f = Vec::with_capacity(2 * p + 5);
+    f.push(1.0);
+    for v in cfg.0.values() {
+        f.push(ln1p_clamped(*v));
+    }
+    for v in cfg.0.values() {
+        let l = ln1p_clamped(*v);
+        f.push(l * l);
+    }
+    let volume: f64 = cfg.0.values().map(|&v| v.max(1) as f64).product();
+    f.push(volume.ln());
+    f.push((1.0 + cfg.mem_bytes(w) as f64).ln());
+    f.push((1.0 + w.flops()).ln());
+    f.push((1.0 + w.min_bytes()).ln());
+    f
+}
+
+/// Human-readable names of the [`features`] layout for a parameter
+/// schema (used by reports and docs; kept in lockstep with
+/// [`features`]).
+pub fn feature_names(params: &[String]) -> Vec<String> {
+    let mut names = vec!["bias".to_string()];
+    names.extend(params.iter().map(|p| format!("ln({p})")));
+    names.extend(params.iter().map(|p| format!("ln2({p})")));
+    names.push("ln(tile_volume)".to_string());
+    names.push("ln(mem_bytes)".to_string());
+    names.push("ln(flops)".to_string());
+    names.push("ln(min_bytes)".to_string());
+    names
+}
+
+/// Solve `(XᵀX + λI) β = Xᵀy` by Gaussian elimination with partial
+/// pivoting.  Fully deterministic for a given input (no randomness, a
+/// fixed accumulation order) and `None` when the system is singular or
+/// under-determined (`rows.len() < dim`) — callers fall back to
+/// unguided search instead of panicking.
+pub fn ridge_fit(rows: &[Vec<f64>], ys: &[f64], lambda: f64) -> Option<Vec<f64>> {
+    let dim = rows.first()?.len();
+    if dim == 0 || rows.len() != ys.len() || rows.len() < dim {
+        return None;
+    }
+    if rows.iter().any(|r| r.len() != dim) {
+        return None;
+    }
+    // Normal equations, accumulated in fixed row order.
+    let mut a = vec![0.0f64; dim * dim];
+    let mut b = vec![0.0f64; dim];
+    for (row, &y) in rows.iter().zip(ys) {
+        for i in 0..dim {
+            b[i] += row[i] * y;
+            for j in 0..dim {
+                a[i * dim + j] += row[i] * row[j];
+            }
+        }
+    }
+    for i in 0..dim {
+        a[i * dim + i] += lambda;
+    }
+    // Gaussian elimination with partial pivoting (deterministic: ties
+    // keep the smallest row index).
+    let mut piv: Vec<usize> = (0..dim).collect();
+    for col in 0..dim {
+        let mut best = col;
+        for r in col + 1..dim {
+            if a[piv[r] * dim + col].abs() > a[piv[best] * dim + col].abs() {
+                best = r;
+            }
+        }
+        piv.swap(col, best);
+        let p = a[piv[col] * dim + col];
+        if p.abs() < 1e-12 {
+            return None;
+        }
+        for r in col + 1..dim {
+            let factor = a[piv[r] * dim + col] / p;
+            if factor == 0.0 {
+                continue;
+            }
+            for c in col..dim {
+                a[piv[r] * dim + c] -= factor * a[piv[col] * dim + c];
+            }
+            b[piv[r]] -= factor * b[piv[col]];
+        }
+    }
+    let mut beta = vec![0.0f64; dim];
+    for col in (0..dim).rev() {
+        let mut acc = b[piv[col]];
+        for c in col + 1..dim {
+            acc -= a[piv[col] * dim + c] * beta[c];
+        }
+        beta[col] = acc / a[piv[col] * dim + col];
+    }
+    Some(beta)
+}
+
+/// Coefficient of determination of `pred` against `actual`.
+/// Degenerate inputs (empty, or zero variance in `actual`) return 0.0.
+pub fn r_squared(pred: &[f64], actual: &[f64]) -> f64 {
+    if pred.is_empty() || pred.len() != actual.len() {
+        return 0.0;
+    }
+    let n = actual.len() as f64;
+    let mean = actual.iter().sum::<f64>() / n;
+    let sst: f64 = actual.iter().map(|y| (y - mean) * (y - mean)).sum();
+    let sse: f64 = pred.iter().zip(actual).map(|(p, y)| (p - y) * (p - y)).sum();
+    if sst <= 0.0 {
+        return 0.0;
+    }
+    1.0 - sse / sst
+}
+
+fn ranks(xs: &[f64]) -> Vec<f64> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[a].total_cmp(&xs[b]).then(a.cmp(&b)));
+    let mut r = vec![0.0; xs.len()];
+    for (rank, &i) in idx.iter().enumerate() {
+        r[i] = rank as f64;
+    }
+    r
+}
+
+/// Spearman rank correlation of `pred` against `actual` (Pearson on
+/// ranks; deterministic tie-break by index).  Degenerate inputs return
+/// 0.0.  This is the metric that matters for a pre-ranking surrogate:
+/// only the *order* of predictions decides what gets measured.
+pub fn rank_correlation(pred: &[f64], actual: &[f64]) -> f64 {
+    if pred.len() < 2 || pred.len() != actual.len() {
+        return 0.0;
+    }
+    let (rp, ra) = (ranks(pred), ranks(actual));
+    let n = rp.len() as f64;
+    let (mp, ma) = (rp.iter().sum::<f64>() / n, ra.iter().sum::<f64>() / n);
+    let mut cov = 0.0;
+    let mut vp = 0.0;
+    let mut va = 0.0;
+    for (p, a) in rp.iter().zip(&ra) {
+        cov += (p - mp) * (a - ma);
+        vp += (p - mp) * (p - mp);
+        va += (a - ma) * (a - ma);
+    }
+    if vp <= 0.0 || va <= 0.0 {
+        return 0.0;
+    }
+    cov / (vp * va).sqrt()
+}
+
+/// Training-set fit quality of a [`CostModel`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FitQuality {
+    /// Distinct full-fidelity records the model was fit on.
+    pub n: usize,
+    /// R² of predicted vs recorded log-latency on the training set.
+    pub r2: f64,
+    /// Spearman rank correlation of predicted vs recorded latency.
+    pub rank_corr: f64,
+}
+
+/// A fitted per-(platform, kernel) linear surrogate over [`features`],
+/// predicting log-latency.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostModel {
+    /// Platform fingerprint the model is calibrated for (the
+    /// [`Evaluator::name`] of the evaluator that produced the
+    /// training measurements).
+    pub platform: String,
+    /// Kernel the model covers ([`Workload::kernel_name`]).
+    pub kernel: String,
+    /// Parameter schema (sorted config keys) the features were built
+    /// from; predictions for configs with a different schema rank last.
+    pub params: Vec<String>,
+    /// Ridge coefficients over the [`features`] layout.
+    pub coefs: Vec<f64>,
+    /// Training-set fit quality.
+    pub fit: FitQuality,
+}
+
+impl CostModel {
+    /// Fit a model from `(config, workload, measured µs)` samples.
+    ///
+    /// Samples are canonicalized — sorted by (workload key, config
+    /// fingerprint), deduplicated — before accumulation, so permuted
+    /// but equal histories produce bitwise-identical coefficients.
+    /// Returns `None` when there are fewer usable records than
+    /// features, when parameter schemas disagree beyond the first
+    /// sample's, or when the normal equations are singular.
+    pub fn fit(platform: &str, samples: &[(Config, Workload, f64)], lambda: f64) -> Option<CostModel> {
+        let mut order: Vec<usize> = (0..samples.len()).collect();
+        order.sort_by(|&a, &b| {
+            let (ka, kb) = (samples[a].1.key(), samples[b].1.key());
+            ka.cmp(&kb).then(samples[a].0.fingerprint().cmp(&samples[b].0.fingerprint()))
+        });
+        let mut seen: HashSet<(String, u64)> = HashSet::new();
+        let first = &samples[*order.first()?].0;
+        let params: Vec<String> = first.0.keys().cloned().collect();
+        let kernel = samples[order[0]].1.kernel_name().to_string();
+        let mut rows: Vec<Vec<f64>> = Vec::new();
+        let mut ys: Vec<f64> = Vec::new();
+        let mut latencies: Vec<f64> = Vec::new();
+        for &i in &order {
+            let (cfg, w, us) = &samples[i];
+            let schema: Vec<&String> = cfg.0.keys().collect();
+            if schema.len() != params.len() || schema.iter().zip(&params).any(|(a, b)| *a != b) {
+                continue;
+            }
+            if !seen.insert((w.key(), cfg.fingerprint())) {
+                continue;
+            }
+            rows.push(features(cfg, w));
+            ys.push(us.max(1e-9).ln());
+            latencies.push(*us);
+        }
+        let coefs = ridge_fit(&rows, &ys, lambda)?;
+        let pred: Vec<f64> = rows
+            .iter()
+            .map(|r| r.iter().zip(&coefs).map(|(x, c)| x * c).sum::<f64>())
+            .collect();
+        let pred_us: Vec<f64> = pred.iter().map(|p| p.exp()).collect();
+        let fit = FitQuality {
+            n: rows.len(),
+            r2: r_squared(&pred, &ys),
+            rank_corr: rank_correlation(&pred_us, &latencies),
+        };
+        Some(CostModel { platform: platform.to_string(), kernel, params, coefs, fit })
+    }
+
+    /// Fit from records reloaded by [`load_eval_log`] (their stored
+    /// feature vectors are used directly).  Same determinism and
+    /// degradation contract as [`CostModel::fit`].
+    pub fn fit_logged(platform: &str, records: &[LoggedEval], lambda: f64) -> Option<CostModel> {
+        let mut recs: Vec<&LoggedEval> = records
+            .iter()
+            .filter(|r| r.platform == platform && r.fidelity >= 1.0)
+            .collect();
+        recs.sort_by(|a, b| {
+            a.workload_key.cmp(&b.workload_key).then(a.fingerprint.cmp(&b.fingerprint))
+        });
+        let first = *recs.first()?;
+        let dim = first.features.len();
+        let params: Vec<String> =
+            first.config.as_ref().map(|c| c.0.keys().cloned().collect()).unwrap_or_default();
+        let mut rows: Vec<Vec<f64>> = Vec::new();
+        let mut latencies: Vec<f64> = Vec::new();
+        for r in recs {
+            if r.features.len() != dim {
+                continue;
+            }
+            rows.push(r.features.clone());
+            latencies.push(r.latency_us);
+        }
+        let ys: Vec<f64> = latencies.iter().map(|us| us.max(1e-9).ln()).collect();
+        let coefs = ridge_fit(&rows, &ys, lambda)?;
+        let pred: Vec<f64> = rows
+            .iter()
+            .map(|r| r.iter().zip(&coefs).map(|(x, c)| x * c).sum::<f64>())
+            .collect();
+        let pred_us: Vec<f64> = pred.iter().map(|p| p.exp()).collect();
+        let fit = FitQuality {
+            n: rows.len(),
+            r2: r_squared(&pred, &ys),
+            rank_corr: rank_correlation(&pred_us, &latencies),
+        };
+        Some(CostModel {
+            platform: platform.to_string(),
+            kernel: first.kernel.clone(),
+            params,
+            coefs,
+            fit,
+        })
+    }
+
+    /// Predicted latency (µs) of one config.  Configs whose parameter
+    /// schema does not match the training schema predict `+∞`, so a
+    /// pre-ranking pass sends them to the back of the line instead of
+    /// guessing.
+    pub fn predict_us(&self, cfg: &Config, w: &Workload) -> f64 {
+        let schema: Vec<&String> = cfg.0.keys().collect();
+        if schema.len() != self.params.len() || schema.iter().zip(&self.params).any(|(a, b)| *a != b)
+        {
+            return f64::INFINITY;
+        }
+        let f = features(cfg, w);
+        if f.len() != self.coefs.len() {
+            return f64::INFINITY;
+        }
+        f.iter().zip(&self.coefs).map(|(x, c)| x * c).sum::<f64>().exp()
+    }
+
+    /// Borrow the model as an [`Evaluator`] prior for one workload, so
+    /// it plugs straight into `TuningSession::guided(prior, k)`.
+    pub fn prior(&self, workload: Workload) -> SurrogatePrior<'_> {
+        SurrogatePrior { model: self, workload }
+    }
+
+    /// Serialize the model (coefficients as exact round-tripping f64
+    /// text; the version is embedded so a stale payload is rejected).
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("version", Value::num(SURROGATE_VERSION)),
+            ("platform", Value::str(self.platform.as_str())),
+            ("kernel", Value::str(self.kernel.as_str())),
+            ("params", Value::Arr(self.params.iter().map(|p| Value::str(p.as_str())).collect())),
+            ("coefs", Value::Arr(self.coefs.iter().map(|c| Value::num(*c)).collect())),
+            ("n", Value::num(self.fit.n as f64)),
+            ("r2", Value::num(self.fit.r2)),
+            ("rank_corr", Value::num(self.fit.rank_corr)),
+        ])
+    }
+
+    /// Inverse of [`CostModel::to_json`]; `None` on any mismatch
+    /// (wrong version, missing fields, malformed payload).
+    pub fn from_json(v: &Value) -> Option<CostModel> {
+        if v.get("version")?.as_f64()? != f64::from(SURROGATE_VERSION) {
+            return None;
+        }
+        let params: Vec<String> =
+            v.get("params")?.as_arr()?.iter().map(|p| Some(p.as_str()?.to_string())).collect::<Option<_>>()?;
+        let coefs: Vec<f64> = v.get("coefs")?.as_arr()?.iter().map(Value::as_f64).collect::<Option<_>>()?;
+        Some(CostModel {
+            platform: v.get("platform")?.as_str()?.to_string(),
+            kernel: v.get("kernel")?.as_str()?.to_string(),
+            params,
+            coefs,
+            fit: FitQuality {
+                n: v.get("n")?.as_usize()?,
+                r2: v.get("r2")?.as_f64()?,
+                rank_corr: v.get("rank_corr")?.as_f64()?,
+            },
+        })
+    }
+
+    /// Persist the coefficients through the tuning cache under the
+    /// versioned `surrogate_model#...` namespace (one entry per
+    /// (platform, kernel); the payload rides in the entry's config
+    /// field, which non-surrogate readers simply fail to parse as a
+    /// `Config` and skip).
+    pub fn save(&self, cache: &mut TuningCache) {
+        let mut e = entry_now(
+            &Config::new(&[]),
+            0.0,
+            self.fit.n,
+            0,
+            &self.platform,
+            &model_space(&self.kernel),
+            0.0,
+        );
+        e.config = self.to_json().dump();
+        cache.put(&model_workload(&self.kernel), e);
+    }
+
+    /// Load a persisted model for (platform, kernel), if one exists
+    /// and its version matches.
+    pub fn load(cache: &TuningCache, platform: &str, kernel: &str) -> Option<CostModel> {
+        let e = cache.get(&model_workload(kernel), platform, &model_space(kernel))?;
+        let v = json::parse(&e.config).ok()?;
+        let m = CostModel::from_json(&v)?;
+        (m.platform == platform).then_some(m)
+    }
+}
+
+/// A [`CostModel`] borrowed as an [`Evaluator`] prior for one
+/// workload: `evaluate` returns the predicted latency in µs, so
+/// `TuningSession::guided(&mut model.prior(w), k)` pre-ranks the space
+/// with the learned model exactly like any hand-written prior.
+pub struct SurrogatePrior<'m> {
+    model: &'m CostModel,
+    workload: Workload,
+}
+
+impl Evaluator for SurrogatePrior<'_> {
+    fn name(&self) -> String {
+        format!("surrogate[{}]", self.model.platform)
+    }
+
+    fn evaluate_fidelity(&mut self, cfg: &Config, _fidelity: f64) -> std::result::Result<f64, InvalidConfig> {
+        Ok(self.model.predict_us(cfg, &self.workload))
+    }
+}
+
+/// Append-only JSONL writer for full-fidelity evaluation records with
+/// features — the durable training set behind `--log-evals PATH`.
+pub struct EvalLogWriter {
+    file: std::fs::File,
+}
+
+impl EvalLogWriter {
+    /// Open (creating or appending to) the log at `path`.
+    pub fn open(path: &Path) -> Result<EvalLogWriter> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let file = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(EvalLogWriter { file })
+    }
+
+    /// Append one record.  Each line is self-describing: platform,
+    /// kernel, workload key, config (canonical key form), fingerprint
+    /// (hex — u64 fingerprints don't survive an f64 JSON number),
+    /// feature vector, latency and fidelity, plus the analytical
+    /// [`MODEL_VERSION`] so a loader can reject records produced by an
+    /// incompatible cost model.
+    pub fn append(
+        &mut self,
+        platform: &str,
+        w: &Workload,
+        cfg: &Config,
+        latency_us: f64,
+        fidelity: f64,
+    ) -> Result<()> {
+        let line = Value::obj(vec![
+            ("model_version", Value::num(MODEL_VERSION)),
+            ("platform", Value::str(platform)),
+            ("kernel", Value::str(w.kernel_name())),
+            ("workload", Value::str(w.key())),
+            ("config", Value::str(cfg.key())),
+            ("fingerprint", Value::str(format!("{:016x}", cfg.fingerprint()))),
+            ("features", Value::Arr(features(cfg, w).into_iter().map(Value::num).collect())),
+            ("latency_us", Value::num(latency_us)),
+            ("fidelity", Value::num(fidelity)),
+        ]);
+        let mut text = line.dump();
+        text.push('\n');
+        self.file.write_all(text.as_bytes())?;
+        Ok(())
+    }
+}
+
+/// One record reloaded from an eval log.
+#[derive(Debug, Clone)]
+pub struct LoggedEval {
+    /// Platform fingerprint the measurement was taken on.
+    pub platform: String,
+    /// Kernel name ([`Workload::kernel_name`]).
+    pub kernel: String,
+    /// Workload key ([`Workload::key`]).
+    pub workload_key: String,
+    /// Config fingerprint (decoded from the hex field).
+    pub fingerprint: u64,
+    /// The config, when its canonical key form parses back.
+    pub config: Option<Config>,
+    /// Feature vector as logged.
+    pub features: Vec<f64>,
+    /// Measured latency (µs).
+    pub latency_us: f64,
+    /// Measurement fidelity (1.0 = full).
+    pub fidelity: f64,
+}
+
+/// Result of [`load_eval_log`].
+#[derive(Debug, Default)]
+pub struct EvalLogLoad {
+    /// Usable records, deduplicated.
+    pub records: Vec<LoggedEval>,
+    /// Lines dropped as duplicates of an earlier (platform, workload,
+    /// fingerprint) record.
+    pub deduped: usize,
+    /// Lines rejected for a mismatched [`MODEL_VERSION`].
+    pub version_rejected: usize,
+}
+
+/// Reload an eval log written by [`EvalLogWriter`].  Records are
+/// deduplicated by (platform, workload, fingerprint) — first
+/// occurrence wins — and records from a different analytical
+/// [`MODEL_VERSION`] are rejected (counted, not loaded).  Malformed
+/// lines are an error: a corrupt training log should fail loudly.
+pub fn load_eval_log(path: &Path) -> Result<EvalLogLoad> {
+    let text = std::fs::read_to_string(path)?;
+    let mut out = EvalLogLoad::default();
+    let mut seen: HashSet<(String, String, u64)> = HashSet::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = json::parse(line)
+            .map_err(|e| anyhow::anyhow!("{}:{}: {e}", path.display(), lineno + 1))?;
+        if v.req_f64("model_version")? != f64::from(MODEL_VERSION) {
+            out.version_rejected += 1;
+            continue;
+        }
+        let platform = v.req_str("platform")?.to_string();
+        let workload_key = v.req_str("workload")?.to_string();
+        let fingerprint = u64::from_str_radix(v.req_str("fingerprint")?, 16)
+            .map_err(|e| anyhow::anyhow!("{}:{}: bad fingerprint: {e}", path.display(), lineno + 1))?;
+        if !seen.insert((platform.clone(), workload_key.clone(), fingerprint)) {
+            out.deduped += 1;
+            continue;
+        }
+        let feats: Vec<f64> = v
+            .req_arr("features")?
+            .iter()
+            .map(|x| x.as_f64().ok_or_else(|| anyhow::anyhow!("non-numeric feature")))
+            .collect::<Result<_>>()?;
+        out.records.push(LoggedEval {
+            platform,
+            kernel: v.req_str("kernel")?.to_string(),
+            workload_key,
+            fingerprint,
+            config: Config::parse(v.req_str("config")?),
+            features: feats,
+            latency_us: v.req_f64("latency_us")?,
+            fidelity: v.req_f64("fidelity")?,
+        });
+    }
+    Ok(out)
+}
+
+/// An [`Evaluator`] decorator that appends every successful
+/// full-fidelity measurement of the inner evaluator to an eval log
+/// (`portatune tune --log-evals`).  Results and call order pass
+/// through untouched — the tuning trajectory stays bit-identical to an
+/// unlogged run.
+pub struct LoggingEvaluator<'a> {
+    inner: &'a mut (dyn Evaluator + 'a),
+    workload: Workload,
+    log: EvalLogWriter,
+}
+
+impl<'a> LoggingEvaluator<'a> {
+    /// Wrap `inner`, logging its full-fidelity successes for `workload`.
+    pub fn new(
+        inner: &'a mut (dyn Evaluator + 'a),
+        workload: Workload,
+        log: EvalLogWriter,
+    ) -> LoggingEvaluator<'a> {
+        LoggingEvaluator { inner, workload, log }
+    }
+}
+
+impl Evaluator for LoggingEvaluator<'_> {
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn evaluate_fidelity(&mut self, cfg: &Config, fidelity: f64) -> std::result::Result<f64, InvalidConfig> {
+        let res = self.inner.evaluate_fidelity(cfg, fidelity);
+        if fidelity >= 1.0 {
+            if let Ok(us) = &res {
+                let name = self.inner.name();
+                let _ = self.log.append(&name, &self.workload, cfg, *us, fidelity);
+            }
+        }
+        res
+    }
+
+    fn evaluate_batch(
+        &mut self,
+        cfgs: &[Config],
+        fidelity: f64,
+    ) -> Vec<std::result::Result<f64, InvalidConfig>> {
+        let out = self.inner.evaluate_batch(cfgs, fidelity);
+        if fidelity >= 1.0 {
+            let name = self.inner.name();
+            for (cfg, res) in cfgs.iter().zip(&out) {
+                if let Ok(us) = res {
+                    let _ = self.log.append(&name, &self.workload, cfg, *us, fidelity);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autotuner::SimEvaluator;
+    use crate::kernels::baselines::HAND_TUNED;
+    use crate::config::spaces::attention_sim_space;
+    use crate::platform::SimGpu;
+    use crate::util::tmp::TempDir;
+
+    fn training_set(seed_n: usize) -> (Vec<(Config, Workload, f64)>, Workload, String) {
+        let w = Workload::llama3_attention(1, 256);
+        let space = attention_sim_space();
+        let mut eval = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED).sequential();
+        let platform = eval.name();
+        let samples: Vec<(Config, Workload, f64)> = space
+            .equally_spaced(&w, seed_n)
+            .into_iter()
+            .filter_map(|cfg| {
+                eval.evaluate(&cfg).ok().map(|us| (cfg, w, us))
+            })
+            .collect();
+        (samples, w, platform)
+    }
+
+    #[test]
+    fn fit_predicts_a_useful_ranking() {
+        let (samples, w, platform) = training_set(48);
+        assert!(samples.len() > 20, "seed sample mostly valid");
+        let m = CostModel::fit(&platform, &samples, RIDGE_LAMBDA).expect("fit");
+        assert_eq!(m.kernel, "attention");
+        assert!(m.fit.n >= 20);
+        assert!(m.fit.r2 > 0.5, "r2 {}", m.fit.r2);
+        assert!(m.fit.rank_corr > 0.5, "rank_corr {}", m.fit.rank_corr);
+        // Prediction must be finite and positive on training configs.
+        for (cfg, w2, _) in &samples {
+            let p = m.predict_us(cfg, w2);
+            assert!(p.is_finite() && p > 0.0, "prediction {p}");
+        }
+        let _ = w;
+    }
+
+    #[test]
+    fn fit_is_bitwise_deterministic_under_permutation() {
+        let (samples, _, platform) = training_set(48);
+        let mut rotated = samples.clone();
+        rotated.rotate_left(7);
+        let a = CostModel::fit(&platform, &samples, RIDGE_LAMBDA).unwrap();
+        let b = CostModel::fit(&platform, &rotated, RIDGE_LAMBDA).unwrap();
+        assert_eq!(a.coefs.len(), b.coefs.len());
+        for (x, y) in a.coefs.iter().zip(&b.coefs) {
+            assert_eq!(x.to_bits(), y.to_bits(), "coefficients must be bit-identical");
+        }
+        assert_eq!(a.fit.r2.to_bits(), b.fit.r2.to_bits());
+    }
+
+    #[test]
+    fn fit_declines_with_fewer_records_than_features() {
+        let (samples, _, platform) = training_set(48);
+        let dim = features(&samples[0].0, &samples[0].1).len();
+        let few = &samples[..dim.saturating_sub(1).min(samples.len())];
+        assert!(CostModel::fit(&platform, few, RIDGE_LAMBDA).is_none());
+        assert!(CostModel::fit(&platform, &[], RIDGE_LAMBDA).is_none());
+    }
+
+    #[test]
+    fn ridge_recovers_exact_coefficients_on_linear_data() {
+        // y = 2 + 3*x1 - 0.5*x2, no noise, lambda 0: exact recovery.
+        let truth = [2.0, 3.0, -0.5];
+        let mut rng = crate::util::rng::Rng::seed_from(11);
+        let rows: Vec<Vec<f64>> =
+            (0..20).map(|_| vec![1.0, rng.range(0.0, 4.0), rng.range(-2.0, 2.0)]).collect();
+        let ys: Vec<f64> =
+            rows.iter().map(|r| truth.iter().zip(r).map(|(c, x)| c * x).sum()).collect();
+        let beta = ridge_fit(&rows, &ys, 0.0).expect("solvable");
+        for (b, t) in beta.iter().zip(&truth) {
+            assert!((b - t).abs() < 1e-9, "recovered {b} vs {t}");
+        }
+    }
+
+    #[test]
+    fn cache_roundtrip_preserves_coefficients_bitwise() {
+        let (samples, _, platform) = training_set(48);
+        let m = CostModel::fit(&platform, &samples, RIDGE_LAMBDA).unwrap();
+        let mut cache = TuningCache::ephemeral();
+        m.save(&mut cache);
+        let back = CostModel::load(&cache, &platform, "attention").expect("load");
+        assert_eq!(m.params, back.params);
+        for (x, y) in m.coefs.iter().zip(&back.coefs) {
+            assert_eq!(x.to_bits(), y.to_bits(), "JSON roundtrip must be exact");
+        }
+        // Wrong platform or kernel: no model.
+        assert!(CostModel::load(&cache, "sim-other/model-v3", "attention").is_none());
+        assert!(CostModel::load(&cache, &platform, "rms_norm").is_none());
+    }
+
+    #[test]
+    fn stale_version_payload_is_rejected() {
+        let (samples, _, platform) = training_set(48);
+        let m = CostModel::fit(&platform, &samples, RIDGE_LAMBDA).unwrap();
+        let mut v = m.to_json();
+        if let Value::Obj(o) = &mut v {
+            o.insert("version".into(), Value::num(f64::from(SURROGATE_VERSION + 1)));
+        }
+        assert!(CostModel::from_json(&v).is_none());
+    }
+
+    #[test]
+    fn prior_adapter_orders_by_predicted_latency() {
+        let (samples, w, platform) = training_set(48);
+        let m = CostModel::fit(&platform, &samples, RIDGE_LAMBDA).unwrap();
+        let mut prior = m.prior(w);
+        let a = prior.evaluate(&samples[0].0).unwrap();
+        assert!(a.is_finite());
+        // A config with a foreign schema ranks last, not wrong.
+        let alien = Config::new(&[("TOTALLY_DIFFERENT", 1)]);
+        assert_eq!(prior.evaluate(&alien).unwrap(), f64::INFINITY);
+    }
+
+    #[test]
+    fn eval_log_roundtrip_dedups_and_rejects_versions() {
+        let dir = TempDir::new("eval-log").unwrap();
+        let path = dir.join("evals.jsonl");
+        let w = Workload::llama3_attention(1, 128);
+        let cfg = Config::new(&[("BLOCK_M", 32), ("BLOCK_N", 64)]);
+        let cfg2 = Config::new(&[("BLOCK_M", 64), ("BLOCK_N", 64)]);
+        {
+            let mut log = EvalLogWriter::open(&path).unwrap();
+            log.append("sim-a100/model-v3", &w, &cfg, 123.5, 1.0).unwrap();
+            log.append("sim-a100/model-v3", &w, &cfg, 123.5, 1.0).unwrap(); // dup
+            log.append("sim-a100/model-v3", &w, &cfg2, 99.0, 1.0).unwrap();
+        }
+        // Forge a stale-version line.
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str(&text.lines().next().unwrap().replace(
+            &format!("\"model_version\":{MODEL_VERSION}"),
+            "\"model_version\":1",
+        ));
+        text.push('\n');
+        std::fs::write(&path, text).unwrap();
+        let load = load_eval_log(&path).unwrap();
+        assert_eq!(load.records.len(), 2, "deduped by fingerprint");
+        assert_eq!(load.deduped, 1);
+        assert_eq!(load.version_rejected, 1);
+        assert_eq!(load.records[0].fingerprint, cfg.fingerprint());
+        assert_eq!(load.records[0].config.as_ref().unwrap(), &cfg);
+        assert!(!load.records[0].features.is_empty());
+    }
+
+    #[test]
+    fn logging_evaluator_is_transparent_and_logs_full_fidelity_only() {
+        let dir = TempDir::new("eval-log-wrap").unwrap();
+        let path = dir.join("evals.jsonl");
+        let w = Workload::llama3_attention(1, 64);
+        let space = attention_sim_space();
+        let cfgs: Vec<Config> = space.equally_spaced(&w, 6);
+        let mut plain = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED).sequential();
+        let expected: Vec<_> = cfgs.iter().map(|c| plain.evaluate(c).ok()).collect();
+        let mut inner = SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED).sequential();
+        let mut logged = LoggingEvaluator::new(&mut inner, w, EvalLogWriter::open(&path).unwrap());
+        for (cfg, want) in cfgs.iter().zip(&expected) {
+            assert_eq!(logged.evaluate(cfg).ok(), *want, "decorator must not change results");
+        }
+        let _ = logged.evaluate_fidelity(&cfgs[0], 0.25); // low fidelity: not logged
+        let load = load_eval_log(&path).unwrap();
+        let ok_count = expected.iter().flatten().count();
+        assert_eq!(load.records.len(), ok_count, "one record per full-fidelity success");
+        assert!(load.records.iter().all(|r| r.fidelity >= 1.0));
+    }
+
+    #[test]
+    fn fit_logged_matches_direct_fit() {
+        let dir = TempDir::new("fit-logged").unwrap();
+        let path = dir.join("evals.jsonl");
+        let (samples, _, platform) = training_set(48);
+        {
+            let mut log = EvalLogWriter::open(&path).unwrap();
+            for (cfg, w, us) in &samples {
+                log.append(&platform, w, cfg, *us, 1.0).unwrap();
+            }
+        }
+        let load = load_eval_log(&path).unwrap();
+        let direct = CostModel::fit(&platform, &samples, RIDGE_LAMBDA).unwrap();
+        let logged = CostModel::fit_logged(&platform, &load.records, RIDGE_LAMBDA).unwrap();
+        assert_eq!(direct.fit.n, logged.fit.n);
+        for (x, y) in direct.coefs.iter().zip(&logged.coefs) {
+            assert!((x - y).abs() < 1e-9, "log roundtrip shifts coefficients: {x} vs {y}");
+        }
+    }
+}

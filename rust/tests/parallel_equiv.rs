@@ -556,6 +556,102 @@ fn raw_batch_api_is_order_preserving() {
     }
 }
 
+// ---------------------------------------------------------------------
+// Surrogate mode: the self-priming spelling of guided tuning.
+// ---------------------------------------------------------------------
+
+#[test]
+fn surrogate_with_k_covering_the_space_is_bit_identical_to_exhaustive() {
+    // `.surrogate(k)` with k >= |valid space| cannot prune anything, so
+    // the run must delegate to the exhaustive engine and reproduce its
+    // outcome bit for bit — winner, counters, and the whole
+    // (fingerprint, latency, fidelity) log.
+    let w = Workload::llama3_attention(8, 1024);
+    let space = spaces::attention_sim_space();
+    let n_valid = space.enumerate(&w).count();
+    let mut eval = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
+    let exhaustive = builder_solo(&space, &w, &mut eval, &Strategy::Exhaustive, 0);
+    for k in [n_valid, n_valid + 1, 10 * n_valid] {
+        let mut eval = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
+        let surrogate = TuningSession::new(&space, &w)
+            .surrogate(k)
+            .evaluator(&mut eval)
+            .run()
+            .and_then(SessionOutcome::into_solo)
+            .unwrap();
+        assert_same_outcome(&exhaustive, &surrogate, &format!("surrogate k={k} vs exhaustive"));
+    }
+}
+
+#[test]
+fn surrogate_spelling_order_is_irrelevant_and_caps_measurements() {
+    // `.surrogate(k).evaluator(t)` == `.evaluator(t).surrogate(k)`, and
+    // the measured set is capped by the seed sample plus the top-k.
+    let w = Workload::llama3_attention(8, 1024);
+    let space = spaces::attention_sim_space();
+    for top_k in [5usize, 32, 100] {
+        let mut target = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
+        let a = TuningSession::new(&space, &w)
+            .surrogate(top_k)
+            .evaluator(&mut target)
+            .run()
+            .and_then(SessionOutcome::into_solo)
+            .unwrap();
+        let mut target2 = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
+        let b = TuningSession::new(&space, &w)
+            .evaluator(&mut target2)
+            .surrogate(top_k)
+            .run()
+            .and_then(SessionOutcome::into_solo)
+            .unwrap();
+        assert_same_outcome(&a, &b, &format!("surrogate spelling order k={top_k}"));
+        assert!(
+            a.evaluated <= portatune::surrogate::SEED_SAMPLE + top_k,
+            "surrogate k={top_k} measured {} configs (cap {})",
+            a.evaluated,
+            portatune::surrogate::SEED_SAMPLE + top_k
+        );
+    }
+}
+
+#[test]
+fn surrogate_top32_winner_is_within_10pct_of_exhaustive_on_both_platforms() {
+    // The acceptance pin: at k = 32 on the attention sim space the
+    // surrogate's winner is within 10% of the exhaustive winner on both
+    // vendors, while measuring an order of magnitude fewer configs.
+    let w = Workload::llama3_attention(8, 1024);
+    let space = spaces::attention_sim_space();
+    let n_valid = space.enumerate(&w).count();
+    let runs: [(&str, Box<dyn Fn() -> SimEvaluator>); 2] = [
+        ("a100", Box::new(move || SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA))),
+        ("mi250", Box::new(move || {
+            SimEvaluator::new(SimGpu::mi250(), w, portatune::kernels::baselines::TRITON_AMD)
+        })),
+    ];
+    for (label, make) in &runs {
+        let mut eval = make();
+        let exhaustive = builder_solo(&space, &w, &mut eval, &Strategy::Exhaustive, 0);
+        let mut eval = make();
+        let surrogate = TuningSession::new(&space, &w)
+            .surrogate(32)
+            .evaluator(&mut eval)
+            .run()
+            .and_then(SessionOutcome::into_solo)
+            .unwrap();
+        assert!(
+            surrogate.best_latency_us <= exhaustive.best_latency_us * 1.10,
+            "{label}: surrogate winner {:.2} us misses exhaustive {:.2} us by more than 10%",
+            surrogate.best_latency_us,
+            exhaustive.best_latency_us
+        );
+        assert!(
+            surrogate.evaluated < n_valid / 2,
+            "{label}: surrogate measured {} of {n_valid} configs — no pruning happened",
+            surrogate.evaluated
+        );
+    }
+}
+
 #[test]
 fn tuning_cache_roundtrip_under_fingerprint_keys() {
     // The session keys cache entries by the space-definition

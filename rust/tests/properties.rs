@@ -12,6 +12,7 @@ use portatune::kernels::baselines::{triton_codegen, HAND_TUNED};
 use portatune::platform::SimGpu;
 use portatune::serving::batcher::{BucketPolicy, DynamicBatcher};
 use portatune::serving::{Request, Scenario};
+use portatune::surrogate::{features, ridge_fit, CostModel, RIDGE_LAMBDA};
 use portatune::util::rng::Rng;
 use portatune::workload::{DType, SeqLenMix, Workload};
 
@@ -435,6 +436,116 @@ fn prop_json_parser_never_panics_on_garbage() {
         let len = rng.below(60);
         let s: String = (0..len).map(|_| *rng.choose(&alphabet).unwrap()).collect();
         let _ = json::parse(&s); // must return, never panic
+    }
+}
+
+// ---------------------------------------------------------------------
+// Surrogate-fitter invariants (ISSUE 9 satellite): exact recovery on
+// synthetic linear data, bitwise determinism under history permutation,
+// and graceful degradation when the history underdetermines the model.
+// ---------------------------------------------------------------------
+
+/// A full-fidelity training history from the analytical sim — the same
+/// shape of data the surrogate mode and the serving refit hook feed the
+/// fitter.
+fn surrogate_history(w: &Workload, n: usize) -> Vec<(Config, Workload, f64)> {
+    let gpu = SimGpu::a100();
+    spaces::attention_sim_space()
+        .equally_spaced(w, n)
+        .into_iter()
+        .filter_map(|c| {
+            gpu.attention_latency_us(&c, w, &HAND_TUNED).ok().map(|us| (c, *w, us))
+        })
+        .collect()
+}
+
+#[test]
+fn prop_ridge_fit_recovers_planted_coefficients() {
+    // ys generated exactly linearly in the features => the ridge solve
+    // (tiny lambda) must hand the planted coefficients back.
+    let mut rng = Rng::seed_from(81);
+    for case in 0..20 {
+        let dim = 2 + rng.below(5);
+        let n = dim * 6 + rng.below(20);
+        let planted: Vec<f64> = (0..dim).map(|_| rng.range(-3.0, 3.0)).collect();
+        let rows: Vec<Vec<f64>> =
+            (0..n).map(|_| (0..dim).map(|_| rng.range(-2.0, 2.0)).collect()).collect();
+        let ys: Vec<f64> = rows
+            .iter()
+            .map(|r| r.iter().zip(&planted).map(|(x, b)| x * b).sum())
+            .collect();
+        let coefs = ridge_fit(&rows, &ys, 1e-9).expect("well-conditioned system must fit");
+        for (i, (got, want)) in coefs.iter().zip(&planted).enumerate() {
+            assert!(
+                (got - want).abs() < 1e-4,
+                "case {case} coef {i}: fit {got} != planted {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_costmodel_fit_is_bitwise_invariant_under_history_permutation() {
+    // The fitter canonicalizes its history, so permuted-but-equal
+    // histories (the online-refit case: records arrive in whatever
+    // order buckets complete) must produce bit-identical coefficients.
+    let mut rng = Rng::seed_from(82);
+    let w = Workload::llama3_attention(1, 256);
+    let samples = surrogate_history(&w, 48);
+    let base = CostModel::fit("sim-a100/test", &samples, RIDGE_LAMBDA)
+        .expect("48 seed samples must overdetermine the feature set");
+    for round in 0..10 {
+        let mut shuffled = samples.clone();
+        for i in (1..shuffled.len()).rev() {
+            shuffled.swap(i, rng.below(i + 1));
+        }
+        let refit = CostModel::fit("sim-a100/test", &shuffled, RIDGE_LAMBDA).unwrap();
+        assert_eq!(base.coefs.len(), refit.coefs.len());
+        for (j, (a, b)) in base.coefs.iter().zip(&refit.coefs).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "round {round}: permutation moved coef {j} bits"
+            );
+        }
+        assert_eq!(base, refit, "round {round}: models must be equal");
+    }
+    // Duplicated records collapse to the same canonical set: same bits.
+    let mut doubled = samples.clone();
+    doubled.extend(samples.iter().cloned());
+    let dedup = CostModel::fit("sim-a100/test", &doubled, RIDGE_LAMBDA).unwrap();
+    assert_eq!(base, dedup, "duplicate records must not perturb the fit");
+}
+
+#[test]
+fn prop_costmodel_fit_degrades_gracefully_instead_of_panicking() {
+    let mut rng = Rng::seed_from(83);
+    let w = Workload::llama3_attention(1, 256);
+    let all = surrogate_history(&w, 48);
+    let dim = features(&all[0].0, &w).len();
+    assert!(all.len() > dim, "history must overdetermine for the positive cases below");
+    // Fewer records than features: the fit declines (the callers then
+    // fall back to unguided measurement) — it never panics.
+    for n in 0..dim {
+        let head: Vec<_> = all.iter().take(n).cloned().collect();
+        assert!(
+            CostModel::fit("p", &head, RIDGE_LAMBDA).is_none(),
+            "{n} records cannot determine {dim} features"
+        );
+    }
+    // One config duplicated past `dim` rows is still a single canonical
+    // record — underdetermined, declined, no panic.
+    let degenerate: Vec<_> = vec![all[0].clone(); dim + 5];
+    assert!(CostModel::fit("p", &degenerate, RIDGE_LAMBDA).is_none());
+    // Random multisets of real records never panic, and whenever the
+    // fit succeeds its predictions are finite for in-schema configs.
+    for _ in 0..CASES {
+        let n = rng.below(all.len() + 1);
+        let subset: Vec<_> = (0..n).map(|_| all[rng.below(all.len())].clone()).collect();
+        if let Some(m) = CostModel::fit("p", &subset, RIDGE_LAMBDA) {
+            let p = m.predict_us(&all[0].0, &w);
+            assert!(p.is_finite(), "in-schema prediction must be finite, got {p}");
+        }
     }
 }
 
