@@ -2,18 +2,22 @@
 //! evaluator) and strategy comparison — the ablation for DESIGN.md's
 //! "efficient search" design choice (Q4.2).
 //!
-//! The headline table compares the **sequential** evaluation path
-//! against the three parallel engines — per-batch **scoped threads**
-//! (the PR 1 baseline), the persistent **worker pool**, and the
-//! sharded **multi-device** fleet — at a synthetic per-evaluation cost
-//! standing in for compile+measure time ("compilation time accounts
-//! for around 80 % of the autotuning time").  The `same best` column
-//! documents the equivalence contract: every path must find the
-//! identical best config for the same seed.
+//! The headline table is the engine **ladder** — sequential → per-batch
+//! **scoped threads** (the PR 1 baseline) → the persistent
+//! **pool-v1** (mutex queue) → **pool-v2** (work stealing, the
+//! production engine) → the sharded **multi-device** fleet — at a
+//! synthetic per-evaluation cost standing in for compile+measure time
+//! ("compilation time accounts for around 80 % of the autotuning
+//! time").  The `same best` column documents the equivalence contract:
+//! every path must find the identical best config for the same seed.
+//! The JSON block after the fleet table is the paste-ready body of
+//! `BENCH_tuning.json` (ROADMAP item 5).
 //!
-//! On ≥ 4 cores (full mode) it asserts the pool is ≥ 2x faster than
-//! sequential AND at least as fast as scoped threads — the point of
-//! replacing the per-batch thread respawn.
+//! On ≥ 4 cores, two regression gates run in BOTH modes (CI's
+//! quick-mode smoke step relies on them): pool-v2 at least as fast as
+//! scoped threads, and pool-v2 at least as fast as pool-v1 — each on
+//! per-engine minima with 10% tolerance.  Full mode additionally
+//! asserts pool-v2 is ≥ 2x faster than sequential.
 
 use portatune::autotuner::{
     EvalRecord, Evaluator, MultiDeviceEvaluator, Observer, SessionOutcome, SimEvaluator,
@@ -36,6 +40,9 @@ const EVAL_COST: u32 = 4_000;
 enum Engine {
     Sequential,
     ScopedThreads,
+    /// The v1 mutex-queue pool, kept as the measured baseline.
+    PoolV1,
+    /// The v2 work-stealing pool — the production engine.
     Pool,
     MultiDevice(usize),
 }
@@ -45,7 +52,8 @@ impl Engine {
         match self {
             Engine::Sequential => "seq".into(),
             Engine::ScopedThreads => "scoped".into(),
-            Engine::Pool => "pool".into(),
+            Engine::PoolV1 => "pool-v1".into(),
+            Engine::Pool => "pool-v2".into(),
             Engine::MultiDevice(n) => format!("multi{n}"),
         }
     }
@@ -58,6 +66,7 @@ fn tune_once(engine: Engine, strat: &Strategy, cost: u32, seed: u64) -> TuneOutc
     let mut eval: Box<dyn Evaluator> = match engine {
         Engine::Sequential => Box::new(base.sequential()),
         Engine::ScopedThreads => Box::new(base.scoped_threads()),
+        Engine::PoolV1 => Box::new(base.pool_v1()),
         Engine::Pool => Box::new(base),
         Engine::MultiDevice(n) => Box::new(MultiDeviceEvaluator::replicate(&base, n)),
     };
@@ -135,16 +144,18 @@ fn main() {
     let engines = [
         Engine::Sequential,
         Engine::ScopedThreads,
+        Engine::PoolV1,
         Engine::Pool,
         Engine::MultiDevice(fleet),
     ];
     println!(
         "\n## configs/second at eval_cost={EVAL_COST} spins (~compile+measure), {cores} cores, fleet of {fleet}\n"
     );
-    println!("| strategy | evaluated | seq cfg/s | scoped cfg/s | pool cfg/s | multi{fleet} cfg/s | pool/scoped | same best |");
-    println!("|---|---|---|---|---|---|---|---|");
-    // Per strategy: (median_us, min_us) per engine, in `engines` order.
-    let mut rows: Vec<(&str, Vec<(f64, f64)>, bool)> = Vec::new();
+    println!("| strategy | evaluated | seq cfg/s | scoped cfg/s | pool-v1 cfg/s | pool-v2 cfg/s | multi{fleet} cfg/s | v2/scoped | v2/v1 | same best |");
+    println!("|---|---|---|---|---|---|---|---|---|---|");
+    // Per strategy: evaluated count plus (median_us, min_us) per engine,
+    // in `engines` order.
+    let mut rows: Vec<(&str, usize, Vec<(f64, f64)>, bool)> = Vec::new();
     for (name, strat) in [
         ("exhaustive", Strategy::Exhaustive),
         ("random400", Strategy::Random { budget: 400 }),
@@ -168,15 +179,17 @@ fn main() {
             .collect();
         let rate = |us: f64| reference.evaluated as f64 / (us * 1e-6);
         println!(
-            "| {name} | {} | {:.0} | {:.0} | {:.0} | {:.0} | {:.2}x | {same_best} |",
+            "| {name} | {} | {:.0} | {:.0} | {:.0} | {:.0} | {:.0} | {:.2}x | {:.2}x | {same_best} |",
             reference.evaluated,
             rate(stats[0].0),
             rate(stats[1].0),
             rate(stats[2].0),
             rate(stats[3].0),
-            stats[1].0 / stats[2].0,
+            rate(stats[4].0),
+            stats[1].0 / stats[3].0,
+            stats[2].0 / stats[3].0,
         );
-        rows.push((name, stats, same_best));
+        rows.push((name, reference.evaluated, stats, same_best));
     }
 
     // -----------------------------------------------------------------
@@ -220,6 +233,61 @@ fn main() {
     for (platform, o) in &fleet_out.outcomes {
         println!("  {platform}: best {} @ {:.1} us", o.best, o.best_latency_us);
     }
+
+    // Paste-ready body of BENCH_tuning.json (ROADMAP item 5): the
+    // engine-ladder rates per strategy plus the fleet
+    // measure-everywhere rate, in the committed schema.
+    let tuning_rows: Vec<Value> = rows
+        .iter()
+        .map(|(name, evaluated, stats, same)| {
+            let rate = |us: f64| *evaluated as f64 / (us * 1e-6);
+            Value::Obj(
+                [
+                    ("strategy".to_string(), Value::Str((*name).to_string())),
+                    ("evaluated".to_string(), Value::Num(*evaluated as f64)),
+                    ("seq_cfg_per_sec".to_string(), Value::Num(rate(stats[0].0))),
+                    ("scoped_cfg_per_sec".to_string(), Value::Num(rate(stats[1].0))),
+                    ("pool_v1_cfg_per_sec".to_string(), Value::Num(rate(stats[2].0))),
+                    ("pool_v2_cfg_per_sec".to_string(), Value::Num(rate(stats[3].0))),
+                    ("multi_cfg_per_sec".to_string(), Value::Num(rate(stats[4].0))),
+                    ("v2_vs_scoped".to_string(), Value::Num(stats[1].0 / stats[3].0)),
+                    ("v2_vs_v1".to_string(), Value::Num(stats[2].0 / stats[3].0)),
+                    ("same_best".to_string(), Value::Bool(*same)),
+                ]
+                .into_iter()
+                .collect(),
+            )
+        })
+        .collect();
+    let everywhere = Value::Obj(
+        [
+            ("platform_evals".to_string(), Value::Num(fleet_evals as f64)),
+            (
+                "cfg_evals_per_sec".to_string(),
+                Value::Num(fleet_evals as f64 / (fr.median_us * 1e-6)),
+            ),
+        ]
+        .into_iter()
+        .collect(),
+    );
+    let tuning_json = Value::Obj(
+        [
+            ("suite".to_string(), Value::Str("tuning".to_string())),
+            ("platform".to_string(), Value::Str("sim-a100".to_string())),
+            ("workload".to_string(), Value::Str(w.key())),
+            ("eval_cost_spins".to_string(), Value::Num(EVAL_COST as f64)),
+            ("cores".to_string(), Value::Num(cores as f64)),
+            ("fleet".to_string(), Value::Num(fleet as f64)),
+            ("seed".to_string(), Value::Num(3.0)),
+            ("pending".to_string(), Value::Bool(false)),
+            ("rows".to_string(), Value::Arr(tuning_rows)),
+            ("fleet_everywhere".to_string(), everywhere),
+        ]
+        .into_iter()
+        .collect(),
+    );
+    println!("\npaste-ready BENCH_tuning.json:");
+    println!("{}", tuning_json.pretty(2));
 
     // Pure-model overhead check (eval_cost = 0): how much the pool costs
     // when each evaluation is nanoseconds.  Expected ~1x or slightly
@@ -347,41 +415,46 @@ fn main() {
         exhaustive.best_latency_us
     );
 
-    for (name, _, same) in &rows {
+    for (name, _, _, same) in &rows {
         assert!(*same, "{name}: a parallel engine disagrees with sequential on the best config");
     }
-    // The hard wall-clock asserts only run in full mode: fast mode
-    // (PORTATUNE_BENCH_FAST, used by CI) takes too few samples for a
-    // wall-clock assert to be reliable on shared runners.
     let fast = std::env::var("PORTATUNE_BENCH_FAST").is_ok();
     if cores >= 4 {
-        let (_, stats, _) = &rows[0]; // exhaustive
-        let speedup = stats[0].0 / stats[2].0; // seq/pool medians
-        // The pool-vs-scoped comparison uses per-engine MINIMA: the two
-        // engines differ by a fixed per-batch spawn cost, so best-case
-        // times compare the mechanisms while medians absorb scheduler
-        // noise that could flip a zero-tolerance >= assert spuriously.
-        let (scoped_min, pool_min) = (stats[1].1, stats[2].1);
-        let vs_scoped = scoped_min / pool_min;
+        let (_, _, stats, _) = &rows[0]; // exhaustive
+        let speedup = stats[0].0 / stats[3].0; // seq/pool-v2 medians
+        // The relative comparisons use per-engine MINIMA: the engines
+        // differ by a fixed scheduling cost, so best-case times compare
+        // the mechanisms while medians absorb scheduler noise that
+        // could flip a zero-tolerance >= assert spuriously.  The 10%
+        // tolerance covers machines where the engines sit within
+        // scheduler noise of each other.
+        let (scoped_min, v1_min, v2_min) = (stats[1].1, stats[2].1, stats[3].1);
+        let vs_scoped = scoped_min / v2_min;
+        let vs_v1 = v1_min / v2_min;
+        // Regression gates, run in BOTH modes — CI's quick-mode bench
+        // smoke step (PORTATUNE_BENCH_FAST) relies on them.
+        assert!(
+            vs_scoped >= 0.9,
+            "work-stealing pool (min {v2_min:.0} us) clearly slower than per-batch scoped threads (min {scoped_min:.0} us) on {cores} cores"
+        );
+        assert!(
+            vs_v1 >= 0.9,
+            "work-stealing pool (min {v2_min:.0} us) clearly slower than the v1 mutex-queue pool (min {v1_min:.0} us) on {cores} cores"
+        );
         if fast {
+            // The absolute wall-clock speedup assert stays full-mode
+            // only: fast mode takes too few samples for it to be
+            // reliable on shared runners.
             println!(
-                "\nfast mode: exhaustive pool speedup {speedup:.2}x vs seq, {vs_scoped:.2}x vs scoped (asserts skipped)"
+                "\nfast mode: exhaustive pool-v2 {speedup:.2}x vs seq, {vs_scoped:.2}x vs scoped, {vs_v1:.2}x vs pool-v1 (2x-vs-seq assert skipped)"
             );
         } else {
             assert!(
                 speedup >= 2.0,
-                "exhaustive pool speedup {speedup:.2}x < 2x vs sequential on {cores} cores"
-            );
-            // 10% tolerance: on machines where the per-batch spawn cost
-            // is small relative to the work, the two engines sit within
-            // scheduler noise of each other, and a zero-margin >= flips
-            // spuriously.
-            assert!(
-                vs_scoped >= 0.9,
-                "persistent pool (min {pool_min:.0} us) clearly slower than per-batch scoped threads (min {scoped_min:.0} us) on {cores} cores"
+                "exhaustive pool-v2 speedup {speedup:.2}x < 2x vs sequential on {cores} cores"
             );
             println!(
-                "\nacceptance: exhaustive pool {speedup:.2}x vs sequential, {vs_scoped:.2}x vs scoped threads on {cores} cores"
+                "\nacceptance: exhaustive pool-v2 {speedup:.2}x vs sequential, {vs_scoped:.2}x vs scoped threads, {vs_v1:.2}x vs pool-v1 on {cores} cores"
             );
         }
     }

@@ -29,7 +29,7 @@
 
 use std::time::Instant;
 
-use crate::autotuner::Evaluator;
+use crate::autotuner::{BatchSlot, Evaluator};
 use crate::config::Config;
 use crate::metrics::DeviceUtil;
 use crate::platform::model::{Codegen, InvalidConfig, SimGpu};
@@ -53,8 +53,15 @@ pub enum BatchMode {
     ScopedThreads,
     /// The persistent shared worker pool (`util::pool::global`) —
     /// the default: no per-batch thread spawn, one thread set shared by
-    /// every evaluator in the process.
+    /// every evaluator in the process.  Work-stealing scheduling
+    /// ([`crate::util::pool::Discipline::WorkStealing`]).
     Pool,
+    /// The previous pool scheduling discipline
+    /// ([`crate::util::pool::global_v1`]): one shared mutex-guarded
+    /// queue.  Kept so the bench ladder can measure what work-stealing
+    /// buys over it (seq → scoped → pool-v1 → pool-v2); results are
+    /// bit-identical to every other mode.
+    PoolV1,
 }
 
 /// Evaluate against an analytical GPU model.
@@ -106,6 +113,13 @@ impl SimEvaluator {
         self
     }
 
+    /// Use the mutex-queue worker pool (the pre-work-stealing engine) —
+    /// the bench baseline [`BatchMode::Pool`] is compared against.
+    pub fn pool_v1(mut self) -> Self {
+        self.mode = BatchMode::PoolV1;
+        self
+    }
+
     /// Current batch execution mode.
     pub fn mode(&self) -> BatchMode {
         self.mode
@@ -117,6 +131,13 @@ impl SimEvaluator {
         self
     }
 }
+
+/// Smallest batch chunk worth scheduling on its own worker.  Below
+/// this, the fixed cost of submitting and merging a task exceeds the
+/// model work inside it, so small batches use proportionally fewer
+/// workers (a 4-config batch runs on the caller's thread instead of
+/// fanning four 1-config tasks across the pool).
+const MIN_CHUNK: usize = 16;
 
 /// The model query itself, free of `&mut self` so worker threads can
 /// share the evaluator state immutably.
@@ -165,61 +186,66 @@ impl Evaluator for SimEvaluator {
         eval_config(&self.gpu, &self.workload, &self.codegen, self.eval_cost, cfg, fidelity)
     }
 
-    /// Parallel batched evaluation: contiguous chunks of the batch go to
-    /// worker threads (persistent pool by default, per-batch scoped
-    /// threads in [`BatchMode::ScopedThreads`]); each worker writes into
-    /// its own disjoint slice of the result vector, so the merge is in
-    /// submission order by construction.
-    fn evaluate_batch(
-        &mut self,
-        cfgs: &[Config],
-        fidelity: f64,
-    ) -> Vec<Result<f64, InvalidConfig>> {
+    /// Parallel batched evaluation straight into the caller's slab:
+    /// contiguous chunks of the batch go to worker threads (persistent
+    /// pool by default, per-batch scoped threads in
+    /// [`BatchMode::ScopedThreads`]); each worker writes into its own
+    /// disjoint slice of `out`, so the merge is in submission order by
+    /// construction.  The `Vec`-returning [`Evaluator::evaluate_batch`]
+    /// derives from this, so both spellings share one engine.
+    ///
+    /// Chunks are sized adaptively ([`MIN_CHUNK`]): a batch smaller
+    /// than `MIN_CHUNK × workers` uses fewer workers rather than paying
+    /// fan-out overhead per config.
+    fn evaluate_batch_into(&mut self, cfgs: &[Config], fidelity: f64, out: &mut [BatchSlot]) {
+        assert!(out.len() >= cfgs.len(), "output slab shorter than batch");
         self.calls += cfgs.len();
+        let out = &mut out[..cfgs.len()];
         let workers = match self.mode {
             BatchMode::Sequential => 1,
-            BatchMode::ScopedThreads | BatchMode::Pool => pool::default_workers(),
+            BatchMode::ScopedThreads | BatchMode::Pool | BatchMode::PoolV1 => {
+                pool::default_workers()
+            }
         }
-        .min(cfgs.len());
+        .min(cfgs.len().div_ceil(MIN_CHUNK));
         let (gpu, workload, codegen) = (&self.gpu, &self.workload, &self.codegen);
         let cost = self.eval_cost;
         if workers <= 1 {
-            return cfgs
-                .iter()
-                .map(|c| eval_config(gpu, workload, codegen, cost, c, fidelity))
-                .collect();
+            for (cfg, slot) in cfgs.iter().zip(out.iter_mut()) {
+                *slot = Some(eval_config(gpu, workload, codegen, cost, cfg, fidelity));
+            }
+            return;
         }
-        let mut results: Vec<Option<Result<f64, InvalidConfig>>> = vec![None; cfgs.len()];
         let chunk = cfgs.len().div_ceil(workers);
-        // One worker body shared by both engines — the engines differ
+        // One worker body shared by every engine — the engines differ
         // only in who runs it, so they can never diverge behaviorally.
-        let run_chunk =
-            |cfg_chunk: &[Config], out_chunk: &mut [Option<Result<f64, InvalidConfig>>]| {
-                for (cfg, slot) in cfg_chunk.iter().zip(out_chunk.iter_mut()) {
-                    *slot = Some(eval_config(gpu, workload, codegen, cost, cfg, fidelity));
-                }
-            };
+        let run_chunk = |cfg_chunk: &[Config], out_chunk: &mut [BatchSlot]| {
+            for (cfg, slot) in cfg_chunk.iter().zip(out_chunk.iter_mut()) {
+                *slot = Some(eval_config(gpu, workload, codegen, cost, cfg, fidelity));
+            }
+        };
         let run_chunk = &run_chunk;
         match self.mode {
             BatchMode::ScopedThreads => {
                 std::thread::scope(|s| {
-                    for (cfg_chunk, out_chunk) in cfgs.chunks(chunk).zip(results.chunks_mut(chunk))
-                    {
+                    for (cfg_chunk, out_chunk) in cfgs.chunks(chunk).zip(out.chunks_mut(chunk)) {
                         s.spawn(move || run_chunk(cfg_chunk, out_chunk));
                     }
                 });
             }
-            BatchMode::Pool => {
-                pool::global().scope(|s| {
-                    for (cfg_chunk, out_chunk) in cfgs.chunks(chunk).zip(results.chunks_mut(chunk))
-                    {
+            BatchMode::Pool | BatchMode::PoolV1 => {
+                let pool = match self.mode {
+                    BatchMode::Pool => pool::global(),
+                    _ => pool::global_v1(),
+                };
+                pool.scope(|s| {
+                    for (cfg_chunk, out_chunk) in cfgs.chunks(chunk).zip(out.chunks_mut(chunk)) {
                         s.spawn(move || run_chunk(cfg_chunk, out_chunk));
                     }
                 });
             }
             BatchMode::Sequential => unreachable!("workers > 1 implies a parallel mode"),
         }
-        results.into_iter().map(|r| r.expect("worker filled every slot")).collect()
     }
 }
 
@@ -258,6 +284,16 @@ impl Evaluator for SimEvaluator {
 pub struct MultiDeviceEvaluator {
     devices: Vec<SimEvaluator>,
     util: Vec<DeviceUtil>,
+    /// Distinct platform names, sorted — the row order of
+    /// [`MultiDeviceEvaluator::evaluate_batch_everywhere`].  Built once
+    /// at construction; platform names are stable for a fleet's
+    /// lifetime, so the old per-call collect/sort/dedup (and the
+    /// per-call `d.name()` string formatting it forced) was pure churn.
+    platform_names: Vec<String>,
+    /// Index into `platform_names` per device, fleet order.
+    device_platform: Vec<usize>,
+    /// Replica count per platform, aligned with `platform_names`.
+    platform_replicas: Vec<usize>,
     wall_us: f64,
 }
 
@@ -274,25 +310,46 @@ impl MultiDeviceEvaluator {
     /// mix two different models and change with shard boundaries).
     pub fn new(devices: Vec<SimEvaluator>) -> Self {
         assert!(!devices.is_empty(), "a device fleet needs at least one device");
+        // One name() formatting pass for the whole constructor; the
+        // replica-identity check and the platform index both read it.
+        let names: Vec<String> = devices.iter().map(|d| d.name()).collect();
         for (i, a) in devices.iter().enumerate() {
-            for b in &devices[i + 1..] {
-                if a.name() == b.name() {
+            for (j, b) in devices.iter().enumerate().skip(i + 1) {
+                if names[i] == names[j] {
                     assert!(
                         a.codegen == b.codegen && a.workload == b.workload,
                         "devices sharing platform {} must be identical replicas \
                          (same workload and codegen): the platform name is the \
                          cache/argmin identity",
-                        a.name()
+                        names[i]
                     );
                 }
             }
         }
-        let devices: Vec<SimEvaluator> = devices.into_iter().map(|d| d.sequential()).collect();
-        let util = devices
+        let mut platform_names = names.clone();
+        platform_names.sort();
+        platform_names.dedup();
+        let device_platform: Vec<usize> = names
             .iter()
-            .map(|d| DeviceUtil { device: d.name(), ..DeviceUtil::default() })
+            .map(|n| platform_names.binary_search(n).expect("index covers every device"))
             .collect();
-        MultiDeviceEvaluator { devices, util, wall_us: 0.0 }
+        let mut platform_replicas = vec![0usize; platform_names.len()];
+        for &p in &device_platform {
+            platform_replicas[p] += 1;
+        }
+        let devices: Vec<SimEvaluator> = devices.into_iter().map(|d| d.sequential()).collect();
+        let util = names
+            .into_iter()
+            .map(|device| DeviceUtil { device, ..DeviceUtil::default() })
+            .collect();
+        MultiDeviceEvaluator {
+            devices,
+            util,
+            platform_names,
+            device_platform,
+            platform_replicas,
+            wall_us: 0.0,
+        }
     }
 
     /// A fleet of `n` identical replicas of `proto` — the homogeneous
@@ -312,12 +369,11 @@ impl MultiDeviceEvaluator {
     /// The *distinct* device platforms in the fleet, sorted by name —
     /// the row order of [`MultiDeviceEvaluator::evaluate_batch_everywhere`]
     /// and of fleet tuning's per-platform outcomes
-    /// ([`crate::autotuner::FleetOutcome::outcomes`]).
-    pub fn platforms(&self) -> Vec<String> {
-        let mut names: Vec<String> = self.devices.iter().map(|d| d.name()).collect();
-        names.sort();
-        names.dedup();
-        names
+    /// ([`crate::autotuner::FleetOutcome::outcomes`]).  Borrowed from
+    /// the index built at construction; `.to_vec()` it when the names
+    /// must outlive a later mutable use of the fleet.
+    pub fn platforms(&self) -> &[String] {
+        &self.platform_names
     }
 
     /// A standalone sequential evaluator for one platform of the fleet
@@ -325,14 +381,15 @@ impl MultiDeviceEvaluator {
     /// adaptive strategies once per platform, and handy for re-checking
     /// a fleet result against a single device.
     pub fn platform_evaluator(&self, platform: &str) -> Option<SimEvaluator> {
-        self.devices.iter().find(|d| d.name() == platform).cloned()
+        let i = self.util.iter().position(|u| u.device == platform)?;
+        Some(self.devices[i].clone())
     }
 
     /// Credit work performed outside the fleet's own batch paths (e.g.
     /// `tune_fleet`'s per-platform adaptive searches) to the first
     /// device of `platform`, so utilization reports cover the whole run.
     pub(crate) fn credit_platform(&mut self, platform: &str, evaluated: usize, busy_us: f64) {
-        if let Some(i) = self.devices.iter().position(|d| d.name() == platform) {
+        if let Some(i) = self.util.iter().position(|u| u.device == platform) {
             self.util[i].evaluated += evaluated;
             self.util[i].busy_us += busy_us;
             self.wall_us += busy_us;
@@ -362,50 +419,55 @@ impl MultiDeviceEvaluator {
         cfgs: &[Config],
         fidelity: f64,
     ) -> Vec<Vec<Result<f64, InvalidConfig>>> {
-        let platforms = self.platforms();
         if cfgs.is_empty() {
-            return platforms.iter().map(|_| Vec::new()).collect();
+            return vec![Vec::new(); self.platform_names.len()];
         }
         let t0 = Instant::now();
-        let mut results: Vec<Vec<Option<Result<f64, InvalidConfig>>>> =
-            platforms.iter().map(|_| vec![None; cfgs.len()]).collect();
-        let mut dev_refs: Vec<(String, &mut SimEvaluator, &mut DeviceUtil)> = self
-            .devices
-            .iter_mut()
-            .zip(self.util.iter_mut())
-            .map(|(d, u)| {
-                let name = d.name();
-                (name, d, u)
-            })
-            .collect();
-        pool::global().scope(|s| {
-            for (platform, out) in platforms.iter().zip(results.iter_mut()) {
-                // Peel this platform's devices off; the rest stay for
-                // later iterations.
-                let (mine, rest): (Vec<_>, Vec<_>) =
-                    dev_refs.drain(..).partition(|entry| &entry.0 == platform);
-                dev_refs = rest;
-                let shard = cfgs.len().div_ceil(mine.len());
-                for ((_, dev, util), (cfg_chunk, out_chunk)) in
-                    mine.into_iter().zip(cfgs.chunks(shard).zip(out.chunks_mut(shard)))
+        let mut rows: Vec<Vec<BatchSlot>> =
+            self.platform_names.iter().map(|_| vec![None; cfgs.len()]).collect();
+        {
+            // Destructure so the borrow checker sees the disjoint
+            // fields (devices/util mutably, the platform index shared).
+            let MultiDeviceEvaluator { devices, util, device_platform, platform_replicas, .. } =
+                self;
+            // Each platform's copy of the batch splits into one
+            // contiguous shard per replica; replicas consume their
+            // platform's shards in fleet order, which is exactly the
+            // assignment the old partition-based merge produced — so
+            // every platform row stays bit-identical to a solo
+            // sequential evaluator of that platform.
+            let mut shards: Vec<_> = platform_replicas
+                .iter()
+                .zip(rows.iter_mut())
+                .map(|(&replicas, row)| {
+                    let shard = cfgs.len().div_ceil(replicas);
+                    (cfgs.chunks(shard), row.chunks_mut(shard))
+                })
+                .collect();
+            pool::global().scope(|s| {
+                for ((dev, util), &p) in
+                    devices.iter_mut().zip(util.iter_mut()).zip(device_platform.iter())
                 {
-                    s.spawn(move || {
-                        let t = Instant::now();
-                        let res = dev.evaluate_batch(cfg_chunk, fidelity);
-                        for (slot, r) in out_chunk.iter_mut().zip(res) {
-                            *slot = Some(r);
-                        }
-                        util.evaluated += cfg_chunk.len();
-                        util.replicated += cfg_chunk.len();
-                        util.shards += 1;
-                        util.busy_us += t.elapsed().as_secs_f64() * 1e6;
-                    });
+                    let (cfg_chunks, out_chunks) = &mut shards[p];
+                    // More replicas than shards: trailing replicas of a
+                    // platform idle (a 1-config batch occupies one).
+                    if let (Some(cfg_chunk), Some(out_chunk)) =
+                        (cfg_chunks.next(), out_chunks.next())
+                    {
+                        s.spawn(move || {
+                            let t = Instant::now();
+                            dev.evaluate_batch_into(cfg_chunk, fidelity, out_chunk);
+                            util.evaluated += cfg_chunk.len();
+                            util.replicated += cfg_chunk.len();
+                            util.shards += 1;
+                            util.busy_us += t.elapsed().as_secs_f64() * 1e6;
+                        });
+                    }
                 }
-            }
-        });
+            });
+        }
         self.wall_us += t0.elapsed().as_secs_f64() * 1e6;
-        results
-            .into_iter()
+        rows.into_iter()
             .map(|per| {
                 per.into_iter().map(|r| r.expect("platform filled every slot")).collect()
             })
@@ -438,13 +500,10 @@ impl Evaluator for MultiDeviceEvaluator {
     /// (Fleet *tuning* sidesteps all of this: `tune_fleet_cached`
     /// persists per-platform winners under each platform's own key.)
     fn name(&self) -> String {
-        let names: Vec<String> = self.devices.iter().map(|d| d.name()).collect();
-        let mut distinct = names.clone();
-        distinct.sort();
-        distinct.dedup();
-        if distinct.len() == 1 {
-            distinct.pop().expect("fleet is non-empty")
+        if self.platform_names.len() == 1 {
+            self.platform_names[0].clone()
         } else {
+            let names: Vec<&str> = self.util.iter().map(|u| u.device.as_str()).collect();
             format!("multi[{}]", names.join("+"))
         }
     }
@@ -461,42 +520,37 @@ impl Evaluator for MultiDeviceEvaluator {
     }
 
     /// Shard the batch into one contiguous chunk per device and
-    /// evaluate the shards concurrently on the shared worker pool;
-    /// results merge in submission order.
-    fn evaluate_batch(
-        &mut self,
-        cfgs: &[Config],
-        fidelity: f64,
-    ) -> Vec<Result<f64, InvalidConfig>> {
+    /// evaluate the shards concurrently on the shared worker pool,
+    /// writing straight into the caller's slab; results merge in
+    /// submission order.  The `Vec` form derives from this.
+    fn evaluate_batch_into(&mut self, cfgs: &[Config], fidelity: f64, out: &mut [BatchSlot]) {
+        assert!(out.len() >= cfgs.len(), "output slab shorter than batch");
         if cfgs.is_empty() {
-            return Vec::new();
+            return;
         }
+        let out = &mut out[..cfgs.len()];
         let n = self.devices.len().min(cfgs.len());
         let t0 = Instant::now();
-        let mut results: Vec<Option<Result<f64, InvalidConfig>>> = vec![None; cfgs.len()];
         let chunk = cfgs.len().div_ceil(n);
         if n <= 1 {
-            let out = self.devices[0].evaluate_batch(cfgs, fidelity);
+            self.devices[0].evaluate_batch_into(cfgs, fidelity, out);
             let dt = t0.elapsed().as_secs_f64() * 1e6;
             self.util[0].evaluated += cfgs.len();
             self.util[0].shards += 1;
             self.util[0].busy_us += dt;
             self.wall_us += dt;
-            return out;
+            return;
         }
         pool::global().scope(|s| {
             for ((dev, util), (cfg_chunk, out_chunk)) in self
                 .devices
                 .iter_mut()
                 .zip(self.util.iter_mut())
-                .zip(cfgs.chunks(chunk).zip(results.chunks_mut(chunk)))
+                .zip(cfgs.chunks(chunk).zip(out.chunks_mut(chunk)))
             {
                 s.spawn(move || {
                     let t = Instant::now();
-                    let out = dev.evaluate_batch(cfg_chunk, fidelity);
-                    for (slot, r) in out_chunk.iter_mut().zip(out) {
-                        *slot = Some(r);
-                    }
+                    dev.evaluate_batch_into(cfg_chunk, fidelity, out_chunk);
                     util.evaluated += cfg_chunk.len();
                     util.shards += 1;
                     util.busy_us += t.elapsed().as_secs_f64() * 1e6;
@@ -504,7 +558,6 @@ impl Evaluator for MultiDeviceEvaluator {
             }
         });
         self.wall_us += t0.elapsed().as_secs_f64() * 1e6;
-        results.into_iter().map(|r| r.expect("device filled every slot")).collect()
     }
 }
 
@@ -823,6 +876,7 @@ mod tests {
         for par in [
             SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED), // pool default
             SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED).scoped_threads(),
+            SimEvaluator::new(SimGpu::a100(), w, HAND_TUNED).pool_v1(),
         ] {
             let mut par = par;
             let a = par.evaluate_batch(&cfgs, 1.0);
@@ -943,7 +997,7 @@ mod tests {
         let m = SimEvaluator::new(SimGpu::mi250(), w, crate::kernels::baselines::TRITON_AMD);
         // Two a100 replicas: the a100 copy of the batch is sharded.
         let mut fleet = MultiDeviceEvaluator::new(vec![a.clone(), m.clone(), a.clone()]);
-        let platforms = fleet.platforms();
+        let platforms = fleet.platforms().to_vec();
         assert_eq!(platforms.len(), 2, "two distinct platforms expected");
         let everywhere = fleet.evaluate_batch_everywhere(&cfgs, 1.0);
         assert_eq!(everywhere.len(), platforms.len());
@@ -974,7 +1028,7 @@ mod tests {
         let _ = fleet.evaluate_batch_everywhere(&cfgs, 1.0);
         // Every platform measured the whole batch once, split across its
         // replicas.
-        for platform in fleet.platforms() {
+        for platform in fleet.platforms().to_vec() {
             let on_platform: usize = fleet
                 .utilization()
                 .iter()

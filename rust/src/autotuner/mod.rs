@@ -61,6 +61,12 @@ pub use session::{Budget, SessionOutcome, TuningSession};
 use crate::config::Config;
 use crate::platform::model::InvalidConfig;
 
+/// One output cell of a batch evaluation: `None` until the evaluator
+/// fills it, then the measurement (or invalidity) for the config at the
+/// same index.  Callers keep a slab of these alive across batches so
+/// the hot loop stops allocating a fresh `Vec` per rung.
+pub type BatchSlot = Option<Result<f64, InvalidConfig>>;
+
 /// Anything that can attach a latency to a configuration.
 ///
 /// `fidelity` ∈ (0, 1] lets multi-fidelity searches (successive halving)
@@ -92,7 +98,29 @@ pub trait Evaluator {
         cfgs: &[Config],
         fidelity: f64,
     ) -> Vec<Result<f64, InvalidConfig>> {
-        cfgs.iter().map(|c| self.evaluate_fidelity(c, fidelity)).collect()
+        let mut out: Vec<BatchSlot> = vec![None; cfgs.len()];
+        self.evaluate_batch_into(cfgs, fidelity, &mut out);
+        out.into_iter()
+            .map(|slot| slot.expect("evaluator left a batch slot unfilled"))
+            .collect()
+    }
+
+    /// Evaluate a batch into a caller-provided slab: `out[i]` receives
+    /// `Some(result)` for `cfgs[i]`.  `out` must be at least as long as
+    /// `cfgs` (extra slots are left untouched); pre-existing contents of
+    /// the first `cfgs.len()` slots are overwritten, so callers reuse
+    /// one slab across rungs/batches without clearing it.
+    ///
+    /// This is the zero-alloc spelling of [`Evaluator::evaluate_batch`]
+    /// and carries the same ordering contract.  The default is
+    /// sequential; parallel evaluators override it and the `Vec` form
+    /// above is derived from it, so overriding one method keeps both
+    /// consistent.
+    fn evaluate_batch_into(&mut self, cfgs: &[Config], fidelity: f64, out: &mut [BatchSlot]) {
+        assert!(out.len() >= cfgs.len(), "output slab shorter than batch");
+        for (c, slot) in cfgs.iter().zip(out.iter_mut()) {
+            *slot = Some(self.evaluate_fidelity(c, fidelity));
+        }
     }
 }
 
@@ -111,7 +139,11 @@ pub struct TuneOutcome {
     /// fingerprint, latency, fidelity).  Fingerprints, not configs: the
     /// log exists for counting/spread analysis, and cloning hundreds of
     /// `BTreeMap`s per run was pure overhead (only `best` needs the
-    /// full config).
+    /// full config).  Multi-fidelity runs compact the log per rung
+    /// (superseded reduced-fidelity records are dropped), so
+    /// `history.len()` may be less than [`TuneOutcome::evaluated`];
+    /// every full-fidelity record always survives, so
+    /// [`TuneOutcome::spread`] is unaffected.
     pub history: Vec<EvalRecord>,
     /// Wall-clock duration of the tuning run, seconds.
     pub wall_seconds: f64,

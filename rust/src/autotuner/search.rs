@@ -47,7 +47,7 @@ use std::collections::{HashMap, HashSet};
 use std::time::Instant;
 
 use super::evaluators::MultiDeviceEvaluator;
-use super::Evaluator;
+use super::{BatchSlot, Evaluator};
 use crate::config::{Config, ConfigSpace};
 use crate::util::rng::Rng;
 use crate::workload::Workload;
@@ -238,10 +238,19 @@ pub trait Observer {
 /// terminate promptly.  The `'o` lifetime is the borrow of any attached
 /// [`Observer`]s.
 pub struct Recorder<'o> {
-    /// Evaluation log in submission order.
+    /// Evaluation log in submission order.  Multi-fidelity runs compact
+    /// it once per rung ([`Recorder::rung`]): reduced-fidelity records
+    /// superseded by a later measurement of the same config are dropped
+    /// (full-fidelity records and each config's latest record survive),
+    /// so the log stops growing with the rung count.  Counting consumers
+    /// use [`Recorder::len`], which is compaction-independent.
     pub evals: Vec<EvalRecord>,
     /// How many evaluations were invalid on this platform.
     pub invalid: usize,
+    /// Evaluations performed over the recorder's lifetime — the
+    /// monotone counter behind [`Recorder::len`] and the budget; never
+    /// reduced by compaction (compaction must not refund budget).
+    performed: usize,
     seen: HashSet<u64>,
     best: Option<(Config, f64)>,
     captured: Option<HashMap<u64, Config>>,
@@ -251,6 +260,10 @@ pub struct Recorder<'o> {
     max_evals: usize,
     /// Wall-clock cutoff; evaluations stop once it has passed.
     deadline: Option<Instant>,
+    /// Reusable output slab for [`Recorder::eval_batch`] — allocated
+    /// once at the first batch's size, then shared by every later
+    /// batch/rung instead of a fresh `vec![None; n]` per call.
+    slab: Vec<BatchSlot>,
 }
 
 impl Default for Recorder<'_> {
@@ -258,12 +271,14 @@ impl Default for Recorder<'_> {
         Recorder {
             evals: Vec::new(),
             invalid: 0,
+            performed: 0,
             seen: HashSet::new(),
             best: None,
             captured: None,
             observers: Vec::new(),
             max_evals: usize::MAX,
             deadline: None,
+            slab: Vec::new(),
         }
     }
 }
@@ -316,14 +331,44 @@ impl<'o> Recorder<'o> {
         if self.deadline.is_some_and(|d| Instant::now() >= d) {
             return 0;
         }
-        self.max_evals.saturating_sub(self.evals.len())
+        self.max_evals.saturating_sub(self.performed)
     }
 
-    /// Notify observers that a successive-halving rung is starting.
+    /// Notify observers that a successive-halving rung is starting, and
+    /// compact the log accumulated so far.  Rung boundaries are the one
+    /// place the log is safe to rewrite: no batch is in flight, and
+    /// everything a consumer can still ask of the superseded records —
+    /// `best` (full-fidelity-gated), the full-fidelity latencies feeding
+    /// `TuneOutcome::spread` and surrogate fits — is preserved by
+    /// keeping all full-fidelity records plus each config's latest
+    /// record.
     pub(crate) fn rung(&mut self, fidelity: f64, pool: usize) {
+        self.compact();
         for obs in self.observers.iter_mut() {
             obs.on_rung(fidelity, pool);
         }
+    }
+
+    /// Drop reduced-fidelity records that a later record of the same
+    /// config supersedes.  Counting ([`Recorder::len`], budgets) is
+    /// untouched — it runs on the monotone `performed` counter — and
+    /// the surviving log is a deterministic function of the full log,
+    /// so parallel engines compact bit-identically to sequential ones.
+    fn compact(&mut self) {
+        // Index of each config's last reduced-fidelity record; earlier
+        // reduced-fidelity records of the same config are superseded.
+        let mut latest: HashMap<u64, usize> = HashMap::new();
+        for (i, r) in self.evals.iter().enumerate() {
+            if !r.is_full_fidelity() {
+                latest.insert(r.fingerprint, i);
+            }
+        }
+        let mut i = 0usize;
+        self.evals.retain(|r| {
+            let keep = r.is_full_fidelity() || latest.get(&r.fingerprint) == Some(&i);
+            i += 1;
+            keep
+        });
     }
 
     /// Notify observers that a fleet run switched to `platform`.
@@ -334,13 +379,14 @@ impl<'o> Recorder<'o> {
     }
 
     /// Number of evaluations performed so far (valid + invalid).
+    /// Monotone: per-rung log compaction never reduces it.
     pub fn len(&self) -> usize {
-        self.evals.len()
+        self.performed
     }
 
     /// True when nothing has been evaluated yet.
     pub fn is_empty(&self) -> bool {
-        self.evals.is_empty()
+        self.performed == 0
     }
 
     /// Fold one evaluation result into the log (dedup-independent).
@@ -375,6 +421,7 @@ impl<'o> Recorder<'o> {
         if new_best {
             self.best = Some((cfg.clone(), entry.latency_us.unwrap()));
         }
+        self.performed += 1;
         self.evals.push(entry);
         for obs in self.observers.iter_mut() {
             obs.on_eval(&entry);
@@ -420,25 +467,27 @@ impl<'o> Recorder<'o> {
     ) -> Vec<Option<f64>> {
         let allowed = cfgs.len().min(self.remaining_evals());
         let (run, skipped) = cfgs.split_at(allowed);
-        let mut out: Vec<Option<f64>> = if run.is_empty() {
-            Vec::new()
-        } else {
-            let results = eval.evaluate_batch(run, fidelity);
-            // A short/long result vector would silently misattribute
-            // latencies to configs via zip — fail loudly instead.
-            assert_eq!(
-                results.len(),
-                run.len(),
-                "evaluate_batch broke its contract: {} results for {} configs",
-                results.len(),
-                run.len()
-            );
-            results
-                .into_iter()
-                .zip(run)
-                .map(|(res, cfg)| self.record(cfg, res, fidelity))
-                .collect()
-        };
+        let mut out: Vec<Option<f64>> = Vec::with_capacity(cfgs.len());
+        if !run.is_empty() {
+            // The evaluator writes into the recorder's reusable slab
+            // (grown once to the largest batch, never shrunk), so the
+            // hot rung/batch loop performs no per-call allocation.
+            // Taken out of `self` for the duration: `record` below
+            // needs `&mut self` while the slab is borrowed.
+            let mut slab = std::mem::take(&mut self.slab);
+            if slab.len() < run.len() {
+                slab.resize(run.len(), None);
+            }
+            eval.evaluate_batch_into(run, fidelity, &mut slab);
+            for (cfg, slot) in run.iter().zip(slab.iter_mut()) {
+                // `take` doubles as the contract check: an evaluator
+                // that skipped a slot fails loudly instead of silently
+                // misattributing a stale result to this config.
+                let res = slot.take().expect("evaluator left a batch slot unfilled");
+                out.push(self.record(cfg, res, fidelity));
+            }
+            self.slab = slab;
+        }
         out.extend(skipped.iter().map(|_| None));
         out
     }
@@ -632,10 +681,14 @@ fn run_deterministic(
             // measurements).
             let target = budget.min(sink.remaining());
             let mut rng = Rng::seed_from(seed);
+            // Hoisted sampler: bit-identical draw stream to
+            // `space.sample`, without the per-draw zone divisions and
+            // key allocations (`ConfigSpace::sampler`).
+            let mut sampler = space.sampler(w);
             let mut picked: Vec<Config> = Vec::new();
             let mut stall = 0;
             while picked.len() < target && stall < budget.saturating_mul(10) {
-                let Some(cfg) = space.sample(w, &mut rng, 200) else { break };
+                let Some(cfg) = sampler.sample(&mut rng, 200) else { break };
                 if !sink.mark_seen(&cfg) {
                     stall += 1;
                     continue;
@@ -663,13 +716,14 @@ fn hill_climb(
     rec: &mut Recorder<'_>,
 ) {
     let mut rng = Rng::seed_from(seed);
+    let mut sampler = space.sampler(w);
     'restart: for _ in 0..restarts.max(1) {
         // Keep sampling until a platform-valid starting point is found.
         let (mut cur, mut cur_lat) = loop {
             if rec.len() >= budget || rec.out_of_budget() {
                 return;
             }
-            let Some(c) = space.sample(w, &mut rng, 200) else { continue 'restart };
+            let Some(c) = sampler.sample(&mut rng, 200) else { continue 'restart };
             if !rec.mark_seen(&c) {
                 continue;
             }
@@ -717,13 +771,14 @@ fn anneal(
     rec: &mut Recorder<'_>,
 ) {
     let mut rng = Rng::seed_from(seed);
+    let mut sampler = space.sampler(w);
     // Initial point: keep sampling until one is valid on this platform.
     let mut start = None;
     for _ in 0..budget.max(20) {
         if rec.out_of_budget() {
             return;
         }
-        let Some(c) = space.sample(w, &mut rng, 200) else { break };
+        let Some(c) = sampler.sample(&mut rng, 200) else { break };
         if let Some(l) = rec.eval(eval, &c, 1.0) {
             start = Some((c, l));
             break;
@@ -774,10 +829,11 @@ fn successive_halving(
     // region is smaller than the grid.
     let target = initial.min(space.cardinality()).max(1);
     let stall_limit = target.saturating_mul(20).clamp(100, 10_000);
+    let mut sampler = space.sampler(w);
     let mut pool: Vec<Config> = Vec::new();
     let mut stall = 0usize;
     while pool.len() < target && stall < stall_limit {
-        match space.sample(w, &mut rng, 200) {
+        match sampler.sample(&mut rng, 200) {
             Some(c) if rec.mark_seen(&c) => {
                 pool.push(c);
                 stall = 0;
@@ -1204,5 +1260,55 @@ mod tests {
         assert_eq!(seq.evals, bat.evals);
         assert_eq!(seq.invalid, bat.invalid);
         assert_eq!(seq.best(), bat.best());
+    }
+
+    #[test]
+    fn rung_compacts_superseded_reduced_fidelity_records() {
+        let mut rec = Recorder::default();
+        let c1 = Config::new(&[("a", 1), ("b", 5)]);
+        let c2 = Config::new(&[("a", 2), ("b", 5)]);
+        rec.record(&c1, Ok(5.0), 0.25);
+        rec.record(&c2, Ok(6.0), 0.25);
+        rec.record(&c1, Ok(5.5), 0.5); // supersedes c1 @ 0.25
+        rec.record(&c1, Ok(7.0), 1.0); // full fidelity: always kept
+        assert_eq!(rec.len(), 4);
+        rec.rung(1.0, 1);
+        // c1 @ 0.25 is dropped; c2's only record, c1's latest reduced
+        // record and the full-fidelity record survive, in log order.
+        assert_eq!(rec.evals.len(), 3);
+        assert_eq!(rec.len(), 4, "compaction must not refund budget");
+        assert_eq!(
+            rec.evals[0],
+            EvalRecord { fingerprint: c2.fingerprint(), latency_us: Some(6.0), fidelity: 0.25 }
+        );
+        assert_eq!(
+            rec.evals[1],
+            EvalRecord { fingerprint: c1.fingerprint(), latency_us: Some(5.5), fidelity: 0.5 }
+        );
+        assert!(rec.evals[2].is_full_fidelity());
+        // The consumers of the log see nothing change.
+        assert_eq!(rec.best().map(|(_, l)| l), Some(7.0));
+        assert_eq!(rec.full_fidelity_latencies().get(&c1.fingerprint()), Some(&7.0));
+    }
+
+    #[test]
+    fn sha_log_is_compacted_but_counts_are_monotone() {
+        // Deep-enough SHA run: promoted configs accumulate superseded
+        // rung records, so the surviving log must be strictly shorter
+        // than the performed count — which budgets and `evaluated`
+        // reporting keep using.
+        let mut rec = Recorder::default();
+        Strategy::SuccessiveHalving { initial: 16, eta: 2 }
+            .run(&space(), &w(), &mut Quadratic, 5, &mut rec);
+        assert!(
+            rec.evals.len() < rec.len(),
+            "no compaction happened: {} records for {} evaluations",
+            rec.evals.len(),
+            rec.len()
+        );
+        // Each config retains at most one reduced-fidelity record per
+        // compaction epoch; in particular the best is still the
+        // full-fidelity confirmation.
+        assert!(rec.best().is_some());
     }
 }

@@ -423,7 +423,7 @@ impl<'a> TuningSession<'a> {
             );
         };
         let space_fp = self.space.fingerprint_key();
-        let platforms = fleet.platforms();
+        let platforms = fleet.platforms().to_vec();
         let mut hits: HashMap<String, TuneOutcome> = HashMap::new();
         for platform in &platforms {
             let hit = cache.get(self.workload, platform, &space_fp).and_then(|h| {
@@ -763,7 +763,9 @@ fn fleet_impl<'o>(
     reuse: HashMap<String, TuneOutcome>,
 ) -> Option<FleetOutcome> {
     let t0 = Instant::now();
-    let platforms = fleet.platforms();
+    // Owned copy: the fleet is mutably re-borrowed below (the shared
+    // pass and the per-platform loop) while the names are still in use.
+    let platforms = fleet.platforms().to_vec();
     if strategy.shared_trajectory() {
         debug_assert!(reuse.is_empty(), "shared trajectories cannot partially reuse");
         // Only the first recorder captures configs (every portable-best

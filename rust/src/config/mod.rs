@@ -32,4 +32,4 @@ pub mod dsl;
 mod space;
 pub mod spaces;
 
-pub use space::{Config, ConfigSpace, Constraint, Enumerate, Level, Param, SpaceStats};
+pub use space::{Config, ConfigSpace, Constraint, Enumerate, Level, Param, Sampler, SpaceStats};

@@ -499,6 +499,22 @@ impl ConfigSpace {
         None
     }
 
+    /// A reusable sampler for the hot Random/SHA draw loops.  It draws
+    /// **bitwise-identically** to [`ConfigSpace::sample`] (same RNG
+    /// stream, same accept/reject decisions, same configs) but hoists
+    /// the per-draw costs out of the loop: rejection zones are computed
+    /// once per parameter instead of once per draw, and the candidate
+    /// assignment is one reusable map whose `String` keys are allocated
+    /// once at construction instead of per try.
+    pub fn sampler<'a>(&'a self, w: &'a Workload) -> Sampler<'a> {
+        let zones = self.params.iter().map(|p| Rng::zone(p.choices.len())).collect();
+        let mut proto = Config::default();
+        for p in &self.params {
+            proto.set(&p.name, p.choices[0]);
+        }
+        Sampler { space: self, w, zones, proto }
+    }
+
     /// All valid configurations that differ from `cfg` in exactly one
     /// parameter (the neighbourhood for local search).
     pub fn neighbors(&self, cfg: &Config, w: &Workload) -> Vec<Config> {
@@ -532,6 +548,39 @@ impl ConfigSpace {
         (0..n)
             .map(|i| all[i * (all.len() - 1) / (n - 1).max(1)].clone())
             .collect()
+    }
+}
+
+/// Rejection sampler with hoisted per-parameter state — see
+/// [`ConfigSpace::sampler`].  Draw-for-draw identical to
+/// [`ConfigSpace::sample`]: per try it consumes one unbiased
+/// `below(choices.len())` draw per parameter in declaration order, then
+/// applies the same constraint check, so any seeded trajectory through
+/// either API is the same trajectory.
+#[derive(Debug, Clone)]
+pub struct Sampler<'a> {
+    space: &'a ConfigSpace,
+    w: &'a Workload,
+    /// Rejection zone per parameter, aligned with `space.params`.
+    zones: Vec<u64>,
+    /// Reusable candidate assignment; keys allocated once.
+    proto: Config,
+}
+
+impl Sampler<'_> {
+    /// Sample one valid configuration, or `None` after `max_tries`
+    /// rejections — exactly as [`ConfigSpace::sample`] would.
+    pub fn sample(&mut self, rng: &mut Rng, max_tries: usize) -> Option<Config> {
+        for _ in 0..max_tries {
+            for (p, zone) in self.space.params.iter().zip(&self.zones) {
+                let v = p.choices[rng.below_zone(p.choices.len(), *zone)];
+                *self.proto.0.get_mut(&p.name).expect("template has every param") = v;
+            }
+            if self.space.violated_constraint(&self.proto, self.w).is_none() {
+                return Some(self.proto.clone());
+            }
+        }
+        None
     }
 }
 
@@ -951,6 +1000,41 @@ mod tests {
             let c = s.sample(&w(), &mut rng, 100).unwrap();
             assert!(s.contains(&c, &w()));
         }
+    }
+
+    #[test]
+    fn sampler_matches_sample_bitwise() {
+        // The hoisted sampler must replay `sample`'s exact trajectory:
+        // same configs out AND the same RNG state afterwards (i.e. the
+        // same number of raw draws consumed, rejections included).
+        let s = space();
+        let wl = w();
+        for seed in [0u64, 1, 7, 0xD1CE] {
+            let mut slow_rng = Rng::seed_from(seed);
+            let mut fast_rng = Rng::seed_from(seed);
+            let mut fast = s.sampler(&wl);
+            for i in 0..200 {
+                assert_eq!(
+                    s.sample(&wl, &mut slow_rng, 100),
+                    fast.sample(&mut fast_rng, 100),
+                    "seed {seed} draw {i} diverged"
+                );
+            }
+            assert_eq!(slow_rng.next_u64(), fast_rng.next_u64(), "seed {seed} stream skewed");
+        }
+        // A space whose valid region can be missed exercises the
+        // try-rejection path on both sides.
+        let sparse = ConfigSpace::new("sparse")
+            .param("a", &[1, 2, 4])
+            .param("b", &[10, 20])
+            .constraint("needle", |c, _| c.req("a") == 2 && c.req("b") == 20);
+        let mut slow_rng = Rng::seed_from(9);
+        let mut fast_rng = Rng::seed_from(9);
+        let mut fast = sparse.sampler(&wl);
+        for _ in 0..100 {
+            assert_eq!(sparse.sample(&wl, &mut slow_rng, 3), fast.sample(&mut fast_rng, 3));
+        }
+        assert_eq!(slow_rng.next_u64(), fast_rng.next_u64());
     }
 
     #[test]

@@ -3,42 +3,57 @@
 //!
 //! PR 1 parallelized batched evaluation with one `std::thread::scope`
 //! per batch, which re-spawns OS threads every `EVAL_BATCH`
-//! configurations.  That is fine when one evaluation costs tens of
-//! microseconds and batches are large, but the spawn cost is pure
-//! overhead the moment batches stream continuously (exhaustive search
-//! over a thousand-config space issues several batches per tuning run,
-//! and a serving process tunes in every idle slice).  [`WorkerPool`]
-//! keeps a fixed set of long-lived threads fed through a shared queue
-//! instead:
+//! configurations.  PR 5 replaced that with a fixed set of long-lived
+//! threads fed through a single `Mutex<VecDeque>` + condvar.  That
+//! design has one lock on the hot path: every push, every pop and every
+//! caller-help drain serializes on the same mutex, so with 8+ workers
+//! the queue lock itself becomes the bottleneck the pool was meant to
+//! remove.  [`WorkerPool`] now schedules with **per-worker deques and
+//! work stealing** (the v1 mutex queue survives as
+//! [`Discipline::MutexQueue`] so benches can measure the ladder):
 //!
+//! - **Stealing discipline**: each worker owns a deque.  A worker pops
+//!   its own deque LIFO (`pop_back` — newest first, cache-warm), and
+//!   when it runs dry it scans the other deques from the lowest index
+//!   and steals FIFO (`pop_front` — oldest first, the fair end).
+//!   External submitters distribute jobs round-robin across the deques;
+//!   a worker submitting from inside a task (nested scopes) pushes to
+//!   its *own* deque, so recursive work stays local until stolen.
 //! - **Scoped borrowing**: [`WorkerPool::scope`] gives the same
 //!   borrow-from-the-stack ergonomics as `std::thread::scope` — tasks
 //!   may capture non-`'static` references because the scope joins every
 //!   spawned task before it returns.
 //! - **Caller participation**: while a scope waits for its tasks it
-//!   helps drain the shared queue, so the submitting thread is never
-//!   parked while work it could do sits queued (this also makes nested
-//!   scopes deadlock-free).
+//!   helps drain the pool *through the same steal path* as the workers,
+//!   so the submitting thread is never parked while work it could do
+//!   sits queued (this also makes nested scopes deadlock-free).
 //! - **Deterministic by construction**: the pool itself never reorders
 //!   *results* — callers hand each task a disjoint output slot, exactly
 //!   like the scoped-thread code it replaces, so parallel evaluation
-//!   stays bit-identical to sequential evaluation.
+//!   stays bit-identical to sequential evaluation no matter which
+//!   thread steals which job (pinned by `tests/parallel_equiv.rs`).
 //! - **Graceful shutdown**: dropping the pool wakes every worker and
-//!   joins it; no thread outlives the pool.
+//!   joins it; straggler jobs still queued at shutdown are drained
+//!   before the workers exit, so no spawned task is ever dropped
+//!   unexecuted.
 //!
-//! One process-wide pool (sized by `available_parallelism`) is shared by
-//! every evaluator via [`global`]; private pools can be created for
-//! tests or custom sizing with [`WorkerPool::new`].
+//! One process-wide stealing pool (sized by `available_parallelism`) is
+//! shared by every evaluator via [`global`]; the mutex-queue baseline
+//! is kept alive behind [`global_v1`] for the bench ladder, and private
+//! pools can be created for tests or custom sizing with
+//! [`WorkerPool::new`] / [`WorkerPool::with_discipline`].
 
 use std::any::Any;
+use std::cell::Cell;
 use std::collections::VecDeque;
 use std::marker::PhantomData;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-/// A type-erased unit of work, as stored in the shared queue.
+/// A type-erased unit of work, as stored in a deque.
 type Task = Box<dyn FnOnce() + Send + 'static>;
 
 /// A queued task plus the completion bookkeeping of the scope that
@@ -46,6 +61,21 @@ type Task = Box<dyn FnOnce() + Send + 'static>;
 struct Job {
     task: Task,
     scope: Arc<ScopeState>,
+}
+
+/// Queue discipline of a [`WorkerPool`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Discipline {
+    /// v1 engine: one shared FIFO behind a single mutex.  Every push,
+    /// pop and caller-help drain contends on the same lock.  Kept as
+    /// the measured baseline of the bench ladder (`pool-v1` rows in
+    /// `benches/autotuner.rs`), not for new callers.
+    MutexQueue,
+    /// v2 engine (the default): per-worker deques with work stealing —
+    /// LIFO local pop, FIFO steal, lowest-index victim scan.  Pushes
+    /// and pops touch one deque's lock each, so disjoint workers never
+    /// contend.
+    WorkStealing,
 }
 
 /// Completion state shared between one [`WorkerPool::scope`] call and
@@ -90,10 +120,66 @@ impl ScopeState {
 
 /// State shared between the pool handle and its worker threads.
 struct PoolShared {
-    /// (job queue, shutdown flag).
-    queue: Mutex<(VecDeque<Job>, bool)>,
+    discipline: Discipline,
+    /// One deque per worker under [`Discipline::WorkStealing`]; exactly
+    /// one shared deque under [`Discipline::MutexQueue`].
+    deques: Vec<Mutex<VecDeque<Job>>>,
+    /// Jobs pushed but not yet popped, across all deques.  Only used
+    /// for the park decision — correctness of draining relies on the
+    /// full deque scan, never on this counter.
+    queued: AtomicUsize,
+    /// Set once by [`WorkerPool::drop`]; never cleared.
+    shutdown: AtomicBool,
+    /// Park coordination.  A producer bumps `queued`, then locks and
+    /// releases this mutex before notifying; a worker re-checks
+    /// `queued` *under* this mutex before waiting.  That hand-off makes
+    /// the untimed wait safe: either the worker sees the new job count,
+    /// or the producer's notify happens after the worker is parked.
+    sleep: Mutex<()>,
     /// Notified when a job is pushed or shutdown begins.
     ready: Condvar,
+    /// Round-robin cursor for submissions from non-worker threads.
+    next: AtomicUsize,
+}
+
+thread_local! {
+    /// Identity of the current thread *as a pool worker*: the owning
+    /// pool's shared-state address plus the worker index.  Lets `push`
+    /// route a nested spawn to the worker's own deque and lets the
+    /// steal path start from the right home slot — without any lookup
+    /// table keyed by thread id.
+    static WORKER: Cell<Option<(usize, usize)>> = const { Cell::new(None) };
+}
+
+impl PoolShared {
+    fn id(self: &Arc<Self>) -> usize {
+        Arc::as_ptr(self) as usize
+    }
+
+    /// Pop one job via the discipline's scan: own deque LIFO first (if
+    /// the calling thread is worker `home` of this pool), then steal
+    /// FIFO from the lowest-index victim up.  The scan locks each deque
+    /// in turn, so any job whose push completed before this call is
+    /// found — the `queued` counter is deliberately not consulted here.
+    fn take(&self, home: Option<usize>) -> Option<Job> {
+        let job = match self.discipline {
+            Discipline::MutexQueue => self.deques[0].lock().unwrap().pop_front(),
+            Discipline::WorkStealing => {
+                let own = home.and_then(|h| self.deques[h].lock().unwrap().pop_back());
+                own.or_else(|| {
+                    self.deques
+                        .iter()
+                        .enumerate()
+                        .filter(|(i, _)| Some(*i) != home)
+                        .find_map(|(_, d)| d.lock().unwrap().pop_front())
+                })
+            }
+        };
+        if job.is_some() {
+            self.queued.fetch_sub(1, Ordering::SeqCst);
+        }
+        job
+    }
 }
 
 /// A fixed-size pool of long-lived worker threads with a scoped
@@ -108,19 +194,36 @@ pub struct WorkerPool {
 }
 
 impl WorkerPool {
-    /// Spawn a pool of `workers` threads (clamped to at least 1).
+    /// Spawn a pool of `workers` threads (clamped to at least 1) with
+    /// the default [`Discipline::WorkStealing`].
     pub fn new(workers: usize) -> Self {
+        Self::with_discipline(workers, Discipline::WorkStealing)
+    }
+
+    /// Spawn a pool with an explicit queue discipline.  Production
+    /// callers want [`WorkerPool::new`]; this constructor exists so the
+    /// bench ladder can measure v1 against v2 in the same process.
+    pub fn with_discipline(workers: usize, discipline: Discipline) -> Self {
         let workers = workers.max(1);
+        let n_deques = match discipline {
+            Discipline::MutexQueue => 1,
+            Discipline::WorkStealing => workers,
+        };
         let shared = Arc::new(PoolShared {
-            queue: Mutex::new((VecDeque::new(), false)),
+            discipline,
+            deques: (0..n_deques).map(|_| Mutex::new(VecDeque::new())).collect(),
+            queued: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            sleep: Mutex::new(()),
             ready: Condvar::new(),
+            next: AtomicUsize::new(0),
         });
         let handles = (0..workers)
             .map(|i| {
                 let shared = Arc::clone(&shared);
                 std::thread::Builder::new()
                     .name(format!("portatune-pool-{i}"))
-                    .spawn(move || worker_loop(&shared))
+                    .spawn(move || worker_loop(&shared, i))
                     .expect("spawn worker-pool thread")
             })
             .collect();
@@ -130,6 +233,11 @@ impl WorkerPool {
     /// Number of worker threads in the pool.
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// Queue discipline this pool schedules with.
+    pub fn discipline(&self) -> Discipline {
+        self.shared.discipline
     }
 
     /// Run `f` with a [`Scope`] on which tasks can be spawned; returns
@@ -146,15 +254,45 @@ impl WorkerPool {
         result
     }
 
-    fn push(&self, job: Job) {
-        self.shared.queue.lock().unwrap().0.push_back(job);
-        self.shared.ready.notify_one();
+    /// The calling thread's worker index, if it is a worker of *this*
+    /// pool (nested scopes run on pool threads; the identity check
+    /// keeps a worker of pool A from claiming a home deque in pool B).
+    fn home_index(&self) -> Option<usize> {
+        WORKER.with(|w| w.get()).and_then(|(pool_id, idx)| {
+            (pool_id == self.shared.id() && idx < self.shared.deques.len()).then_some(idx)
+        })
     }
 
-    /// Pop and run one queued job on the calling thread, if any.
+    fn push(&self, job: Job) {
+        let shared = &self.shared;
+        let slot = match (shared.discipline, self.home_index()) {
+            (Discipline::MutexQueue, _) => 0,
+            // A worker pushing from inside a task keeps recursive work
+            // on its own deque (LIFO pop runs it next, cache-warm).
+            (Discipline::WorkStealing, Some(h)) => h,
+            // External submitters spread load round-robin so a burst
+            // lands pre-distributed instead of all behind one lock.
+            (Discipline::WorkStealing, None) => {
+                shared.next.fetch_add(1, Ordering::Relaxed) % shared.deques.len()
+            }
+        };
+        // Bump the park counter BEFORE the job becomes stealable: a
+        // worker that observes the job also observes queued >= 1, so
+        // the counter can never underflow past a concurrent pop.
+        shared.queued.fetch_add(1, Ordering::SeqCst);
+        shared.deques[slot].lock().unwrap().push_back(job);
+        // Lock-then-notify hand-off (see `PoolShared::sleep`): without
+        // the empty critical section a worker could check `queued`,
+        // decide to park, and miss a notify sent in between.
+        drop(shared.sleep.lock().unwrap());
+        shared.ready.notify_one();
+    }
+
+    /// Pop and run one queued job on the calling thread, if any —
+    /// the caller-help path, routed through the same steal scan as the
+    /// workers.
     fn try_run_one(&self) -> bool {
-        let job = self.shared.queue.lock().unwrap().0.pop_front();
-        match job {
+        match self.shared.take(self.home_index()) {
             Some(job) => {
                 run_job(job);
                 true
@@ -166,11 +304,13 @@ impl WorkerPool {
 
 impl Drop for WorkerPool {
     /// Graceful shutdown: signal every worker and join it.  Scopes wait
-    /// for their own tasks before returning, so the queue is normally
+    /// for their own tasks before returning, so the deques are normally
     /// empty here; any straggler jobs are still drained by the workers
-    /// before they exit.
+    /// before they exit (their final scan locks every deque, so every
+    /// push that completed before this drop is observed).
     fn drop(&mut self) {
-        self.shared.queue.lock().unwrap().1 = true;
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        drop(self.shared.sleep.lock().unwrap());
         self.shared.ready.notify_all();
         for h in self.handles.drain(..) {
             let _ = h.join();
@@ -178,23 +318,32 @@ impl Drop for WorkerPool {
     }
 }
 
-fn worker_loop(shared: &PoolShared) {
+fn worker_loop(shared: &Arc<PoolShared>, index: usize) {
+    WORKER.with(|w| w.set(Some((shared.id(), index))));
     loop {
-        let job = {
-            let mut g = shared.queue.lock().unwrap();
-            loop {
-                if let Some(job) = g.0.pop_front() {
-                    break Some(job);
-                }
-                if g.1 {
-                    break None;
-                }
-                g = shared.ready.wait(g).unwrap();
+        if let Some(job) = shared.take(Some(index)) {
+            run_job(job);
+            continue;
+        }
+        if shared.shutdown.load(Ordering::SeqCst) {
+            // Straggler drain: a push may have completed between our
+            // empty scan and the shutdown check.  The scan locks every
+            // deque, so nothing queued before shutdown can be missed.
+            while let Some(job) = shared.take(Some(index)) {
+                run_job(job);
             }
-        };
-        match job {
-            Some(job) => run_job(job),
-            None => return,
+            return;
+        }
+        // Park until a producer notifies.  The re-check of `queued`
+        // under the sleep mutex pairs with push's lock-then-notify:
+        // either we see the new count here, or the producer notifies
+        // after we are parked — never a lost wakeup.  (`queued` may
+        // transiently read nonzero after the last job was popped but
+        // before its decrement lands; that costs one extra scan, not
+        // correctness.)
+        let g = shared.sleep.lock().unwrap();
+        if shared.queued.load(Ordering::SeqCst) == 0 && !shared.shutdown.load(Ordering::SeqCst) {
+            drop(shared.ready.wait(g).unwrap());
         }
     }
 }
@@ -230,7 +379,7 @@ impl<'pool, 'scope> Scope<'pool, 'scope> {
         let task: Box<dyn FnOnce() + Send + 'scope> = Box::new(f);
         // SAFETY: the scope's Drop blocks until every spawned task has
         // completed (`wait_all`), so no task — nor anything it borrows —
-        // is ever used after 'scope ends, even though the queue stores
+        // is ever used after 'scope ends, even though the deque stores
         // it under a 'static type.
         let task: Task = unsafe {
             std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Task>(task)
@@ -239,9 +388,9 @@ impl<'pool, 'scope> Scope<'pool, 'scope> {
     }
 
     /// Block until every task spawned on this scope has completed,
-    /// helping to drain the shared queue while waiting.  If a task
-    /// panicked, its original payload is resumed here (unless this
-    /// thread is already unwinding).
+    /// helping to drain the pool while waiting.  If a task panicked,
+    /// its original payload is resumed here (unless this thread is
+    /// already unwinding).
     fn wait_all(&self) {
         loop {
             // Help: run queued jobs (ours or another scope's) instead of
@@ -260,7 +409,7 @@ impl<'pool, 'scope> Scope<'pool, 'scope> {
                     return;
                 }
                 // Timed wait so we periodically go back to helping: our
-                // remaining tasks may be sitting in the queue behind a
+                // remaining tasks may be sitting in a deque behind a
                 // busy worker set.
                 let (g2, timeout) = self
                     .state
@@ -288,13 +437,25 @@ pub fn default_workers() -> usize {
 }
 
 /// The process-wide shared pool (created on first use, sized by
-/// [`default_workers`]).  Evaluators submit through this so that
-/// concurrent tuning runs share one thread set instead of
-/// oversubscribing the machine.  It is never dropped; its threads end
-/// with the process.
+/// [`default_workers`], [`Discipline::WorkStealing`]).  Evaluators
+/// submit through this so that concurrent tuning runs share one thread
+/// set instead of oversubscribing the machine.  It is never dropped;
+/// its threads end with the process.
 pub fn global() -> &'static WorkerPool {
     static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
     GLOBAL.get_or_init(|| WorkerPool::new(default_workers()))
+}
+
+/// The process-wide **v1 baseline** pool ([`Discipline::MutexQueue`],
+/// created on first use, sized like [`global`]).  Exists so the bench
+/// ladder and `BatchMode::PoolV1` can measure the mutex-queue engine
+/// against the stealing engine under identical conditions; production
+/// evaluation paths never touch it, so its threads stay parked unless
+/// a bench or test wakes them.
+pub fn global_v1() -> &'static WorkerPool {
+    static GLOBAL_V1: OnceLock<WorkerPool> = OnceLock::new();
+    GLOBAL_V1
+        .get_or_init(|| WorkerPool::with_discipline(default_workers(), Discipline::MutexQueue))
 }
 
 #[cfg(test)]
@@ -303,39 +464,48 @@ mod tests {
 
     use super::*;
 
+    fn both_disciplines() -> [Discipline; 2] {
+        [Discipline::MutexQueue, Discipline::WorkStealing]
+    }
+
     #[test]
     fn scope_runs_every_task_before_returning() {
-        let pool = WorkerPool::new(4);
-        let mut slots = vec![0usize; 64];
-        pool.scope(|s| {
-            for (i, slot) in slots.iter_mut().enumerate() {
-                s.spawn(move || *slot = i + 1);
+        for d in both_disciplines() {
+            let pool = WorkerPool::with_discipline(4, d);
+            let mut slots = vec![0usize; 64];
+            pool.scope(|s| {
+                for (i, slot) in slots.iter_mut().enumerate() {
+                    s.spawn(move || *slot = i + 1);
+                }
+            });
+            // The scope joined, so every borrowed slot is written.
+            for (i, v) in slots.iter().enumerate() {
+                assert_eq!(*v, i + 1, "{d:?}");
             }
-        });
-        // The scope joined, so every borrowed slot is written.
-        for (i, v) in slots.iter().enumerate() {
-            assert_eq!(*v, i + 1);
         }
     }
 
     #[test]
     fn drop_joins_all_threads_after_work() {
-        let counter = Arc::new(AtomicUsize::new(0));
-        let pool = WorkerPool::new(3);
-        pool.scope(|s| {
-            for _ in 0..12 {
-                let c = Arc::clone(&counter);
-                s.spawn(move || {
-                    c.fetch_add(1, Ordering::SeqCst);
-                });
-            }
-        });
-        assert_eq!(counter.load(Ordering::SeqCst), 12);
-        let shared = Arc::clone(&pool.shared);
-        drop(pool); // must wake + join all workers without hanging
-        // Workers dropped their Arc clones when they exited: only our
-        // probe reference remains, i.e. every thread really terminated.
-        assert_eq!(Arc::strong_count(&shared), 1);
+        for d in both_disciplines() {
+            let counter = Arc::new(AtomicUsize::new(0));
+            let pool = WorkerPool::with_discipline(3, d);
+            pool.scope(|s| {
+                for _ in 0..12 {
+                    let c = Arc::clone(&counter);
+                    s.spawn(move || {
+                        c.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+            });
+            assert_eq!(counter.load(Ordering::SeqCst), 12);
+            let shared = Arc::clone(&pool.shared);
+            drop(pool); // must wake + join all workers without hanging
+            // Workers dropped their Arc clones when they exited: only
+            // our probe reference remains, i.e. every thread really
+            // terminated.
+            assert_eq!(Arc::strong_count(&shared), 1, "{d:?}");
+        }
     }
 
     #[test]
@@ -358,23 +528,121 @@ mod tests {
 
     #[test]
     fn task_panic_propagates_to_scope_caller() {
-        let pool = WorkerPool::new(2);
-        let caught = catch_unwind(AssertUnwindSafe(|| {
+        for d in both_disciplines() {
+            let pool = WorkerPool::with_discipline(2, d);
+            let caught = catch_unwind(AssertUnwindSafe(|| {
+                pool.scope(|s| {
+                    s.spawn(|| panic!("boom"));
+                });
+            }));
+            let payload = caught.expect_err("scope must re-raise task panics");
+            // The ORIGINAL payload is resumed, not a generic wrapper.
+            assert_eq!(payload.downcast_ref::<&str>().copied(), Some("boom"));
+            // The pool survives a panicking task.
+            let mut v = [0; 4];
             pool.scope(|s| {
-                s.spawn(|| panic!("boom"));
+                for slot in v.iter_mut() {
+                    s.spawn(move || *slot = 7);
+                }
             });
-        }));
-        let payload = caught.expect_err("scope must re-raise task panics");
-        // The ORIGINAL payload is resumed, not a generic wrapper.
-        assert_eq!(payload.downcast_ref::<&str>().copied(), Some("boom"));
-        // The pool survives a panicking task.
-        let mut v = [0; 4];
-        pool.scope(|s| {
-            for slot in v.iter_mut() {
-                s.spawn(move || *slot = 7);
+            assert_eq!(v, [7; 4]);
+        }
+    }
+
+    #[test]
+    fn panic_propagates_from_stolen_task() {
+        // Flood one external submission stream into a many-worker
+        // stealing pool: the panicking job lands on one round-robin
+        // deque but is overwhelmingly likely to be *stolen* (or
+        // caller-helped) rather than run by its home worker.  Whatever
+        // thread runs it, the original payload must surface on the
+        // scope caller and every sibling task must still complete.
+        let pool = WorkerPool::new(8);
+        let ran = Arc::new(AtomicUsize::new(0));
+        for round in 0..8 {
+            let caught = catch_unwind(AssertUnwindSafe(|| {
+                pool.scope(|s| {
+                    for i in 0..64 {
+                        let ran = Arc::clone(&ran);
+                        s.spawn(move || {
+                            if i == 31 {
+                                panic!("stolen boom");
+                            }
+                            ran.fetch_add(1, Ordering::SeqCst);
+                        });
+                    }
+                });
+            }));
+            let payload = caught.expect_err("panic must cross the steal path");
+            assert_eq!(payload.downcast_ref::<&str>().copied(), Some("stolen boom"));
+            assert_eq!(ran.load(Ordering::SeqCst), (round + 1) * 63, "siblings still ran");
+        }
+    }
+
+    #[test]
+    fn nested_scopes_from_multiple_threads() {
+        // Scopes opened concurrently from external threads, each of
+        // whose tasks opens a *nested* scope on the same pool from a
+        // worker thread.  The nested spawn goes to the worker's own
+        // deque (LIFO) and the outer scopes' caller-help must drain it
+        // without deadlock.
+        for d in both_disciplines() {
+            let pool = WorkerPool::with_discipline(3, d);
+            let total = Arc::new(AtomicUsize::new(0));
+            std::thread::scope(|outer| {
+                for _ in 0..4 {
+                    let pool = &pool;
+                    let total = Arc::clone(&total);
+                    outer.spawn(move || {
+                        pool.scope(|s| {
+                            for _ in 0..8 {
+                                let total = Arc::clone(&total);
+                                s.spawn(move || {
+                                    // Nested scope, opened on a pool
+                                    // worker (or the helping caller).
+                                    pool.scope(|inner| {
+                                        for _ in 0..4 {
+                                            let total = Arc::clone(&total);
+                                            inner.spawn(move || {
+                                                total.fetch_add(1, Ordering::SeqCst);
+                                            });
+                                        }
+                                    });
+                                });
+                            }
+                        });
+                    });
+                }
+            });
+            assert_eq!(total.load(Ordering::SeqCst), 4 * 8 * 4, "{d:?}");
+        }
+    }
+
+    #[test]
+    fn shutdown_drains_straggler_jobs() {
+        // Push jobs through the internal API without waiting on their
+        // scope, then drop the pool immediately: the workers' final
+        // drain must run every straggler before exiting — a spawned
+        // task is never dropped unexecuted.
+        for d in both_disciplines() {
+            let pool = WorkerPool::with_discipline(2, d);
+            let ran = Arc::new(AtomicUsize::new(0));
+            let state = ScopeState::new();
+            const N: usize = 32;
+            for _ in 0..N {
+                state.add_one();
+                let ran = Arc::clone(&ran);
+                pool.push(Job {
+                    task: Box::new(move || {
+                        ran.fetch_add(1, Ordering::SeqCst);
+                    }),
+                    scope: Arc::clone(&state),
+                });
             }
-        });
-        assert_eq!(v, [7; 4]);
+            drop(pool); // joins workers; stragglers drained first
+            assert_eq!(ran.load(Ordering::SeqCst), N, "{d:?}");
+            assert_eq!(state.pending.lock().unwrap().running, 0, "{d:?}");
+        }
     }
 
     #[test]
@@ -389,8 +657,24 @@ mod tests {
     #[test]
     fn global_pool_is_shared_and_core_sized() {
         assert_eq!(global().workers(), default_workers());
+        assert_eq!(global().discipline(), Discipline::WorkStealing);
         let a = global() as *const WorkerPool;
         let b = global() as *const WorkerPool;
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn global_v1_is_the_mutex_baseline() {
+        assert_eq!(global_v1().workers(), default_workers());
+        assert_eq!(global_v1().discipline(), Discipline::MutexQueue);
+        assert_ne!(global_v1() as *const WorkerPool, global() as *const WorkerPool);
+        // And it still runs work correctly.
+        let mut out = [0usize; 8];
+        global_v1().scope(|s| {
+            for (i, slot) in out.iter_mut().enumerate() {
+                s.spawn(move || *slot = i + 1);
+            }
+        });
+        assert_eq!(out, [1, 2, 3, 4, 5, 6, 7, 8]);
     }
 }

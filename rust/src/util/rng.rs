@@ -43,14 +43,49 @@ impl Rng {
 
     /// Uniform integer in [0, n).  Uses rejection to stay unbiased.
     pub fn below(&mut self, n: usize) -> usize {
-        assert!(n > 0, "below(0)");
-        let n = n as u64;
-        let zone = u64::MAX - u64::MAX % n;
+        self.below_zone(n, Self::zone(n))
+    }
+
+    /// The rejection zone for unbiased draws in [0, n): raw draws at or
+    /// above it are rejected.  Computing it costs a 64-bit div+mod, so
+    /// batched callers hoist it once per `n` ([`Rng::below_many`], the
+    /// config-space sampler) instead of paying it per draw.
+    pub fn zone(n: usize) -> u64 {
+        assert!(n > 0, "zone(0)");
+        u64::MAX - u64::MAX % (n as u64)
+    }
+
+    /// [`Rng::below`] with a caller-cached [`Rng::zone`].  Consumes the
+    /// exact same raw-draw stream and returns the exact same values as
+    /// `below(n)` — the zone is a pure function of `n`, so hoisting it
+    /// cannot change any seeded trajectory.
+    #[inline]
+    pub fn below_zone(&mut self, n: usize, zone: u64) -> usize {
+        debug_assert_eq!(zone, Self::zone(n), "zone does not match n");
         loop {
             let v = self.next_u64();
             if v < zone {
-                return (v % n) as usize;
+                return (v % n as u64) as usize;
             }
+        }
+    }
+
+    /// Fill `out` with consecutive raw draws — bitwise-identical to
+    /// calling [`Rng::next_u64`] once per slot, batched so tight
+    /// sampling loops make one call instead of `out.len()`.
+    pub fn fill_u64(&mut self, out: &mut [u64]) {
+        for slot in out {
+            *slot = self.next_u64();
+        }
+    }
+
+    /// Fill `out` with unbiased draws in [0, n) — bitwise-identical to
+    /// calling [`Rng::below`] once per slot (same rejection stream),
+    /// with the zone computed once for the whole batch.
+    pub fn below_many(&mut self, n: usize, out: &mut [usize]) {
+        let zone = Self::zone(n);
+        for slot in out {
+            *slot = self.below_zone(n, zone);
         }
     }
 
@@ -121,6 +156,45 @@ mod tests {
         let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
         assert!(mean.abs() < 0.05, "mean {mean}");
         assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn fill_u64_matches_repeated_next_u64() {
+        let mut single = Rng::seed_from(11);
+        let mut batched = Rng::seed_from(11);
+        let mut out = [0u64; 257];
+        batched.fill_u64(&mut out);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, single.next_u64(), "draw {i} diverged");
+        }
+        // Both generators must land in the same state afterwards.
+        assert_eq!(single.next_u64(), batched.next_u64());
+    }
+
+    #[test]
+    fn below_many_matches_repeated_below() {
+        // 7 is not a power of two, so the rejection loop actually fires
+        // for some raw draws — the batched path must reject identically.
+        for n in [1usize, 2, 7, 1000] {
+            let mut single = Rng::seed_from(12);
+            let mut batched = Rng::seed_from(12);
+            let mut out = [0usize; 300];
+            batched.below_many(n, &mut out);
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, single.below(n), "n={n} draw {i} diverged");
+            }
+            assert_eq!(single.next_u64(), batched.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_zone_matches_below() {
+        let zone = Rng::zone(13);
+        let mut single = Rng::seed_from(13);
+        let mut zoned = Rng::seed_from(13);
+        for _ in 0..500 {
+            assert_eq!(single.below(13), zoned.below_zone(13, zone));
+        }
     }
 
     #[test]

@@ -5,9 +5,10 @@
 //! latencies AND fidelities):
 //!
 //! 1. **Engine equivalence** (PR 1–3): every parallel evaluation path —
-//!    per-batch scoped threads, the persistent worker pool, and the
-//!    sharded multi-device fleet — produces, for every strategy and
-//!    seed, exactly the outcome the sequential evaluator produces.
+//!    per-batch scoped threads, both persistent worker pools (the v1
+//!    mutex queue and the v2 work-stealing engine), and the sharded
+//!    multi-device fleet — produces, for every strategy and seed,
+//!    exactly the outcome the sequential evaluator produces.
 //!    The fleet ("measure everywhere") mode extends this across
 //!    platforms: tuning a heterogeneous fleet gives each platform
 //!    exactly the outcome of tuning it alone.
@@ -40,6 +41,9 @@ use portatune::workload::Workload;
 enum Mode {
     Sequential,
     ScopedThreads,
+    /// The v1 mutex-queue pool baseline.
+    PoolV1,
+    /// The v2 work-stealing pool (the default engine).
     Pool,
     MultiDevice,
 }
@@ -68,6 +72,7 @@ fn run(mode: Mode, strat: &Strategy, seed: u64) -> TuneOutcome {
     let mut eval: Box<dyn Evaluator> = match mode {
         Mode::Sequential => Box::new(base.sequential()),
         Mode::ScopedThreads => Box::new(base.scoped_threads()),
+        Mode::PoolV1 => Box::new(base.pool_v1()),
         Mode::Pool => Box::new(base),
         Mode::MultiDevice => Box::new(MultiDeviceEvaluator::replicate(&base, 3)),
     };
@@ -136,7 +141,7 @@ fn same_seed_same_outcome_for_every_strategy_and_engine() {
     for strat in all_strategies() {
         for seed in [0u64, 7, 42] {
             let seq = run(Mode::Sequential, &strat, seed);
-            for mode in [Mode::ScopedThreads, Mode::Pool, Mode::MultiDevice] {
+            for mode in [Mode::ScopedThreads, Mode::PoolV1, Mode::Pool, Mode::MultiDevice] {
                 let par = run(mode, &strat, seed);
                 assert_same_outcome(&seq, &par, &format!("{strat:?} seed {seed} {mode:?}"));
             }
@@ -580,6 +585,38 @@ fn surrogate_with_k_covering_the_space_is_bit_identical_to_exhaustive() {
             .and_then(SessionOutcome::into_solo)
             .unwrap();
         assert_same_outcome(&exhaustive, &surrogate, &format!("surrogate k={k} vs exhaustive"));
+    }
+}
+
+#[test]
+fn surrogate_mode_is_bit_identical_across_engines() {
+    // The surrogate path (seed sample → fit → re-rank → top-k measure)
+    // was never part of the engine-equivalence matrix above; pin it
+    // here: for every evaluation engine, `.surrogate(k)` produces
+    // exactly the sequential outcome — winner, counters, and the full
+    // (fingerprint, latency, fidelity) log.
+    let w = Workload::llama3_attention(8, 1024);
+    let space = spaces::attention_sim_space();
+    let surrogate_run = |eval: &mut dyn Evaluator| {
+        TuningSession::new(&space, &w)
+            .surrogate(32)
+            .evaluator(eval)
+            .run()
+            .and_then(SessionOutcome::into_solo)
+            .expect("surrogate run finds a best")
+    };
+    let base = SimEvaluator::new(SimGpu::a100(), w, TRITON_NVIDIA);
+    let seq = surrogate_run(&mut base.clone().sequential());
+    for mode in [Mode::ScopedThreads, Mode::PoolV1, Mode::Pool, Mode::MultiDevice] {
+        let mut eval: Box<dyn Evaluator> = match mode {
+            Mode::Sequential => unreachable!("sequential is the baseline"),
+            Mode::ScopedThreads => Box::new(base.clone().scoped_threads()),
+            Mode::PoolV1 => Box::new(base.clone().pool_v1()),
+            Mode::Pool => Box::new(base.clone()),
+            Mode::MultiDevice => Box::new(MultiDeviceEvaluator::replicate(&base, 3)),
+        };
+        let par = surrogate_run(eval.as_mut());
+        assert_same_outcome(&seq, &par, &format!("surrogate k=32 {mode:?}"));
     }
 }
 
